@@ -1,0 +1,49 @@
+//! Deep-learning compiler benchmarks: graph -> task-graph lowering time
+//! (the paper's "ML Compiler & Graph Generation" phase, 16.64 s in Fig 3)
+//! and the task-graph JSON boundary (the 1231 s import/export phase the
+//! paper flags as unoptimized).
+
+use avsm::benchkit::Bench;
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::graph::{graph_from_json, graph_to_json, models};
+use avsm::taskgraph::serialize;
+
+fn main() {
+    let mut bench = Bench::new("compiler");
+    let sys = SystemConfig::base_paper();
+
+    for (name, net) in [
+        ("lenet", models::lenet(28)),
+        ("dilated_vgg_tiny", models::dilated_vgg_tiny()),
+        ("dilated_vgg_paper", models::dilated_vgg_paper()),
+        ("vgg16_224", models::vgg16(224, 1000)),
+    ] {
+        let med = bench.case(format!("compile_{name}"), || {
+            compile(&net, &sys, CompileOptions::default()).unwrap()
+        }).median;
+        let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+        bench.metric(
+            &format!("{name}_tasks_per_ms"),
+            compiled.graph.len() as f64 / med.as_secs_f64() / 1e3,
+            "tasks/ms",
+        );
+    }
+
+    // The flow boundary: task-graph serialize + parse (paper's hot spot).
+    let net = models::dilated_vgg_paper();
+    let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+    let json = serialize::to_json(&compiled.graph);
+    bench.metric("taskgraph_json_bytes", json.len() as f64, "B");
+    bench.case("taskgraph_to_json", || serialize::to_json(&compiled.graph));
+    bench.case("taskgraph_from_json", || serialize::from_json(&json).unwrap());
+
+    // DNN-graph JSON boundary (python -> rust import path).
+    let gjson = graph_to_json(&net);
+    bench.case("dnngraph_roundtrip", || graph_from_json(&gjson).unwrap());
+
+    // Label emission cost (CompileOptions::labels ablation).
+    bench.case("compile_paper_no_labels", || {
+        compile(&net, &sys, CompileOptions { double_buffer: true, labels: false }).unwrap()
+    });
+}

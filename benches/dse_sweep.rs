@@ -1,0 +1,80 @@
+//! DSE throughput ("design space exploration by a click of a button") and
+//! the simulation-vs-analytical ablation the paper motivates in §1:
+//! analytical estimators miss causality (arbitration, blocking, latency),
+//! so they systematically under-predict communication-heavy layers.
+
+use avsm::benchkit::Bench;
+use avsm::compiler::{analytical_estimate_compiled, compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::dse;
+use avsm::graph::models;
+use avsm::hw::simulate_avsm;
+use avsm::sim::TraceRecorder;
+
+fn main() {
+    let mut bench = Bench::new("dse_sweep");
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg(128, 1, 16);
+
+    // Sweep throughput: full compile+simulate per point.
+    let axes = dse::SweepAxes {
+        array_geometries: vec![(16, 32), (32, 64), (64, 64)],
+        nce_freqs_mhz: vec![125, 250, 500],
+        ..Default::default()
+    };
+    let med = bench.case("sweep_9_points", || dse::sweep(&net, &sys, &axes)).median;
+    let pts = dse::sweep(&net, &sys, &axes);
+    bench.metric(
+        "points_per_sec",
+        pts.len() as f64 / med.as_secs_f64(),
+        "design points/s",
+    );
+    bench.metric("pareto_size", dse::pareto(&pts).len() as f64, "points");
+
+    // Ablation: double buffering on/off (a software design choice the
+    // compiler owns — DESIGN.md calls this out).
+    let paper_net = models::dilated_vgg_paper();
+    let with_db = compile(&paper_net, &sys, CompileOptions { double_buffer: true, labels: false })
+        .unwrap();
+    let without_db =
+        compile(&paper_net, &sys, CompileOptions { double_buffer: false, labels: false }).unwrap();
+    let mut tr = TraceRecorder::disabled();
+    let t_db = simulate_avsm(&with_db, &sys, &mut tr).total_ps;
+    let mut tr = TraceRecorder::disabled();
+    let t_nodb = simulate_avsm(&without_db, &sys, &mut tr).total_ps;
+    bench.metric("double_buffer_speedup", t_nodb as f64 / t_db as f64, "x");
+    assert!(t_db < t_nodb, "double buffering should help");
+
+    // Ablation: bus arbitration policy (fixed-priority vs round-robin).
+    let mut rr_sys = sys.clone();
+    rr_sys.bus.arbitration = avsm::config::ArbPolicy::RoundRobin;
+    let compiled_rr = compile(&paper_net, &rr_sys, CompileOptions { double_buffer: true, labels: false })
+        .unwrap();
+    let mut tr = TraceRecorder::disabled();
+    let t_rr = simulate_avsm(&compiled_rr, &rr_sys, &mut tr).total_ps;
+    bench.metric("fixed_vs_rr_arbitration", t_rr as f64 / t_db as f64, "x");
+
+    // Simulation vs analytical (the paper's §1 argument): same compiled
+    // net, static max(compute, traffic) per layer vs causal simulation.
+    let est = analytical_estimate_compiled(&with_db, &sys);
+    let mut tr = TraceRecorder::disabled();
+    let sim = simulate_avsm(&with_db, &sys, &mut tr);
+    let mut worst_underpred: f64 = 0.0;
+    println!("\nanalytical vs simulated (per layer, + = analytical underestimates):");
+    for (i, l) in sim.layers.iter().enumerate() {
+        let under = 100.0 * (l.duration_ps() as f64 - est.layer_ps[i] as f64)
+            / l.duration_ps() as f64;
+        worst_underpred = worst_underpred.max(under);
+        println!("  {:<12} {:+6.1}%", l.name, under);
+    }
+    bench.metric(
+        "analytical_total_underprediction_pct",
+        100.0 * (sim.total_ps as f64 - est.total_ps() as f64) / sim.total_ps as f64,
+        "%",
+    );
+    bench.metric("analytical_worst_layer_underprediction_pct", worst_underpred, "%");
+    assert!(
+        worst_underpred > 2.0,
+        "expected the static model to miss blocking effects somewhere"
+    );
+}

@@ -1,0 +1,47 @@
+//! Fig 3 regeneration: distribution of run-time for generation and
+//! simulation of the AVSM, on the paper's workload (DilatedVGG).
+//!
+//! Paper (Xeon E5620): ML compiler & graph generation 16.64 s, simulation
+//! 105.82 s, tool import/export + model build 1231.08 s (Σ 1353.54 s, 91 %
+//! in import/export+build, flagged "not optimized yet"). We regenerate the
+//! same three rows for our flow and report the speedup.
+
+use avsm::benchkit::Bench;
+use avsm::config::SystemConfig;
+use avsm::coordinator::{run_flow, FlowOptions, PHASE_BUILD, PHASE_COMPILER, PHASE_SIM};
+use avsm::graph::models;
+
+fn main() {
+    let mut bench = Bench::new("fig3_flow_runtime");
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_paper();
+
+    // Whole-flow wall time (the paper's Σ row).
+    bench.case("whole_flow_dilated_vgg", || {
+        run_flow(&net, &sys, &FlowOptions::default(), None).unwrap()
+    });
+
+    // One instrumented run for the per-phase table.
+    let out = run_flow(&net, &sys, &FlowOptions::default(), None).unwrap();
+    println!("\nFig 3 — distribution of flow run-time (ours):");
+    print!("{}", out.breakdown.render_text());
+    println!("paper reference: compiler 16.64 s / sim 105.82 s / import-export+build 1231.08 s");
+
+    for (name, key) in [
+        ("phase_compiler_s", PHASE_COMPILER),
+        ("phase_build_s", PHASE_BUILD),
+        ("phase_sim_s", PHASE_SIM),
+    ] {
+        let secs: f64 = out
+            .breakdown
+            .phases
+            .iter()
+            .filter(|p| p.name == key)
+            .map(|p| p.wall.as_secs_f64())
+            .sum();
+        bench.metric(name, secs, "s");
+    }
+    let total = out.breakdown.total().as_secs_f64();
+    bench.metric("total_s", total, "s");
+    bench.metric("speedup_vs_paper_flow", 1353.54 / total, "x");
+}

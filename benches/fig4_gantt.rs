@@ -1,0 +1,59 @@
+//! Fig 4 regeneration: Gantt chart of computation vs communication
+//! resources, plus the cost of recording and rendering the trace.
+//!
+//! Paper observations checked: compute-bound layers keep the NCE
+//! continuously occupied with the DMA partially vacant; communication-bound
+//! layers are the other way around.
+
+use avsm::benchkit::Bench;
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::graph::models;
+use avsm::hw::simulate_avsm;
+use avsm::sim::TraceRecorder;
+use avsm::trace::{Gantt, GanttOptions};
+
+fn main() {
+    let mut bench = Bench::new("fig4_gantt");
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_paper();
+    let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+
+    // Cost of simulation with full interval tracing (vs disabled).
+    bench.case("sim_traced", || {
+        let mut tr = TraceRecorder::new();
+        simulate_avsm(&compiled, &sys, &mut tr)
+    });
+    bench.case("sim_untraced", || {
+        let mut tr = TraceRecorder::disabled();
+        simulate_avsm(&compiled, &sys, &mut tr)
+    });
+
+    let mut tr = TraceRecorder::new();
+    let sim = simulate_avsm(&compiled, &sys, &mut tr);
+    bench.metric("trace_intervals", tr.intervals().len() as f64, "intervals");
+
+    bench.case("render_ascii", || {
+        Gantt::new(&tr, GanttOptions::default()).render_ascii()
+    });
+    bench.case("render_svg", || Gantt::new(&tr, GanttOptions::default()).render_svg());
+    bench.case("render_csv", || Gantt::new(&tr, GanttOptions::default()).render_csv());
+
+    // The Fig 4 observation, quantified.
+    let pool1 = sim.layer("pool1").unwrap();
+    let conv4 = sim.layer("conv4_1").unwrap();
+    println!();
+    let g = Gantt::new(&tr, GanttOptions { window: Some((pool1.start_ps, pool1.end_ps)), width: 80 });
+    println!("pool1 (communication-bound):");
+    print!("{}", g.render_ascii());
+    let g = Gantt::new(&tr, GanttOptions { window: Some((conv4.start_ps, conv4.end_ps)), width: 80 });
+    println!("conv4_1 (compute-bound):");
+    print!("{}", g.render_ascii());
+
+    bench.metric("pool1_bus_util_pct", 100.0 * pool1.bus_utilization(), "%");
+    bench.metric("pool1_nce_util_pct", 100.0 * pool1.nce_utilization(), "%");
+    bench.metric("conv4_1_nce_util_pct", 100.0 * conv4.nce_utilization(), "%");
+    bench.metric("conv4_1_bus_util_pct", 100.0 * conv4.bus_utilization(), "%");
+    assert!(pool1.bus_utilization() > 0.9 && pool1.nce_utilization() < 0.5);
+    assert!(conv4.nce_utilization() > 0.85 && conv4.bus_utilization() < 0.7);
+}

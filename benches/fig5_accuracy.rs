@@ -1,0 +1,57 @@
+//! Fig 5 regeneration: per-layer processing time of the hardware
+//! implementation (detailed prototype model) vs the AVSM, with deviations.
+//!
+//! Paper: total deviation 8.3 % (accuracy "up to 92 %"), individual layers
+//! 0.6 %–11.2 %, attributed to the high-level memory sub-system model.
+
+use avsm::benchkit::Bench;
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::detailed::simulate_prototype;
+use avsm::graph::models;
+use avsm::hw::simulate_avsm;
+use avsm::report::Fig5Report;
+use avsm::sim::TraceRecorder;
+
+fn main() {
+    let mut bench = Bench::new("fig5_accuracy");
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_paper();
+    let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+
+    bench.case("avsm_sim_dilated_vgg", || {
+        let mut tr = TraceRecorder::disabled();
+        simulate_avsm(&compiled, &sys, &mut tr)
+    });
+    bench.case("prototype_sim_dilated_vgg", || {
+        let mut tr = TraceRecorder::disabled();
+        simulate_prototype(&compiled, &sys, &mut tr)
+    });
+
+    let report = Fig5Report::compute(&compiled, &sys);
+    println!("\nFig 5 — HW implementation vs AVSM:");
+    print!("{}", report.render_text());
+    println!(
+        "paper: total 8.3 % deviation, layers 0.6–11.2 %; \
+         ours: total {:+.2} %, layers {:.2}–{:.2} %",
+        report.total_deviation_pct,
+        report.min_abs_layer_deviation(),
+        report.max_abs_layer_deviation()
+    );
+
+    bench.metric("total_deviation_pct", report.total_deviation_pct, "%");
+    bench.metric("accuracy_pct", report.accuracy_pct(), "%");
+    bench.metric("max_layer_deviation_pct", report.max_abs_layer_deviation(), "%");
+    bench.metric("min_layer_deviation_pct", report.min_abs_layer_deviation(), "%");
+    assert!(
+        report.accuracy_pct() >= 91.7,
+        "accuracy regressed below the paper's band"
+    );
+
+    // Second workload: the same comparison must hold off the paper's net.
+    let vgg = models::vgg16(128, 100);
+    let compiled_vgg = compile(&vgg, &sys, CompileOptions::default()).unwrap();
+    let r2 = Fig5Report::compute(&compiled_vgg, &sys);
+    bench.metric("vgg16_accuracy_pct", r2.accuracy_pct(), "%");
+    assert!(r2.accuracy_pct() >= 88.0, "vgg16 accuracy out of band");
+}

@@ -1,0 +1,54 @@
+//! Fig 6 + Fig 7 regeneration: roofline of the AVSM executing DilatedVGG,
+//! full view and the compute-bound zoom.
+//!
+//! Paper observations checked here: Conv4_0–Conv4_5 sit close to the
+//! vertical (compute) threshold; several layers are neither compute- nor
+//! communication-bound; dot size = share of inference time.
+
+use avsm::benchkit::Bench;
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::graph::models;
+use avsm::hw::simulate_avsm;
+use avsm::roofline::{RoofBound, RooflineModel};
+use avsm::sim::TraceRecorder;
+
+fn main() {
+    let mut bench = Bench::new("fig6_roofline");
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_paper();
+    let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+    let ops: Vec<u64> = net.layer_costs().iter().map(|c| c.arith_ops).collect();
+
+    bench.case("sim_plus_roofline", || {
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&compiled, &sys, &mut tr);
+        RooflineModel::from_sim(&sys, &sim, &ops)
+    });
+    let mut tr = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, &sys, &mut tr);
+    let model = RooflineModel::from_sim(&sys, &sim, &ops);
+
+    println!("\nFig 6 — roofline (all layers):");
+    print!("{}", model.render_text(None));
+    println!("\nFig 7 — zoom (compute-bound cluster):");
+    print!("{}", model.render_text(Some(model.ridge * 0.8)));
+
+    let conv4_compute = (0..6)
+        .filter(|i| {
+            model.point(&format!("conv4_{i}")).unwrap().bound == RoofBound::Compute
+        })
+        .count();
+    let neither = model
+        .points
+        .iter()
+        .filter(|p| p.bound == RoofBound::Neither)
+        .count();
+    bench.metric("conv4_layers_compute_bound", conv4_compute as f64, "of 6");
+    bench.metric("neither_bound_layers", neither as f64, "layers");
+    bench.metric("ridge_ops_per_byte", model.ridge, "ops/B");
+    let dense1 = model.point("dense1").unwrap();
+    bench.metric("dense1_pct_of_roof", 100.0 * dense1.achieved_ops / dense1.attainable_ops, "%");
+    assert_eq!(conv4_compute, 6, "Fig 7 shape regressed: conv4 not compute-bound");
+    assert!(neither >= 1, "Fig 6 shape regressed: no neither-bound layers");
+}

@@ -1,0 +1,76 @@
+//! DES engine micro-benchmarks: raw event-queue throughput and end-to-end
+//! executor throughput (events/s) — the §Perf numbers for L3.
+
+use avsm::benchkit::Bench;
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::graph::models;
+use avsm::hw::simulate_avsm;
+use avsm::sim::{Engine, TraceRecorder};
+
+fn main() {
+    let mut bench = Bench::new("sim_engine");
+
+    // Raw engine: schedule/pop churn with a live horizon of 1k events.
+    const N: u64 = 1_000_000;
+    let med = bench.case("raw_queue_1m_events", || {
+        let mut eng: Engine<u64> = Engine::new();
+        for i in 0..1000 {
+            eng.schedule(i, i);
+        }
+        let mut processed = 0u64;
+        while let Some(ev) = eng.pop() {
+            processed += 1;
+            if processed + 1000 <= N {
+                eng.schedule(1 + (ev % 97), ev + 1);
+            }
+            if processed >= N {
+                break;
+            }
+        }
+        processed
+    }).median;
+    let evps = N as f64 / med.as_secs_f64();
+    bench.metric("raw_queue_events_per_sec", evps / 1e6, "M events/s");
+
+    // Executor on the paper workload.
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_paper();
+    let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+    let mut events = 0u64;
+    let med = bench.case("executor_dilated_vgg", || {
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&compiled, &sys, &mut tr);
+        events = sim.events;
+        sim
+    }).median;
+    bench.metric(
+        "executor_events_per_sec",
+        events as f64 / med.as_secs_f64() / 1e6,
+        "M events/s",
+    );
+    bench.metric("executor_tasks", compiled.graph.len() as f64, "tasks");
+
+    // Scaling: a dense many-task workload (tiny tiles => many events).
+    let mut small_sys = sys.clone();
+    // Small-but-feasible buffers: pool layers need a full 64ch x 256 px
+    // input row (32 KiB), so ~96 KiB (two input rows per output row) is near the floor.
+    small_sys.nce.ifm_buffer_kib = 96;
+    small_sys.nce.weight_buffer_kib = 96;
+    small_sys.nce.ofm_buffer_kib = 96;
+    let compiled_many = compile(&net, &small_sys, CompileOptions { double_buffer: true, labels: false })
+        .unwrap();
+    let mut ev2 = 0u64;
+    let med = bench.case("executor_many_tiles", || {
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&compiled_many, &small_sys, &mut tr);
+        ev2 = sim.events;
+        sim
+    }).median;
+    bench.metric("many_tiles_tasks", compiled_many.graph.len() as f64, "tasks");
+    bench.metric(
+        "many_tiles_events_per_sec",
+        ev2 as f64 / med.as_secs_f64() / 1e6,
+        "M events/s",
+    );
+}

@@ -1,0 +1,5 @@
+# Allow `pytest python/tests/` from the repo root: the tests import the
+# `compile` package that lives under python/.
+import sys, pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

@@ -1,0 +1,55 @@
+//! Functional inference micro-demo: run the bare Pallas GEMM tile and a
+//! single NCE conv block from the AOT artifacts on the PJRT CPU client —
+//! the L1 kernel in isolation, useful for perf probing of the runtime path.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example functional_inference
+//! ```
+
+use avsm::runtime::{Manifest, Runtime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Bare GEMM tile (256x256x256) — the NCE/MXU hot-spot.
+    let gemm = rt.load(manifest.artifact("gemm_tile").unwrap())?;
+    let n = 256usize;
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 13) as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.1).collect();
+    // Warmup + timed loop.
+    gemm.run_f32(&[&a, &b])?;
+    let iters = 20;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        gemm.run_f32(&[&a, &b])?;
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let flops = 2.0 * (n as f64).powi(3);
+    println!(
+        "gemm_tile {n}x{n}x{n}: {:.2} ms/iter, {:.2} GFLOP/s (interpret-mode Pallas on CPU)",
+        dt * 1e3,
+        flops / dt / 1e9
+    );
+
+    // One conv block (64ch 3x3 on 32x32).
+    let conv = rt.load(manifest.artifact("conv_block").unwrap())?;
+    let x: Vec<f32> = (0..64 * 32 * 32).map(|i| ((i % 29) as f32 - 14.0) * 0.05).collect();
+    conv.run_f32(&[&x])?;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        conv.run_f32(&[&x])?;
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let macs = 32.0 * 32.0 * 64.0 * 64.0 * 9.0;
+    println!(
+        "conv_block 64->64 3x3 @32x32: {:.2} ms/iter, {:.2} GMAC/s",
+        dt * 1e3,
+        macs / dt / 1e9
+    );
+    println!("\n(These run the same HLO the timing simulators model — L1 correctness\n\
+              is asserted against the pure-jnp oracle in python/tests/.)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: evaluate one design point of a DNN system in a few lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the paper's base system (NCE 32x64 @ 250 MHz), compiles a small
+//! CNN into the hardware-adapted task graph, simulates one inference on the
+//! abstract virtual system model, and prints the per-layer timing and
+//! bound classification — the whole virtual prototyping loop in ~1 ms of
+//! host time, versus a hardware build.
+
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::graph::models;
+use avsm::hw::simulate_avsm;
+use avsm::metrics::{fmt_bytes, fmt_ps};
+use avsm::sim::TraceRecorder;
+
+fn main() -> anyhow::Result<()> {
+    // 1. System description: the paper's Virtex7 prototype annotations.
+    let sys = SystemConfig::base_paper();
+    println!(
+        "system {:?}: NCE {}x{} @ {} MHz, bus {} B/cycle, ridge {:.0} ops/B",
+        sys.name,
+        sys.nce.array_rows,
+        sys.nce.array_cols,
+        sys.nce.freq_mhz,
+        sys.bus.bytes_per_cycle,
+        sys.ridge_ops_per_byte()
+    );
+
+    // 2. Workload: a LeNet-style CNN (swap in models::dilated_vgg_paper()
+    //    or your own graph JSON for the full evaluation workload).
+    let net = models::lenet(28);
+
+    // 3. The deep-learning compiler: DNN graph -> task graph, tiled to the
+    //    on-chip buffers (the paper's hardware-adapted transformation).
+    let compiled = compile(&net, &sys, CompileOptions::default())?;
+    let (nc, nd, nb) = compiled.graph.kind_counts();
+    println!(
+        "compiled {}: {} compute tasks, {} DMA tasks, {} barriers",
+        net.name, nc, nd, nb
+    );
+
+    // 4. Simulate one inference on the AVSM.
+    let mut trace = TraceRecorder::new();
+    let sim = simulate_avsm(&compiled, &sys, &mut trace);
+
+    println!("\nper-layer timing:");
+    for l in &sim.layers {
+        println!(
+            "  {:<6} {:>12}  NCE {:>5.1}%  bus {:>5.1}%  {:>9}  {}",
+            l.name,
+            fmt_ps(l.duration_ps()),
+            100.0 * l.nce_utilization(),
+            100.0 * l.bus_utilization(),
+            fmt_bytes(l.dma_bytes),
+            l.bound_class()
+        );
+    }
+    println!(
+        "\ninference latency {} ({:.0} inferences/s), {} sim events",
+        fmt_ps(sim.total_ps),
+        1e12 / sim.total_ps as f64,
+        sim.events
+    );
+    Ok(())
+}

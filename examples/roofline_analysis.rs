@@ -1,0 +1,57 @@
+//! Roofline analysis of the AVSM executing DilatedVGG — regenerates the
+//! data behind the paper's Fig 6 (full view) and Fig 7 (zoom onto the
+//! compute-bound conv4_x cluster), and writes SVG plots.
+//!
+//! ```sh
+//! cargo run --release --example roofline_analysis
+//! ```
+
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::graph::models;
+use avsm::hw::simulate_avsm;
+use avsm::roofline::{RoofBound, RooflineModel};
+use avsm::sim::TraceRecorder;
+
+fn main() -> anyhow::Result<()> {
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_paper();
+    let compiled = compile(&net, &sys, CompileOptions::default())?;
+    let mut trace = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, &sys, &mut trace);
+    let ops: Vec<u64> = net.layer_costs().iter().map(|c| c.arith_ops).collect();
+    let model = RooflineModel::from_sim(&sys, &sim, &ops);
+
+    println!("=== Fig 6: full roofline ===");
+    print!("{}", model.render_text(None));
+
+    println!("\n=== Fig 7: zoom onto the compute-bound layers ===");
+    print!("{}", model.render_text(Some(model.ridge * 0.8)));
+
+    // The paper's observations, checked programmatically:
+    let conv4_bound = (0..6).all(|i| {
+        model.point(&format!("conv4_{i}")).unwrap().bound == RoofBound::Compute
+    });
+    println!(
+        "\nconv4_0..conv4_5 near the vertical threshold (compute-bound): {}",
+        if conv4_bound { "yes — matches Fig 7" } else { "NO" }
+    );
+    let neither: Vec<&str> = model
+        .points
+        .iter()
+        .filter(|p| p.bound == RoofBound::Neither)
+        .map(|p| p.layer.as_str())
+        .collect();
+    println!(
+        "layers that neither peak compute nor peak bandwidth would speed up: {neither:?}\n\
+         (the paper names Dense1/Upscaling/Conv1_1 here; see EXPERIMENTS.md for the mapping)"
+    );
+
+    let out = std::path::Path::new("target/reports");
+    std::fs::create_dir_all(out)?;
+    std::fs::write(out.join("fig6.svg"), model.render_svg(None))?;
+    std::fs::write(out.join("fig7.svg"), model.render_svg(Some(model.ridge * 0.8)))?;
+    std::fs::write(out.join("fig6.json"), model.to_json().to_string_pretty())?;
+    println!("\nwrote target/reports/fig6.svg, fig7.svg, fig6.json");
+    Ok(())
+}

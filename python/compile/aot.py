@@ -1,0 +1,165 @@
+"""AOT bridge: lower the L2/L1 JAX computations to HLO *text* artifacts and
+export the DNN graph JSONs for the rust deep-learning compiler.
+
+Run once at build time (`make artifacts`); the rust binary is self-contained
+afterwards. HLO text — NOT a serialized HloModuleProto — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Artifacts written to --outdir:
+  dilated_vgg_tiny.hlo.txt   functional DilatedVGG (scale /8), weights baked
+                             in as constants; signature f32[1,3,64,64] ->
+                             (f32[1,nc,64,64],)
+  conv_block.hlo.txt         one Pallas NCE conv layer (64ch 3x3 on 32x32),
+                             weights baked; the runtime microbench target
+  gemm_tile.hlo.txt          one bare Pallas GEMM tile (256x256x256) — the
+                             L1 kernel in isolation for perf probing
+  dilated_vgg.graph.json     paper-sized DNN graph (timing simulation input)
+  dilated_vgg_tiny.graph.json  functional-variant graph
+  manifest.json              index: artifact -> entry signature
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import conv_mxu
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    `as_hlo_text(True)` = print_large_constants: without it the HLO text
+    printer elides big weight tensors as `constant({...})`, which the rust
+    side's parser would silently read back as zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_tiny_model(input_hw: int = 64, seed: int = 0):
+    """Functional DilatedVGG with parameters closed over (baked as HLO
+    constants) so the rust side only supplies the input image."""
+    spec = model.dilated_vgg_tiny_spec(input_hw=input_hw)
+    params = model.init_params(spec, jax.random.PRNGKey(seed))
+
+    def infer(x):
+        return (model.forward(params, x, spec, use_pallas=True,
+                              conv_block=(128, 128, 128)),)
+
+    x_spec = jax.ShapeDtypeStruct((1, 3, input_hw, input_hw), jnp.float32)
+    lowered = jax.jit(infer).lower(x_spec)
+    out_c = model.layer_shapes(spec)[-1]["c"]
+    sig = dict(
+        inputs=[dict(shape=[1, 3, input_hw, input_hw], dtype="f32")],
+        outputs=[dict(shape=[1, out_c, input_hw, input_hw], dtype="f32")],
+    )
+    return lowered, sig
+
+
+def lower_conv_block(seed: int = 1):
+    """A single NCE conv layer: 64->64ch 3x3 SAME on 1x64x32x32."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (64, 64, 3, 3), jnp.float32) * 0.06
+    b = jnp.zeros((64,), jnp.float32)
+
+    def block(x):
+        return (conv_mxu.conv2d_pallas(x, w, b, bm=128, bk=128, bn=128),)
+
+    x_spec = jax.ShapeDtypeStruct((1, 64, 32, 32), jnp.float32)
+    sig = dict(
+        inputs=[dict(shape=[1, 64, 32, 32], dtype="f32")],
+        outputs=[dict(shape=[1, 64, 32, 32], dtype="f32")],
+    )
+    return jax.jit(block).lower(x_spec), sig
+
+
+def lower_gemm_tile(m: int = 256, k: int = 256, n: int = 256):
+    """The bare L1 GEMM kernel — isolated hot-spot for the runtime bench."""
+
+    def gemm(a, b):
+        return (conv_mxu.matmul_pallas(a, b, bm=128, bk=128, bn=128),)
+
+    a_spec = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    sig = dict(
+        inputs=[dict(shape=[m, k], dtype="f32"), dict(shape=[k, n], dtype="f32")],
+        outputs=[dict(shape=[m, n], dtype="f32")],
+    )
+    return jax.jit(gemm).lower(a_spec, b_spec), sig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--input-hw", type=int, default=64,
+                    help="functional model input size")
+    ap.add_argument("--timing-hw", type=int, default=256,
+                    help="paper-sized graph input size for timing simulation")
+    args = ap.parse_args()
+    out = pathlib.Path(args.outdir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict[str, dict] = {}
+
+    # --- DNN graph JSONs (compiler front-end input) -----------------------
+    for spec in (
+        model.dilated_vgg_spec(input_hw=args.timing_hw),
+        model.dilated_vgg_tiny_spec(input_hw=args.input_hw),
+    ):
+        g = model.graph_dict(spec)
+        path = out / f"{spec['name']}.graph.json"
+        path.write_text(json.dumps(g, indent=1))
+        print(f"wrote {path}")
+
+    # --- HLO artifacts -----------------------------------------------------
+    jobs = {
+        "dilated_vgg_tiny": lambda: lower_tiny_model(args.input_hw),
+        "conv_block": lower_conv_block,
+        "gemm_tile": lower_gemm_tile,
+    }
+    for name, job in jobs.items():
+        lowered, sig = job()
+        text = to_hlo_text(lowered)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = dict(file=path.name, **sig)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # --- golden vectors: rust integration tests replay these ---------------
+    spec = model.dilated_vgg_tiny_spec(input_hw=args.input_hw)
+    params = model.init_params(spec, jax.random.PRNGKey(0))
+    hw = args.input_hw
+    x0 = (jnp.arange(3 * hw * hw, dtype=jnp.float32).reshape(1, 3, hw, hw)
+          / (3 * hw * hw) - 0.5)
+    y0 = model.forward(params, x0, spec, use_pallas=False)
+    import numpy as np
+
+    np.asarray(x0, dtype="<f4").tofile(out / "tiny_input.bin")
+    np.asarray(y0, dtype="<f4").tofile(out / "tiny_expected.bin")
+    manifest["golden"] = dict(
+        input="tiny_input.bin",
+        expected="tiny_expected.bin",
+        input_shape=list(x0.shape),
+        output_shape=list(y0.shape),
+        tolerance=1e-3,
+    )
+    print(f"wrote golden vectors ({y0.size} f32 outputs)")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""L1 Pallas kernel: tiled im2col-GEMM convolution — the NCE hot-spot.
+
+The paper's Neural Complex Engine (NCE) is a 32x64 multiplier array: input
+channels stream across the 32 rows, output channels across the 64 columns,
+and the house-keeping processor feeds it one task-graph tile at a time from
+on-chip buffers. On TPU the analogous engine is the MXU systolic array and
+the on-chip buffer is VMEM; the BlockSpec grid below plays exactly the role
+of the paper's hardware-adapted task-graph tiles (DESIGN.md
+§Hardware-Adaptation):
+
+  * grid axis 0/1  — (M, N) output tile walk  == the HKP's OFM tile loop
+  * grid axis 2    — K reduction tile walk    == IFM/weight-tile streaming
+  * BlockSpec      — the HBM->VMEM staging schedule the paper expresses
+                     with DMA nodes in the task graph
+  * f32 VMEM accumulator scratch              == the NCE accumulator bank
+
+Block shapes default to MXU-friendly (128, 128) x (128, 128); the wrapper
+pads arbitrary GEMM shapes up to block multiples so the kernel itself only
+ever sees full tiles (same trick the deep-learning compiler in rust/ uses:
+partial tiles are padded to array geometry, costed at full-tile occupancy).
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same kernel runs in
+pytest, in the AOT artifacts and from the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-aligned default tile geometry. 128 is the MXU systolic dimension; the
+# f32 accumulator tile (BM x BN) plus one A tile (BM x BK) and one B tile
+# (BK x BN) occupy 3 * 128*128*4 B = 192 KiB of VMEM, far under the ~16 MiB
+# per-core budget, leaving room for double buffering (see DESIGN.md §Perf).
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (BM, BN) output tile; grid axis 2 walks the K reduction.
+
+    acc_ref is VMEM scratch that lives across the K walk — the Pallas
+    revolving-accumulator idiom, mirroring the NCE accumulator bank that
+    holds partial sums while IFM/weight tiles stream in.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped MAC: f32 accumulate regardless of input dtype.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _vmem_scratch(shape, dtype):
+    """Accumulator scratch allocation — the VMEM accumulator bank analogue.
+
+    Uses the generic `pl.MemoryRef` memory-space form so the same kernel
+    body serves interpret mode (CPU PJRT) and a real TPU lowering (where the
+    space would be pltpu.VMEM).
+    """
+    import jax.core as jcore
+
+    return pl.MemoryRef(jcore.ShapedArray(shape, dtype), pl.MemorySpace.ANY)
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    """Zero-pad a 2-D array so both dims are multiples of (m0, m1)."""
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype", "interpret")
+)
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled GEMM (M,K) @ (K,N) -> (M,N) on the Pallas NCE/MXU kernel.
+
+    Arbitrary shapes are supported by zero-padding up to tile multiples and
+    slicing the result back — zero padding is exact for matmul.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    mp, kp = ap.shape
+    np_ = bp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def conv2d_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding="SAME",
+    dilation: int = 1,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Convolution lowered exactly the way the NCE executes it:
+    im2col patch extraction (the DMA/reshape task-graph nodes) followed by
+    the Pallas tiled GEMM (the NCE MAC array). NCHW x OIHW -> NCHW."""
+    cout = w.shape[0]
+    cols, (n, oh, ow) = ref.im2col(
+        x, w.shape[2], w.shape[3], stride=stride, padding=padding, dilation=dilation
+    )
+    flat = matmul_pallas(
+        cols,
+        w.reshape(cout, -1).T.astype(jnp.float32),
+        bm=bm,
+        bk=bk,
+        bn=bn,
+        interpret=interpret,
+    )
+    out = flat.reshape(n, oh, ow, cout).transpose(0, 3, 1, 2)
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out
+
+
+def vmem_footprint_bytes(bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                         bn: int = DEFAULT_BN, in_bytes: int = 4) -> int:
+    """Static VMEM budget of one kernel instance (A tile + B tile + f32 acc).
+
+    Used by python/tests and DESIGN.md §Perf to assert the tile geometry fits
+    the 16 MiB VMEM with 2x headroom for double buffering.
+    """
+    return bm * bk * in_bytes + bk * bn * in_bytes + bm * bn * 4

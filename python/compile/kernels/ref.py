@@ -1,0 +1,118 @@
+"""Pure-jnp reference oracle for the Pallas kernels and the DilatedVGG ops.
+
+Everything here is straight-line jax.numpy / lax — no Pallas — and serves as
+the numerical ground truth for pytest/hypothesis checks of the L1 kernels and
+the L2 model. Layout convention is NCHW for feature maps and OIHW for conv
+weights (matching the paper's FPGA NCE which streams channel-major tiles).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain f32-accumulated GEMM: (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding="SAME",
+    dilation: int = 1,
+) -> jax.Array:
+    """Reference 2-D convolution, NCHW x OIHW -> NCHW, with RHS dilation.
+
+    `padding` is either an explicit symmetric pixel count or the literal
+    "SAME" (output spatial size == input size / stride, as used by every conv
+    layer of DilatedVGG).
+    """
+    pad = padding if isinstance(padding, str) else [(padding, padding), (padding, padding)]
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=pad,
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out
+
+
+def relu_ref(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2d_ref(x: jax.Array, *, window: int = 2, stride: int = 2) -> jax.Array:
+    """2x2/2 max pooling over NCHW."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, window, window),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def upsample_bilinear_ref(x: jax.Array, factor: int) -> jax.Array:
+    """Bilinear upsampling of an NCHW tensor by an integer factor."""
+    n, c, h, w = x.shape
+    return jax.image.resize(x, (n, c, h * factor, w * factor), method="bilinear")
+
+
+def im2col(
+    x: jax.Array,
+    kh: int,
+    kw: int,
+    *,
+    stride: int = 1,
+    padding="SAME",
+    dilation: int = 1,
+):
+    """Extract convolution patches: NCHW -> ((N*OH*OW, C*kh*kw), (n, oh, ow)).
+
+    Column order matches `w.reshape(cout, -1).T` for OIHW weights, i.e. the
+    GEMM `im2col(x) @ w.reshape(cout,-1).T` equals `conv2d_ref(x, w)`.
+    """
+    pad = padding if isinstance(padding, str) else [(padding, padding), (padding, padding)]
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=pad,
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*kh*kw, OH, OW)
+    n, ckk, oh, ow = patches.shape
+    return patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, ckk), (n, oh, ow)
+
+
+def conv2d_via_gemm_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding="SAME",
+    dilation: int = 1,
+) -> jax.Array:
+    """conv2d expressed as im2col + GEMM — the decomposition the NCE (and the
+    Pallas kernel) actually execute. Must equal conv2d_ref up to float
+    association order."""
+    cout = w.shape[0]
+    cols, (n, oh, ow) = im2col(
+        x, w.shape[2], w.shape[3], stride=stride, padding=padding, dilation=dilation
+    )
+    out = matmul_ref(cols, w.reshape(cout, -1).T)  # (N*OH*OW, Cout)
+    out = out.reshape(n, oh, ow, cout).transpose(0, 3, 1, 2)
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out

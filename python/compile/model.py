@@ -1,0 +1,189 @@
+"""L2: DilatedVGG in JAX — the DNN workload of the paper's evaluation.
+
+The paper processes a "slightly modified" DilatedVGG [Yu & Koltun 2015] on
+its DNN system (Fig 5), naming layers Conv1_1, Conv4_0–Conv4_5, Dense1 and
+Upscaling. This module reconstructs that network (DESIGN.md §7): a VGG
+front-end, a six-layer dilated conv4 stage, FC-as-conv dense layers and a
+bilinear upscaling head, in NCHW.
+
+Two roles:
+  * the *functional* model — AOT-lowered (aot.py) and executed from the rust
+    runtime via PJRT, with every convolution running through the L1 Pallas
+    NCE kernel;
+  * the *graph source* — `graph_dict()` exports the layer topology as JSON,
+    which `rust/src/graph/` imports and the deep-learning compiler lowers to
+    the hardware-adapted task graph (the paper's Fig 1 left-hand input).
+
+`scale` divides all channel counts: scale=1 is the paper-sized network used
+for timing simulation (non-functional, weights never materialised); scale=8
+("tiny") is the functional variant whose weights are baked into the AOT
+artifact so the rust binary needs only an input image.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_mxu, ref
+
+NUM_CLASSES = 16
+
+
+def dilated_vgg_spec(
+    *, num_classes: int = NUM_CLASSES, scale: int = 1, input_hw: int = 256
+) -> dict[str, Any]:
+    """Layer-list specification of DilatedVGG.
+
+    Returns a dict with `input` shape and an ordered `layers` list; this is
+    the single source of truth shared by the JAX forward pass, the JSON
+    graph export and (via import) the rust compiler.
+    """
+    if scale < 1:
+        raise ValueError("scale must be >= 1")
+    c = lambda ch: max(ch // scale, 1)
+    nc = max(num_classes // (scale if scale > 1 else 1), 2)
+
+    def conv(name, cin, cout, k=3, dilation=1):
+        return dict(
+            name=name, op="conv2d", cin=cin, cout=cout, kh=k, kw=k,
+            stride=1, dilation=dilation, padding="same", activation="relu",
+        )
+
+    layers = [
+        conv("conv1_0", 3, c(64)),
+        conv("conv1_1", c(64), c(64)),
+        dict(name="pool1", op="maxpool", window=2, stride=2),
+        conv("conv2_0", c(64), c(128)),
+        conv("conv2_1", c(128), c(128)),
+        dict(name="pool2", op="maxpool", window=2, stride=2),
+        conv("conv3_0", c(128), c(256)),
+        conv("conv3_1", c(256), c(256)),
+        conv("conv3_2", c(256), c(256)),
+        dict(name="pool3", op="maxpool", window=2, stride=2),
+        # The six dilated context layers — the compute-bound dots of Fig 7.
+        conv("conv4_0", c(256), c(512), dilation=2),
+        conv("conv4_1", c(512), c(512), dilation=2),
+        conv("conv4_2", c(512), c(512), dilation=2),
+        conv("conv4_3", c(512), c(512), dilation=2),
+        conv("conv4_4", c(512), c(512), dilation=2),
+        conv("conv4_5", c(512), c(512), dilation=2),
+        # FC-as-conv head (Dense1 of Fig 5/6).
+        conv("dense1", c(512), c(1024), k=7, dilation=4),
+        dict(
+            name="dense2", op="conv2d", cin=c(1024), cout=nc, kh=1, kw=1,
+            stride=1, dilation=1, padding="same", activation="none",
+        ),
+        # The communication-bound outlier of Fig 6.
+        dict(name="upscaling", op="upsample_bilinear", factor=8),
+    ]
+    return dict(
+        name="dilated_vgg" if scale == 1 else f"dilated_vgg_s{scale}",
+        input=dict(n=1, c=3, h=input_hw, w=input_hw),
+        dtype_bytes=2,  # the FPGA NCE streams 16-bit fixed-point operands
+        layers=layers,
+    )
+
+
+def dilated_vgg_tiny_spec(*, input_hw: int = 64) -> dict[str, Any]:
+    """The functional (weights-materialised) variant: channels /8."""
+    return dilated_vgg_spec(scale=8, input_hw=input_hw)
+
+
+def init_params(spec: dict[str, Any], key: jax.Array) -> dict[str, Any]:
+    """He-init weights for every conv layer of a spec."""
+    params: dict[str, Any] = {}
+    for layer in spec["layers"]:
+        if layer["op"] != "conv2d":
+            continue
+        key, wk = jax.random.split(key)
+        fan_in = layer["cin"] * layer["kh"] * layer["kw"]
+        w = jax.random.normal(
+            wk, (layer["cout"], layer["cin"], layer["kh"], layer["kw"]),
+            dtype=jnp.float32,
+        ) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((layer["cout"],), jnp.float32)
+        params[layer["name"]] = dict(w=w, b=b)
+    return params
+
+
+def _apply_layer(layer, x, params, conv_fn):
+    op = layer["op"]
+    if op == "conv2d":
+        p = params[layer["name"]]
+        y = conv_fn(
+            x, p["w"], p["b"],
+            stride=layer["stride"], padding=layer["padding"].upper(),
+            dilation=layer["dilation"],
+        )
+        if layer["activation"] == "relu":
+            y = ref.relu_ref(y)
+        return y
+    if op == "maxpool":
+        return ref.maxpool2d_ref(x, window=layer["window"], stride=layer["stride"])
+    if op == "upsample_bilinear":
+        return ref.upsample_bilinear_ref(x, layer["factor"])
+    raise ValueError(f"unknown op {op!r}")
+
+
+def forward(
+    params: dict[str, Any],
+    x: jax.Array,
+    spec: dict[str, Any],
+    *,
+    use_pallas: bool = True,
+    conv_block=(128, 128, 128),
+) -> jax.Array:
+    """Run the network. With use_pallas=True every conv is the L1 kernel."""
+    if use_pallas:
+        bm, bk, bn = conv_block
+        conv_fn = functools.partial(conv_mxu.conv2d_pallas, bm=bm, bk=bk, bn=bn)
+    else:
+        conv_fn = ref.conv2d_ref
+    for layer in spec["layers"]:
+        x = _apply_layer(layer, x, params, conv_fn)
+    return x
+
+
+def layer_shapes(spec: dict[str, Any]) -> list[dict[str, Any]]:
+    """Static shape inference over the spec — no tracing.
+
+    Mirrors rust/src/graph shape inference; the python test suite asserts
+    both agree with actual traced shapes.
+    """
+    inp = spec["input"]
+    n, c, h, w = inp["n"], inp["c"], inp["h"], inp["w"]
+    out = []
+    for layer in spec["layers"]:
+        if layer["op"] == "conv2d":
+            c = layer["cout"]
+            h = -(-h // layer["stride"])
+            w = -(-w // layer["stride"])
+        elif layer["op"] == "maxpool":
+            h //= layer["stride"]
+            w //= layer["stride"]
+        elif layer["op"] == "upsample_bilinear":
+            h *= layer["factor"]
+            w *= layer["factor"]
+        out.append(dict(name=layer["name"], n=n, c=c, h=h, w=w))
+    return out
+
+
+def graph_dict(spec: dict[str, Any]) -> dict[str, Any]:
+    """The DNN-graph JSON consumed by rust/src/graph/ (schema v1)."""
+    shapes = layer_shapes(spec)
+    layers = []
+    for layer, shp in zip(spec["layers"], shapes):
+        entry = dict(layer)
+        entry["out_shape"] = dict(n=shp["n"], c=shp["c"], h=shp["h"], w=shp["w"])
+        layers.append(entry)
+    return dict(
+        schema="avsm-dnn-graph-v1",
+        name=spec["name"],
+        input=spec["input"],
+        dtype_bytes=spec["dtype_bytes"],
+        layers=layers,
+    )

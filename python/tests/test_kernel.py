@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas NCE kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps GEMM/conv shapes and dtypes, including shapes that are not
+multiples of the tile geometry (the padding path) — the CORE correctness
+signal for the kernel the AOT artifacts embed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_mxu, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GEMM kernel
+# ---------------------------------------------------------------------------
+
+class TestMatmulPallas:
+    def test_exact_tile_multiple(self):
+        a, b = _rand(0, (128, 128)), _rand(1, (128, 128))
+        got = conv_mxu.matmul_pallas(a, b)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_multi_tile_grid(self):
+        a, b = _rand(2, (256, 384)), _rand(3, (384, 256))
+        got = conv_mxu.matmul_pallas(a, b, bm=128, bk=128, bn=128)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_ragged_needs_padding(self):
+        a, b = _rand(4, (100, 70)), _rand(5, (70, 45))
+        got = conv_mxu.matmul_pallas(a, b, bm=32, bk=32, bn=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_single_row_and_col(self):
+        a, b = _rand(6, (1, 17)), _rand(7, (17, 1))
+        got = conv_mxu.matmul_pallas(a, b, bm=8, bk=8, bn=8)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_bf16_inputs_f32_accumulate(self):
+        a = _rand(8, (64, 96), jnp.bfloat16)
+        b = _rand(9, (96, 64), jnp.bfloat16)
+        got = conv_mxu.matmul_pallas(a, b, bm=32, bk=32, bn=32)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=2e-2, atol=2e-2)
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            conv_mxu.matmul_pallas(_rand(0, (4, 5)), _rand(1, (6, 7)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        bm=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+        bn=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_gemm_shapes(self, m, k, n, bm, bk, bn, seed):
+        a = _rand(seed, (m, k))
+        b = _rand(seed + 1, (k, n))
+        got = conv_mxu.matmul_pallas(a, b, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Conv kernel (im2col + GEMM path)
+# ---------------------------------------------------------------------------
+
+class TestConvPallas:
+    def test_basic_3x3_same(self):
+        x, w, b = _rand(0, (1, 8, 16, 16)), _rand(1, (12, 8, 3, 3)), _rand(2, (12,))
+        got = conv_mxu.conv2d_pallas(x, w, b, bm=32, bk=32, bn=32)
+        np.testing.assert_allclose(
+            got, ref.conv2d_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_dilated_conv_matches_ref(self):
+        """Dilation 2 and 4 — the conv4_x / dense1 configurations."""
+        for dil in (2, 4):
+            x, w = _rand(3, (1, 6, 20, 20)), _rand(4, (10, 6, 3, 3))
+            got = conv_mxu.conv2d_pallas(x, w, dilation=dil, bm=32, bk=32, bn=32)
+            np.testing.assert_allclose(
+                got, ref.conv2d_ref(x, w, dilation=dil), rtol=1e-4, atol=1e-4
+            )
+
+    def test_7x7_dense_as_conv(self):
+        """The dense1 layer shape class: 7x7 kernel, dilation 4."""
+        x, w = _rand(5, (1, 8, 8, 8)), _rand(6, (16, 8, 7, 7))
+        got = conv_mxu.conv2d_pallas(x, w, dilation=4, bm=64, bk=64, bn=64)
+        np.testing.assert_allclose(
+            got, ref.conv2d_ref(x, w, dilation=4), rtol=1e-4, atol=1e-4
+        )
+
+    def test_1x1_pointwise(self):
+        x, w = _rand(7, (2, 16, 9, 9)), _rand(8, (4, 16, 1, 1))
+        got = conv_mxu.conv2d_pallas(x, w, bm=32, bk=32, bn=32)
+        np.testing.assert_allclose(got, ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_stride_2(self):
+        x, w = _rand(9, (1, 4, 16, 16)), _rand(10, (8, 4, 3, 3))
+        got = conv_mxu.conv2d_pallas(x, w, stride=2, bm=32, bk=32, bn=32)
+        np.testing.assert_allclose(
+            got, ref.conv2d_ref(x, w, stride=2), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        cin=st.integers(1, 8),
+        cout=st.integers(1, 12),
+        hw=st.integers(4, 14),
+        k=st.sampled_from([1, 3, 5]),
+        dilation=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_conv_shapes(self, cin, cout, hw, k, dilation, seed):
+        x = _rand(seed, (1, cin, hw, hw))
+        w = _rand(seed + 1, (cout, cin, k, k))
+        got = conv_mxu.conv2d_pallas(x, w, dilation=dilation, bm=16, bk=16, bn=16)
+        np.testing.assert_allclose(
+            got, ref.conv2d_ref(x, w, dilation=dilation), rtol=1e-4, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency + VMEM budget
+# ---------------------------------------------------------------------------
+
+class TestOracle:
+    def test_im2col_gemm_equals_direct_conv(self):
+        x, w, b = _rand(0, (2, 5, 11, 11)), _rand(1, (7, 5, 3, 3)), _rand(2, (7,))
+        np.testing.assert_allclose(
+            ref.conv2d_via_gemm_ref(x, w, b, dilation=2),
+            ref.conv2d_ref(x, w, b, dilation=2),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_maxpool_halves_spatial(self):
+        x = _rand(0, (1, 3, 8, 8))
+        assert ref.maxpool2d_ref(x).shape == (1, 3, 4, 4)
+
+    def test_upsample_factor(self):
+        x = _rand(0, (1, 3, 4, 4))
+        assert ref.upsample_bilinear_ref(x, 8).shape == (1, 3, 32, 32)
+
+    def test_vmem_footprint_under_budget(self):
+        """Default tile geometry must fit 16 MiB VMEM with 2x double-buffer
+        headroom (DESIGN.md §Perf)."""
+        fp = conv_mxu.vmem_footprint_bytes()
+        assert 2 * fp < 16 * 1024 * 1024

@@ -1,0 +1,105 @@
+"""L2 correctness: DilatedVGG spec, shapes, forward pass, graph export."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+class TestSpec:
+    def test_paper_layer_names_present(self):
+        """Fig 5/6/7 name Conv1_1, Conv4_0..Conv4_5, Dense1, Upscaling."""
+        spec = model.dilated_vgg_spec()
+        names = [l["name"] for l in spec["layers"]]
+        for expected in ["conv1_1", "conv4_0", "conv4_5", "dense1", "upscaling"]:
+            assert expected in names
+        assert sum(n.startswith("conv4_") for n in names) == 6
+
+    def test_conv4_is_dilated(self):
+        spec = model.dilated_vgg_spec()
+        for l in spec["layers"]:
+            if l["name"].startswith("conv4_"):
+                assert l["dilation"] == 2
+            if l["name"] == "dense1":
+                assert l["dilation"] == 4 and l["kh"] == 7
+
+    def test_full_channels(self):
+        spec = model.dilated_vgg_spec()
+        by = {l["name"]: l for l in spec["layers"]}
+        assert by["conv1_0"]["cout"] == 64
+        assert by["conv4_0"]["cout"] == 512
+        assert by["dense1"]["cout"] == 1024
+
+    def test_tiny_scale_divides(self):
+        spec = model.dilated_vgg_tiny_spec()
+        by = {l["name"]: l for l in spec["layers"]}
+        assert by["conv1_0"]["cout"] == 8
+        assert by["dense1"]["cout"] == 128
+
+    def test_bad_scale_rejected(self):
+        with pytest.raises(ValueError):
+            model.dilated_vgg_spec(scale=0)
+
+
+class TestShapes:
+    def test_static_shapes_match_traced(self):
+        """layer_shapes() (mirrored in rust) must agree with real tracing."""
+        spec = model.dilated_vgg_tiny_spec(input_hw=32)
+        params = model.init_params(spec, jax.random.PRNGKey(0))
+        static = {s["name"]: s for s in model.layer_shapes(spec)}
+
+        x = jnp.zeros((1, 3, 32, 32))
+        for layer in spec["layers"]:
+            x = model._apply_layer(layer, x, params, model.ref.conv2d_ref)
+            s = static[layer["name"]]
+            assert x.shape == (s["n"], s["c"], s["h"], s["w"]), layer["name"]
+
+    def test_output_is_input_resolution(self):
+        """Segmentation head: upscaling restores input H/W."""
+        spec = model.dilated_vgg_spec(input_hw=256)
+        out = model.layer_shapes(spec)[-1]
+        assert (out["h"], out["w"]) == (256, 256)
+
+
+class TestForward:
+    def test_pallas_matches_ref_forward(self):
+        """Whole-net equivalence: every conv through the L1 kernel."""
+        spec = model.dilated_vgg_tiny_spec(input_hw=16)
+        params = model.init_params(spec, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 16, 16))
+        got = model.forward(params, x, spec, use_pallas=True, conv_block=(32, 32, 32))
+        want = model.forward(params, x, spec, use_pallas=False)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_forward_deterministic(self):
+        spec = model.dilated_vgg_tiny_spec(input_hw=16)
+        params = model.init_params(spec, jax.random.PRNGKey(0))
+        x = jnp.ones((1, 3, 16, 16))
+        a = model.forward(params, x, spec, use_pallas=False)
+        b = model.forward(params, x, spec, use_pallas=False)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestGraphExport:
+    def test_schema_fields(self):
+        g = model.graph_dict(model.dilated_vgg_spec())
+        assert g["schema"] == "avsm-dnn-graph-v1"
+        assert g["dtype_bytes"] == 2
+        assert all("out_shape" in l for l in g["layers"])
+
+    def test_json_serializable_roundtrip(self):
+        g = model.graph_dict(model.dilated_vgg_tiny_spec())
+        assert json.loads(json.dumps(g)) == g
+
+    def test_out_shapes_chain(self):
+        """Each layer's channel count feeds the next conv's cin."""
+        g = model.graph_dict(model.dilated_vgg_spec())
+        prev_c = g["input"]["c"]
+        for l in g["layers"]:
+            if l["op"] == "conv2d":
+                assert l["cin"] == prev_c, l["name"]
+            prev_c = l["out_shape"]["c"]

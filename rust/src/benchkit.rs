@@ -1,0 +1,137 @@
+//! Minimal benchmark harness (the offline environment has no criterion).
+//!
+//! `cargo bench` runs the `benches/*.rs` binaries (harness = false); each
+//! uses this module to time closures with warmup, report median/mean/min
+//! and print a stable, grep-friendly table. Not statistics-grade, but
+//! deterministic workloads + medians give repeatable numbers.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter_line(&self) -> String {
+        format!(
+            "bench {:<44} {:>12} median {:>12} mean {:>12} min ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", d.as_secs_f64())
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} us", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// A group of benchmark cases with shared iteration policy.
+pub struct Bench {
+    group: String,
+    warmup: u32,
+    iters: u32,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: impl Into<String>) -> Self {
+        // Respect a quick mode for CI-ish runs: AVSM_BENCH_FAST=1.
+        let fast = std::env::var("AVSM_BENCH_FAST").is_ok();
+        Self {
+            group: group.into(),
+            warmup: if fast { 1 } else { 2 },
+            iters: if fast { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: u32, iters: u32) -> Self {
+        self.warmup = warmup;
+        self.iters = iters.max(1);
+        self
+    }
+
+    /// Time `f`, keeping its result alive (prevents trivial DCE).
+    pub fn case<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &BenchResult {
+        let name = name.into();
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let res = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iters: self.iters,
+            median,
+            mean,
+            min: samples[0],
+            max: *samples.last().unwrap(),
+        };
+        println!("{}", res.per_iter_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Emit a free-form metric row (throughput, deviation, ...) in the same
+    /// grep-friendly format.
+    pub fn metric(&self, name: &str, value: f64, unit: &str) {
+        println!("metric {:<43} {value:>14.4} {unit}", format!("{}/{name}", self.group));
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_measures_and_records() {
+        let mut b = Bench::new("test").with_iters(0, 3);
+        let r = b.case("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].name.contains("test/spin"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.500 ms");
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+    }
+}

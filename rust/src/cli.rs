@@ -1,0 +1,112 @@
+//! Tiny argument parser (the offline environment has no clap): subcommand
+//! plus `--flag value` / `--switch` options, with generated usage text.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (first element = program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut it = argv.into_iter().skip(1);
+        let mut args = Args { command: it.next().unwrap_or_default(), ..Default::default() };
+        let mut rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = std::mem::take(&mut rest[i]);
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    let v = std::mem::take(&mut rest[i + 1]);
+                    args.opts.insert(name.to_string(), v);
+                    i += 1;
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.opts.contains_key(switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_switches() {
+        let a = Args::parse(argv("avsm simulate --net dilated_vgg --hw 128 --zoom out.json")).unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("net"), Some("dilated_vgg"));
+        assert_eq!(a.get_u64("hw", 0).unwrap(), 128);
+        // --zoom consumed "out.json" as its value (not a switch).
+        assert_eq!(a.get("zoom"), Some("out.json"));
+    }
+
+    #[test]
+    fn equals_form_and_trailing_switch() {
+        let a = Args::parse(argv("avsm roofline --net=vgg16 --zoom")).unwrap();
+        assert_eq!(a.get("net"), Some("vgg16"));
+        assert!(a.has("zoom"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn positionals_kept_in_order() {
+        let a = Args::parse(argv("avsm compare a.json b.json --out c")).unwrap();
+        assert_eq!(a.positional, vec!["a.json", "b.json"]);
+        assert_eq!(a.get("out"), Some("c"));
+    }
+
+    #[test]
+    fn bad_integer_reported() {
+        let a = Args::parse(argv("avsm x --n abc")).unwrap();
+        assert!(a.get_u64("n", 1).is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_fine() {
+        let a = Args::parse(argv("avsm")).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

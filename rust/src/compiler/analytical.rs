@@ -1,0 +1,160 @@
+//! Analytical (static) performance estimator — the baseline the paper
+//! contrasts with simulation (§1): "Some approaches use statistical methods
+//! for performance estimation … whereas simulation considers the causality.
+//! Therefore, simulation is more adequate to detect communication
+//! bottlenecks and blocking behavior."
+//!
+//! In the style of Zhang et al. (FPGA'15): each layer's time is simply
+//! `max(compute_time, traffic_time)` under peak bandwidth and peak compute —
+//! no arbitration, no latency, no dependency stalls, no setup overheads.
+//! The comparison bench (`dse_sweep`/EXPERIMENTS.md) shows where this
+//! under-predicts: latency-dominated and blocking-prone layers.
+
+use super::cost::CostModel;
+use super::lower::CompiledNet;
+use crate::config::SystemConfig;
+use crate::graph::DnnGraph;
+use crate::sim::{ClockDomain, SimTime};
+
+/// Static per-layer estimate.
+#[derive(Debug, Clone)]
+pub struct AnalyticalEstimate {
+    pub layer_names: Vec<String>,
+    /// max(compute, traffic) per layer, in ps.
+    pub layer_ps: Vec<SimTime>,
+    pub compute_ps: Vec<SimTime>,
+    pub traffic_ps: Vec<SimTime>,
+}
+
+impl AnalyticalEstimate {
+    pub fn total_ps(&self) -> SimTime {
+        self.layer_ps.iter().sum()
+    }
+}
+
+/// Estimate using *ideal* (infinite-buffer) compute cycles and one-pass
+/// traffic — what an analytical DSE would use before any compiler exists.
+pub fn analytical_estimate(net: &DnnGraph, sys: &SystemConfig) -> AnalyticalEstimate {
+    let cost = CostModel::from_nce(&sys.nce);
+    let nce_clk = ClockDomain::from_mhz(sys.nce.freq_mhz);
+    let bus_clk = ClockDomain::from_mhz(sys.bus.freq_mhz);
+    let mut shape = net.input;
+    let mut est = AnalyticalEstimate {
+        layer_names: Vec::new(),
+        layer_ps: Vec::new(),
+        compute_ps: Vec::new(),
+        traffic_ps: Vec::new(),
+    };
+    for (layer, lc) in net.layers.iter().zip(net.layer_costs()) {
+        let cycles = cost.ideal_layer_cycles(&layer.op, shape);
+        let compute_ps = nce_clk.cycles_to_ps(cycles);
+        let bus_cycles = (lc.total_bytes() + sys.bus.bytes_per_cycle - 1) / sys.bus.bytes_per_cycle;
+        let traffic_ps = bus_clk.cycles_to_ps(bus_cycles);
+        est.layer_names.push(layer.name.clone());
+        est.compute_ps.push(compute_ps);
+        est.traffic_ps.push(traffic_ps);
+        est.layer_ps.push(compute_ps.max(traffic_ps));
+        shape = layer.op.out_shape(shape);
+    }
+    est
+}
+
+/// Same static model but fed with the *compiled* traffic/cycles (tiling
+/// overheads included) — isolates "causality effects" from "tiling effects"
+/// when compared against the simulators.
+pub fn analytical_estimate_compiled(
+    compiled: &CompiledNet,
+    sys: &SystemConfig,
+) -> AnalyticalEstimate {
+    let nce_clk = ClockDomain::from_mhz(sys.nce.freq_mhz);
+    let bus_clk = ClockDomain::from_mhz(sys.bus.freq_mhz);
+    let mut est = AnalyticalEstimate {
+        layer_names: Vec::new(),
+        layer_ps: Vec::new(),
+        compute_ps: Vec::new(),
+        traffic_ps: Vec::new(),
+    };
+    for l in &compiled.layers {
+        let compute_ps = nce_clk.cycles_to_ps(l.compute_cycles);
+        let bus_cycles = (l.dma_bytes + sys.bus.bytes_per_cycle - 1) / sys.bus.bytes_per_cycle;
+        let traffic_ps = bus_clk.cycles_to_ps(bus_cycles);
+        est.layer_names.push(l.name.clone());
+        est.compute_ps.push(compute_ps);
+        est.traffic_ps.push(traffic_ps);
+        est.layer_ps.push(compute_ps.max(traffic_ps));
+    }
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::models;
+
+    #[test]
+    fn estimate_covers_all_layers() {
+        let net = models::dilated_vgg_paper();
+        let sys = SystemConfig::base_paper();
+        let est = analytical_estimate(&net, &sys);
+        assert_eq!(est.layer_ps.len(), net.layers.len());
+        assert!(est.total_ps() > 0);
+    }
+
+    #[test]
+    fn conv4_layers_are_compute_bound_analytically() {
+        let net = models::dilated_vgg_paper();
+        let sys = SystemConfig::base_paper();
+        let est = analytical_estimate(&net, &sys);
+        for (i, name) in est.layer_names.iter().enumerate() {
+            if name.starts_with("conv4_") && name != "conv4_0" {
+                assert!(
+                    est.compute_ps[i] > est.traffic_ps[i],
+                    "{name} should be compute-bound in the static model"
+                );
+            }
+            // Pools move bytes and barely compute.
+            if name.starts_with("pool") {
+                assert!(
+                    est.compute_ps[i] < est.traffic_ps[i],
+                    "{name} should be traffic-bound in the static model"
+                );
+            }
+            // Upscaling is the paper's "neither" example: compute and
+            // traffic within the same ballpark, no strong winner.
+            if name == "upscaling" {
+                let ratio = est.compute_ps[i] as f64 / est.traffic_ps[i] as f64;
+                assert!((0.3..3.0).contains(&ratio), "upscaling ratio {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_estimate_at_least_ideal() {
+        // Tiling can only add traffic/cycles, never remove them.
+        let net = models::dilated_vgg(128, 2, 16);
+        let sys = SystemConfig::base_paper();
+        let c = compile(&net, &sys, CompileOptions::default()).unwrap();
+        let ideal = analytical_estimate(&net, &sys);
+        let comp = analytical_estimate_compiled(&c, &sys);
+        for i in 0..ideal.layer_ps.len() {
+            assert!(
+                comp.traffic_ps[i] >= ideal.traffic_ps[i],
+                "layer {} compiled traffic below ideal", ideal.layer_names[i]
+            );
+            assert!(comp.compute_ps[i] + 1 >= ideal.compute_ps[i]);
+        }
+    }
+
+    #[test]
+    fn faster_nce_lowers_compute_time() {
+        let net = models::dilated_vgg_tiny();
+        let mut sys = SystemConfig::base_paper();
+        let slow = analytical_estimate(&net, &sys);
+        sys.nce.freq_mhz *= 2;
+        let fast = analytical_estimate(&net, &sys);
+        for i in 0..slow.compute_ps.len() {
+            assert!(fast.compute_ps[i] <= slow.compute_ps[i]);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! NCE cycle cost model (DESIGN.md §6) — shared by the compiler's tiler,
+//! the lowering pass, and the roofline/analytical analyses.
+//!
+//! The NCE is an `R x C` multiplier array: input channels stream across the
+//! R rows, output channels across the C columns. One k x k conv tile of
+//! `oh x ow` output pixels with `cin_t` input and `cout_t` output channels
+//! therefore takes
+//!
+//! ```text
+//! cycles = oh * ow * kh * kw * ceil(cin_t / R) * ceil(cout_t / C)
+//! ```
+//!
+//! Vector ops (pooling, up-sampling, element-wise) bypass the MAC array and
+//! run on the C-lane vector path at one output element per lane per cycle.
+
+use crate::config::NceConfig;
+use crate::graph::Op;
+
+/// The cost model, parameterised over the NCE geometry — the same machinery
+/// models the paper's 32x64 FPGA array, an MXU-like 128x128 array, or any
+/// swept geometry in the DSE.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub rows: u32,
+    pub cols: u32,
+    /// Fixed per-task overhead in cycles (descriptor decode, buffer swap).
+    pub task_setup_cycles: u64,
+}
+
+impl CostModel {
+    pub fn from_nce(nce: &NceConfig) -> Self {
+        Self {
+            rows: nce.array_rows,
+            cols: nce.array_cols,
+            task_setup_cycles: nce.task_setup_cycles,
+        }
+    }
+
+    /// Cycles for one conv tile (excluding setup overhead).
+    pub fn conv_tile_cycles(
+        &self,
+        oh: u32,
+        ow: u32,
+        kh: u32,
+        kw: u32,
+        cin_t: u32,
+        cout_t: u32,
+    ) -> u64 {
+        let spatial = oh as u64 * ow as u64 * kh as u64 * kw as u64;
+        let row_passes = div_ceil64(cin_t as u64, self.rows as u64);
+        let col_passes = div_ceil64(cout_t as u64, self.cols as u64);
+        spatial * row_passes * col_passes
+    }
+
+    /// MACs actually performed by that tile (for utilization reporting).
+    pub fn conv_tile_macs(&self, oh: u32, ow: u32, kh: u32, kw: u32, cin_t: u32, cout_t: u32) -> u64 {
+        oh as u64 * ow as u64 * kh as u64 * kw as u64 * cin_t as u64 * cout_t as u64
+    }
+
+    /// Cycles for a vector-path tile producing `out_elems` elements with
+    /// `ops_per_elem` operations each.
+    pub fn vector_tile_cycles(&self, out_elems: u64, ops_per_elem: u64) -> u64 {
+        div_ceil64(out_elems * ops_per_elem, self.cols as u64)
+    }
+
+    /// Cycles for a whole layer processed as one giant tile — the ideal
+    /// (infinite-buffer) compute time, used by the analytical baseline and
+    /// the roofline's compute bound.
+    pub fn ideal_layer_cycles(&self, op: &Op, input: crate::graph::TensorShape) -> u64 {
+        match *op {
+            Op::Conv2d { cin, cout, kh, kw, .. } => {
+                let out = op.out_shape(input);
+                self.conv_tile_cycles(out.h, out.w, kh, kw, cin, cout) * out.n as u64
+            }
+            Op::MaxPool { window, .. } => {
+                let out = op.out_shape(input);
+                self.vector_tile_cycles(out.numel(), (window * window) as u64)
+            }
+            Op::UpsampleBilinear { .. } => {
+                let out = op.out_shape(input);
+                self.vector_tile_cycles(out.numel(), 4)
+            }
+            Op::DepthwiseConv2d { kh, kw, .. } => {
+                let out = op.out_shape(input);
+                self.depthwise_tile_cycles(out.h, out.w, kh, kw, out.c) * out.n as u64
+            }
+            Op::EltwiseAdd => self.vector_tile_cycles(input.numel(), 1),
+        }
+    }
+
+    /// Depthwise tile: one channel per array row, columns idle (no
+    /// cross-channel reduction to spread over them).
+    pub fn depthwise_tile_cycles(&self, oh: u32, ow: u32, kh: u32, kw: u32, c: u32) -> u64 {
+        oh as u64 * ow as u64 * kh as u64 * kw as u64
+            * div_ceil64(c as u64, self.rows as u64)
+    }
+
+    /// Peak MAC throughput per cycle.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        self.rows as u64 * self.cols as u64
+    }
+
+    /// Array utilization of a tile in [0, 1]: achieved MACs over
+    /// cycles x peak. Partial tiles (cin_t % rows != 0 etc.) waste lanes —
+    /// exactly the effect the paper's Fig 6 "neither bound" layers show.
+    pub fn tile_utilization(&self, oh: u32, ow: u32, kh: u32, kw: u32, cin_t: u32, cout_t: u32) -> f64 {
+        let macs = self.conv_tile_macs(oh, ow, kh, kw, cin_t, cout_t) as f64;
+        let cycles = self.conv_tile_cycles(oh, ow, kh, kw, cin_t, cout_t) as f64;
+        macs / (cycles * self.peak_macs_per_cycle() as f64)
+    }
+}
+
+pub(crate) fn div_ceil64(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Padding, TensorShape};
+
+    fn model() -> CostModel {
+        CostModel { rows: 32, cols: 64, task_setup_cycles: 32 }
+    }
+
+    #[test]
+    fn full_array_tile_is_ideal() {
+        let m = model();
+        // 32 input ch, 64 output ch: one pass, so cycles = spatial * k*k.
+        assert_eq!(m.conv_tile_cycles(8, 8, 3, 3, 32, 64), 8 * 8 * 9);
+        assert!((m.tile_utilization(8, 8, 3, 3, 32, 64) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_channels_round_up() {
+        let m = model();
+        // 3 input channels still occupy a full row pass (conv1_0!).
+        assert_eq!(m.conv_tile_cycles(4, 4, 3, 3, 3, 64), 4 * 4 * 9);
+        let util = m.tile_utilization(4, 4, 3, 3, 3, 64);
+        assert!((util - 3.0 / 32.0).abs() < 1e-12, "util {util}");
+    }
+
+    #[test]
+    fn multi_pass_scales_linearly() {
+        let m = model();
+        let one = m.conv_tile_cycles(8, 8, 3, 3, 32, 64);
+        assert_eq!(m.conv_tile_cycles(8, 8, 3, 3, 64, 64), 2 * one);
+        assert_eq!(m.conv_tile_cycles(8, 8, 3, 3, 64, 128), 4 * one);
+    }
+
+    #[test]
+    fn vector_cycles() {
+        let m = model();
+        // 1024 elems, 4 ops each, 64 lanes: 64 cycles.
+        assert_eq!(m.vector_tile_cycles(1024, 4), 64);
+        // Rounds up.
+        assert_eq!(m.vector_tile_cycles(65, 1), 2);
+    }
+
+    #[test]
+    fn ideal_layer_matches_macs_at_full_util() {
+        let m = model();
+        let op = Op::Conv2d {
+            cin: 64,
+            cout: 128,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            dilation: 1,
+            padding: Padding::Same,
+            activation: Activation::Relu,
+        };
+        let input = TensorShape::new(1, 64, 16, 16);
+        let cycles = m.ideal_layer_cycles(&op, input);
+        // 64/32=2 row passes * 128/64=2 col passes * 16*16*9 spatial.
+        assert_eq!(cycles, 4 * 16 * 16 * 9);
+        // At full lane occupancy, macs == cycles * peak.
+        assert_eq!(op.macs(input), cycles * m.peak_macs_per_cycle());
+    }
+
+    #[test]
+    fn utilization_never_exceeds_one() {
+        let m = model();
+        for (cin, cout) in [(1u32, 1u32), (3, 64), (32, 64), (48, 96), (512, 512)] {
+            let u = m.tile_utilization(4, 4, 3, 3, cin, cout);
+            assert!(u > 0.0 && u <= 1.0 + 1e-12, "{cin}x{cout} -> {u}");
+        }
+    }
+}

@@ -1,0 +1,547 @@
+//! Lowering: DNN graph + tiling -> hardware-adapted task graph.
+//!
+//! Each tile becomes a `load IFM / load W / compute / store OFM` group with
+//! dependencies that encode both data flow and on-chip buffer reuse:
+//!
+//! * data deps — a compute needs its loads; a store needs the last
+//!   accumulation compute of its OFM tile; layer N+1 needs layer N's barrier.
+//! * buffer deps — with double buffering (the default, matching the paper's
+//!   DMA/NCE overlap visible in Fig 4) the load for tile j may start as soon
+//!   as the compute of tile j-2 freed its buffer half; without it, tile j
+//!   waits for compute j-1 (fully serial load->compute->store).
+//!
+//! Conv+bias+ReLU are fused into the compute task (the fusion pass): the
+//! activation happens on the NCE's output path at no extra cycles, so no
+//! separate task is emitted — one of the compiler transformations the paper
+//! insists must be visible to the performance model.
+
+use super::cost::CostModel;
+use super::tiling::{self, LayerTiling};
+use crate::config::SystemConfig;
+use crate::graph::{DnnGraph, Op, TensorShape};
+use crate::taskgraph::{BufferKind, TaskGraph, TaskId, TaskKind};
+use anyhow::{Context, Result};
+
+/// Compiler options (the software half of the design space).
+#[derive(Debug, Clone, Copy)]
+pub struct CompileOptions {
+    /// Overlap DMA with compute using two buffer halves per on-chip buffer.
+    pub double_buffer: bool,
+    /// Emit human-readable task labels. Costs allocations; disable for DSE
+    /// sweeps where the labels are never read.
+    pub labels: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self { double_buffer: true, labels: true }
+    }
+}
+
+/// Per-layer compilation record (feeds Fig 5/6/7 reporting).
+#[derive(Debug, Clone)]
+pub struct CompiledLayer {
+    pub index: u32,
+    pub name: String,
+    pub tiling: LayerTiling,
+    /// Total NCE compute cycles over all tiles of the layer.
+    pub compute_cycles: u64,
+    /// Total bytes this layer moves over the bus.
+    pub dma_bytes: u64,
+    pub macs: u64,
+    /// The layer's closing barrier task.
+    pub barrier: TaskId,
+}
+
+/// The compiler's output: the task graph plus per-layer metadata.
+#[derive(Debug, Clone)]
+pub struct CompiledNet {
+    pub graph: TaskGraph,
+    pub layers: Vec<CompiledLayer>,
+}
+
+impl CompiledNet {
+    /// Tasks of one layer (by layer index recorded on each task).
+    pub fn layer_tasks(&self, layer: u32) -> impl Iterator<Item = &crate::taskgraph::Task> {
+        self.graph.tasks().iter().filter(move |t| t.layer == layer)
+    }
+}
+
+/// Compile a DNN graph for a system configuration.
+pub fn compile(net: &DnnGraph, sys: &SystemConfig, opts: CompileOptions) -> Result<CompiledNet> {
+    net.validate()?;
+    sys.validate()?;
+    let cost = CostModel::from_nce(&sys.nce);
+    let mut tg = TaskGraph::new(net.name.clone());
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut prev_barrier: Option<TaskId> = None;
+    let mut shape = net.input;
+    let shapes = net.layer_shapes();
+
+    for (li, layer) in net.layers.iter().enumerate() {
+        let input = shape;
+        let out = shapes[li];
+        shape = out;
+        let tiling = tiling::tile_layer(sys, &layer.op, input, net.dtype_bytes)
+            .with_context(|| format!("tiling layer {:?}", layer.name))?;
+        let compiled = match tiling {
+            LayerTiling::Conv(choice) => lower_conv(
+                &mut tg, &cost, li as u32, &layer.name, &layer.op, input, out, choice,
+                net.dtype_bytes, prev_barrier, opts,
+            ),
+            LayerTiling::Vector(vt) => lower_vector(
+                &mut tg, &cost, li as u32, layer, input, out, vt, net.dtype_bytes,
+                prev_barrier, opts, &shapes,
+            ),
+        };
+        prev_barrier = Some(compiled.barrier);
+        layers.push(CompiledLayer { tiling, ..compiled });
+    }
+    debug_assert!(tg.validate().is_ok());
+    Ok(CompiledNet { graph: tg, layers })
+}
+
+struct PartialLayer {
+    index: u32,
+    name: String,
+    compute_cycles: u64,
+    dma_bytes: u64,
+    macs: u64,
+    barrier: TaskId,
+}
+
+// Conversion helper: PartialLayer + tiling -> CompiledLayer via struct
+// update syntax in `compile`.
+impl PartialLayer {
+    fn into_compiled(self, tiling: LayerTiling) -> CompiledLayer {
+        CompiledLayer {
+            index: self.index,
+            name: self.name,
+            tiling,
+            compute_cycles: self.compute_cycles,
+            dma_bytes: self.dma_bytes,
+            macs: self.macs,
+            barrier: self.barrier,
+        }
+    }
+}
+
+fn label(opts: CompileOptions, f: impl FnOnce() -> String) -> String {
+    if opts.labels {
+        f()
+    } else {
+        String::new()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lower_conv(
+    tg: &mut TaskGraph,
+    cost: &CostModel,
+    li: u32,
+    lname: &str,
+    op: &Op,
+    input: TensorShape,
+    out: TensorShape,
+    t: tiling::TilingChoice,
+    dtype: u32,
+    prev_barrier: Option<TaskId>,
+    opts: CompileOptions,
+) -> CompiledLayer {
+    let (cin, _cout, kh, kw, stride, dilation) = match *op {
+        Op::Conv2d { cin, cout, kh, kw, stride, dilation, .. } => {
+            (cin, cout, kh, kw, stride, dilation)
+        }
+        _ => unreachable!("lower_conv on non-conv"),
+    };
+    let eff_kh = tiling::effective_k(kh, dilation);
+    let base_dep: Vec<TaskId> = prev_barrier.into_iter().collect();
+
+    let mut compute_cycles = 0u64;
+    let mut dma_bytes = 0u64;
+    let mut macs = 0u64;
+    let mut stores: Vec<TaskId> = Vec::new();
+
+    // Buffer-reuse rings: the compute that last used each buffer half.
+    let depth = if opts.double_buffer { 2 } else { 1 };
+    let mut load_ring: Vec<Option<TaskId>> = vec![None; depth];
+    let mut store_ring: Vec<Option<TaskId>> = vec![None; depth];
+    let mut tile_idx = 0usize;
+    let mut group_idx = 0usize;
+
+    // When the whole-channel stripe is IFM-resident, its loads are hoisted
+    // out of the cout loop: one load per (stripe, cin tile), reused by every
+    // cout tile; the stripe buffer is recycled per stripe (ring of stripes).
+    let mut stripe_ring: Vec<Option<TaskId>> = vec![None; depth];
+
+    for s in 0..t.n_oh {
+        let oh0 = s * t.oh_t;
+        let rows = t.oh_t.min(out.h - oh0);
+        let ih_rows = ((rows - 1) * stride + eff_kh).min(input.h);
+
+        // Hoisted IFM loads (resident stripes only).
+        let mut stripe_ifm_loads: Vec<TaskId> = Vec::new();
+        if t.ifm_resident {
+            let mut load_deps = base_dep.clone();
+            if let Some(prev) = stripe_ring[s as usize % depth] {
+                load_deps.push(prev);
+            }
+            for ic in 0..t.n_cin {
+                let cin_this = t.cin_t.min(cin - ic * t.cin_t);
+                let ifm_bytes =
+                    cin_this as u64 * ih_rows as u64 * input.w as u64 * dtype as u64;
+                dma_bytes += ifm_bytes;
+                stripe_ifm_loads.push(tg.push(
+                    li,
+                    label(opts, || format!("{lname}/s{s}i{ic}/ld_ifm")),
+                    TaskKind::DmaLoad { bytes: ifm_bytes, buffer: BufferKind::Ifm },
+                    load_deps.clone(),
+                ));
+            }
+        }
+        let mut stripe_last_compute: Option<TaskId> = None;
+
+        for oc in 0..t.n_cout {
+            let cout_this = t.cout_t.min(
+                match *op {
+                    Op::Conv2d { cout, .. } => cout,
+                    _ => unreachable!(),
+                } - oc * t.cout_t,
+            );
+            let mut last_compute: Option<TaskId> = None;
+            for ic in 0..t.n_cin {
+                let cin_this = t.cin_t.min(cin - ic * t.cin_t);
+                let w_bytes = (cin_this as u64 * cout_this as u64 * kh as u64 * kw as u64
+                    + cout_this as u64)
+                    * dtype as u64;
+
+                // Loads wait for the previous tenant of this buffer half.
+                let ring_slot = tile_idx % depth;
+                let mut load_deps = base_dep.clone();
+                if let Some(prev) = load_ring[ring_slot] {
+                    load_deps.push(prev);
+                }
+                let ld_ifm = if t.ifm_resident {
+                    stripe_ifm_loads[ic as usize]
+                } else {
+                    let ifm_bytes =
+                        cin_this as u64 * ih_rows as u64 * input.w as u64 * dtype as u64;
+                    dma_bytes += ifm_bytes;
+                    tg.push(
+                        li,
+                        label(opts, || format!("{lname}/s{s}o{oc}i{ic}/ld_ifm")),
+                        TaskKind::DmaLoad { bytes: ifm_bytes, buffer: BufferKind::Ifm },
+                        load_deps.clone(),
+                    )
+                };
+                let ld_w = tg.push(
+                    li,
+                    label(opts, || format!("{lname}/s{s}o{oc}i{ic}/ld_w")),
+                    TaskKind::DmaLoad { bytes: w_bytes, buffer: BufferKind::Weights },
+                    load_deps,
+                );
+                dma_bytes += w_bytes;
+
+                let cycles = cost.conv_tile_cycles(rows, out.w, kh, kw, cin_this, cout_this)
+                    + cost.task_setup_cycles;
+                let tile_macs =
+                    cost.conv_tile_macs(rows, out.w, kh, kw, cin_this, cout_this);
+                compute_cycles += cycles;
+                macs += tile_macs;
+
+                let mut deps = vec![ld_ifm, ld_w];
+                if let Some(prev) = last_compute {
+                    deps.push(prev); // accumulate into the same OFM tile
+                }
+                // First compute of a group claims the OFM buffer half.
+                if ic == 0 {
+                    if let Some(prev_store) = store_ring[group_idx % depth] {
+                        deps.push(prev_store);
+                    }
+                }
+                let comp = tg.push(
+                    li,
+                    label(opts, || format!("{lname}/s{s}o{oc}i{ic}/mac")),
+                    TaskKind::Compute { cycles, macs: tile_macs },
+                    deps,
+                );
+                load_ring[ring_slot] = Some(comp);
+                last_compute = Some(comp);
+                stripe_last_compute = Some(comp);
+                tile_idx += 1;
+            }
+            let ofm_bytes = cout_this as u64 * rows as u64 * out.w as u64 * dtype as u64;
+            dma_bytes += ofm_bytes;
+            let st = tg.push(
+                li,
+                label(opts, || format!("{lname}/s{s}o{oc}/st_ofm")),
+                TaskKind::DmaStore { bytes: ofm_bytes },
+                vec![last_compute.expect("group has at least one compute")],
+            );
+            store_ring[group_idx % depth] = Some(st);
+            stores.push(st);
+            group_idx += 1;
+        }
+        stripe_ring[s as usize % depth] = stripe_last_compute;
+    }
+
+    let barrier = tg.push(li, label(opts, || format!("{lname}/end")), TaskKind::Barrier, stores);
+    PartialLayer {
+        index: li,
+        name: lname.to_string(),
+        compute_cycles,
+        dma_bytes,
+        macs,
+        barrier,
+    }
+    .into_compiled(LayerTiling::Conv(t))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lower_vector(
+    tg: &mut TaskGraph,
+    cost: &CostModel,
+    li: u32,
+    layer: &crate::graph::Layer,
+    input: TensorShape,
+    out: TensorShape,
+    t: tiling::VectorTiling,
+    dtype: u32,
+    prev_barrier: Option<TaskId>,
+    opts: CompileOptions,
+    shapes: &[TensorShape],
+) -> CompiledLayer {
+    let lname = &layer.name;
+    let base_dep: Vec<TaskId> = prev_barrier.into_iter().collect();
+    let depth = if opts.double_buffer { 2 } else { 1 };
+    let mut ring: Vec<Option<TaskId>> = vec![None; depth];
+    let mut stores = Vec::new();
+    let mut compute_cycles = 0u64;
+    let mut dma_bytes = 0u64;
+    let mut macs = 0u64;
+
+    // Per-output-row byte rates.
+    let ops_per_elem: u64 = match layer.op {
+        Op::MaxPool { window, .. } => (window * window) as u64,
+        Op::UpsampleBilinear { .. } => 4,
+        Op::EltwiseAdd => 1,
+        Op::DepthwiseConv2d { .. } => 0, // costed via the MAC-array model below
+        Op::Conv2d { .. } => unreachable!("conv must use lower_conv"),
+    };
+    // Depthwise weights (c*k*k, small) ride along with the first stripe.
+    let dw_weight_bytes: u64 = layer.op.weight_bytes(dtype);
+    // Skip operand (eltwise): the second input stripe is loaded too.
+    let skip_row_bytes: u64 = layer
+        .skip_from
+        .map(|src| shapes[src].c as u64 * shapes[src].w as u64 * dtype as u64)
+        .unwrap_or(0);
+
+    for s in 0..t.n_oh {
+        let oh0 = s * t.oh_t;
+        let rows = t.oh_t.min(out.h - oh0);
+        let in_rows = match layer.op {
+            Op::MaxPool { window, stride } => {
+                ((rows - 1) * stride + window).min(input.h)
+            }
+            Op::UpsampleBilinear { factor } => {
+                ((rows + factor - 1) / factor + 1).min(input.h)
+            }
+            Op::DepthwiseConv2d { kh, stride, dilation, .. } => {
+                ((rows - 1) * stride + tiling::effective_k(kh, dilation)).min(input.h)
+            }
+            _ => rows.min(input.h),
+        };
+        let mut ifm_bytes = input.c as u64 * in_rows as u64 * input.w as u64 * dtype as u64
+            + rows as u64 * skip_row_bytes;
+        if s == 0 {
+            ifm_bytes += dw_weight_bytes;
+        }
+        let ofm_bytes = out.c as u64 * rows as u64 * out.w as u64 * dtype as u64;
+        dma_bytes += ifm_bytes + ofm_bytes;
+
+        let slot = s as usize % depth;
+        let mut load_deps = base_dep.clone();
+        if let Some(prev) = ring[slot] {
+            load_deps.push(prev);
+        }
+        let ld = tg.push(
+            li,
+            label(opts, || format!("{lname}/s{s}/ld")),
+            TaskKind::DmaLoad { bytes: ifm_bytes, buffer: BufferKind::Ifm },
+            load_deps,
+        );
+        let out_elems = out.c as u64 * rows as u64 * out.w as u64;
+        let (cycles, tile_macs) = match layer.op {
+            Op::DepthwiseConv2d { kh, kw, .. } => (
+                cost.depthwise_tile_cycles(rows, out.w, kh, kw, out.c)
+                    + cost.task_setup_cycles,
+                out_elems * kh as u64 * kw as u64,
+            ),
+            _ => (
+                cost.vector_tile_cycles(out_elems, ops_per_elem) + cost.task_setup_cycles,
+                0,
+            ),
+        };
+        compute_cycles += cycles;
+        macs += tile_macs;
+        let comp = tg.push(
+            li,
+            label(opts, || format!("{lname}/s{s}/vec")),
+            TaskKind::Compute { cycles, macs: tile_macs },
+            vec![ld],
+        );
+        ring[slot] = Some(comp);
+        let st = tg.push(
+            li,
+            label(opts, || format!("{lname}/s{s}/st")),
+            TaskKind::DmaStore { bytes: ofm_bytes },
+            vec![comp],
+        );
+        stores.push(st);
+    }
+
+    let barrier = tg.push(li, label(opts, || format!("{lname}/end")), TaskKind::Barrier, stores);
+    PartialLayer {
+        index: li,
+        name: lname.clone(),
+        compute_cycles,
+        dma_bytes,
+        macs,
+        barrier,
+    }
+    .into_compiled(LayerTiling::Vector(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn sys() -> SystemConfig {
+        SystemConfig::base_paper()
+    }
+
+    #[test]
+    fn compiles_lenet() {
+        let net = models::lenet(28);
+        let c = compile(&net, &sys(), CompileOptions::default()).unwrap();
+        c.graph.validate().unwrap();
+        assert_eq!(c.layers.len(), net.layers.len());
+        assert!(c.graph.len() > net.layers.len());
+    }
+
+    #[test]
+    fn compiles_paper_dilated_vgg() {
+        let net = models::dilated_vgg_paper();
+        let c = compile(&net, &sys(), CompileOptions::default()).unwrap();
+        c.graph.validate().unwrap();
+        // MAC accounting must be exact: compiler MACs == graph-IR MACs.
+        let compiled: u64 = c.layers.iter().map(|l| l.macs).sum();
+        assert_eq!(compiled, net.total_macs());
+    }
+
+    #[test]
+    fn layer_barriers_serialize_layers() {
+        let net = models::lenet(28);
+        let c = compile(&net, &sys(), CompileOptions::default()).unwrap();
+        // Every task of layer l+1 must (transitively) depend on the barrier
+        // of layer l; direct check: its first loads include the barrier.
+        for w in c.layers.windows(2) {
+            let barrier = w[0].barrier;
+            let next_loads: Vec<_> = c
+                .graph
+                .tasks()
+                .iter()
+                .filter(|t| {
+                    t.layer == w[1].index && matches!(t.kind, TaskKind::DmaLoad { .. })
+                })
+                .collect();
+            assert!(!next_loads.is_empty());
+            for t in next_loads.iter().take(2) {
+                assert!(t.deps.contains(&barrier), "{} misses barrier", t.label);
+            }
+        }
+    }
+
+    #[test]
+    fn double_buffer_reduces_critical_path() {
+        let net = models::dilated_vgg(64, 4, 16);
+        let db = compile(&net, &sys(), CompileOptions { double_buffer: true, labels: false })
+            .unwrap();
+        let sb = compile(&net, &sys(), CompileOptions { double_buffer: false, labels: false })
+            .unwrap();
+        let dur = |t: &crate::taskgraph::Task| match t.kind {
+            TaskKind::Compute { cycles, .. } => cycles,
+            TaskKind::DmaLoad { bytes, .. } | TaskKind::DmaStore { bytes } => bytes / 16,
+            TaskKind::Barrier => 0,
+        };
+        let cp_db = db.graph.critical_path(&dur);
+        let cp_sb = sb.graph.critical_path(&dur);
+        assert!(cp_db <= cp_sb, "double buffering should not lengthen the critical path");
+        assert!(cp_db < cp_sb, "on a multi-tile net it should strictly shorten it");
+    }
+
+    #[test]
+    fn dma_bytes_match_taskgraph() {
+        let net = models::dilated_vgg_tiny();
+        let c = compile(&net, &sys(), CompileOptions::default()).unwrap();
+        let layer_sum: u64 = c.layers.iter().map(|l| l.dma_bytes).sum();
+        assert_eq!(layer_sum, c.graph.total_dma_bytes());
+        let cycles_sum: u64 = c.layers.iter().map(|l| l.compute_cycles).sum();
+        assert_eq!(cycles_sum, c.graph.total_compute_cycles());
+    }
+
+    #[test]
+    fn ofm_bytes_written_exactly_once() {
+        // The accumulate-on-chip schedule writes each output byte once.
+        let net = models::dilated_vgg_tiny();
+        let c = compile(&net, &sys(), CompileOptions::default()).unwrap();
+        let shapes = net.layer_shapes();
+        for (li, l) in net.layers.iter().enumerate() {
+            let stored: u64 = c
+                .graph
+                .tasks()
+                .iter()
+                .filter(|t| t.layer == li as u32)
+                .map(|t| match t.kind {
+                    TaskKind::DmaStore { bytes } => bytes,
+                    _ => 0,
+                })
+                .sum();
+            assert_eq!(
+                stored,
+                shapes[li].bytes(net.dtype_bytes),
+                "layer {} stores wrong byte count", l.name
+            );
+        }
+    }
+
+    #[test]
+    fn labels_disabled_are_empty() {
+        let net = models::lenet(28);
+        let c = compile(&net, &sys(), CompileOptions { double_buffer: true, labels: false })
+            .unwrap();
+        assert!(c.graph.tasks().iter().all(|t| t.label.is_empty()));
+    }
+
+    #[test]
+    fn eltwise_skip_traffic_counted() {
+        let net = models::tiny_resnet(32, 16, 2);
+        let c = compile(&net, &sys(), CompileOptions::default()).unwrap();
+        c.graph.validate().unwrap();
+        // The add layers load two stripes worth of input.
+        let add_layer = net.layer_index("res0_add").unwrap();
+        let cost = net.layer_costs()[add_layer];
+        let loaded: u64 = c
+            .graph
+            .tasks()
+            .iter()
+            .filter(|t| t.layer == add_layer as u32)
+            .map(|t| match t.kind {
+                TaskKind::DmaLoad { bytes, .. } => bytes,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(loaded, cost.ifm_bytes);
+    }
+}

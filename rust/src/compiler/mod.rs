@@ -1,0 +1,24 @@
+//! The deep-learning compiler — the paper's key insight is that this
+//! component belongs *inside* the performance-estimation loop (Fig 1): it
+//! converts the DNN graph into a **hardware-adapted task graph** according
+//! to the hardware constraints (memory hierarchy, on-chip buffer sizes,
+//! supported operations), and those transformations shape the traffic and
+//! the timing the virtual system model then simulates.
+//!
+//! Pipeline: [`tiling`] picks per-layer tile geometry that fits the NCE's
+//! on-chip buffers while minimizing external traffic; [`lower`] emits the
+//! DMA/compute task graph with a double-buffered schedule; [`cost`] is the
+//! NCE cycle model shared with the roofline analysis; [`analytical`] is the
+//! statistical/static baseline the paper argues *under*-models causality
+//! (no blocking, no arbitration) — reproduced here for the comparison
+//! benches.
+
+pub mod analytical;
+pub mod cost;
+pub mod lower;
+pub mod tiling;
+
+pub use analytical::{analytical_estimate, analytical_estimate_compiled, AnalyticalEstimate};
+pub use cost::CostModel;
+pub use lower::{compile, CompileOptions, CompiledLayer, CompiledNet};
+pub use tiling::{LayerTiling, TilingChoice};

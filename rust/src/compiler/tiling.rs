@@ -1,0 +1,518 @@
+//! Hardware-adapted tiling: fit each layer's working set into the NCE's
+//! on-chip buffers while minimizing external-memory traffic.
+//!
+//! This pass is where the paper's "task graph considers the memory
+//! hierarchy, the on-chip memory sizes and the supported operations"
+//! materialises. Loop order per conv layer (outer to inner):
+//!
+//! ```text
+//! for oh_tile:              # output-row stripes
+//!   for cout_tile:          # output-channel groups
+//!     for cin_tile:         # input-channel groups (accumulated on-chip)
+//!       DMA load  IFM(cin_tile, rows+halo)   -> ifm buffer
+//!       DMA load  W(cin_tile, cout_tile)     -> weight buffer
+//!       NCE       accumulate partial OFM     -> ofm buffer
+//!     DMA store OFM(cout_tile, rows)
+//! ```
+//!
+//! The OFM tile stays resident across the `cin` walk, so each output byte
+//! crosses the bus exactly once; IFM is re-read once per `cout` tile and
+//! weights once per `oh` tile — the traffic function the tiler minimizes,
+//! the same objective as Zhang et al. (FPGA'15) loop tiling.
+
+use crate::config::{NceConfig, SystemConfig};
+use crate::graph::{Op, TensorShape};
+use anyhow::{bail, Result};
+
+/// Tile geometry chosen for a conv layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilingChoice {
+    pub cin_t: u32,
+    pub cout_t: u32,
+    /// Output rows per stripe.
+    pub oh_t: u32,
+    pub n_cin: u32,
+    pub n_cout: u32,
+    pub n_oh: u32,
+    /// True when the whole-channel IFM stripe fits the IFM buffer: the
+    /// stripe is then loaded once and *reused across all cout tiles*
+    /// instead of being re-streamed per cout tile — the single most
+    /// important reuse decision for weight-heavy layers (conv4_x, dense1).
+    pub ifm_resident: bool,
+}
+
+impl TilingChoice {
+    pub fn tiles(&self) -> u64 {
+        self.n_cin as u64 * self.n_cout as u64 * self.n_oh as u64
+    }
+}
+
+/// Tiling for vector-path layers (pool/upsample/eltwise): output-row
+/// stripes with all channels resident.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VectorTiling {
+    pub oh_t: u32,
+    pub n_oh: u32,
+}
+
+/// Per-layer tiling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerTiling {
+    Conv(TilingChoice),
+    Vector(VectorTiling),
+}
+
+/// Effective kernel extent under dilation.
+pub fn effective_k(k: u32, dilation: u32) -> u32 {
+    (k - 1) * dilation + 1
+}
+
+fn div_ceil(a: u32, b: u32) -> u32 {
+    (a + b - 1) / b
+}
+
+/// IFM stripe height needed to produce `oh_t` output rows.
+fn ifm_rows_for(oh_t: u32, stride: u32, eff_kh: u32, in_h: u32) -> u32 {
+    ((oh_t - 1) * stride + eff_kh).min(in_h)
+}
+
+/// Bytes of one IFM stripe.
+fn ifm_tile_bytes(cin_t: u32, ih_t: u32, in_w: u32, dtype: u32) -> u64 {
+    cin_t as u64 * ih_t as u64 * in_w as u64 * dtype as u64
+}
+
+fn weight_tile_bytes(cin_t: u32, cout_t: u32, kh: u32, kw: u32, dtype: u32) -> u64 {
+    (cin_t as u64 * cout_t as u64 * kh as u64 * kw as u64 + cout_t as u64) * dtype as u64
+}
+
+fn ofm_tile_bytes(cout_t: u32, oh_t: u32, out_w: u32, dtype: u32) -> u64 {
+    cout_t as u64 * oh_t as u64 * out_w as u64 * dtype as u64
+}
+
+/// Candidate channel-tile sizes: multiples of the array dimension (full
+/// lanes) capped at the layer size, fractions of the array dimension (for
+/// layers whose working set is too fat even at one array pass — e.g. the
+/// 7x7 dense1 weights), plus the layer size itself.
+fn channel_candidates(total: u32, array_dim: u32) -> Vec<u32> {
+    let mut c: Vec<u32> = Vec::new();
+    let mut m = array_dim;
+    while m < total {
+        c.push(m);
+        m *= 2;
+    }
+    let mut f = array_dim / 2;
+    while f >= 1 {
+        if f < total {
+            c.push(f);
+        }
+        f /= 2;
+    }
+    c.push(total);
+    c.sort_unstable();
+    c.dedup();
+    c
+}
+
+/// External-traffic estimate (bytes) for a candidate tiling — half of the
+/// tiler's objective function (see module docs for the reuse argument).
+pub fn conv_traffic_bytes(
+    choice: &TilingChoice,
+    input: TensorShape,
+    out: TensorShape,
+    kh: u32,
+    kw: u32,
+    stride: u32,
+    dilation: u32,
+    cin: u32,
+    cout: u32,
+    dtype: u32,
+) -> u64 {
+    let eff_kh = effective_k(kh, dilation);
+    // IFM: each oh stripe is read once when resident, else once per cout tile.
+    let mut ifm = 0u64;
+    for s in 0..choice.n_oh {
+        let oh0 = s * choice.oh_t;
+        let rows = choice.oh_t.min(out.h - oh0);
+        let ih = ifm_rows_for(rows, stride, eff_kh, input.h);
+        ifm += ifm_tile_bytes(cin, ih, input.w, dtype);
+    }
+    if !choice.ifm_resident {
+        ifm *= choice.n_cout as u64;
+    }
+    // Weights: full set re-read once per oh stripe.
+    let w_total = (cin as u64 * cout as u64 * kh as u64 * kw as u64 + cout as u64) * dtype as u64;
+    let weights = w_total * choice.n_oh as u64;
+    // OFM: written exactly once (accumulation stays on-chip).
+    let ofm = out.bytes(dtype);
+    ifm + weights + ofm
+}
+
+/// NCE cycles for a candidate tiling (partial-tile lane waste included) —
+/// the other half of the objective.
+///
+/// Closed form over the uniform-tile grid plus the remainder faces: only
+/// the *last* tile along each axis can be partial, so the triple tile loop
+/// factors into per-axis sums — O(1) instead of O(tiles). The tiler calls
+/// this for every channel-candidate pair, so this cut whole-net compile
+/// time ~5x (EXPERIMENTS.md §Perf).
+pub fn conv_compute_cycles(
+    choice: &TilingChoice,
+    nce: &NceConfig,
+    out: TensorShape,
+    cin: u32,
+    cout: u32,
+    kh: u32,
+    kw: u32,
+) -> u64 {
+    let cost = crate::compiler::cost::CostModel::from_nce(nce);
+    // Per-axis sums: (n-1) full tiles plus one remainder tile.
+    let axis_sum = |total: u32, tile: u32, f: &dyn Fn(u32) -> u64| -> u64 {
+        let n = div_ceil(total, tile);
+        let last = total - (n - 1) * tile;
+        (n as u64 - 1) * f(tile) + f(last)
+    };
+    let kk = kh as u64 * kw as u64;
+    let spatial = axis_sum(out.h, choice.oh_t, &|rows| rows as u64 * out.w as u64 * kk);
+    let row_passes = axis_sum(cin, choice.cin_t, &|c| {
+        (c as u64 + nce.array_rows as u64 - 1) / nce.array_rows as u64
+    });
+    let col_passes = axis_sum(cout, choice.cout_t, &|c| {
+        (c as u64 + nce.array_cols as u64 - 1) / nce.array_cols as u64
+    });
+    let tiles = choice.n_oh as u64 * choice.n_cin as u64 * choice.n_cout as u64;
+    // spatial varies over oh tiles only, passes over channel tiles only —
+    // the cross product equals the sum over all tiles.
+    spatial * row_passes * col_passes + tiles * cost.task_setup_cycles
+}
+
+/// Choose a conv tiling that fits the buffers and minimizes the *estimated
+/// layer time* `max(compute, traffic)` — a pure-traffic objective would
+/// happily shrink channel tiles below the array geometry and waste lanes;
+/// a pure-compute objective would re-stream tensors. Ties break on traffic,
+/// then on tile count (per-task overhead).
+#[allow(clippy::too_many_arguments)]
+pub fn tile_conv(
+    sys: &SystemConfig,
+    input: TensorShape,
+    out: TensorShape,
+    cin: u32,
+    cout: u32,
+    kh: u32,
+    kw: u32,
+    stride: u32,
+    dilation: u32,
+    dtype: u32,
+) -> Result<TilingChoice> {
+    let nce = &sys.nce;
+    let ifm_cap = nce.ifm_buffer_kib as u64 * 1024;
+    let w_cap = nce.weight_buffer_kib as u64 * 1024;
+    let ofm_cap = nce.ofm_buffer_kib as u64 * 1024;
+    let eff_kh = effective_k(kh, dilation);
+
+    // Effective streaming bandwidth (bytes/s): min of bus and annotated
+    // memory — same numbers the AVSM timing uses.
+    let bus_bps = sys.bus.bytes_per_cycle as f64 * sys.bus.freq_mhz as f64 * 1e6;
+    let mem_bps = sys.memory.data_bytes_per_cycle as f64
+        * sys.memory.freq_mhz as f64
+        * 1e6
+        * sys.memory.avsm_eff_bw_pct as f64
+        / 100.0;
+    let stream_bps = bus_bps.min(mem_bps);
+    let nce_hz = nce.freq_mhz as f64 * 1e6;
+
+    let mut best: Option<(f64, u64, TilingChoice)> = None;
+    for &cin_t in &channel_candidates(cin, nce.array_rows) {
+        for &cout_t in &channel_candidates(cout, nce.array_cols) {
+            if weight_tile_bytes(cin_t, cout_t, kh, kw, dtype) > w_cap {
+                continue;
+            }
+            // Largest oh_t whose IFM stripe and OFM stripe both fit.
+            let mut oh_t = 0u32;
+            for cand in 1..=out.h {
+                let ih = ifm_rows_for(cand, stride, eff_kh, input.h);
+                if ifm_tile_bytes(cin_t, ih, input.w, dtype) <= ifm_cap
+                    && ofm_tile_bytes(cout_t, cand, out.w, dtype) <= ofm_cap
+                {
+                    oh_t = cand;
+                } else {
+                    break;
+                }
+            }
+            if oh_t == 0 {
+                continue;
+            }
+            // Residency: the *whole-channel* stripe (all cin tiles at once)
+            // fits the IFM buffer.
+            let ih = ifm_rows_for(oh_t, stride, eff_kh, input.h);
+            let ifm_resident = ifm_tile_bytes(cin, ih, input.w, dtype) <= ifm_cap;
+            let choice = TilingChoice {
+                cin_t,
+                cout_t,
+                oh_t,
+                n_cin: div_ceil(cin, cin_t),
+                n_cout: div_ceil(cout, cout_t),
+                n_oh: div_ceil(out.h, oh_t),
+                ifm_resident,
+            };
+            let traffic = conv_traffic_bytes(
+                &choice, input, out, kh, kw, stride, dilation, cin, cout, dtype,
+            );
+            let cycles = conv_compute_cycles(&choice, nce, out, cin, cout, kh, kw);
+            let est_time = (traffic as f64 / stream_bps).max(cycles as f64 / nce_hz);
+            let better = match &best {
+                None => true,
+                Some((t, tr, b)) => {
+                    est_time < *t * 0.9999
+                        || ((est_time - t).abs() <= t * 0.0001
+                            && (traffic < *tr
+                                || (traffic == *tr && choice.tiles() < b.tiles())))
+                }
+            };
+            if better {
+                best = Some((est_time, traffic, choice));
+            }
+        }
+    }
+    match best {
+        Some((_, _, choice)) => Ok(choice),
+        None => bail!(
+            "no feasible tiling: buffers (ifm {} KiB, w {} KiB, ofm {} KiB) too small \
+             for conv cin={cin} cout={cout} k={kh}x{kw} on {}",
+            nce.ifm_buffer_kib, nce.weight_buffer_kib, nce.ofm_buffer_kib, input
+        ),
+    }
+}
+
+/// Tile a vector-path layer into output-row stripes.
+pub fn tile_vector(
+    nce: &NceConfig,
+    op: &Op,
+    input: TensorShape,
+    out: TensorShape,
+    dtype: u32,
+) -> Result<VectorTiling> {
+    let ifm_cap = nce.ifm_buffer_kib as u64 * 1024;
+    let ofm_cap = nce.ofm_buffer_kib as u64 * 1024;
+    // Input rows consumed and buffers touched per output row.
+    let (in_rows_per_out, extra_in) = match *op {
+        Op::MaxPool { window, stride } => (stride, window.saturating_sub(stride)),
+        Op::UpsampleBilinear { factor } => {
+            // factor output rows per input row; conservatively 2 input rows
+            // resident for interpolation.
+            let _ = factor;
+            (1, 1)
+        }
+        Op::EltwiseAdd => (1, 0),
+        Op::DepthwiseConv2d { kh, stride, dilation, .. } => {
+            (stride, effective_k(kh, dilation).saturating_sub(stride))
+        }
+        Op::Conv2d { .. } => bail!("conv must use tile_conv"),
+    };
+    let in_row_bytes = input.c as u64 * input.w as u64 * dtype as u64
+        * if matches!(op, Op::EltwiseAdd) { 2 } else { 1 };
+    let out_row_bytes = out.c as u64 * out.w as u64 * dtype as u64;
+    let mut oh_t = 0u32;
+    for cand in 1..=out.h {
+        let in_rows = match *op {
+            Op::UpsampleBilinear { factor } => div_ceil(cand, factor) + extra_in,
+            _ => cand * in_rows_per_out + extra_in,
+        };
+        if in_rows as u64 * in_row_bytes <= ifm_cap && cand as u64 * out_row_bytes <= ofm_cap {
+            oh_t = cand;
+        } else {
+            break;
+        }
+    }
+    if oh_t == 0 {
+        bail!("no feasible vector tiling for {op:?} on {input}");
+    }
+    Ok(VectorTiling { oh_t, n_oh: div_ceil(out.h, oh_t) })
+}
+
+/// Tile any layer.
+pub fn tile_layer(
+    sys: &SystemConfig,
+    op: &Op,
+    input: TensorShape,
+    dtype: u32,
+) -> Result<LayerTiling> {
+    let out = op.out_shape(input);
+    match *op {
+        Op::Conv2d { cin, cout, kh, kw, stride, dilation, .. } => Ok(LayerTiling::Conv(
+            tile_conv(sys, input, out, cin, cout, kh, kw, stride, dilation, dtype)?,
+        )),
+        _ => Ok(LayerTiling::Vector(tile_vector(&sys.nce, op, input, out, dtype)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::graph::{models, Activation, Padding};
+
+    fn sys() -> SystemConfig {
+        SystemConfig::base_paper()
+    }
+
+    fn conv_op(cin: u32, cout: u32, k: u32, dilation: u32) -> Op {
+        Op::Conv2d {
+            cin, cout, kh: k, kw: k, stride: 1, dilation,
+            padding: Padding::Same, activation: Activation::Relu,
+        }
+    }
+
+    #[test]
+    fn small_layer_single_tile() {
+        let input = TensorShape::new(1, 8, 16, 16);
+        let op = conv_op(8, 16, 3, 1);
+        let out = op.out_shape(input);
+        let t = tile_conv(&sys(), input, out, 8, 16, 3, 3, 1, 1, 2).unwrap();
+        assert_eq!((t.n_cin, t.n_cout, t.n_oh), (1, 1, 1));
+        assert!(t.ifm_resident);
+    }
+
+    #[test]
+    fn conv4_layer_is_ifm_resident_full_lanes() {
+        // conv4_x of paper-sized DilatedVGG: 512ch 32x32, dilation 2. The
+        // whole IFM (1.13 MiB with halo) fits the 1.5 MiB buffer, so the
+        // tiler must choose residency and full-lane channel tiles.
+        let s = sys();
+        let input = TensorShape::new(1, 512, 32, 32);
+        let op = conv_op(512, 512, 3, 2);
+        let out = op.out_shape(input);
+        let t = tile_conv(&s, input, out, 512, 512, 3, 3, 1, 2, 2).unwrap();
+        assert!(t.ifm_resident, "conv4 stripe should be IFM-resident: {t:?}");
+        assert_eq!(t.cin_t % s.nce.array_rows, 0, "full row lanes: {t:?}");
+        assert_eq!(t.cout_t % s.nce.array_cols, 0, "full col lanes: {t:?}");
+        // Traffic must be near the one-pass ideal (< 1.5x).
+        let traffic = conv_traffic_bytes(&t, input, out, 3, 3, 1, 2, 512, 512, 2);
+        let ideal = input.bytes(2) + out.bytes(2) + op.weight_bytes(2);
+        assert!(
+            traffic < ideal * 3 / 2,
+            "conv4 traffic {traffic} vs ideal {ideal} — residency not exploited"
+        );
+        // Working set must actually fit.
+        let eff = effective_k(3, 2);
+        let ih = ifm_rows_for(t.oh_t, 1, eff, input.h);
+        assert!(ifm_tile_bytes(512, ih, input.w, 2) <= s.nce.ifm_buffer_kib as u64 * 1024);
+        assert!(
+            weight_tile_bytes(t.cin_t, t.cout_t, 3, 3, 2)
+                <= s.nce.weight_buffer_kib as u64 * 1024
+        );
+        assert!(
+            ofm_tile_bytes(t.cout_t, t.oh_t, out.w, 2) <= s.nce.ofm_buffer_kib as u64 * 1024
+        );
+    }
+
+    #[test]
+    fn tile_counts_cover_layer_exactly() {
+        // Tiling invariant: tiles x tile size covers the layer with the last
+        // tile possibly partial — n_* = ceil(total / tile).
+        let input = TensorShape::new(1, 200, 50, 50);
+        let op = conv_op(200, 300, 3, 1);
+        let out = op.out_shape(input);
+        let t = tile_conv(&sys(), input, out, 200, 300, 3, 3, 1, 1, 2).unwrap();
+        assert!(t.cin_t * t.n_cin >= 200 && t.cin_t * (t.n_cin - 1) < 200);
+        assert!(t.cout_t * t.n_cout >= 300 && t.cout_t * (t.n_cout - 1) < 300);
+        assert!(t.oh_t * t.n_oh >= out.h && t.oh_t * (t.n_oh - 1) < out.h);
+    }
+
+    #[test]
+    fn too_small_buffers_rejected() {
+        // Even a single-channel stripe of a 7-row halo on a 4096-wide image
+        // (7 * 4096 * 2 B = 56 KiB) cannot fit a 1 KiB IFM buffer.
+        let mut s = sys();
+        s.nce.ifm_buffer_kib = 1;
+        s.nce.weight_buffer_kib = 1;
+        s.nce.ofm_buffer_kib = 1;
+        let input = TensorShape::new(1, 512, 64, 4096);
+        let op = conv_op(512, 512, 7, 1);
+        let out = op.out_shape(input);
+        assert!(tile_conv(&s, input, out, 512, 512, 7, 7, 1, 1, 2).is_err());
+    }
+
+    #[test]
+    fn tiny_buffers_fall_back_to_subarray_tiles() {
+        // 1 KiB buffers can still tile a small layer by shrinking channel
+        // tiles below the array dimensions (underutilising lanes).
+        let mut s = sys();
+        s.nce.ifm_buffer_kib = 1;
+        s.nce.weight_buffer_kib = 1;
+        s.nce.ofm_buffer_kib = 1;
+        let input = TensorShape::new(1, 16, 16, 16);
+        let op = conv_op(16, 16, 3, 1);
+        let out = op.out_shape(input);
+        let t = tile_conv(&s, input, out, 16, 16, 3, 3, 1, 1, 2).unwrap();
+        assert!(t.cin_t < 32 || t.cout_t < 64);
+    }
+
+    #[test]
+    fn vector_tiling_pool_and_upsample() {
+        let n = sys().nce;
+        let pool = Op::MaxPool { window: 2, stride: 2 };
+        let input = TensorShape::new(1, 64, 256, 256);
+        let t = tile_vector(&n, &pool, input, pool.out_shape(input), 2).unwrap();
+        assert!(t.oh_t >= 1 && t.n_oh * t.oh_t >= 128);
+
+        let up = Op::UpsampleBilinear { factor: 8 };
+        let input = TensorShape::new(1, 16, 32, 32);
+        let t = tile_vector(&n, &up, input, up.out_shape(input), 2).unwrap();
+        assert!(t.oh_t >= 1);
+    }
+
+    #[test]
+    fn whole_dilated_vgg_tiles() {
+        let g = models::dilated_vgg_paper();
+        let s = sys();
+        let mut shape = g.input;
+        for layer in &g.layers {
+            tile_layer(&s, &layer.op, shape, g.dtype_bytes)
+                .unwrap_or_else(|e| panic!("layer {}: {e}", layer.name));
+            shape = layer.op.out_shape(shape);
+        }
+    }
+
+    #[test]
+    fn bigger_buffers_never_increase_estimated_time() {
+        // Monotonicity: doubling every buffer must not worsen the chosen
+        // design's estimated layer time (traffic or compute).
+        let input = TensorShape::new(1, 256, 64, 64);
+        let op = conv_op(256, 256, 3, 1);
+        let out = op.out_shape(input);
+        let small = sys();
+        let mut big = sys();
+        big.nce.ifm_buffer_kib *= 2;
+        big.nce.weight_buffer_kib *= 2;
+        big.nce.ofm_buffer_kib *= 2;
+        let ts = tile_conv(&small, input, out, 256, 256, 3, 3, 1, 1, 2).unwrap();
+        let tb = tile_conv(&big, input, out, 256, 256, 3, 3, 1, 1, 2).unwrap();
+        let time = |s: &SystemConfig, t: &TilingChoice| {
+            let traffic = conv_traffic_bytes(t, input, out, 3, 3, 1, 1, 256, 256, 2) as f64;
+            let cycles = conv_compute_cycles(t, &s.nce, out, 256, 256, 3, 3) as f64;
+            (traffic / 3.75e9).max(cycles / 250e6)
+        };
+        assert!(
+            time(&big, &tb) <= time(&small, &ts) * 1.0001,
+            "bigger buffers worsened the design"
+        );
+    }
+
+    #[test]
+    fn dense1_feasible_with_subarray_cout() {
+        // dense1: 7x7 512->1024 on 32x32 — weights (51 MiB) dwarf the
+        // buffer, so the tiler must fall back to feasible channel tiles and
+        // still cover the layer.
+        let s = sys();
+        let input = TensorShape::new(1, 512, 32, 32);
+        let op = conv_op(512, 1024, 7, 4);
+        let out = op.out_shape(input);
+        let t = tile_conv(&s, input, out, 512, 1024, 7, 7, 1, 4, 2).unwrap();
+        assert!(t.cin_t * t.n_cin >= 512);
+        assert!(t.cout_t * t.n_cout >= 1024);
+        assert!(
+            weight_tile_bytes(t.cin_t, t.cout_t, 7, 7, 2)
+                <= s.nce.weight_buffer_kib as u64 * 1024
+        );
+    }
+}

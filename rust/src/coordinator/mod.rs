@@ -1,0 +1,195 @@
+//! The end-to-end virtual-system-based prototyping flow (paper Fig 1,
+//! right-hand side), with the phase instrumentation behind Fig 3.
+//!
+//! `run_flow` executes the full pipeline the paper describes:
+//!
+//! 1. **ML Compiler & Graph Generation** — validate the DNN graph and run
+//!    the deep-learning compiler (tiling + lowering) to produce the
+//!    hardware-adapted task graph.
+//! 2. **Tool import/export and Model build** — serialize the task graph
+//!    across the flow boundary (the paper exchanges it between compiler and
+//!    model-generation engine; 91 % of their runtime!), re-import it, and
+//!    build the executable virtual system model from the system description
+//!    file. Post-simulation result export is charged here too.
+//! 3. **Simulation** — execute the AVSM on the DES engine.
+//!
+//! Python never appears on this path: the DNN graph arrives as JSON
+//! produced once by `make artifacts`.
+
+use crate::compiler::{compile, CompileOptions, CompiledNet};
+use crate::config::SystemConfig;
+use crate::graph::DnnGraph;
+use crate::hw::{simulate_avsm, SimResult};
+use crate::report::FlowBreakdown;
+use crate::sim::TraceRecorder;
+use crate::taskgraph;
+use crate::trace::{Gantt, GanttOptions};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Flow configuration.
+#[derive(Debug, Clone)]
+pub struct FlowOptions {
+    pub compile: CompileOptions,
+    /// Record per-interval traces (needed for Gantt; adds memory traffic).
+    pub record_trace: bool,
+    /// Round-trip the task graph through its JSON serialization, as the
+    /// paper's flow does between compiler and model generator. Disable to
+    /// measure the in-memory fast path.
+    pub roundtrip_taskgraph: bool,
+}
+
+impl Default for FlowOptions {
+    fn default() -> Self {
+        Self {
+            compile: CompileOptions::default(),
+            record_trace: true,
+            roundtrip_taskgraph: true,
+        }
+    }
+}
+
+/// Everything the flow produces.
+pub struct FlowOutput {
+    pub compiled: CompiledNet,
+    pub sim: SimResult,
+    pub trace: TraceRecorder,
+    pub breakdown: FlowBreakdown,
+}
+
+pub const PHASE_COMPILER: &str = "ML Compiler & Graph Generation";
+pub const PHASE_BUILD: &str = "Tool import/export and Model build";
+pub const PHASE_SIM: &str = "Simulation";
+
+/// Run the complete virtual-system-based prototyping flow; if `outdir` is
+/// given, export the result artifacts (task graph, Gantt CSV/SVG, layer
+/// table) there.
+pub fn run_flow(
+    net: &DnnGraph,
+    sys: &SystemConfig,
+    opts: &FlowOptions,
+    outdir: Option<&Path>,
+) -> Result<FlowOutput> {
+    let mut breakdown = FlowBreakdown::default();
+
+    // Phase 1: the deep-learning compiler.
+    let t0 = Instant::now();
+    let compiled = compile(net, sys, opts.compile)?;
+    breakdown.add(PHASE_COMPILER, t0.elapsed());
+
+    // Phase 2: flow-boundary import/export + model build.
+    let t0 = Instant::now();
+    let compiled = if opts.roundtrip_taskgraph {
+        let text = taskgraph::serialize::to_json(&compiled.graph);
+        if let Some(dir) = outdir {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(dir.join("task_graph.json"), &text)
+                .context("exporting task graph")?;
+        }
+        let graph = taskgraph::serialize::from_json(&text)?;
+        CompiledNet { graph, layers: compiled.layers }
+    } else {
+        compiled
+    };
+    // "Model build": allocate the trace/model state for this instance.
+    let mut trace = if opts.record_trace {
+        TraceRecorder::new()
+    } else {
+        TraceRecorder::disabled()
+    };
+    breakdown.add(PHASE_BUILD, t0.elapsed());
+
+    // Phase 3: simulation.
+    let t0 = Instant::now();
+    let sim = simulate_avsm(&compiled, sys, &mut trace);
+    breakdown.add(PHASE_SIM, t0.elapsed());
+
+    // Result export is charged to the import/export row, as in the paper.
+    if let Some(dir) = outdir {
+        let t0 = Instant::now();
+        export_results(dir, &sim, &trace)?;
+        breakdown.add(PHASE_BUILD, t0.elapsed());
+    }
+
+    Ok(FlowOutput { compiled, sim, trace, breakdown })
+}
+
+fn export_results(dir: &Path, sim: &SimResult, trace: &TraceRecorder) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    // Per-layer timing table (CSV).
+    let mut csv = String::from("layer,start_ps,end_ps,nce_busy_ps,bus_busy_ps,macs,dma_bytes\n");
+    for l in &sim.layers {
+        csv.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            l.name, l.start_ps, l.end_ps, l.nce_busy_ps, l.bus_busy_ps, l.macs, l.dma_bytes
+        ));
+    }
+    std::fs::write(dir.join("layers.csv"), csv)?;
+    if trace.is_enabled() {
+        let g = Gantt::new(trace, GanttOptions::default());
+        std::fs::write(dir.join("gantt.csv"), g.render_csv())?;
+        std::fs::write(dir.join("gantt.svg"), g.render_svg())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn flow_runs_end_to_end() {
+        let sys = SystemConfig::base_paper();
+        let net = models::lenet(28);
+        let out = run_flow(&net, &sys, &FlowOptions::default(), None).unwrap();
+        assert!(out.sim.total_ps > 0);
+        assert_eq!(out.breakdown.phases.len(), 3);
+        assert!(out.breakdown.total().as_nanos() > 0);
+    }
+
+    #[test]
+    fn flow_exports_artifacts() {
+        let dir = std::env::temp_dir().join(format!("avsm_flow_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sys = SystemConfig::base_paper();
+        let net = models::lenet(28);
+        run_flow(&net, &sys, &FlowOptions::default(), Some(&dir)).unwrap();
+        for f in ["task_graph.json", "layers.csv", "gantt.csv", "gantt.svg"] {
+            assert!(dir.join(f).exists(), "missing {f}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_preserves_simulation_result() {
+        let sys = SystemConfig::base_paper();
+        let net = models::dilated_vgg_tiny();
+        let with = run_flow(
+            &net,
+            &sys,
+            &FlowOptions { roundtrip_taskgraph: true, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let without = run_flow(
+            &net,
+            &sys,
+            &FlowOptions { roundtrip_taskgraph: false, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert_eq!(with.sim.total_ps, without.sim.total_ps);
+    }
+
+    #[test]
+    fn flow_is_fast_enough() {
+        // The paper's whole flow took ~20 min (1353 s); DESIGN.md §9 targets
+        // <5 s for ours on the paper workload. Tiny net here — sanity only.
+        let sys = SystemConfig::base_paper();
+        let net = models::dilated_vgg_tiny();
+        let out = run_flow(&net, &sys, &FlowOptions::default(), None).unwrap();
+        assert!(out.breakdown.total().as_secs_f64() < 30.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! The cycle-level "physical prototype" reference model.
+//!
+//! Stands in for the paper's Virtex7 FPGA measurement (DESIGN.md §2): the
+//! experiment needs a ground truth that differs from the AVSM exactly where
+//! the paper says real hardware differs — the memory subsystem and low-level
+//! engine behaviour. This timing model adds:
+//!
+//! * **DRAM bank/row state**: transfers are split into bursts; each burst
+//!   pays CAS latency on a row hit or precharge+activate+CAS on a row miss,
+//!   with a synthetic-but-faithful address stream per buffer kind
+//!   (sequential within a tensor, so mostly hits with periodic row-crossing
+//!   misses — the access pattern tiled DNN traffic actually has).
+//! * **Refresh**: every `t_refi_ns` the DRAM steals `t_rfc` memory cycles.
+//! * **Bus protocol overhead**: a per-burst arbitration/handshake charge.
+//! * **NCE pipeline**: fill/drain of the MAC pipeline per array pass and a
+//!   weight-preload stall per tile.
+//!
+//! Everything else (task graph, dependencies, queueing, arbitration) is the
+//! shared executor — so AVSM-vs-prototype deviation (Fig 5) is purely the
+//! abstraction gap.
+
+pub mod dram;
+pub mod prototype;
+
+pub use dram::DramModel;
+pub use prototype::PrototypeTiming;
+
+use crate::compiler::CompiledNet;
+use crate::config::SystemConfig;
+use crate::hw::{Executor, SimResult};
+use crate::sim::TraceRecorder;
+
+/// Convenience: simulate a compiled net on the detailed prototype timing.
+pub fn simulate_prototype(
+    compiled: &CompiledNet,
+    sys: &SystemConfig,
+    trace: &mut TraceRecorder,
+) -> SimResult {
+    let timing = PrototypeTiming::new(sys);
+    Executor::new(sys, timing).run(compiled, trace)
+}

@@ -1,0 +1,189 @@
+//! Prototype timing model: the detailed fidelity level (DESIGN.md §2/§6).
+
+use super::dram::DramModel;
+use crate::config::SystemConfig;
+use crate::hw::TimingModel;
+use crate::sim::{ClockDomain, SimTime};
+use crate::taskgraph::{BufferKind, TaskKind};
+
+/// Per-transfer bus protocol overhead (arbitration + handshake + response),
+/// in bus cycles. Paid once per DMA data phase — AXI-style bursts amortize
+/// the handshake across the whole transfer.
+const BUS_PROTO_CYCLES: u64 = 6;
+
+#[derive(Debug, Clone)]
+pub struct PrototypeTiming {
+    nce_clk: ClockDomain,
+    bus_clk: ClockDomain,
+    hkp_clk: ClockDomain,
+    bus_bytes_per_cycle: u64,
+    dma_setup_cycles: u64,
+    dispatch_cycles: u64,
+    pipeline_depth: u64,
+    dram: DramModel,
+    /// Linear address cursors per tensor region (synthetic address streams:
+    /// IFM, weight and OFM tensors live in distinct DRAM regions).
+    ifm_cursor: u64,
+    w_cursor: u64,
+    ofm_cursor: u64,
+}
+
+/// Region bases: 1 GiB apart so streams never alias.
+const IFM_BASE: u64 = 0;
+const W_BASE: u64 = 1 << 30;
+const OFM_BASE: u64 = 2 << 30;
+
+impl PrototypeTiming {
+    pub fn new(sys: &SystemConfig) -> Self {
+        Self {
+            nce_clk: ClockDomain::from_mhz(sys.nce.freq_mhz),
+            bus_clk: ClockDomain::from_mhz(sys.bus.freq_mhz),
+            hkp_clk: ClockDomain::from_mhz(sys.hkp.freq_mhz),
+            bus_bytes_per_cycle: sys.bus.bytes_per_cycle,
+            dma_setup_cycles: sys.dma.setup_cycles,
+            dispatch_cycles: sys.hkp.dispatch_cycles,
+            pipeline_depth: sys.nce.pipeline_depth as u64,
+            dram: DramModel::new(&sys.memory),
+            ifm_cursor: IFM_BASE,
+            w_cursor: W_BASE,
+            ofm_cursor: OFM_BASE,
+        }
+    }
+
+    /// DRAM hit-rate observed so far (test/metrics introspection).
+    pub fn dram_hit_rate(&self) -> f64 {
+        self.dram.hit_rate()
+    }
+}
+
+impl TimingModel for PrototypeTiming {
+    fn dma_pre_ps(&mut self, _kind: &TaskKind) -> SimTime {
+        // Descriptor setup only — the *actual* memory latency is paid per
+        // burst in the data phase (that is precisely the detail the AVSM
+        // abstracts into one flat number).
+        self.bus_clk.cycles_to_ps(self.dma_setup_cycles)
+    }
+
+    fn dma_bus_ps(&mut self, kind: &TaskKind, start: SimTime) -> SimTime {
+        let bytes = kind.bytes().max(1);
+        let cursor = match kind {
+            TaskKind::DmaLoad { buffer: BufferKind::Weights, .. } => &mut self.w_cursor,
+            TaskKind::DmaLoad { .. } => &mut self.ifm_cursor,
+            _ => &mut self.ofm_cursor,
+        };
+        let addr = *cursor;
+        *cursor += bytes;
+        // DRAM service time (pipelined commands + data at the memory
+        // interface)...
+        let dram_ps = self.dram.transfer_ps(addr, bytes, start);
+        // ...plus bus-side protocol overhead, once per transfer.
+        let proto_ps = self.bus_clk.cycles_to_ps(BUS_PROTO_CYCLES);
+        // The interconnect data movement itself cannot beat the bus width:
+        // the slower of DRAM and bus paces the transfer.
+        let bus_cycles = (bytes + self.bus_bytes_per_cycle - 1) / self.bus_bytes_per_cycle;
+        let bus_ps = self.bus_clk.cycles_to_ps(bus_cycles);
+        proto_ps + dram_ps.max(bus_ps)
+    }
+
+    fn compute_ps(&mut self, kind: &TaskKind) -> SimTime {
+        match *kind {
+            TaskKind::Compute { cycles, macs } => {
+                // Pipeline fill/drain per tile plus a weight-preload stall.
+                // Compute tasks carrying zero MACs are vector ops (no MAC
+                // pipeline): charged as-is.
+                let extra = if macs > 0 { 2 * self.pipeline_depth + 4 } else { 0 };
+                self.nce_clk.cycles_to_ps(cycles + extra)
+            }
+            _ => 0,
+        }
+    }
+
+    fn dispatch_ps(&self) -> SimTime {
+        // The real HKP firmware takes a little longer per descriptor than
+        // the AVSM's annotation assumes (interrupt handling, bookkeeping).
+        self.hkp_clk.cycles_to_ps(self.dispatch_cycles + 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::models;
+    use crate::hw::{AvsmTiming, Executor};
+    use crate::sim::TraceRecorder;
+
+    fn sys() -> SystemConfig {
+        SystemConfig::base_paper()
+    }
+
+    #[test]
+    fn prototype_runs_dilated_vgg_tiny() {
+        let s = sys();
+        let c = compile(&models::dilated_vgg_tiny(), &s, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        let r = Executor::new(&s, PrototypeTiming::new(&s)).run(&c, &mut tr);
+        assert!(r.total_ps > 0);
+    }
+
+    #[test]
+    fn deviation_from_avsm_is_single_digit_percent() {
+        // The headline property (Fig 5): the AVSM predicts the prototype
+        // within ~10 % end-to-end.
+        let s = sys();
+        let c = compile(&models::dilated_vgg_tiny(), &s, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        let avsm = Executor::new(&s, AvsmTiming::new(&s)).run(&c, &mut tr);
+        let mut tr = TraceRecorder::disabled();
+        let proto = Executor::new(&s, PrototypeTiming::new(&s)).run(&c, &mut tr);
+        let dev = (avsm.total_ps as f64 - proto.total_ps as f64).abs()
+            / proto.total_ps as f64;
+        assert!(
+            dev < 0.15,
+            "AVSM vs prototype deviation {:.1}% out of expected band (avsm {} proto {})",
+            dev * 100.0,
+            avsm.total_ps,
+            proto.total_ps
+        );
+    }
+
+    #[test]
+    fn dram_sees_high_hit_rate_on_dnn_traffic() {
+        let s = sys();
+        let c = compile(&models::dilated_vgg_tiny(), &s, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        let mut timing = PrototypeTiming::new(&s);
+        // Run manually to keep access to the model afterwards.
+        let mut probe = PrototypeTiming::new(&s);
+        for t in c.graph.tasks() {
+            if t.kind.is_dma() {
+                probe.dma_bus_ps(&t.kind, 0);
+            }
+        }
+        assert!(probe.dram_hit_rate() > 0.8, "hit rate {}", probe.dram_hit_rate());
+        // And the full executor path still works with the same timing.
+        let r = Executor::new(&s, std::mem::replace(&mut timing, PrototypeTiming::new(&s)))
+            .run(&c, &mut tr);
+        assert!(r.total_ps > 0);
+    }
+
+    #[test]
+    fn pipeline_overhead_only_on_mac_tasks() {
+        let s = sys();
+        let mut t = PrototypeTiming::new(&s);
+        let mac = TaskKind::Compute { cycles: 100, macs: 5 };
+        let vec = TaskKind::Compute { cycles: 100, macs: 0 };
+        assert!(t.compute_ps(&mac) > t.compute_ps(&vec));
+    }
+
+    #[test]
+    fn detailed_deterministic() {
+        let s = sys();
+        let c = compile(&models::lenet(28), &s, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        let a = Executor::new(&s, PrototypeTiming::new(&s)).run(&c, &mut tr);
+        let mut tr = TraceRecorder::disabled();
+        let b = Executor::new(&s, PrototypeTiming::new(&s)).run(&c, &mut tr);
+        assert_eq!(a.total_ps, b.total_ps);
+    }
+}

@@ -1,0 +1,283 @@
+//! Design-space exploration — the paper's motivating use case: evaluating
+//! many hardware/software design points "by a click of a button" instead of
+//! one physical prototype per point.
+//!
+//! * [`sweep`] — cartesian sweeps over NCE geometry, frequencies, bus
+//!   widths and buffer sizes, simulating each point (traces disabled,
+//!   labels off: the fast path).
+//! * [`topdown`] — the paper's §2 "top-down" mode: given a target
+//!   performance, derive the physical requirement (e.g. minimum NCE
+//!   frequency); `bottomup` is the ordinary estimate for annotated
+//!   components.
+//! * [`pareto`] — extract the latency/cost frontier.
+
+use crate::compiler::{compile, CompileOptions};
+use crate::config::SystemConfig;
+use crate::graph::DnnGraph;
+use crate::hw::simulate_avsm;
+use crate::json::{obj, Value};
+use crate::sim::TraceRecorder;
+use anyhow::Result;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub name: String,
+    pub sys: SystemConfig,
+    /// Simulated end-to-end inference latency.
+    pub latency_ps: u64,
+    /// Crude area/cost proxy: number of multipliers + KiB of on-chip RAM.
+    pub cost: f64,
+    /// Simulated inferences per second.
+    pub throughput: f64,
+}
+
+/// Parameter axes for a sweep. Empty axes keep the base value.
+#[derive(Debug, Clone, Default)]
+pub struct SweepAxes {
+    pub array_geometries: Vec<(u32, u32)>,
+    pub nce_freqs_mhz: Vec<u64>,
+    pub bus_bytes_per_cycle: Vec<u64>,
+    pub ifm_buffer_kib: Vec<u32>,
+}
+
+impl SweepAxes {
+    fn or_base<'a, T: Clone>(axis: &'a [T], base: &'a T) -> Vec<T> {
+        if axis.is_empty() {
+            vec![base.clone()]
+        } else {
+            axis.to_vec()
+        }
+    }
+}
+
+fn cost_proxy(sys: &SystemConfig) -> f64 {
+    let mults = sys.nce.macs_per_cycle() as f64;
+    let ram_kib = (sys.nce.ifm_buffer_kib + sys.nce.weight_buffer_kib + sys.nce.ofm_buffer_kib)
+        as f64;
+    mults + 2.0 * ram_kib
+}
+
+/// Evaluate one design point (compile + simulate, fast path).
+pub fn evaluate(net: &DnnGraph, sys: &SystemConfig, name: impl Into<String>) -> Result<DesignPoint> {
+    let compiled = compile(
+        net,
+        sys,
+        CompileOptions { double_buffer: true, labels: false },
+    )?;
+    let mut trace = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, sys, &mut trace);
+    Ok(DesignPoint {
+        name: name.into(),
+        sys: sys.clone(),
+        latency_ps: sim.total_ps,
+        cost: cost_proxy(sys),
+        throughput: 1e12 / sim.total_ps as f64,
+    })
+}
+
+/// Cartesian sweep around a base system. Infeasible points (tiling fails)
+/// are skipped.
+pub fn sweep(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<DesignPoint> {
+    let geoms = SweepAxes::or_base(
+        &axes.array_geometries,
+        &(base.nce.array_rows, base.nce.array_cols),
+    );
+    let freqs = SweepAxes::or_base(&axes.nce_freqs_mhz, &base.nce.freq_mhz);
+    let widths = SweepAxes::or_base(&axes.bus_bytes_per_cycle, &base.bus.bytes_per_cycle);
+    let ifms = SweepAxes::or_base(&axes.ifm_buffer_kib, &base.nce.ifm_buffer_kib);
+    let mut points = Vec::new();
+    for &(rows, cols) in &geoms {
+        for &f in &freqs {
+            for &w in &widths {
+                for &ifm in &ifms {
+                    let mut sys = base.clone();
+                    sys.nce.array_rows = rows;
+                    sys.nce.array_cols = cols;
+                    sys.nce.freq_mhz = f;
+                    sys.bus.bytes_per_cycle = w;
+                    sys.nce.ifm_buffer_kib = ifm;
+                    sys.name = format!("nce{rows}x{cols}_f{f}_bus{w}_ifm{ifm}");
+                    if let Ok(p) = evaluate(net, &sys, sys.name.clone()) {
+                        points.push(p);
+                    }
+                }
+            }
+        }
+    }
+    points
+}
+
+/// Pareto frontier: points not dominated in (latency, cost).
+pub fn pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
+    let mut front: Vec<&DesignPoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.latency_ps < p.latency_ps && q.cost <= p.cost)
+                || (q.latency_ps <= p.latency_ps && q.cost < p.cost)
+        });
+        if !dominated {
+            front.push(p);
+        }
+    }
+    front.sort_by_key(|p| p.latency_ps);
+    front
+}
+
+/// Bottom-up assessment (paper §2): annotated component -> system
+/// performance. Alias of [`evaluate`] for readability at call sites.
+pub fn bottomup(net: &DnnGraph, sys: &SystemConfig) -> Result<DesignPoint> {
+    evaluate(net, sys, format!("{}_bottomup", sys.name))
+}
+
+/// Top-down assessment (paper §2): given a target end-to-end latency,
+/// derive the minimum NCE frequency that meets it (binary search over the
+/// simulated system; other annotations fixed).
+pub fn topdown_min_nce_freq(
+    net: &DnnGraph,
+    base: &SystemConfig,
+    target_latency_ps: u64,
+    freq_range_mhz: (u64, u64),
+) -> Result<Option<u64>> {
+    let (mut lo, mut hi) = freq_range_mhz;
+    let latency_at = |mhz: u64| -> Result<u64> {
+        let mut sys = base.clone();
+        sys.nce.freq_mhz = mhz;
+        Ok(evaluate(net, &sys, "probe")?.latency_ps)
+    };
+    if latency_at(hi)? > target_latency_ps {
+        return Ok(None); // unreachable even at the top of the range
+    }
+    if latency_at(lo)? <= target_latency_ps {
+        return Ok(Some(lo));
+    }
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if latency_at(mid)? <= target_latency_ps {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Ok(Some(hi))
+}
+
+/// JSON export of a sweep (plot data).
+pub fn sweep_to_json(points: &[DesignPoint]) -> Value {
+    Value::Array(
+        points
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("name", p.name.as_str().into()),
+                    ("latency_ps", p.latency_ps.into()),
+                    ("cost", p.cost.into()),
+                    ("throughput_per_sec", p.throughput.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn base() -> SystemConfig {
+        SystemConfig::base_paper()
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_skips_infeasible() {
+        let net = models::lenet(28);
+        let axes = SweepAxes {
+            array_geometries: vec![(16, 32), (32, 64)],
+            nce_freqs_mhz: vec![125, 250],
+            ..Default::default()
+        };
+        let pts = sweep(&net, &base(), &axes);
+        assert_eq!(pts.len(), 4);
+        // All feasible here; distinct names.
+        let mut names: Vec<&str> = pts.iter().map(|p| p.name.as_str()).collect();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+    }
+
+    #[test]
+    fn bigger_array_is_not_slower() {
+        let net = models::dilated_vgg_tiny();
+        let axes = SweepAxes {
+            array_geometries: vec![(16, 32), (32, 64), (64, 64)],
+            ..Default::default()
+        };
+        let pts = sweep(&net, &base(), &axes);
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].latency_ps >= pts[1].latency_ps);
+        assert!(pts[1].latency_ps >= pts[2].latency_ps);
+    }
+
+    #[test]
+    fn faster_clock_reduces_latency_until_memory_bound() {
+        let net = models::dilated_vgg_tiny();
+        let axes = SweepAxes { nce_freqs_mhz: vec![125, 250, 500], ..Default::default() };
+        let pts = sweep(&net, &base(), &axes);
+        assert!(pts[0].latency_ps > pts[1].latency_ps);
+        assert!(pts[1].latency_ps >= pts[2].latency_ps);
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        let net = models::lenet(28);
+        let axes = SweepAxes {
+            array_geometries: vec![(8, 16), (16, 32), (32, 64)],
+            nce_freqs_mhz: vec![125, 250],
+            ..Default::default()
+        };
+        let pts = sweep(&net, &base(), &axes);
+        let front = pareto(&pts);
+        assert!(!front.is_empty());
+        // Along the frontier, latency decreases while cost increases.
+        for w in front.windows(2) {
+            assert!(w[0].latency_ps <= w[1].latency_ps);
+            assert!(w[0].cost >= w[1].cost);
+        }
+    }
+
+    #[test]
+    fn topdown_finds_minimum_frequency() {
+        let net = models::lenet(28);
+        let b = base();
+        // Latency at 250 MHz is the baseline; ask for 1.5x that.
+        let baseline = evaluate(&net, &b, "b").unwrap().latency_ps;
+        let found = topdown_min_nce_freq(&net, &b, baseline * 3 / 2, (50, 1000))
+            .unwrap()
+            .expect("target should be reachable");
+        assert!(found <= 250, "found {found} MHz");
+        // Verify the answer actually meets the target.
+        let mut sys = b.clone();
+        sys.nce.freq_mhz = found;
+        assert!(evaluate(&net, &sys, "v").unwrap().latency_ps <= baseline * 3 / 2);
+        // And 20% below it does not (minimality, modulo memory-bound floor).
+        if found > 60 {
+            let mut sys = b.clone();
+            sys.nce.freq_mhz = found * 4 / 5;
+            assert!(evaluate(&net, &sys, "v").unwrap().latency_ps > baseline * 3 / 2);
+        }
+    }
+
+    #[test]
+    fn topdown_reports_unreachable_targets() {
+        let net = models::lenet(28);
+        let got = topdown_min_nce_freq(&net, &base(), 1, (50, 1000)).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn sweep_json_export() {
+        let net = models::lenet(28);
+        let pts = sweep(&net, &base(), &SweepAxes::default());
+        let j = sweep_to_json(&pts);
+        assert_eq!(j.as_array().unwrap().len(), pts.len());
+    }
+}

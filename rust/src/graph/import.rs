@@ -1,0 +1,280 @@
+//! JSON interchange with the python model definition
+//! (`python/compile/model.py::graph_dict`, schema `avsm-dnn-graph-v1`).
+//!
+//! Import cross-checks the exporter's `out_shape` annotations against this
+//! crate's own shape inference — any disagreement between the JAX model and
+//! the rust compiler front-end is a hard error, not a silent drift.
+
+use super::net::{DnnGraph, Layer};
+use super::ops::{Activation, Op, Padding, TensorShape};
+use crate::json::{self, obj, Value};
+use anyhow::{bail, Context, Result};
+
+const SCHEMA: &str = "avsm-dnn-graph-v1";
+
+fn shape_from(v: &Value) -> Result<TensorShape> {
+    Ok(TensorShape::new(
+        v.req_u64("n")? as u32,
+        v.req_u64("c")? as u32,
+        v.req_u64("h")? as u32,
+        v.req_u64("w")? as u32,
+    ))
+}
+
+fn shape_to(s: TensorShape) -> Value {
+    obj(vec![
+        ("n", s.n.into()),
+        ("c", s.c.into()),
+        ("h", s.h.into()),
+        ("w", s.w.into()),
+    ])
+}
+
+/// Parse a DNN graph from the v1 JSON schema.
+pub fn graph_from_json(text: &str) -> Result<DnnGraph> {
+    let root = json::parse(text).context("graph JSON is not valid JSON")?;
+    let schema = root.get("schema").as_str().unwrap_or_default();
+    if schema != SCHEMA {
+        bail!("unsupported graph schema {schema:?} (want {SCHEMA:?})");
+    }
+    let name = root.req_str("name")?.to_string();
+    let input = shape_from(root.get("input")).context("bad input shape")?;
+    let dtype_bytes = root.req_u64("dtype_bytes")? as u32;
+
+    let mut g = DnnGraph::new(name, input, dtype_bytes);
+    let layers = root.req_array("layers")?;
+    for (i, l) in layers.iter().enumerate() {
+        let lname = l
+            .req_str("name")
+            .with_context(|| format!("layer {i} missing name"))?
+            .to_string();
+        let op = parse_op(l).with_context(|| format!("layer {lname:?}"))?;
+        g.push(Layer::new(lname, op));
+    }
+    g.validate()?;
+
+    // Cross-check exporter shape annotations against our inference.
+    let shapes = g.layer_shapes();
+    for (i, l) in layers.iter().enumerate() {
+        if let Ok(want) = shape_from(l.get("out_shape")) {
+            if shapes[i] != want {
+                bail!(
+                    "layer {:?}: exporter says out_shape {}, we infer {}",
+                    g.layers[i].name,
+                    want,
+                    shapes[i]
+                );
+            }
+        }
+    }
+    Ok(g)
+}
+
+fn parse_op(l: &Value) -> Result<Op> {
+    let u = |key: &str| -> Result<u32> { Ok(l.req_u64(key)? as u32) };
+    match l.get("op").as_str().unwrap_or_default() {
+        "conv2d" => {
+            let padding = match l.get("padding") {
+                Value::Str(s) if s == "same" => Padding::Same,
+                Value::Int(n) if *n >= 0 => Padding::Explicit(*n as u32),
+                other => bail!("bad padding {other:?}"),
+            };
+            let activation = match l.get("activation").as_str().unwrap_or("none") {
+                "relu" => Activation::Relu,
+                "none" => Activation::None,
+                other => bail!("unknown activation {other:?}"),
+            };
+            Ok(Op::Conv2d {
+                cin: u("cin")?,
+                cout: u("cout")?,
+                kh: u("kh")?,
+                kw: u("kw")?,
+                stride: u("stride")?,
+                dilation: u("dilation")?,
+                padding,
+                activation,
+            })
+        }
+        "depthwise_conv2d" => {
+            let padding = match l.get("padding") {
+                Value::Str(s) if s == "same" => Padding::Same,
+                Value::Int(n) if *n >= 0 => Padding::Explicit(*n as u32),
+                other => bail!("bad padding {other:?}"),
+            };
+            let activation = match l.get("activation").as_str().unwrap_or("none") {
+                "relu" => Activation::Relu,
+                "none" => Activation::None,
+                other => bail!("unknown activation {other:?}"),
+            };
+            Ok(Op::DepthwiseConv2d {
+                c: u("c")?,
+                kh: u("kh")?,
+                kw: u("kw")?,
+                stride: u("stride")?,
+                dilation: u("dilation")?,
+                padding,
+                activation,
+            })
+        }
+        "maxpool" => Ok(Op::MaxPool { window: u("window")?, stride: u("stride")? }),
+        "upsample_bilinear" => Ok(Op::UpsampleBilinear { factor: u("factor")? }),
+        "eltwise_add" => Ok(Op::EltwiseAdd),
+        other => bail!("unknown op {other:?}"),
+    }
+}
+
+/// Serialize a graph to the v1 JSON schema (round-trips with
+/// [`graph_from_json`] and with the python exporter).
+pub fn graph_to_json(g: &DnnGraph) -> String {
+    let shapes = g.layer_shapes();
+    let layers: Vec<Value> = g
+        .layers
+        .iter()
+        .zip(&shapes)
+        .map(|(l, &out)| {
+            let mut pairs: Vec<(&str, Value)> = vec![("name", l.name.as_str().into())];
+            match l.op {
+                Op::Conv2d { cin, cout, kh, kw, stride, dilation, padding, activation } => {
+                    pairs.extend([
+                        ("op", "conv2d".into()),
+                        ("cin", cin.into()),
+                        ("cout", cout.into()),
+                        ("kh", kh.into()),
+                        ("kw", kw.into()),
+                        ("stride", stride.into()),
+                        ("dilation", dilation.into()),
+                        (
+                            "padding",
+                            match padding {
+                                Padding::Same => "same".into(),
+                                Padding::Explicit(p) => p.into(),
+                            },
+                        ),
+                        (
+                            "activation",
+                            match activation {
+                                Activation::Relu => "relu".into(),
+                                Activation::None => "none".into(),
+                            },
+                        ),
+                    ]);
+                }
+                Op::DepthwiseConv2d { c, kh, kw, stride, dilation, padding, activation } => {
+                    pairs.extend([
+                        ("op", "depthwise_conv2d".into()),
+                        ("c", c.into()),
+                        ("kh", kh.into()),
+                        ("kw", kw.into()),
+                        ("stride", stride.into()),
+                        ("dilation", dilation.into()),
+                        (
+                            "padding",
+                            match padding {
+                                Padding::Same => "same".into(),
+                                Padding::Explicit(p) => p.into(),
+                            },
+                        ),
+                        (
+                            "activation",
+                            match activation {
+                                Activation::Relu => "relu".into(),
+                                Activation::None => "none".into(),
+                            },
+                        ),
+                    ]);
+                }
+                Op::MaxPool { window, stride } => {
+                    pairs.extend([
+                        ("op", "maxpool".into()),
+                        ("window", window.into()),
+                        ("stride", stride.into()),
+                    ]);
+                }
+                Op::UpsampleBilinear { factor } => {
+                    pairs.extend([
+                        ("op", "upsample_bilinear".into()),
+                        ("factor", factor.into()),
+                    ]);
+                }
+                Op::EltwiseAdd => pairs.push(("op", "eltwise_add".into())),
+            }
+            pairs.push(("out_shape", shape_to(out)));
+            obj(pairs)
+        })
+        .collect();
+    obj(vec![
+        ("schema", SCHEMA.into()),
+        ("name", g.name.as_str().into()),
+        ("input", shape_to(g.input)),
+        ("dtype_bytes", g.dtype_bytes.into()),
+        ("layers", Value::Array(layers)),
+    ])
+    .to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn roundtrip_dilated_vgg() {
+        let g = models::dilated_vgg_paper();
+        let json = graph_to_json(&g);
+        let g2 = graph_from_json(&json).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn roundtrip_all_builders() {
+        for g in [
+            models::dilated_vgg_tiny(),
+            models::vgg16(64, 10),
+            models::lenet(28),
+        ] {
+            let json = graph_to_json(&g);
+            assert_eq!(graph_from_json(&json).unwrap(), g);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let err = graph_from_json(r#"{"schema": "v0", "name": "x"}"#).unwrap_err();
+        assert!(err.to_string().contains("unsupported graph schema"));
+    }
+
+    #[test]
+    fn rejects_bad_out_shape_annotation() {
+        let g = models::lenet(28);
+        let json = graph_to_json(&g);
+        // Corrupt the first layer's out_shape channel count.
+        let bad = json.replacen("\"c\": 6", "\"c\": 999", 1);
+        assert_ne!(bad, json, "fixture must actually change");
+        let err = graph_from_json(&bad).unwrap_err();
+        assert!(err.to_string().contains("we infer"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let text = r#"{"schema":"avsm-dnn-graph-v1","name":"x",
+            "input":{"n":1,"c":1,"h":4,"w":4},"dtype_bytes":2,
+            "layers":[{"name":"l0","op":"fft"}]}"#;
+        assert!(graph_from_json(text).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_json() {
+        assert!(graph_from_json("not json").is_err());
+    }
+
+    #[test]
+    fn python_export_parses() {
+        // The actual artifact written by `make artifacts`, if present.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/dilated_vgg.graph.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let g = graph_from_json(&text).unwrap();
+            assert_eq!(g.name, "dilated_vgg");
+            assert_eq!(g, models::dilated_vgg(256, 1, 16));
+        }
+    }
+}

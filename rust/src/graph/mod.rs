@@ -1,0 +1,15 @@
+//! DNN graph intermediate representation — the deep-learning compiler's
+//! input (the "DNN graph" box of the paper's Fig 1).
+//!
+//! Graphs arrive either from the JSON exported by the JAX model
+//! (`python/compile/model.py::graph_dict`, schema `avsm-dnn-graph-v1`) or
+//! from the built-in builders in [`models`].
+
+pub mod import;
+pub mod models;
+pub mod net;
+pub mod ops;
+
+pub use import::{graph_from_json, graph_to_json};
+pub use net::{DnnGraph, Layer, LayerCost};
+pub use ops::{Activation, Op, Padding, TensorShape};

@@ -1,0 +1,290 @@
+//! Built-in network builders.
+//!
+//! `dilated_vgg` mirrors `python/compile/model.py::dilated_vgg_spec` layer
+//! for layer (the reconstruction documented in DESIGN.md §7); the rust test
+//! suite cross-checks it against the JSON the python side exports. The other
+//! builders provide additional workloads for tests, examples and DSE sweeps.
+
+use super::net::{DnnGraph, Layer};
+use super::ops::{Activation, Op, Padding, TensorShape};
+
+fn conv(name: &str, cin: u32, cout: u32, k: u32, dilation: u32, act: Activation) -> Layer {
+    Layer::new(
+        name,
+        Op::Conv2d {
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride: 1,
+            dilation,
+            padding: Padding::Same,
+            activation: act,
+        },
+    )
+}
+
+fn pool(name: &str) -> Layer {
+    Layer::new(name, Op::MaxPool { window: 2, stride: 2 })
+}
+
+/// The paper's evaluation workload: DilatedVGG for semantic segmentation
+/// (Yu & Koltun front-end), layers named as in the paper's Fig 5/6/7.
+/// `scale` divides channel counts (1 = paper-sized; 8 = the functional
+/// "tiny" variant whose weights fit the AOT artifact).
+pub fn dilated_vgg(input_hw: u32, scale: u32, num_classes: u32) -> DnnGraph {
+    assert!(scale >= 1, "scale must be >= 1");
+    let c = |ch: u32| (ch / scale).max(1);
+    let nc = if scale > 1 { (num_classes / scale).max(2) } else { num_classes };
+    let name = if scale == 1 { "dilated_vgg".into() } else { format!("dilated_vgg_s{scale}") };
+    let mut g = DnnGraph::new(name, TensorShape::new(1, 3, input_hw, input_hw), 2);
+    let r = Activation::Relu;
+
+    g.push(conv("conv1_0", 3, c(64), 3, 1, r));
+    g.push(conv("conv1_1", c(64), c(64), 3, 1, r));
+    g.push(pool("pool1"));
+    g.push(conv("conv2_0", c(64), c(128), 3, 1, r));
+    g.push(conv("conv2_1", c(128), c(128), 3, 1, r));
+    g.push(pool("pool2"));
+    g.push(conv("conv3_0", c(128), c(256), 3, 1, r));
+    g.push(conv("conv3_1", c(256), c(256), 3, 1, r));
+    g.push(conv("conv3_2", c(256), c(256), 3, 1, r));
+    g.push(pool("pool3"));
+    // The six dilated context layers — the compute-bound dots of Fig 7.
+    g.push(conv("conv4_0", c(256), c(512), 3, 2, r));
+    for i in 1..6 {
+        g.push(conv(&format!("conv4_{i}"), c(512), c(512), 3, 2, r));
+    }
+    g.push(conv("dense1", c(512), c(1024), 7, 4, r));
+    g.push(conv("dense2", c(1024), nc, 1, 1, Activation::None));
+    g.push(Layer::new("upscaling", Op::UpsampleBilinear { factor: 8 }));
+    g
+}
+
+/// Paper-sized DilatedVGG at the default timing-simulation resolution.
+pub fn dilated_vgg_paper() -> DnnGraph {
+    dilated_vgg(256, 1, 16)
+}
+
+/// The functional (scale /8) variant matching the AOT artifact.
+pub fn dilated_vgg_tiny() -> DnnGraph {
+    dilated_vgg(64, 8, 16)
+}
+
+/// Classic VGG-16 feature extractor + FC-as-conv head — a second realistic
+/// workload for examples and DSE.
+pub fn vgg16(input_hw: u32, num_classes: u32) -> DnnGraph {
+    let mut g = DnnGraph::new("vgg16", TensorShape::new(1, 3, input_hw, input_hw), 2);
+    let r = Activation::Relu;
+    let blocks: &[(&str, u32, u32, usize)] = &[
+        ("conv1", 3, 64, 2),
+        ("conv2", 64, 128, 2),
+        ("conv3", 128, 256, 3),
+        ("conv4", 256, 512, 3),
+        ("conv5", 512, 512, 3),
+    ];
+    for (bi, &(prefix, cin, cout, reps)) in blocks.iter().enumerate() {
+        let mut c_in = cin;
+        for i in 0..reps {
+            g.push(conv(&format!("{prefix}_{i}"), c_in, cout, 3, 1, r));
+            c_in = cout;
+        }
+        g.push(pool(&format!("pool{}", bi + 1)));
+    }
+    g.push(conv("fc6", 512, 4096, 7, 1, r));
+    g.push(conv("fc7", 4096, 4096, 1, 1, r));
+    g.push(conv("fc8", 4096, num_classes, 1, 1, Activation::None));
+    g
+}
+
+/// A small LeNet-style CNN — the smoke-test workload.
+pub fn lenet(input_hw: u32) -> DnnGraph {
+    let mut g = DnnGraph::new("lenet", TensorShape::new(1, 1, input_hw, input_hw), 2);
+    g.push(conv("c1", 1, 6, 5, 1, Activation::Relu));
+    g.push(pool("p1"));
+    g.push(conv("c2", 6, 16, 5, 1, Activation::Relu));
+    g.push(pool("p2"));
+    g.push(conv("c3", 16, 120, 5, 1, Activation::Relu));
+    g
+}
+
+/// MobileNet-v1-style network: alternating depthwise 3x3 and pointwise 1x1
+/// stages. The depthwise layers occupy one MAC-array row per channel with
+/// the columns idle — a workload whose roofline looks *nothing* like
+/// VGG's, exercising the "neither bound" region the paper highlights.
+pub fn mobilenet(input_hw: u32, alpha_denom: u32, num_classes: u32) -> DnnGraph {
+    let c0 = |ch: u32| (ch / alpha_denom).max(8);
+    let mut g = DnnGraph::new("mobilenet", TensorShape::new(1, 3, input_hw, input_hw), 2);
+    let r = Activation::Relu;
+    // Stem: standard conv, stride 2.
+    g.push(Layer::new(
+        "stem",
+        Op::Conv2d {
+            cin: 3, cout: c0(32), kh: 3, kw: 3, stride: 2, dilation: 1,
+            padding: Padding::Same, activation: r,
+        },
+    ));
+    // (out channels, stride) per depthwise-separable block.
+    let blocks: &[(u32, u32)] = &[
+        (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+        (512, 1), (512, 1), (1024, 2),
+    ];
+    let mut c = c0(32);
+    for (i, &(cout, stride)) in blocks.iter().enumerate() {
+        g.push(Layer::new(
+            format!("dw{i}"),
+            Op::DepthwiseConv2d {
+                c, kh: 3, kw: 3, stride, dilation: 1,
+                padding: Padding::Same, activation: r,
+            },
+        ));
+        g.push(Layer::new(
+            format!("pw{i}"),
+            Op::Conv2d {
+                cin: c, cout: c0(cout), kh: 1, kw: 1, stride: 1, dilation: 1,
+                padding: Padding::Same, activation: r,
+            },
+        ));
+        c = c0(cout);
+    }
+    g.push(Layer::new(
+        "classifier",
+        Op::Conv2d {
+            cin: c, cout: num_classes, kh: 1, kw: 1, stride: 1, dilation: 1,
+            padding: Padding::Same, activation: Activation::None,
+        },
+    ));
+    g
+}
+
+/// A small residual network exercising skip connections (EltwiseAdd), i.e.
+/// non-chain traffic the HKP must co-schedule.
+pub fn tiny_resnet(input_hw: u32, channels: u32, blocks: usize) -> DnnGraph {
+    let mut g = DnnGraph::new("tiny_resnet", TensorShape::new(1, 3, input_hw, input_hw), 2);
+    g.push(conv("stem", 3, channels, 3, 1, Activation::Relu));
+    let mut last = 0;
+    for b in 0..blocks {
+        g.push(conv(&format!("res{b}_a"), channels, channels, 3, 1, Activation::Relu));
+        g.push(conv(&format!("res{b}_b"), channels, channels, 3, 1, Activation::None));
+        let idx = g.push(Layer::new(format!("res{b}_add"), Op::EltwiseAdd));
+        g.layers[idx].skip_from = Some(last);
+        last = idx;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dilated_vgg_paper_validates() {
+        dilated_vgg_paper().validate().unwrap();
+    }
+
+    #[test]
+    fn dilated_vgg_layer_names_match_paper_figures() {
+        let g = dilated_vgg_paper();
+        for name in ["conv1_1", "conv4_0", "conv4_5", "dense1", "upscaling"] {
+            assert!(g.layer_index(name).is_some(), "missing {name}");
+        }
+        let conv4: Vec<_> = g
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("conv4_"))
+            .collect();
+        assert_eq!(conv4.len(), 6);
+        for l in conv4 {
+            match l.op {
+                Op::Conv2d { dilation, cout, .. } => {
+                    assert_eq!(dilation, 2);
+                    assert_eq!(cout, 512);
+                }
+                _ => panic!("conv4 layer is not a conv"),
+            }
+        }
+    }
+
+    #[test]
+    fn dilated_vgg_output_restores_input_resolution() {
+        let g = dilated_vgg_paper();
+        let out = g.out_shape();
+        assert_eq!((out.h, out.w), (256, 256));
+        assert_eq!(out.c, 16);
+    }
+
+    #[test]
+    fn tiny_variant_matches_python_scale() {
+        let g = dilated_vgg_tiny();
+        g.validate().unwrap();
+        let shapes = g.layer_shapes();
+        let c10 = g.layer_index("conv1_0").unwrap();
+        assert_eq!(shapes[c10].c, 8);
+        let d1 = g.layer_index("dense1").unwrap();
+        assert_eq!(shapes[d1].c, 128);
+    }
+
+    #[test]
+    fn dilated_vgg_total_macs_scale() {
+        // Paper-sized @256: the dilated context stage (conv4_* + dense1)
+        // dominates the MAC count — these are the compute-bound dots of
+        // Fig 6/7.
+        let g = dilated_vgg_paper();
+        let costs = g.layer_costs();
+        let names: Vec<_> = g.layers.iter().map(|l| l.name.as_str()).collect();
+        let context_macs: u64 = names
+            .iter()
+            .zip(&costs)
+            .filter(|(n, _)| n.starts_with("conv4_") || n.starts_with("dense"))
+            .map(|(_, c)| c.macs)
+            .sum();
+        assert!(context_macs * 2 > g.total_macs(), "context stage should dominate");
+        // And each conv4 layer individually out-weighs conv1_0.
+        let mac_of = |name: &str| costs[g.layer_index(name).unwrap()].macs;
+        assert!(mac_of("conv4_1") > 10 * mac_of("conv1_0"));
+    }
+
+    #[test]
+    fn vgg16_and_lenet_validate() {
+        vgg16(224, 1000).validate().unwrap();
+        lenet(28).validate().unwrap();
+    }
+
+    #[test]
+    fn mobilenet_validates_and_shrinks_spatially() {
+        let g = mobilenet(224, 1, 1000);
+        g.validate().unwrap();
+        let out = g.out_shape();
+        assert_eq!(out.c, 1000);
+        assert_eq!((out.h, out.w), (7, 7)); // 224 / 2^5
+        // Depthwise layers dominate the layer count but not the MACs.
+        let costs = g.layer_costs();
+        let dw_macs: u64 = g
+            .layers
+            .iter()
+            .zip(&costs)
+            .filter(|(l, _)| matches!(l.op, Op::DepthwiseConv2d { .. }))
+            .map(|(_, c)| c.macs)
+            .sum();
+        assert!(dw_macs * 5 < g.total_macs(), "pointwise should dominate MACs");
+    }
+
+    #[test]
+    fn depthwise_macs_and_weights() {
+        let op = Op::DepthwiseConv2d {
+            c: 32, kh: 3, kw: 3, stride: 1, dilation: 1,
+            padding: Padding::Same, activation: Activation::Relu,
+        };
+        let input = TensorShape::new(1, 32, 16, 16);
+        assert_eq!(op.out_shape(input), input);
+        assert_eq!(op.macs(input), 32 * 16 * 16 * 9);
+        assert_eq!(op.weight_bytes(2), (32 * 9 + 32) * 2);
+    }
+
+    #[test]
+    fn tiny_resnet_skips_validate() {
+        let g = tiny_resnet(32, 16, 3);
+        g.validate().unwrap();
+        assert!(g.layers.iter().any(|l| l.skip_from.is_some()));
+    }
+}

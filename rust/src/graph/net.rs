@@ -1,0 +1,283 @@
+//! The DNN graph: an ordered layer chain (with optional skip inputs) plus
+//! shape inference and per-layer cost accounting.
+
+use super::ops::{Op, TensorShape};
+use anyhow::{bail, Context, Result};
+
+/// One node of the DNN graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    /// Index of an earlier layer whose output is a second operand
+    /// (`EltwiseAdd` skip connections). `None` for the plain chain.
+    pub skip_from: Option<usize>,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, op: Op) -> Self {
+        Self { name: name.into(), op, skip_from: None }
+    }
+}
+
+/// Static per-layer cost numbers — the quantities the compiler's tiler, the
+/// roofline analysis (Fig 6/7) and the analytical baseline all consume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    pub macs: u64,
+    pub arith_ops: u64,
+    pub ifm_bytes: u64,
+    pub ofm_bytes: u64,
+    pub weight_bytes: u64,
+}
+
+impl LayerCost {
+    /// Total external-memory traffic assuming each tensor crosses the bus
+    /// exactly once (the ideal the AVSM's double-buffered schedule targets).
+    pub fn total_bytes(&self) -> u64 {
+        self.ifm_bytes + self.ofm_bytes + self.weight_bytes
+    }
+
+    /// Operational intensity in ops/byte — the roofline x-axis.
+    pub fn intensity(&self) -> f64 {
+        self.arith_ops as f64 / self.total_bytes().max(1) as f64
+    }
+}
+
+/// A whole network: input shape, element width and the layer chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DnnGraph {
+    pub name: String,
+    pub input: TensorShape,
+    /// Bytes per feature-map/weight element (2 = the FPGA's 16-bit fixed).
+    pub dtype_bytes: u32,
+    pub layers: Vec<Layer>,
+}
+
+impl DnnGraph {
+    pub fn new(name: impl Into<String>, input: TensorShape, dtype_bytes: u32) -> Self {
+        Self { name: name.into(), input, dtype_bytes, layers: Vec::new() }
+    }
+
+    pub fn push(&mut self, layer: Layer) -> usize {
+        self.layers.push(layer);
+        self.layers.len() - 1
+    }
+
+    /// Input shape of layer `idx` (output of the previous layer).
+    pub fn in_shape(&self, idx: usize) -> TensorShape {
+        let mut shape = self.input;
+        for layer in &self.layers[..idx] {
+            shape = layer.op.out_shape(shape);
+        }
+        shape
+    }
+
+    /// All layer output shapes in order (O(n) single walk).
+    pub fn layer_shapes(&self) -> Vec<TensorShape> {
+        let mut shape = self.input;
+        self.layers
+            .iter()
+            .map(|l| {
+                shape = l.op.out_shape(shape);
+                shape
+            })
+            .collect()
+    }
+
+    pub fn out_shape(&self) -> TensorShape {
+        self.layer_shapes().last().copied().unwrap_or(self.input)
+    }
+
+    /// Per-layer static costs, in layer order.
+    pub fn layer_costs(&self) -> Vec<LayerCost> {
+        let mut shape = self.input;
+        let shapes = self.layer_shapes();
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let input = shape;
+                let out = shapes[i];
+                shape = out;
+                let mut ifm = input.bytes(self.dtype_bytes);
+                if let Some(src) = l.skip_from {
+                    ifm += shapes[src].bytes(self.dtype_bytes);
+                }
+                LayerCost {
+                    macs: l.op.macs(input),
+                    arith_ops: l.op.arith_ops(input),
+                    ifm_bytes: ifm,
+                    ofm_bytes: out.bytes(self.dtype_bytes),
+                    weight_bytes: l.op.weight_bytes(self.dtype_bytes),
+                }
+            })
+            .collect()
+    }
+
+    /// Total MAC count of one inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layer_costs().iter().map(|c| c.macs).sum()
+    }
+
+    /// Total parameter bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layer_costs().iter().map(|c| c.weight_bytes).sum()
+    }
+
+    pub fn layer_index(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    /// Structural validation: channel chain consistency, shape sanity,
+    /// skip references, unique names.
+    pub fn validate(&self) -> Result<()> {
+        if self.dtype_bytes == 0 {
+            bail!("dtype_bytes must be positive");
+        }
+        if self.input.numel() == 0 {
+            bail!("input shape has zero elements");
+        }
+        let mut names = std::collections::HashSet::new();
+        let mut shape = self.input;
+        for (i, layer) in self.layers.iter().enumerate() {
+            if !names.insert(layer.name.as_str()) {
+                bail!("duplicate layer name {:?}", layer.name);
+            }
+            if let Op::Conv2d { cin, kh, kw, stride, dilation, .. } = layer.op {
+                if cin != shape.c {
+                    bail!(
+                        "layer {:?}: cin {} != incoming channels {}",
+                        layer.name, cin, shape.c
+                    );
+                }
+                if kh == 0 || kw == 0 || stride == 0 || dilation == 0 {
+                    bail!("layer {:?}: zero conv geometry", layer.name);
+                }
+            }
+            if let Op::DepthwiseConv2d { c, kh, kw, stride, dilation, .. } = layer.op {
+                if c != shape.c {
+                    bail!(
+                        "layer {:?}: depthwise c {} != incoming channels {}",
+                        layer.name, c, shape.c
+                    );
+                }
+                if kh == 0 || kw == 0 || stride == 0 || dilation == 0 {
+                    bail!("layer {:?}: zero conv geometry", layer.name);
+                }
+            }
+            if let Some(src) = layer.skip_from {
+                if src >= i {
+                    bail!("layer {:?}: skip_from {} is not an earlier layer", layer.name, src);
+                }
+            }
+            shape = layer.op.out_shape(shape);
+            if shape.numel() == 0 {
+                bail!("layer {:?} produces an empty tensor", layer.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate and return self (builder convenience).
+    pub fn validated(self) -> Result<Self> {
+        self.validate().context("graph validation failed")?;
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::{Activation, Padding};
+
+    fn conv(cin: u32, cout: u32) -> Op {
+        Op::Conv2d {
+            cin,
+            cout,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            dilation: 1,
+            padding: Padding::Same,
+            activation: Activation::Relu,
+        }
+    }
+
+    fn small_graph() -> DnnGraph {
+        let mut g = DnnGraph::new("t", TensorShape::new(1, 3, 32, 32), 2);
+        g.push(Layer::new("c0", conv(3, 8)));
+        g.push(Layer::new("p0", Op::MaxPool { window: 2, stride: 2 }));
+        g.push(Layer::new("c1", conv(8, 16)));
+        g
+    }
+
+    #[test]
+    fn shape_walk() {
+        let g = small_graph();
+        let shapes = g.layer_shapes();
+        assert_eq!(shapes[0], TensorShape::new(1, 8, 32, 32));
+        assert_eq!(shapes[1], TensorShape::new(1, 8, 16, 16));
+        assert_eq!(shapes[2], TensorShape::new(1, 16, 16, 16));
+        assert_eq!(g.in_shape(2), shapes[1]);
+        assert_eq!(g.out_shape(), shapes[2]);
+    }
+
+    #[test]
+    fn costs_are_consistent() {
+        let g = small_graph();
+        let costs = g.layer_costs();
+        // c0: 32*32*8 out elems * 3ch * 9
+        assert_eq!(costs[0].macs, 32 * 32 * 8 * 27);
+        assert_eq!(costs[0].ifm_bytes, 3 * 32 * 32 * 2);
+        assert_eq!(costs[0].ofm_bytes, 8 * 32 * 32 * 2);
+        assert_eq!(costs[1].macs, 0);
+        assert_eq!(g.total_macs(), costs.iter().map(|c| c.macs).sum::<u64>());
+        assert!(costs[0].intensity() > 0.0);
+    }
+
+    #[test]
+    fn validate_accepts_good_graph() {
+        small_graph().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_channel_mismatch() {
+        let mut g = small_graph();
+        g.push(Layer::new("bad", conv(99, 8)));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_names() {
+        let mut g = small_graph();
+        g.push(Layer::new("c0", conv(16, 16)));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_forward_skip() {
+        let mut g = small_graph();
+        let idx = g.push(Layer::new("add", Op::EltwiseAdd));
+        g.layers[idx].skip_from = Some(idx);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn skip_adds_second_ifm() {
+        let mut g = DnnGraph::new("t", TensorShape::new(1, 8, 16, 16), 2);
+        g.push(Layer::new("c0", conv(8, 8)));
+        let idx = g.push(Layer::new("add", Op::EltwiseAdd));
+        g.layers[idx].skip_from = Some(0);
+        let costs = g.layer_costs();
+        // ifm = incoming + skip operand (both 8x16x16 @2B)
+        assert_eq!(costs[1].ifm_bytes, 2 * 8 * 16 * 16 * 2);
+    }
+
+    #[test]
+    fn layer_index_lookup() {
+        let g = small_graph();
+        assert_eq!(g.layer_index("c1"), Some(2));
+        assert_eq!(g.layer_index("zz"), None);
+    }
+}

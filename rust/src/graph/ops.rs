@@ -1,0 +1,273 @@
+//! Tensor shapes and layer operations.
+
+
+/// NCHW tensor shape (feature maps throughout the system are channel-major,
+/// matching the FPGA NCE's channel-tile streaming order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorShape {
+    pub n: u32,
+    pub c: u32,
+    pub h: u32,
+    pub w: u32,
+}
+
+impl TensorShape {
+    pub fn new(n: u32, c: u32, h: u32, w: u32) -> Self {
+        Self { n, c, h, w }
+    }
+
+    pub fn numel(&self) -> u64 {
+        self.n as u64 * self.c as u64 * self.h as u64 * self.w as u64
+    }
+
+    pub fn bytes(&self, dtype_bytes: u32) -> u64 {
+        self.numel() * dtype_bytes as u64
+    }
+}
+
+impl std::fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}x{}", self.n, self.c, self.h, self.w)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    None,
+    Relu,
+}
+
+/// Spatial padding mode. `Same` keeps H/W (divided by stride); `Explicit`
+/// pads symmetrically by a pixel count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Padding {
+    Same,
+    Explicit(u32),
+}
+
+/// Layer operations supported by the DNN system (the paper's architecture:
+/// convolutions and GEMM-like ops run on the NCE; pooling/up-sampling are
+/// lightweight vector ops; everything streams through the DMA).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Conv2d {
+        cin: u32,
+        cout: u32,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        dilation: u32,
+        padding: Padding,
+        activation: Activation,
+    },
+    MaxPool {
+        window: u32,
+        stride: u32,
+    },
+    UpsampleBilinear {
+        factor: u32,
+    },
+    /// Depthwise convolution: one filter per channel, no cross-channel
+    /// reduction. On a GEMM array it occupies one row per channel with the
+    /// columns idle — the classic depthwise-inefficiency the MobileNet
+    /// workload exposes in DSE.
+    DepthwiseConv2d {
+        c: u32,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        dilation: u32,
+        padding: Padding,
+        activation: Activation,
+    },
+    /// Element-wise residual add (second operand is another layer's output;
+    /// used by the TinyResNet builder to exercise non-chain data movement).
+    EltwiseAdd,
+}
+
+impl Op {
+    /// Output shape given the input shape.
+    pub fn out_shape(&self, input: TensorShape) -> TensorShape {
+        match *self {
+            Op::Conv2d { cout, kh, kw, stride, dilation, padding, .. } => {
+                let (h, w) = match padding {
+                    Padding::Same => (div_ceil(input.h, stride), div_ceil(input.w, stride)),
+                    Padding::Explicit(p) => {
+                        let eff_kh = (kh - 1) * dilation + 1;
+                        let eff_kw = (kw - 1) * dilation + 1;
+                        (
+                            (input.h + 2 * p - eff_kh) / stride + 1,
+                            (input.w + 2 * p - eff_kw) / stride + 1,
+                        )
+                    }
+                };
+                TensorShape::new(input.n, cout, h, w)
+            }
+            Op::MaxPool { stride, .. } => {
+                TensorShape::new(input.n, input.c, input.h / stride, input.w / stride)
+            }
+            Op::UpsampleBilinear { factor } => {
+                TensorShape::new(input.n, input.c, input.h * factor, input.w * factor)
+            }
+            Op::DepthwiseConv2d { kh, kw, stride, dilation, padding, .. } => {
+                let (h, w) = match padding {
+                    Padding::Same => (div_ceil(input.h, stride), div_ceil(input.w, stride)),
+                    Padding::Explicit(p) => {
+                        let eff_kh = (kh - 1) * dilation + 1;
+                        let eff_kw = (kw - 1) * dilation + 1;
+                        (
+                            (input.h + 2 * p - eff_kh) / stride + 1,
+                            (input.w + 2 * p - eff_kw) / stride + 1,
+                        )
+                    }
+                };
+                TensorShape::new(input.n, input.c, h, w)
+            }
+            Op::EltwiseAdd => input,
+        }
+    }
+
+    /// Multiply-accumulate count of the op (0 for non-GEMM ops).
+    pub fn macs(&self, input: TensorShape) -> u64 {
+        match *self {
+            Op::Conv2d { cin, kh, kw, .. } => {
+                let out = self.out_shape(input);
+                out.numel() * cin as u64 * kh as u64 * kw as u64
+            }
+            Op::DepthwiseConv2d { kh, kw, .. } => {
+                self.out_shape(input).numel() * kh as u64 * kw as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Arithmetic operation count used by the roofline (2 ops per MAC for
+    /// convs; a handful of ops per output element for vector layers).
+    pub fn arith_ops(&self, input: TensorShape) -> u64 {
+        match *self {
+            Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } => 2 * self.macs(input),
+            Op::MaxPool { window, .. } => {
+                self.out_shape(input).numel() * (window as u64 * window as u64)
+            }
+            // Separable bilinear: ~4 ops per output pixel.
+            Op::UpsampleBilinear { .. } => self.out_shape(input).numel() * 4,
+            Op::EltwiseAdd => input.numel(),
+        }
+    }
+
+    /// Parameter (weight + bias) bytes of the op.
+    pub fn weight_bytes(&self, dtype_bytes: u32) -> u64 {
+        match *self {
+            Op::Conv2d { cin, cout, kh, kw, .. } => {
+                (cin as u64 * cout as u64 * kh as u64 * kw as u64 + cout as u64)
+                    * dtype_bytes as u64
+            }
+            Op::DepthwiseConv2d { c, kh, kw, .. } => {
+                (c as u64 * kh as u64 * kw as u64 + c as u64) * dtype_bytes as u64
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Op::Conv2d { .. })
+    }
+}
+
+pub(crate) fn div_ceil(a: u32, b: u32) -> u32 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(cin: u32, cout: u32, k: u32, stride: u32, dilation: u32) -> Op {
+        Op::Conv2d {
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride,
+            dilation,
+            padding: Padding::Same,
+            activation: Activation::Relu,
+        }
+    }
+
+    #[test]
+    fn conv_same_keeps_spatial() {
+        let op = conv(3, 64, 3, 1, 1);
+        let out = op.out_shape(TensorShape::new(1, 3, 256, 256));
+        assert_eq!(out, TensorShape::new(1, 64, 256, 256));
+    }
+
+    #[test]
+    fn conv_stride2_halves() {
+        let op = conv(16, 32, 3, 2, 1);
+        let out = op.out_shape(TensorShape::new(1, 16, 56, 56));
+        assert_eq!((out.h, out.w), (28, 28));
+    }
+
+    #[test]
+    fn conv_explicit_padding_with_dilation() {
+        // 3x3 dilation 2 => effective 5x5; pad 2 keeps spatial.
+        let op = Op::Conv2d {
+            cin: 8,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            dilation: 2,
+            padding: Padding::Explicit(2),
+            activation: Activation::None,
+        };
+        let out = op.out_shape(TensorShape::new(1, 8, 32, 32));
+        assert_eq!((out.h, out.w), (32, 32));
+    }
+
+    #[test]
+    fn conv_macs_formula() {
+        // 64x64 out, 3->64ch, 3x3: 64*64*64*3*3*3
+        let op = conv(3, 64, 3, 1, 1);
+        let input = TensorShape::new(1, 3, 64, 64);
+        assert_eq!(op.macs(input), 64 * 64 * 64 * 3 * 9);
+        assert_eq!(op.arith_ops(input), 2 * op.macs(input));
+    }
+
+    #[test]
+    fn dilation_does_not_change_macs() {
+        let a = conv(32, 32, 3, 1, 1);
+        let b = conv(32, 32, 3, 1, 2);
+        let input = TensorShape::new(1, 32, 64, 64);
+        assert_eq!(a.macs(input), b.macs(input));
+    }
+
+    #[test]
+    fn pool_and_upsample_shapes() {
+        let input = TensorShape::new(1, 64, 32, 32);
+        assert_eq!(
+            Op::MaxPool { window: 2, stride: 2 }.out_shape(input),
+            TensorShape::new(1, 64, 16, 16)
+        );
+        assert_eq!(
+            Op::UpsampleBilinear { factor: 8 }.out_shape(input),
+            TensorShape::new(1, 64, 256, 256)
+        );
+    }
+
+    #[test]
+    fn weight_bytes_include_bias() {
+        let op = conv(4, 8, 3, 1, 1);
+        assert_eq!(op.weight_bytes(2), (4 * 8 * 9 + 8) * 2);
+        assert_eq!(Op::MaxPool { window: 2, stride: 2 }.weight_bytes(2), 0);
+    }
+
+    #[test]
+    fn tensor_shape_helpers() {
+        let t = TensorShape::new(1, 3, 4, 5);
+        assert_eq!(t.numel(), 60);
+        assert_eq!(t.bytes(2), 120);
+        assert_eq!(t.to_string(), "1x3x4x5");
+    }
+}

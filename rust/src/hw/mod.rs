@@ -1,0 +1,40 @@
+//! Virtual hardware models and the task-graph executor.
+//!
+//! [`exec`] is the shared execution engine: it schedules the hardware-
+//! adapted task graph onto the virtual HKP / DMA channels / bus / NCE with
+//! full causality (dependencies, queueing, round-robin bus arbitration) —
+//! the part the paper says analytical models miss. The *timing* of each
+//! phase is delegated to a [`TimingModel`]:
+//!
+//! * [`avsm::AvsmTiming`] — the abstract virtual system model: flat memory
+//!   latency + bandwidth bus + the compiler's NCE cycle counts (paper §2).
+//! * [`crate::detailed::PrototypeTiming`] — the cycle-level "physical
+//!   prototype": DRAM banks/rows/refresh, per-burst bus protocol, NCE
+//!   pipeline fill/drain. Stands in for the paper's Virtex7 FPGA
+//!   measurement (DESIGN.md §2).
+//!
+//! Because both fidelity levels share one executor and one task graph, the
+//! Fig 5 deviation between them is *purely* the modeling-abstraction gap —
+//! mirroring the paper's experiment design.
+
+pub mod avsm;
+pub mod exec;
+pub mod result;
+
+pub use avsm::AvsmTiming;
+pub use exec::{Executor, TimingModel};
+pub use result::{LayerTiming, SimResult};
+
+use crate::compiler::CompiledNet;
+use crate::config::SystemConfig;
+use crate::sim::TraceRecorder;
+
+/// Convenience: simulate a compiled net on the AVSM timing model.
+pub fn simulate_avsm(
+    compiled: &CompiledNet,
+    sys: &SystemConfig,
+    trace: &mut TraceRecorder,
+) -> SimResult {
+    let timing = AvsmTiming::new(sys);
+    Executor::new(sys, timing).run(compiled, trace)
+}

@@ -1,0 +1,135 @@
+//! Simulation results: end-to-end and per-layer timing plus resource
+//! utilization — the numbers Figs 4/5/6/7 are drawn from.
+
+use crate::sim::SimTime;
+
+/// Timing of one DNN layer within a simulated inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTiming {
+    pub index: u32,
+    pub name: String,
+    /// Wall-clock window of the layer: barrier-to-barrier (layers are
+    /// serialized by the compiler's barrier nodes, so windows are disjoint
+    /// and sum to the total).
+    pub start_ps: SimTime,
+    pub end_ps: SimTime,
+    /// NCE busy time within the window.
+    pub nce_busy_ps: SimTime,
+    /// Bus busy time within the window.
+    pub bus_busy_ps: SimTime,
+    pub macs: u64,
+    pub dma_bytes: u64,
+}
+
+impl LayerTiming {
+    pub fn duration_ps(&self) -> SimTime {
+        self.end_ps - self.start_ps
+    }
+
+    /// NCE occupancy in [0,1] over the layer window.
+    pub fn nce_utilization(&self) -> f64 {
+        self.nce_busy_ps as f64 / self.duration_ps().max(1) as f64
+    }
+
+    /// Bus occupancy in [0,1] over the layer window.
+    pub fn bus_utilization(&self) -> f64 {
+        self.bus_busy_ps as f64 / self.duration_ps().max(1) as f64
+    }
+
+    /// The paper's Fig 4/6 taxonomy: a layer is compute-bound when the NCE
+    /// is (nearly) continuously occupied, communication-bound when the bus
+    /// is, and "neither" when dependency/latency effects dominate — those
+    /// are the layers where extra peak compute or bandwidth would not help.
+    pub fn bound_class(&self) -> BoundClass {
+        const THRESH: f64 = 0.90;
+        let nce = self.nce_utilization();
+        let bus = self.bus_utilization();
+        if nce >= THRESH && nce >= bus {
+            BoundClass::Compute
+        } else if bus >= THRESH {
+            BoundClass::Communication
+        } else {
+            BoundClass::Neither
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundClass {
+    Compute,
+    Communication,
+    Neither,
+}
+
+impl std::fmt::Display for BoundClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BoundClass::Compute => "compute-bound",
+            BoundClass::Communication => "communication-bound",
+            BoundClass::Neither => "neither",
+        })
+    }
+}
+
+/// Full result of one simulated inference.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// End-to-end processing time of the inference.
+    pub total_ps: SimTime,
+    pub layers: Vec<LayerTiming>,
+    /// DES events processed (simulator perf counter).
+    pub events: u64,
+    /// Tasks executed.
+    pub tasks: u64,
+}
+
+impl SimResult {
+    pub fn total_ms(&self) -> f64 {
+        self.total_ps as f64 / 1e9
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerTiming> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Achieved MAC/s over the whole inference.
+    pub fn macs_per_sec(&self) -> f64 {
+        let total_macs: u64 = self.layers.iter().map(|l| l.macs).sum();
+        total_macs as f64 / (self.total_ps as f64 / 1e12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(nce: u64, bus: u64, dur: u64) -> LayerTiming {
+        LayerTiming {
+            index: 0,
+            name: "l".into(),
+            start_ps: 0,
+            end_ps: dur,
+            nce_busy_ps: nce,
+            bus_busy_ps: bus,
+            macs: 100,
+            dma_bytes: 10,
+        }
+    }
+
+    #[test]
+    fn bound_classification() {
+        assert_eq!(layer(95, 20, 100).bound_class(), BoundClass::Compute);
+        assert_eq!(layer(20, 95, 100).bound_class(), BoundClass::Communication);
+        assert_eq!(layer(50, 50, 100).bound_class(), BoundClass::Neither);
+        // Both saturated: compute wins when nce >= bus.
+        assert_eq!(layer(99, 95, 100).bound_class(), BoundClass::Compute);
+    }
+
+    #[test]
+    fn utilization_math() {
+        let l = layer(80, 40, 100);
+        assert!((l.nce_utilization() - 0.8).abs() < 1e-12);
+        assert!((l.bus_utilization() - 0.4).abs() < 1e-12);
+        assert_eq!(l.duration_ps(), 100);
+    }
+}

@@ -1,0 +1,42 @@
+//! AVSM — Abstract Virtual System Models for end-to-end HW/SW co-design of
+//! deep neural network systems.
+//!
+//! Reproduction of Klaiber et al., "An End-to-End HW/SW Co-Design Methodology
+//! to Design Efficient Deep Neural Network Systems using Virtual Models",
+//! Embedded Systems Week 2019 (DOI 10.1145/3372394.3372396).
+//!
+//! Architecture (see DESIGN.md):
+//! * [`sim`] — deterministic discrete-event kernel (the SystemC/Platform
+//!   Architect substitute).
+//! * [`graph`] — DNN graph IR + builders + JSON interchange with the JAX
+//!   model definition.
+//! * [`config`] — system description files with physical annotations.
+//! * [`compiler`] — the deep-learning compiler: hardware-adapted tiling and
+//!   lowering of DNN graphs into task graphs.
+//! * [`taskgraph`] — the task graph (the paper's "virtual software model").
+//! * [`hw`] — abstract virtual hardware models (NCE, DMA, bus, memory, HKP).
+//! * [`detailed`] — the cycle-level "physical prototype" reference model.
+//! * [`roofline`], [`trace`], [`report`] — Fig 4/5/6/7 analyses.
+//! * [`dse`] — design-space exploration sweeps.
+//! * [`runtime`] — PJRT loader executing the AOT JAX/Pallas artifacts.
+//! * [`coordinator`] — the end-to-end flow of Fig 1 with phase timing (Fig 3).
+
+pub mod benchkit;
+pub mod cli;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod detailed;
+pub mod dse;
+pub mod energy;
+pub mod graph;
+pub mod hw;
+pub mod json;
+pub mod metrics;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod sim;
+pub mod taskgraph;
+pub mod testkit;
+pub mod trace;

@@ -1,0 +1,364 @@
+//! `avsm` — command-line front-end to the AVSM co-design framework.
+//!
+//! The virtual-system-based prototyping flow of the paper, end to end:
+//! DNN graph -> deep-learning compiler -> hardware-adapted task graph ->
+//! AVSM simulation -> Fig 3/4/5/6/7 reports, plus functional inference of
+//! the AOT JAX/Pallas artifacts over PJRT.
+
+use anyhow::{bail, Context, Result};
+use avsm::cli::Args;
+use avsm::compiler::{analytical_estimate, compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::coordinator::{run_flow, FlowOptions};
+use avsm::dse;
+use avsm::graph::{graph_from_json, models, DnnGraph};
+use avsm::hw::simulate_avsm;
+use avsm::metrics::{fmt_bytes, fmt_ps};
+use avsm::report::Fig5Report;
+use avsm::roofline::RooflineModel;
+use avsm::runtime::{self, Manifest, Runtime};
+use avsm::sim::TraceRecorder;
+use avsm::trace::{Gantt, GanttOptions};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+avsm — HW/SW co-design of DNN systems with abstract virtual system models
+(reproduction of Klaiber et al., ESWEEK 2019)
+
+USAGE: avsm <COMMAND> [OPTIONS]
+
+COMMANDS:
+  simulate   run the AVSM timing simulation, print the per-layer table
+  compare    Fig 5: AVSM vs detailed 'hardware' prototype, with deviations
+  roofline   Fig 6/7: roofline of the simulated system (--zoom for Fig 7)
+  gantt      Fig 4: resource Gantt chart (--format ascii|csv|svg)
+  flow       full flow with the Fig 3 runtime breakdown (--outdir DIR)
+  sweep      design-space exploration over NCE/bus/buffer axes
+  topdown    minimum NCE frequency for a latency target (--target-ms X)
+  analytical static (Zhang'15-style) estimate — the no-causality baseline
+  infer      functional inference of the AOT artifact over PJRT
+  config     print the (validated) system description JSON
+  graph      print the DNN graph JSON
+
+COMMON OPTIONS:
+  --net NAME|PATH     dilated_vgg (default) | dilated_vgg_tiny | vgg16 |
+                      lenet | mobilenet | tiny_resnet | path to .graph.json
+  --system PATH       system description JSON (default: built-in base
+                      config = the paper's 32x64 @ 250 MHz Virtex7 point)
+  --hw N              input H=W for built-in nets (default per net)
+  --outdir DIR        where to write artifacts/reports
+  --artifacts DIR     AOT artifact dir for `infer` (default: artifacts/)
+";
+
+fn load_sys(args: &Args) -> Result<SystemConfig> {
+    match args.get("system") {
+        Some(path) => SystemConfig::from_file(path),
+        None => Ok(SystemConfig::base_paper()),
+    }
+}
+
+fn load_net(args: &Args) -> Result<DnnGraph> {
+    let name = args.get_or("net", "dilated_vgg");
+    let hw = args.get_u64("hw", 0)? as u32;
+    let net = match name {
+        "dilated_vgg" => models::dilated_vgg(if hw == 0 { 256 } else { hw }, 1, 16),
+        "dilated_vgg_tiny" => models::dilated_vgg(if hw == 0 { 64 } else { hw }, 8, 16),
+        "vgg16" => models::vgg16(if hw == 0 { 224 } else { hw }, 1000),
+        "lenet" => models::lenet(if hw == 0 { 28 } else { hw }),
+        "tiny_resnet" => models::tiny_resnet(if hw == 0 { 32 } else { hw }, 16, 3),
+        "mobilenet" => models::mobilenet(if hw == 0 { 224 } else { hw }, 1, 1000),
+        path => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading DNN graph {path:?}"))?;
+            graph_from_json(&text)?
+        }
+    };
+    net.validate()?;
+    Ok(net)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args())?;
+    match args.command.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
+        "roofline" => cmd_roofline(&args),
+        "gantt" => cmd_gantt(&args),
+        "flow" => cmd_flow(&args),
+        "sweep" => cmd_sweep(&args),
+        "topdown" => cmd_topdown(&args),
+        "analytical" => cmd_analytical(&args),
+        "infer" => cmd_infer(&args),
+        "config" => cmd_config(&args),
+        "graph" => cmd_graph(&args),
+        "" | "help" | "-h" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let compiled = compile(&net, &sys, CompileOptions::default())?;
+    let mut trace = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, &sys, &mut trace);
+    println!(
+        "{} on {} — {} tasks, {} events",
+        net.name, sys.name, compiled.graph.len(), sim.events
+    );
+    println!(
+        "{:<12} {:>14} {:>8} {:>8}  {:>12} {:>10}  bound",
+        "layer", "time", "NCE", "bus", "MACs", "DMA"
+    );
+    for l in &sim.layers {
+        println!(
+            "{:<12} {:>14} {:>7.1}% {:>7.1}%  {:>12} {:>10}  {}",
+            l.name,
+            fmt_ps(l.duration_ps()),
+            100.0 * l.nce_utilization(),
+            100.0 * l.bus_utilization(),
+            l.macs,
+            fmt_bytes(l.dma_bytes),
+            l.bound_class()
+        );
+    }
+    println!(
+        "TOTAL        {:>14}   ({:.2} inferences/s, {:.1} GMAC/s)",
+        fmt_ps(sim.total_ps),
+        1e12 / sim.total_ps as f64,
+        sim.macs_per_sec() / 1e9
+    );
+    let energy = avsm::energy::energy_of(&sim, &sys, &avsm::energy::EnergyConfig::default());
+    print!("{}", energy.render_text());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let compiled = compile(&net, &sys, CompileOptions::default())?;
+    let report = Fig5Report::compute(&compiled, &sys);
+    print!("{}", report.render_text());
+    if let Some(dir) = args.get("outdir") {
+        std::fs::create_dir_all(dir)?;
+        let dir = PathBuf::from(dir);
+        std::fs::write(dir.join("fig5.json"), report.to_json().to_string_pretty())?;
+        std::fs::write(dir.join("fig5.svg"), report.render_svg())?;
+        println!("wrote {}/fig5.{{json,svg}}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_roofline(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let compiled = compile(&net, &sys, CompileOptions::default())?;
+    let mut trace = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, &sys, &mut trace);
+    let ops: Vec<u64> = net.layer_costs().iter().map(|c| c.arith_ops).collect();
+    let model = RooflineModel::from_sim(&sys, &sim, &ops);
+    let zoom = if args.has("zoom") { Some(model.ridge * 0.8) } else { None };
+    print!("{}", model.render_text(zoom));
+    if let Some(dir) = args.get("outdir") {
+        std::fs::create_dir_all(dir)?;
+        let dir = PathBuf::from(dir);
+        let tag = if zoom.is_some() { "fig7" } else { "fig6" };
+        std::fs::write(dir.join(format!("{tag}.json")), model.to_json().to_string_pretty())?;
+        std::fs::write(dir.join(format!("{tag}.svg")), model.render_svg(zoom))?;
+        println!("wrote {}/{tag}.{{json,svg}}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_gantt(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let compiled = compile(&net, &sys, CompileOptions::default())?;
+    let mut trace = TraceRecorder::new();
+    let sim = simulate_avsm(&compiled, &sys, &mut trace);
+    // Optional layer window: --layer NAME zooms Fig 4 onto one layer.
+    let window = match args.get("layer") {
+        Some(name) => {
+            let l = sim
+                .layer(name)
+                .with_context(|| format!("no layer named {name:?}"))?;
+            Some((l.start_ps, l.end_ps))
+        }
+        None => None,
+    };
+    let g = Gantt::new(
+        &trace,
+        GanttOptions { window, width: args.get_u64("width", 100)? as usize },
+    );
+    match args.get_or("format", "ascii") {
+        "ascii" => print!("{}", g.render_ascii()),
+        "csv" => print!("{}", g.render_csv()),
+        "svg" => println!("{}", g.render_svg()),
+        // chrome://tracing / ui.perfetto.dev interactive view.
+        "chrome" => println!("{}", avsm::trace::to_chrome_trace(&trace)),
+        other => bail!("unknown gantt format {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_flow(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let outdir = args.get("outdir").map(PathBuf::from);
+    let out = run_flow(&net, &sys, &FlowOptions::default(), outdir.as_deref())?;
+    println!(
+        "flow complete: {} tasks simulated, inference latency {}",
+        out.sim.tasks,
+        fmt_ps(out.sim.total_ps)
+    );
+    println!("\nFig 3 — distribution of flow run-time:");
+    print!("{}", out.breakdown.render_text());
+    if let Some(dir) = &outdir {
+        std::fs::write(dir.join("fig3.json"), out.breakdown.to_json().to_string_pretty())?;
+        println!("wrote {}/fig3.json (+ task_graph.json, layers.csv, gantt.*)", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let axes = dse::SweepAxes {
+        array_geometries: vec![(16, 32), (32, 32), (32, 64), (64, 64), (128, 128)],
+        nce_freqs_mhz: vec![125, 250, 500],
+        ..Default::default()
+    };
+    let points = dse::sweep(&net, &sys, &axes);
+    println!("{:<28} {:>14} {:>12} {:>10}", "design point", "latency", "infer/s", "cost");
+    for p in &points {
+        println!(
+            "{:<28} {:>14} {:>12.2} {:>10.0}",
+            p.name,
+            fmt_ps(p.latency_ps),
+            p.throughput,
+            p.cost
+        );
+    }
+    let front = dse::pareto(&points);
+    println!("\npareto frontier ({} of {} points):", front.len(), points.len());
+    for p in front {
+        println!("  {:<28} {:>14} cost {:>8.0}", p.name, fmt_ps(p.latency_ps), p.cost);
+    }
+    if let Some(dir) = args.get("outdir") {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            PathBuf::from(dir).join("sweep.json"),
+            dse::sweep_to_json(&points).to_string_pretty(),
+        )?;
+    }
+    Ok(())
+}
+
+fn cmd_topdown(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let target_ms: f64 = args
+        .get("target-ms")
+        .context("topdown requires --target-ms")?
+        .parse()
+        .context("--target-ms expects a number")?;
+    let target_ps = (target_ms * 1e9) as u64;
+    match dse::topdown_min_nce_freq(&net, &sys, target_ps, (25, 2000))? {
+        Some(mhz) => println!(
+            "target {target_ms} ms/inference on {}: minimum NCE frequency {} MHz",
+            net.name, mhz
+        ),
+        None => println!(
+            "target {target_ms} ms/inference is not reachable by scaling the NCE clock alone \
+             (communication-bound); widen the bus or buffers instead"
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_analytical(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    let net = load_net(args)?;
+    let est = analytical_estimate(&net, &sys);
+    let compiled = compile(&net, &sys, CompileOptions::default())?;
+    let mut trace = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, &sys, &mut trace);
+    println!(
+        "{:<12} {:>14} {:>14} {:>10}",
+        "layer", "analytical", "simulated", "underest."
+    );
+    for (i, l) in sim.layers.iter().enumerate() {
+        let a = est.layer_ps[i];
+        println!(
+            "{:<12} {:>14} {:>14} {:>+9.1}%",
+            l.name,
+            fmt_ps(a),
+            fmt_ps(l.duration_ps()),
+            100.0 * (a as f64 - l.duration_ps() as f64) / l.duration_ps() as f64
+        );
+    }
+    println!(
+        "TOTAL        {:>14} {:>14}   (analytical misses blocking/arbitration: paper §1)",
+        fmt_ps(est.total_ps()),
+        fmt_ps(sim.total_ps)
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let name = args.get_or("model", "dilated_vgg_tiny");
+    let sig = manifest
+        .artifact(name)
+        .with_context(|| format!("artifact {name:?} not in manifest"))?;
+    let model = rt.load(sig)?;
+    println!("loaded {} ({:?} -> {:?})", name, sig.input_shapes, sig.output_shapes);
+
+    if name == "dilated_vgg_tiny" {
+        let golden = manifest.golden.as_ref().context("manifest has no golden vectors")?;
+        let input = runtime::read_f32_bin(&golden.input)?;
+        let expected = runtime::read_f32_bin(&golden.expected)?;
+        let t0 = std::time::Instant::now();
+        let out = model.run_f32(&[&input])?;
+        let dt = t0.elapsed();
+        let diff = runtime::max_abs_diff(&out[0], &expected);
+        println!(
+            "inference: {:.1} ms wall, max |Δ| vs JAX reference = {diff:.2e} (tol {:.0e})",
+            dt.as_secs_f64() * 1e3,
+            golden.tolerance
+        );
+        if diff as f64 > golden.tolerance {
+            bail!("functional mismatch vs golden output");
+        }
+        println!("functional inference OK — rust/PJRT matches the JAX model");
+    } else {
+        // Zero input smoke run.
+        let inputs: Vec<Vec<f32>> = sig
+            .input_shapes
+            .iter()
+            .map(|s| vec![0.1f32; s.iter().product()])
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = model.run_f32(&refs)?;
+        println!("ran {name}: {} output tensor(s), first has {} elems", out.len(), out[0].len());
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let sys = load_sys(args)?;
+    println!("{}", sys.to_json());
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> Result<()> {
+    let net = load_net(args)?;
+    println!("{}", avsm::graph::graph_to_json(&net));
+    Ok(())
+}

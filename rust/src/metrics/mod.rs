@@ -1,0 +1,117 @@
+//! Small statistics helpers shared by reports and the bench harness.
+
+/// Relative deviation of `estimate` vs `reference`, signed, in percent.
+pub fn deviation_pct(estimate: f64, reference: f64) -> f64 {
+    if reference == 0.0 {
+        return 0.0;
+    }
+    100.0 * (estimate - reference) / reference
+}
+
+/// Prediction accuracy in percent (the paper's "up to 92 % accuracy"):
+/// 100 - |deviation|.
+pub fn accuracy_pct(estimate: f64, reference: f64) -> f64 {
+    100.0 - deviation_pct(estimate, reference).abs()
+}
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+    pub median: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize of empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    Summary {
+        n,
+        mean,
+        min: sorted[0],
+        max: sorted[n - 1],
+        std: var.sqrt(),
+        median,
+    }
+}
+
+/// Human formatting of a picosecond duration.
+pub fn fmt_ps(ps: u64) -> String {
+    let f = ps as f64;
+    if f >= 1e12 {
+        format!("{:.3} s", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.3} ms", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.3} us", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.3} ns", f / 1e3)
+    } else {
+        format!("{ps} ps")
+    }
+}
+
+/// Human formatting of a byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    let f = b as f64;
+    if f >= 1e9 {
+        format!("{:.2} GB", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2} MB", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.2} KB", f / 1e3)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deviation_and_accuracy() {
+        assert!((deviation_pct(108.3, 100.0) - 8.3).abs() < 1e-9);
+        assert!((accuracy_pct(108.3, 100.0) - 91.7).abs() < 1e-9);
+        assert!((deviation_pct(95.0, 100.0) + 5.0).abs() < 1e-9);
+        assert_eq!(deviation_pct(5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        let odd = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(odd.median, 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_rejects_empty() {
+        summarize(&[]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ps(1_500_000_000), "1.500 ms");
+        assert_eq!(fmt_ps(2_000), "2.000 ns");
+        assert_eq!(fmt_bytes(2_500_000), "2.50 MB");
+        assert_eq!(fmt_bytes(12), "12 B");
+    }
+}

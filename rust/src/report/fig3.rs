@@ -1,0 +1,122 @@
+//! Fig 3: distribution of flow run-time for generation and simulation of
+//! the AVSM. The paper reports (on a Xeon E5620): ML compiler & graph
+//! generation 16.6 s, simulation 105.8 s, tool import/export + model build
+//! 1231 s (~91 % of the total, "not optimized for performance yet").
+//! We reproduce the same three-phase breakdown for our flow.
+
+use crate::json::{obj, Value};
+use std::time::Duration;
+
+/// One phase of the end-to-end flow (paper Fig 3 rows).
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: String,
+    pub wall: Duration,
+}
+
+/// The flow-runtime breakdown table.
+#[derive(Debug, Clone, Default)]
+pub struct FlowBreakdown {
+    pub phases: Vec<Phase>,
+}
+
+impl FlowBreakdown {
+    /// Add wall time to a phase; repeated names accumulate (the paper's
+    /// "Tool import/export and Model build" row covers both the pre-sim
+    /// import/build and the post-sim result export).
+    pub fn add(&mut self, name: impl Into<String>, wall: Duration) {
+        let name = name.into();
+        if let Some(p) = self.phases.iter_mut().find(|p| p.name == name) {
+            p.wall += wall;
+        } else {
+            self.phases.push(Phase { name, wall });
+        }
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|p| p.wall).sum()
+    }
+
+    pub fn share_pct(&self, name: &str) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.phases
+            .iter()
+            .filter(|p| p.name == name)
+            .map(|p| p.wall.as_secs_f64())
+            .sum::<f64>()
+            / total
+            * 100.0
+    }
+
+    /// The paper's Fig 3 table layout.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:<42} {:>12} {:>8}\n", "Task", "Time [s]", "Share"));
+        for p in &self.phases {
+            out.push_str(&format!(
+                "{:<42} {:>12.6} {:>7.1}%\n",
+                p.name,
+                p.wall.as_secs_f64(),
+                self.share_pct(&p.name)
+            ));
+        }
+        out.push_str(&format!("{:<42} {:>12.6}\n", "Σ", self.total().as_secs_f64()));
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            (
+                "phases",
+                Value::Array(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("name", p.name.as_str().into()),
+                                ("seconds", p.wall.as_secs_f64().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_seconds", self.total().as_secs_f64().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_and_total() {
+        let mut b = FlowBreakdown::default();
+        b.add("ML Compiler & Graph Generation", Duration::from_millis(166));
+        b.add("Simulation", Duration::from_millis(1058));
+        b.add("Tool import/export and Model build", Duration::from_millis(12310));
+        assert!((b.total().as_secs_f64() - 13.534).abs() < 1e-9);
+        // The paper's shape: import/export+build dominates.
+        assert!(b.share_pct("Tool import/export and Model build") > 85.0);
+    }
+
+    #[test]
+    fn renders_table() {
+        let mut b = FlowBreakdown::default();
+        b.add("Simulation", Duration::from_secs(1));
+        let txt = b.render_text();
+        assert!(txt.contains("Task") && txt.contains("Σ"));
+        let j = b.to_json();
+        assert_eq!(j.get("phases").as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_breakdown_is_safe() {
+        let b = FlowBreakdown::default();
+        assert_eq!(b.total(), Duration::ZERO);
+        assert_eq!(b.share_pct("x"), 0.0);
+    }
+}

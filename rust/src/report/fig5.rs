@@ -1,0 +1,239 @@
+//! Fig 5: per-layer processing time of the "hardware implementation"
+//! (detailed prototype model) vs the AVSM, with per-layer and total
+//! deviations — the paper's headline accuracy experiment.
+
+use crate::compiler::CompiledNet;
+use crate::config::SystemConfig;
+use crate::detailed::simulate_prototype;
+use crate::hw::simulate_avsm;
+use crate::json::{obj, Value};
+use crate::metrics::{deviation_pct, fmt_ps};
+use crate::sim::TraceRecorder;
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub layer: String,
+    pub avsm_ps: u64,
+    pub hw_ps: u64,
+    /// Signed deviation of the AVSM prediction vs the prototype, percent.
+    pub deviation_pct: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig5Report {
+    pub rows: Vec<Fig5Row>,
+    pub total_avsm_ps: u64,
+    pub total_hw_ps: u64,
+    pub total_deviation_pct: f64,
+}
+
+impl Fig5Report {
+    /// Run both fidelity levels on the same compiled net and tabulate.
+    pub fn compute(compiled: &CompiledNet, sys: &SystemConfig) -> Self {
+        let mut tr = TraceRecorder::disabled();
+        let avsm = simulate_avsm(compiled, sys, &mut tr);
+        let mut tr = TraceRecorder::disabled();
+        let hw = simulate_prototype(compiled, sys, &mut tr);
+        let rows = avsm
+            .layers
+            .iter()
+            .zip(&hw.layers)
+            .map(|(a, h)| Fig5Row {
+                layer: a.name.clone(),
+                avsm_ps: a.duration_ps(),
+                hw_ps: h.duration_ps(),
+                deviation_pct: deviation_pct(a.duration_ps() as f64, h.duration_ps() as f64),
+            })
+            .collect();
+        Self {
+            rows,
+            total_avsm_ps: avsm.total_ps,
+            total_hw_ps: hw.total_ps,
+            total_deviation_pct: deviation_pct(avsm.total_ps as f64, hw.total_ps as f64),
+        }
+    }
+
+    /// Prediction accuracy, the paper's headline metric ("up to 92 %").
+    pub fn accuracy_pct(&self) -> f64 {
+        100.0 - self.total_deviation_pct.abs()
+    }
+
+    pub fn max_abs_layer_deviation(&self) -> f64 {
+        self.rows.iter().map(|r| r.deviation_pct.abs()).fold(0.0, f64::max)
+    }
+
+    pub fn min_abs_layer_deviation(&self) -> f64 {
+        self.rows
+            .iter()
+            .map(|r| r.deviation_pct.abs())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<12} {:>14} {:>14} {:>10}\n",
+            "layer", "HW impl", "AVSM", "deviation"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<12} {:>14} {:>14} {:>+9.2}%\n",
+                r.layer,
+                fmt_ps(r.hw_ps),
+                fmt_ps(r.avsm_ps),
+                r.deviation_pct
+            ));
+        }
+        out.push_str(&format!(
+            "{:<12} {:>14} {:>14} {:>+9.2}%   (accuracy {:.1} %)\n",
+            "TOTAL",
+            fmt_ps(self.total_hw_ps),
+            fmt_ps(self.total_avsm_ps),
+            self.total_deviation_pct,
+            self.accuracy_pct()
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            (
+                "rows",
+                Value::Array(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("layer", r.layer.as_str().into()),
+                                ("avsm_ps", r.avsm_ps.into()),
+                                ("hw_ps", r.hw_ps.into()),
+                                ("deviation_pct", r.deviation_pct.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_avsm_ps", self.total_avsm_ps.into()),
+            ("total_hw_ps", self.total_hw_ps.into()),
+            ("total_deviation_pct", self.total_deviation_pct.into()),
+            ("accuracy_pct", self.accuracy_pct().into()),
+        ])
+    }
+
+    /// Paired-bar SVG in the shape of the paper's Fig 5.
+    pub fn render_svg(&self) -> String {
+        let w = 900.0;
+        let h = 420.0;
+        let ml = 60.0;
+        let mb = 90.0;
+        let maxv = self
+            .rows
+            .iter()
+            .map(|r| r.avsm_ps.max(r.hw_ps))
+            .max()
+            .unwrap_or(1) as f64;
+        let n = self.rows.len().max(1) as f64;
+        let band = (w - ml - 10.0) / n;
+        let y = |v: f64| (h - mb) - v / maxv * (h - mb - 20.0);
+        let mut s = format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="monospace" font-size="10">"#
+        );
+        s.push_str(&format!(r#"<rect width="{w}" height="{h}" fill="white"/>"#));
+        for (i, r) in self.rows.iter().enumerate() {
+            let x0 = ml + band * i as f64;
+            let bw = band * 0.35;
+            s.push_str(&format!(
+                r##"<rect x="{:.1}" y="{:.1}" width="{:.1}" height="{:.1}" fill="#34495e"/>"##,
+                x0,
+                y(r.hw_ps as f64),
+                bw,
+                (h - mb) - y(r.hw_ps as f64)
+            ));
+            s.push_str(&format!(
+                r##"<rect x="{:.1}" y="{:.1}" width="{:.1}" height="{:.1}" fill="#e67e22"/>"##,
+                x0 + bw + 1.0,
+                y(r.avsm_ps as f64),
+                bw,
+                (h - mb) - y(r.avsm_ps as f64)
+            ));
+            s.push_str(&format!(
+                r#"<text x="{:.1}" y="{:.1}" transform="rotate(60 {:.1} {:.1})">{}</text>"#,
+                x0,
+                h - mb + 12.0,
+                x0,
+                h - mb + 12.0,
+                r.layer
+            ));
+        }
+        s.push_str(&format!(
+            r#"<text x="{ml}" y="14">HW impl (dark) vs AVSM (orange); total deviation {:+.2}%</text>"#,
+            self.total_deviation_pct
+        ));
+        s.push_str("</svg>");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::models;
+
+    fn report() -> Fig5Report {
+        let sys = SystemConfig::base_paper();
+        let c = compile(&models::dilated_vgg_paper(), &sys, CompileOptions::default())
+            .unwrap();
+        Fig5Report::compute(&c, &sys)
+    }
+
+    #[test]
+    fn reproduces_paper_accuracy_band() {
+        // Paper: total deviation 8.3 % (>= 91.7 % accuracy); ours must be
+        // at least that accurate, with per-layer deviations within the
+        // paper's observed spread (0.6..11.2 ⇒ we allow up to 12 %).
+        let r = report();
+        assert!(
+            r.accuracy_pct() >= 91.7,
+            "total accuracy {:.2} below paper band", r.accuracy_pct()
+        );
+        assert!(
+            r.max_abs_layer_deviation() <= 12.0,
+            "worst layer deviation {:.2}% above paper band",
+            r.max_abs_layer_deviation()
+        );
+    }
+
+    #[test]
+    fn deviation_structure_matches_paper_attribution() {
+        // The paper attributes deviations to the high-level *memory* model:
+        // memory-bound layers must deviate more than compute-bound ones.
+        let r = report();
+        let dev = |name: &str| {
+            r.rows.iter().find(|x| x.layer == name).unwrap().deviation_pct.abs()
+        };
+        assert!(dev("pool1") > dev("dense1"));
+        assert!(dev("pool2") > dev("conv4_1"));
+    }
+
+    #[test]
+    fn rows_cover_all_layers_and_totals_add_up() {
+        let r = report();
+        assert_eq!(r.rows.len(), models::dilated_vgg_paper().layers.len());
+        let sum_avsm: u64 = r.rows.iter().map(|x| x.avsm_ps).sum();
+        let sum_hw: u64 = r.rows.iter().map(|x| x.hw_ps).sum();
+        assert_eq!(sum_avsm, r.total_avsm_ps);
+        assert_eq!(sum_hw, r.total_hw_ps);
+    }
+
+    #[test]
+    fn renders() {
+        let r = report();
+        let txt = r.render_text();
+        assert!(txt.contains("TOTAL") && txt.contains("accuracy"));
+        let svg = r.render_svg();
+        assert!(svg.starts_with("<svg") && svg.contains("rect"));
+        let j = r.to_json();
+        assert!(j.get("accuracy_pct").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Figure/table regeneration (DESIGN.md §5 experiment index).
+//!
+//! * [`fig5`] — per-layer AVSM vs "hardware" (detailed prototype) timing
+//!   comparison with deviations (paper Fig 5 + the 8.3 % headline).
+//! * [`fig3`] — flow runtime breakdown table (paper Fig 3), fed by the
+//!   coordinator's phase timers.
+//! * Fig 4 lives in [`crate::trace`], Fig 6/7 in [`crate::roofline`].
+
+pub mod fig3;
+pub mod fig5;
+
+pub use fig3::FlowBreakdown;
+pub use fig5::Fig5Report;

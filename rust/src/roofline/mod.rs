@@ -1,0 +1,350 @@
+//! Roofline analysis (paper Fig 6/7, after Williams et al.).
+//!
+//! Per layer: operational intensity (ops moved per byte of external
+//! traffic) on the x-axis, achieved performance (ops/s over the simulated
+//! layer window) on the y-axis, bounded by the bandwidth slope and the NCE
+//! peak. Dot "size" is the layer's share of total inference time, as in the
+//! paper's figures. Layers close to the vertical compute roof are
+//! compute-bound (Conv4_0–Conv4_5 in Fig 7); layers on the bandwidth slope
+//! are communication-bound; layers well below both roofs are "neither" —
+//! limited by array under-utilization or dependency stalls, the cases the
+//! paper calls out as needing compiler/architecture changes rather than
+//! more peak compute or bandwidth.
+
+use crate::config::SystemConfig;
+use crate::hw::SimResult;
+use crate::json::{obj, Value};
+
+/// One dot of the roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub layer: String,
+    /// Operational intensity, ops/byte (compiled traffic, not ideal).
+    pub intensity: f64,
+    /// Achieved performance over the layer window, ops/s.
+    pub achieved_ops: f64,
+    /// Attainable at this intensity: min(peak, intensity * bandwidth).
+    pub attainable_ops: f64,
+    /// Share of total inference time (the dot size in Fig 6).
+    pub time_share: f64,
+    pub bound: RoofBound,
+}
+
+/// Which roof limits the layer (the paper's taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoofBound {
+    /// At ≥ `NEAR` of the compute roof.
+    Compute,
+    /// At ≥ `NEAR` of the bandwidth slope (and below the ridge).
+    Bandwidth,
+    /// Below both — array under-utilization / latency / dependencies.
+    Neither,
+}
+
+impl std::fmt::Display for RoofBound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RoofBound::Compute => "compute-bound",
+            RoofBound::Bandwidth => "bandwidth-bound",
+            RoofBound::Neither => "neither",
+        })
+    }
+}
+
+/// Fraction of the limiting roof a layer must reach to be "bound" by it.
+pub const NEAR: f64 = 0.75;
+
+/// The whole model: roofs plus one point per layer.
+#[derive(Debug, Clone)]
+pub struct RooflineModel {
+    pub peak_ops: f64,
+    pub bandwidth_bytes: f64,
+    pub ridge: f64,
+    pub points: Vec<RooflinePoint>,
+}
+
+impl RooflineModel {
+    /// Build from a simulation result. Uses arithmetic ops (2/MAC for conv,
+    /// vector-op counts otherwise) so non-conv layers land at honest spots.
+    pub fn from_sim(sys: &SystemConfig, sim: &SimResult, arith_ops: &[u64]) -> Self {
+        let peak = sys.nce.peak_ops_per_sec();
+        // The attainable slope is the *system* streaming bandwidth: the
+        // slower of bus and memory interface.
+        let mem_bw = sys.memory.data_bytes_per_cycle as f64 * sys.memory.freq_mhz as f64 * 1e6;
+        let bw = sys.bus.peak_bytes_per_sec().min(mem_bw);
+        let ridge = peak / bw;
+        let total: u64 = sim.total_ps.max(1);
+        let points = sim
+            .layers
+            .iter()
+            .zip(arith_ops)
+            .map(|(l, &ops)| {
+                let secs = l.duration_ps() as f64 / 1e12;
+                let achieved = ops as f64 / secs.max(1e-15);
+                let intensity = ops as f64 / l.dma_bytes.max(1) as f64;
+                let attainable = peak.min(intensity * bw);
+                let bound = if achieved >= NEAR * peak {
+                    RoofBound::Compute
+                } else if intensity < ridge && achieved >= NEAR * intensity * bw {
+                    RoofBound::Bandwidth
+                } else {
+                    RoofBound::Neither
+                };
+                RooflinePoint {
+                    layer: l.name.clone(),
+                    intensity,
+                    achieved_ops: achieved,
+                    attainable_ops: attainable,
+                    time_share: l.duration_ps() as f64 / total as f64,
+                    bound,
+                }
+            })
+            .collect();
+        Self { peak_ops: peak, bandwidth_bytes: bw, ridge, points }
+    }
+
+    pub fn point(&self, layer: &str) -> Option<&RooflinePoint> {
+        self.points.iter().find(|p| p.layer == layer)
+    }
+
+    /// Points with intensity ≥ `min_intensity` — the Fig 7 zoom onto the
+    /// compute-bound cluster.
+    pub fn zoom(&self, min_intensity: f64) -> Vec<&RooflinePoint> {
+        self.points.iter().filter(|p| p.intensity >= min_intensity).collect()
+    }
+
+    /// Text rendering (log-x) for terminals; also the Fig 6 artifact.
+    pub fn render_text(&self, zoom: Option<f64>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "roofline: peak {:.3} Tops/s, bw {:.2} GB/s, ridge {:.1} ops/B\n",
+            self.peak_ops / 1e12,
+            self.bandwidth_bytes / 1e9,
+            self.ridge
+        ));
+        out.push_str(&format!(
+            "{:<12} {:>12} {:>14} {:>14} {:>7} {:>6}  bound\n",
+            "layer", "ops/B", "achieved", "attainable", "%roof", "share"
+        ));
+        let pts: Vec<&RooflinePoint> = match zoom {
+            Some(z) => self.zoom(z),
+            None => self.points.iter().collect(),
+        };
+        for p in pts {
+            out.push_str(&format!(
+                "{:<12} {:>12.2} {:>11.1} Gops {:>11.1} Gops {:>6.1}% {:>5.1}%  {}\n",
+                p.layer,
+                p.intensity,
+                p.achieved_ops / 1e9,
+                p.attainable_ops / 1e9,
+                100.0 * p.achieved_ops / p.attainable_ops.max(1.0),
+                100.0 * p.time_share,
+                p.bound
+            ));
+        }
+        out
+    }
+
+    /// JSON export (plot data for Fig 6/7).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("peak_ops_per_sec", self.peak_ops.into()),
+            ("bandwidth_bytes_per_sec", self.bandwidth_bytes.into()),
+            ("ridge_ops_per_byte", self.ridge.into()),
+            (
+                "points",
+                Value::Array(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("layer", p.layer.as_str().into()),
+                                ("intensity", p.intensity.into()),
+                                ("achieved_ops", p.achieved_ops.into()),
+                                ("attainable_ops", p.attainable_ops.into()),
+                                ("time_share", p.time_share.into()),
+                                ("bound", p.bound.to_string().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// SVG rendering of the roofline plot (log-log), dots sized by time
+    /// share — the shape of the paper's Fig 6/7.
+    pub fn render_svg(&self, zoom: Option<f64>) -> String {
+        let w = 720.0;
+        let h = 480.0;
+        let ml = 70.0;
+        let mb = 50.0;
+        let pts: Vec<&RooflinePoint> = match zoom {
+            Some(z) => self.zoom(z),
+            None => self.points.iter().collect(),
+        };
+        let xmin: f64 = zoom.unwrap_or(
+            pts.iter().map(|p| p.intensity).fold(f64::MAX, f64::min).max(0.1) * 0.5,
+        );
+        let xmax = pts
+            .iter()
+            .map(|p| p.intensity)
+            .fold(self.ridge, f64::max)
+            * 4.0;
+        let ymax = self.peak_ops * 2.0;
+        let ymin = pts
+            .iter()
+            .map(|p| p.achieved_ops)
+            .fold(self.peak_ops, f64::min)
+            * 0.3;
+        let x = |v: f64| ml + (v.ln() - xmin.ln()) / (xmax.ln() - xmin.ln()) * (w - ml - 20.0);
+        let y = |v: f64| {
+            h - mb - (v.ln() - ymin.ln()) / (ymax.ln() - ymin.ln()) * (h - mb - 20.0)
+        };
+        let mut s = format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="monospace" font-size="11">"#
+        );
+        s.push_str(&format!(
+            r#"<rect width="{w}" height="{h}" fill="white"/>"#
+        ));
+        // Bandwidth slope from xmin to ridge, then flat peak roof.
+        let ridge_x = x(self.ridge);
+        s.push_str(&format!(
+            r#"<polyline fill="none" stroke="black" stroke-width="1.5" points="{:.1},{:.1} {:.1},{:.1} {:.1},{:.1}"/>"#,
+            x(xmin),
+            y(xmin * self.bandwidth_bytes),
+            ridge_x,
+            y(self.peak_ops),
+            x(xmax),
+            y(self.peak_ops),
+        ));
+        s.push_str(&format!(
+            r#"<line x1="{rx:.1}" y1="{:.1}" x2="{rx:.1}" y2="{:.1}" stroke="gray" stroke-dasharray="4"/>"#,
+            y(ymin),
+            y(self.peak_ops),
+            rx = ridge_x,
+        ));
+        for p in &pts {
+            let r = 3.0 + 22.0 * p.time_share.sqrt();
+            let color = match p.bound {
+                RoofBound::Compute => "#c0392b",
+                RoofBound::Bandwidth => "#2980b9",
+                RoofBound::Neither => "#7f8c8d",
+            };
+            s.push_str(&format!(
+                r#"<circle cx="{:.1}" cy="{:.1}" r="{:.1}" fill="{color}" fill-opacity="0.55"/>"#,
+                x(p.intensity.max(xmin)),
+                y(p.achieved_ops.max(ymin)),
+                r
+            ));
+            s.push_str(&format!(
+                r#"<text x="{:.1}" y="{:.1}">{}</text>"#,
+                x(p.intensity.max(xmin)) + r + 2.0,
+                y(p.achieved_ops.max(ymin)) + 4.0,
+                p.layer
+            ));
+        }
+        s.push_str(&format!(
+            r#"<text x="{}" y="{}">operational intensity [ops/B] (log)</text>"#,
+            w / 2.0 - 100.0,
+            h - 12.0
+        ));
+        s.push_str(&format!(
+            r#"<text x="14" y="{}" transform="rotate(-90 14 {})">performance [ops/s] (log)</text>"#,
+            h / 2.0 + 60.0,
+            h / 2.0 + 60.0
+        ));
+        s.push_str("</svg>");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::models;
+    use crate::hw::simulate_avsm;
+    use crate::sim::TraceRecorder;
+
+    fn model_for(net: &crate::graph::DnnGraph) -> RooflineModel {
+        let sys = SystemConfig::base_paper();
+        let c = compile(net, &sys, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&c, &sys, &mut tr);
+        let ops: Vec<u64> = net.layer_costs().iter().map(|c| c.arith_ops).collect();
+        RooflineModel::from_sim(&sys, &sim, &ops)
+    }
+
+    #[test]
+    fn conv4_cluster_is_compute_bound_near_roof() {
+        // Fig 7: Conv4_0–Conv4_5 sit close to the vertical threshold.
+        let m = model_for(&models::dilated_vgg_paper());
+        for i in 0..6 {
+            let p = m.point(&format!("conv4_{i}")).unwrap();
+            assert_eq!(p.bound, RoofBound::Compute, "conv4_{i}: {p:?}");
+            assert!(p.intensity > m.ridge * 0.8, "conv4_{i} intensity {}", p.intensity);
+        }
+    }
+
+    #[test]
+    fn pools_sit_on_bandwidth_slope() {
+        let m = model_for(&models::dilated_vgg_paper());
+        for name in ["pool1", "pool2", "pool3"] {
+            let p = m.point(name).unwrap();
+            assert_eq!(p.bound, RoofBound::Bandwidth, "{name}: {p:?}");
+        }
+    }
+
+    #[test]
+    fn some_layers_are_neither_bound() {
+        // Fig 6's point: some layers would not speed up from more peak
+        // compute or more bandwidth.
+        let m = model_for(&models::dilated_vgg_paper());
+        let neither: Vec<&str> = m
+            .points
+            .iter()
+            .filter(|p| p.bound == RoofBound::Neither)
+            .map(|p| p.layer.as_str())
+            .collect();
+        assert!(!neither.is_empty(), "expected at least one neither-bound layer");
+    }
+
+    #[test]
+    fn time_shares_sum_to_one() {
+        let m = model_for(&models::dilated_vgg_paper());
+        let sum: f64 = m.points.iter().map(|p| p.time_share).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "shares sum {sum}");
+    }
+
+    #[test]
+    fn achieved_never_exceeds_peak() {
+        let m = model_for(&models::dilated_vgg_paper());
+        for p in &m.points {
+            assert!(
+                p.achieved_ops <= m.peak_ops * 1.001,
+                "{} exceeds peak: {:.2e}", p.layer, p.achieved_ops
+            );
+        }
+    }
+
+    #[test]
+    fn zoom_filters_low_intensity() {
+        let m = model_for(&models::dilated_vgg_paper());
+        let zoomed = m.zoom(m.ridge * 0.8);
+        assert!(zoomed.len() < m.points.len());
+        assert!(zoomed.iter().all(|p| p.intensity >= m.ridge * 0.8));
+    }
+
+    #[test]
+    fn renders_text_svg_json() {
+        let m = model_for(&models::dilated_vgg_tiny());
+        let txt = m.render_text(None);
+        assert!(txt.contains("roofline") && txt.contains("conv4_0"));
+        let svg = m.render_svg(None);
+        assert!(svg.starts_with("<svg") && svg.ends_with("</svg>"));
+        assert!(svg.contains("circle"));
+        let json = m.to_json();
+        assert!(json.get("points").as_array().unwrap().len() == m.points.len());
+    }
+}

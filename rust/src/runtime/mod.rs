@@ -1,0 +1,270 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the *functional* half of the stack: the timing simulators in
+//! `hw`/`detailed` are non-functional (paper §1), so the actual DNN
+//! numerics run here — HLO text produced once by `python/compile/aot.py`
+//! (`make artifacts`), compiled on the PJRT CPU client and executed from
+//! rust. Python never runs at this point.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Signature of one artifact entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Golden test vector recorded by the AOT step.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub input: PathBuf,
+    pub expected: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub tolerance: f64,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSig>,
+    pub golden: Option<Golden>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text)?;
+        let obj = v.as_object().context("manifest is not an object")?;
+        let mut artifacts = Vec::new();
+        let mut golden = None;
+        let shapes = |field: &json::Value| -> Result<Vec<Vec<usize>>> {
+            field
+                .as_array()
+                .context("bad shape list")?
+                .iter()
+                .map(|io| {
+                    io.req_array("shape").map(|s| {
+                        s.iter().filter_map(|d| d.as_u64()).map(|d| d as usize).collect()
+                    })
+                })
+                .collect()
+        };
+        for (name, entry) in obj {
+            if name == "golden" {
+                golden = Some(Golden {
+                    input: dir.join(entry.req_str("input")?),
+                    expected: dir.join(entry.req_str("expected")?),
+                    input_shape: entry
+                        .req_array("input_shape")?
+                        .iter()
+                        .filter_map(|d| d.as_u64())
+                        .map(|d| d as usize)
+                        .collect(),
+                    output_shape: entry
+                        .req_array("output_shape")?
+                        .iter()
+                        .filter_map(|d| d.as_u64())
+                        .map(|d| d as usize)
+                        .collect(),
+                    tolerance: entry.req_f64("tolerance")?,
+                });
+                continue;
+            }
+            artifacts.push(ArtifactSig {
+                name: name.clone(),
+                file: dir.join(entry.req_str("file")?),
+                input_shapes: shapes(entry.get("inputs"))?,
+                output_shapes: shapes(entry.get("outputs"))?,
+            });
+        }
+        Ok(Self { dir, artifacts, golden })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSig> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// A compiled, ready-to-run model on the PJRT CPU client.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub sig: ArtifactSig,
+}
+
+/// The PJRT runtime: one CPU client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, sig: &ArtifactSig) -> Result<LoadedModel> {
+        let path = sig
+            .file
+            .to_str()
+            .context("artifact path is not valid UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(to_anyhow)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        Ok(LoadedModel { exe, sig: sig.clone() })
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs (shape-checked against the signature).
+    /// Returns the flattened f32 outputs.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.sig.input_shapes.len() {
+            bail!(
+                "{} expects {} inputs, got {}",
+                self.sig.name,
+                self.sig.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.sig.input_shapes) {
+            let numel: usize = shape.iter().product();
+            if data.len() != numel {
+                bail!(
+                    "{}: input length {} != shape {:?} numel {}",
+                    self.sig.name, data.len(), shape, numel
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims).map_err(to_anyhow)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple elements.
+        let out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let tuple = out.to_tuple().map_err(to_anyhow)?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            vecs.push(lit.to_vec::<f32>().map_err(to_anyhow)?);
+        }
+        Ok(vecs)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+/// Read a little-endian f32 binary file (the golden vectors).
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path.as_ref()).with_context(|| format!("reading {:?}", path.as_ref()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("f32 bin file has odd length {}", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Max absolute elementwise difference.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.artifact("dilated_vgg_tiny").is_some());
+        assert!(m.artifact("gemm_tile").is_some());
+        assert!(m.golden.is_some());
+    }
+
+    #[test]
+    fn gemm_tile_runs_and_is_correct() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load(m.artifact("gemm_tile").unwrap()).unwrap();
+        // Identity x ones: output rows all equal to 1.
+        let n = 256;
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b = vec![1f32; n * n];
+        let out = model.run_f32(&[&a, &b]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n * n);
+        assert!(out[0].iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load(m.artifact("gemm_tile").unwrap()).unwrap();
+        let bad = vec![0f32; 7];
+        assert!(model.run_f32(&[&bad, &bad]).is_err());
+        let a = vec![0f32; 256 * 256];
+        assert!(model.run_f32(&[&a]).is_err());
+    }
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("avsm_bin_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_bin(&path).unwrap(), data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

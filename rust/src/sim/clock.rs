@@ -1,0 +1,96 @@
+//! Clock domains: translate between component cycles and picosecond
+//! simulation time. Physical annotations (the paper's "imported" clock
+//! frequencies, §2) enter the AVSM through these.
+
+use super::{SimTime, PS_PER_SEC};
+
+/// A frequency-annotated clock domain (e.g. the 250 MHz NCE clock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClockDomain {
+    freq_hz: u64,
+}
+
+impl ClockDomain {
+    pub fn from_hz(freq_hz: u64) -> Self {
+        assert!(freq_hz > 0, "clock frequency must be positive");
+        Self { freq_hz }
+    }
+
+    pub fn from_mhz(mhz: u64) -> Self {
+        Self::from_hz(mhz * 1_000_000)
+    }
+
+    pub fn freq_hz(&self) -> u64 {
+        self.freq_hz
+    }
+
+    /// Clock period in picoseconds, rounded to nearest.
+    pub fn period_ps(&self) -> SimTime {
+        (PS_PER_SEC + self.freq_hz / 2) / self.freq_hz
+    }
+
+    /// Duration of `cycles` cycles in ps (u128 intermediate, no overflow for
+    /// any realistic cycle count).
+    pub fn cycles_to_ps(&self, cycles: u64) -> SimTime {
+        ((cycles as u128 * PS_PER_SEC as u128 + self.freq_hz as u128 / 2)
+            / self.freq_hz as u128) as SimTime
+    }
+
+    /// Cycles elapsed in `ps` picoseconds (rounded up: a partial cycle
+    /// occupies the whole cycle, matching RTL behaviour).
+    pub fn ps_to_cycles(&self, ps: SimTime) -> u64 {
+        ((ps as u128 * self.freq_hz as u128 + PS_PER_SEC as u128 - 1)
+            / PS_PER_SEC as u128) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nce_250mhz_period() {
+        let clk = ClockDomain::from_mhz(250);
+        assert_eq!(clk.period_ps(), 4000);
+        assert_eq!(clk.cycles_to_ps(1), 4000);
+        assert_eq!(clk.cycles_to_ps(1000), 4_000_000);
+    }
+
+    #[test]
+    fn ddr_800mhz_period() {
+        let clk = ClockDomain::from_mhz(800);
+        assert_eq!(clk.period_ps(), 1250);
+    }
+
+    #[test]
+    fn cycle_roundtrip() {
+        let clk = ClockDomain::from_mhz(333);
+        for c in [1u64, 7, 1000, 123_456_789] {
+            let ps = clk.cycles_to_ps(c);
+            let back = clk.ps_to_cycles(ps);
+            assert!(back == c || back == c + 1, "{c} -> {ps} -> {back}");
+        }
+    }
+
+    #[test]
+    fn partial_cycle_rounds_up() {
+        let clk = ClockDomain::from_mhz(250); // 4000 ps period
+        assert_eq!(clk.ps_to_cycles(1), 1);
+        assert_eq!(clk.ps_to_cycles(4000), 1);
+        assert_eq!(clk.ps_to_cycles(4001), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_frequency_rejected() {
+        ClockDomain::from_hz(0);
+    }
+
+    #[test]
+    fn no_overflow_long_sim() {
+        // One year of 1 GHz cycles must not overflow the ps conversion.
+        let clk = ClockDomain::from_mhz(1000);
+        let cycles = 3_600 * 24 * 365 * 1_000_000_000u64 / 1000;
+        let _ = clk.cycles_to_ps(cycles);
+    }
+}

@@ -1,0 +1,28 @@
+//! Deterministic discrete-event simulation (DES) kernel.
+//!
+//! This is the substrate that replaces the paper's generated-SystemC +
+//! Synopsys Platform Architect simulation backend (DESIGN.md §2): an
+//! event-driven kernel with TLM-ish helper components (servers, arbitrated
+//! bandwidth channels), per-resource busy-interval tracing and utilization
+//! statistics. Both the abstract virtual system model (`crate::hw`) and the
+//! detailed "physical prototype" model (`crate::detailed`) are built on it.
+//!
+//! Determinism: events are ordered by `(time, priority, seq)` where `seq`
+//! is the insertion sequence number — simultaneous events fire in a fixed,
+//! reproducible order regardless of heap internals.
+
+pub mod clock;
+pub mod engine;
+pub mod resource;
+pub mod stats;
+pub mod trace;
+
+pub use clock::ClockDomain;
+pub use engine::{Engine, SimTime};
+pub use resource::{Arbiter, BandwidthChannel, Server};
+pub use stats::ResourceStats;
+pub use trace::{Interval, IntervalKind, TraceRecorder};
+
+/// One picosecond resolution; lets 250 MHz NCE, bus and DRAM clock domains
+/// coexist without rounding (4000 ps, 1250 ps, ... periods are exact).
+pub const PS_PER_SEC: u64 = 1_000_000_000_000;

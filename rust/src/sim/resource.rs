@@ -1,0 +1,276 @@
+//! Reusable TLM-style resource models: single-occupancy servers, round-robin
+//! arbiters and shared bandwidth channels. The virtual hardware models in
+//! `crate::hw` / `crate::detailed` compose these.
+
+use super::SimTime;
+use std::collections::VecDeque;
+
+/// A single-occupancy resource (an NCE, a DMA channel): at most one job in
+/// service; excess jobs queue FIFO. The resource does not know durations —
+/// the owning model computes them and calls [`Server::start`]/[`Server::finish`].
+#[derive(Debug, Clone)]
+pub struct Server<J> {
+    queue: VecDeque<J>,
+    busy_with: Option<J>,
+    busy_until: SimTime,
+    total_busy: SimTime,
+    served: u64,
+}
+
+impl<J: Clone> Default for Server<J> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<J: Clone> Server<J> {
+    pub fn new() -> Self {
+        Self {
+            queue: VecDeque::new(),
+            busy_with: None,
+            busy_until: 0,
+            total_busy: 0,
+            served: 0,
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy_with.is_some()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn busy_until(&self) -> SimTime {
+        self.busy_until
+    }
+
+    /// Enqueue a job; returns it immediately if the server is idle (the
+    /// caller should then `start` it).
+    pub fn enqueue(&mut self, job: J) -> Option<J> {
+        if self.busy_with.is_none() && self.queue.is_empty() {
+            Some(job)
+        } else {
+            self.queue.push_back(job);
+            None
+        }
+    }
+
+    /// Mark the server busy with `job` from `now` for `duration`.
+    /// Panics if already busy — double-booking is a model bug.
+    pub fn start(&mut self, job: J, now: SimTime, duration: SimTime) {
+        assert!(self.busy_with.is_none(), "server double-booked");
+        self.busy_with = Some(job);
+        self.busy_until = now + duration;
+        self.total_busy += duration;
+        self.served += 1;
+    }
+
+    /// Complete the in-service job; returns the next queued job, if any.
+    pub fn finish(&mut self) -> (J, Option<J>) {
+        let done = self.busy_with.take().expect("finish on idle server");
+        (done, self.queue.pop_front())
+    }
+
+    pub fn total_busy(&self) -> SimTime {
+        self.total_busy
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+}
+
+/// Work-conserving round-robin arbiter over `n` requesters (the paper's
+/// interconnect grants bus access to DMA channels and the HKP).
+#[derive(Debug, Clone)]
+pub struct Arbiter {
+    n: usize,
+    next: usize,
+    pending: Vec<bool>,
+}
+
+impl Arbiter {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { n, next: 0, pending: vec![false; n] }
+    }
+
+    pub fn request(&mut self, who: usize) {
+        self.pending[who] = true;
+    }
+
+    pub fn cancel(&mut self, who: usize) {
+        self.pending[who] = false;
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.pending.iter().any(|&p| p)
+    }
+
+    /// Grant the lowest-index pending requester (fixed priority, e.g.
+    /// read-before-write buses), clearing its request.
+    pub fn grant_fixed(&mut self) -> Option<usize> {
+        for i in 0..self.n {
+            if self.pending[i] {
+                self.pending[i] = false;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Grant the next pending requester in round-robin order, clearing its
+    /// request. Returns `None` if nothing is pending.
+    pub fn grant(&mut self) -> Option<usize> {
+        for i in 0..self.n {
+            let idx = (self.next + i) % self.n;
+            if self.pending[idx] {
+                self.pending[idx] = false;
+                self.next = (idx + 1) % self.n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+}
+
+/// A serialized shared channel with finite bandwidth (the AVSM bus model):
+/// a transfer of `bytes` occupies the channel for
+/// `ceil(bytes / bytes_per_ps)` — expressed as bytes-per-cycle at a clock to
+/// stay in integer math.
+#[derive(Debug, Clone)]
+pub struct BandwidthChannel {
+    /// Bytes moved per channel clock cycle (bus width x words/cycle).
+    bytes_per_cycle: u64,
+    period_ps: SimTime,
+    free_at: SimTime,
+    total_bytes: u64,
+    total_busy: SimTime,
+}
+
+impl BandwidthChannel {
+    pub fn new(bytes_per_cycle: u64, period_ps: SimTime) -> Self {
+        assert!(bytes_per_cycle > 0 && period_ps > 0);
+        Self { bytes_per_cycle, period_ps, free_at: 0, total_bytes: 0, total_busy: 0 }
+    }
+
+    pub fn bytes_per_cycle(&self) -> u64 {
+        self.bytes_per_cycle
+    }
+
+    /// Pure duration of a `bytes` transfer (no queueing).
+    pub fn transfer_time(&self, bytes: u64) -> SimTime {
+        let cycles = (bytes + self.bytes_per_cycle - 1) / self.bytes_per_cycle;
+        cycles * self.period_ps
+    }
+
+    /// Reserve the channel for a transfer starting no earlier than `now`.
+    /// Returns `(start, end)` — start is delayed if the channel is busy.
+    pub fn reserve(&mut self, now: SimTime, bytes: u64) -> (SimTime, SimTime) {
+        let start = now.max(self.free_at);
+        let end = start + self.transfer_time(bytes);
+        self.free_at = end;
+        self.total_bytes += bytes;
+        self.total_busy += end - start;
+        (start, end)
+    }
+
+    pub fn free_at(&self) -> SimTime {
+        self.free_at
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    pub fn total_busy(&self) -> SimTime {
+        self.total_busy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_fifo_order() {
+        let mut s: Server<u32> = Server::new();
+        assert_eq!(s.enqueue(1), Some(1)); // idle -> run immediately
+        s.start(1, 0, 100);
+        assert!(s.enqueue(2).is_none());
+        assert!(s.enqueue(3).is_none());
+        let (done, next) = s.finish();
+        assert_eq!((done, next), (1, Some(2)));
+        s.start(2, 100, 50);
+        let (done, next) = s.finish();
+        assert_eq!((done, next), (2, Some(3)));
+        assert_eq!(s.served(), 2);
+        assert_eq!(s.total_busy(), 150);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-booked")]
+    fn server_rejects_double_booking() {
+        let mut s: Server<u32> = Server::new();
+        s.start(1, 0, 10);
+        s.start(2, 0, 10);
+    }
+
+    #[test]
+    fn arbiter_round_robin_is_fair() {
+        let mut a = Arbiter::new(3);
+        a.request(0);
+        a.request(1);
+        a.request(2);
+        assert_eq!(a.grant(), Some(0));
+        a.request(0); // re-request immediately
+        assert_eq!(a.grant(), Some(1));
+        assert_eq!(a.grant(), Some(2));
+        assert_eq!(a.grant(), Some(0)); // only now 0 again
+        assert_eq!(a.grant(), None);
+    }
+
+    #[test]
+    fn arbiter_skips_idle_requesters() {
+        let mut a = Arbiter::new(4);
+        a.request(2);
+        assert_eq!(a.grant(), Some(2));
+        a.request(1);
+        a.request(3);
+        assert_eq!(a.grant(), Some(3)); // RR pointer at 3 after granting 2
+        assert_eq!(a.grant(), Some(1));
+    }
+
+    #[test]
+    fn fixed_priority_always_prefers_low_index() {
+        let mut a = Arbiter::new(3);
+        a.request(2);
+        a.request(0);
+        assert_eq!(a.grant_fixed(), Some(0));
+        a.request(1);
+        assert_eq!(a.grant_fixed(), Some(1));
+        assert_eq!(a.grant_fixed(), Some(2));
+        assert_eq!(a.grant_fixed(), None);
+    }
+
+    #[test]
+    fn channel_serializes_transfers() {
+        // 8 bytes/cycle at 4000 ps (250 MHz, 64-bit bus).
+        let mut ch = BandwidthChannel::new(8, 4000);
+        let (s1, e1) = ch.reserve(0, 64); // 8 cycles
+        assert_eq!((s1, e1), (0, 32_000));
+        let (s2, e2) = ch.reserve(10_000, 8); // must wait for first
+        assert_eq!((s2, e2), (32_000, 36_000));
+        assert_eq!(ch.total_bytes(), 72);
+    }
+
+    #[test]
+    fn channel_rounds_partial_beats_up() {
+        let ch = BandwidthChannel::new(8, 1000);
+        assert_eq!(ch.transfer_time(1), 1000);
+        assert_eq!(ch.transfer_time(8), 1000);
+        assert_eq!(ch.transfer_time(9), 2000);
+    }
+}

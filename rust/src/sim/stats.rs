@@ -1,0 +1,95 @@
+//! Post-simulation statistics derived from the trace: per-resource
+//! utilization and occupancy — what the paper's Gantt analysis (Fig 4) reads
+//! off to classify layers as compute- vs communication-bound.
+
+use super::{SimTime, TraceRecorder};
+
+/// Utilization summary for one traced resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceStats {
+    pub name: String,
+    pub busy_ps: SimTime,
+    pub intervals: usize,
+    /// busy / horizon, in [0, 1].
+    pub utilization: f64,
+}
+
+/// Compute per-resource stats over a window (or the whole run when
+/// `window = None`). Windowed stats power the per-layer bound
+/// classification: a layer is compute-bound when NCE utilization ~ 1 within
+/// the layer's window while the bus idles, and vice versa.
+pub fn resource_stats(
+    trace: &TraceRecorder,
+    window: Option<(SimTime, SimTime)>,
+) -> Vec<ResourceStats> {
+    let (w0, w1) = window.unwrap_or((0, trace.horizon()));
+    let span = (w1 - w0).max(1);
+    trace
+        .resources()
+        .into_iter()
+        .map(|(id, name)| {
+            let mut busy = 0;
+            let mut n = 0;
+            for iv in trace.for_resource(id) {
+                let s = iv.start.max(w0);
+                let e = iv.end.min(w1);
+                if s < e {
+                    busy += e - s;
+                    n += 1;
+                }
+            }
+            ResourceStats {
+                name: name.to_string(),
+                busy_ps: busy,
+                intervals: n,
+                utilization: busy as f64 / span as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::IntervalKind;
+
+    fn demo_trace() -> TraceRecorder {
+        let mut tr = TraceRecorder::new();
+        let nce = tr.intern("nce");
+        let bus = tr.intern("bus");
+        let l = tr.intern("t");
+        tr.record(nce, l, 0, IntervalKind::Compute, 0, 80);
+        tr.record(bus, l, 0, IntervalKind::Transfer, 0, 20);
+        tr.record(bus, l, 1, IntervalKind::Transfer, 80, 100);
+        tr
+    }
+
+    #[test]
+    fn whole_run_utilization() {
+        let tr = demo_trace();
+        let stats = resource_stats(&tr, None);
+        let nce = stats.iter().find(|s| s.name == "nce").unwrap();
+        let bus = stats.iter().find(|s| s.name == "bus").unwrap();
+        assert_eq!(nce.busy_ps, 80);
+        assert!((nce.utilization - 0.8).abs() < 1e-12);
+        assert_eq!(bus.busy_ps, 40);
+        assert_eq!(bus.intervals, 2);
+    }
+
+    #[test]
+    fn windowed_utilization_clips_intervals() {
+        let tr = demo_trace();
+        let stats = resource_stats(&tr, Some((10, 30)));
+        let nce = stats.iter().find(|s| s.name == "nce").unwrap();
+        assert_eq!(nce.busy_ps, 20); // clipped to [10,30)
+        let bus = stats.iter().find(|s| s.name == "bus").unwrap();
+        assert_eq!(bus.busy_ps, 10); // only first transfer overlaps
+    }
+
+    #[test]
+    fn empty_window_yields_zero() {
+        let tr = demo_trace();
+        let stats = resource_stats(&tr, Some((200, 300)));
+        assert!(stats.iter().all(|s| s.busy_ps == 0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Busy-interval tracing — the raw material for the Gantt chart (Fig 4),
+//! per-layer timing (Fig 5) and resource-utilization analysis.
+//!
+//! Labels are interned to keep the hot recording path allocation-free.
+
+use super::SimTime;
+use std::collections::HashMap;
+
+/// What a resource was doing during an interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntervalKind {
+    /// NCE (or other PE) computing a tile.
+    Compute,
+    /// DMA/bus moving bytes.
+    Transfer,
+    /// Control/dispatch overhead (HKP).
+    Control,
+    /// Resource stalled waiting (back-pressure, bank conflict, refresh).
+    Stall,
+}
+
+/// A closed busy interval on one resource.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Interval {
+    /// Interned resource name id (see [`TraceRecorder::resource_id`]).
+    pub resource: u32,
+    /// Interned task label id.
+    pub label: u32,
+    /// Task-graph node id this interval executed, `u32::MAX` if n/a.
+    pub task: u32,
+    pub kind: IntervalKind,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl Interval {
+    pub fn duration(&self) -> SimTime {
+        self.end - self.start
+    }
+}
+
+/// Records busy intervals with interned resource/label names.
+#[derive(Debug, Default, Clone)]
+pub struct TraceRecorder {
+    names: Vec<String>,
+    ids: HashMap<String, u32>,
+    intervals: Vec<Interval>,
+    enabled: bool,
+    /// End of the last recorded interval — the simulated makespan.
+    horizon: SimTime,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self { enabled: true, ..Default::default() }
+    }
+
+    /// A recorder that only tracks the horizon — for perf-critical sweeps
+    /// (DSE) where per-interval storage is wasted work.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Default::default() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Intern a name, returning a stable id.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.ids.get(name) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.ids.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn name(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<u32> {
+        self.ids.get(name).copied()
+    }
+
+    /// Record one busy interval. `start <= end` is required.
+    pub fn record(
+        &mut self,
+        resource: u32,
+        label: u32,
+        task: u32,
+        kind: IntervalKind,
+        start: SimTime,
+        end: SimTime,
+    ) {
+        debug_assert!(start <= end, "interval ends before it starts");
+        self.horizon = self.horizon.max(end);
+        if self.enabled {
+            self.intervals.push(Interval { resource, label, task, kind, start, end });
+        }
+    }
+
+    pub fn intervals(&self) -> &[Interval] {
+        &self.intervals
+    }
+
+    pub fn horizon(&self) -> SimTime {
+        self.horizon
+    }
+
+    /// All intervals on a given resource, in recording order.
+    pub fn for_resource(&self, resource: u32) -> impl Iterator<Item = &Interval> {
+        self.intervals.iter().filter(move |iv| iv.resource == resource)
+    }
+
+    /// Total busy time per resource id.
+    pub fn busy_time(&self) -> HashMap<u32, SimTime> {
+        let mut busy: HashMap<u32, SimTime> = HashMap::new();
+        for iv in &self.intervals {
+            *busy.entry(iv.resource).or_default() += iv.duration();
+        }
+        busy
+    }
+
+    /// Resource names that appear in the trace, sorted by id.
+    pub fn resources(&self) -> Vec<(u32, &str)> {
+        let mut ids: Vec<u32> = {
+            let mut seen: Vec<u32> = self.intervals.iter().map(|iv| iv.resource).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            seen
+        };
+        ids.sort_unstable();
+        ids.into_iter().map(|id| (id, self.name(id))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_stable() {
+        let mut tr = TraceRecorder::new();
+        let a = tr.intern("nce");
+        let b = tr.intern("bus");
+        assert_ne!(a, b);
+        assert_eq!(tr.intern("nce"), a);
+        assert_eq!(tr.name(a), "nce");
+        assert_eq!(tr.lookup("bus"), Some(b));
+        assert_eq!(tr.lookup("nope"), None);
+    }
+
+    #[test]
+    fn records_and_horizons() {
+        let mut tr = TraceRecorder::new();
+        let r = tr.intern("nce");
+        let l = tr.intern("conv1_0/t0");
+        tr.record(r, l, 0, IntervalKind::Compute, 100, 500);
+        tr.record(r, l, 1, IntervalKind::Compute, 500, 900);
+        assert_eq!(tr.intervals().len(), 2);
+        assert_eq!(tr.horizon(), 900);
+        assert_eq!(tr.busy_time()[&r], 800);
+    }
+
+    #[test]
+    fn disabled_recorder_still_tracks_horizon() {
+        let mut tr = TraceRecorder::disabled();
+        let r = tr.intern("bus");
+        tr.record(r, r, 0, IntervalKind::Transfer, 0, 1234);
+        assert!(tr.intervals().is_empty());
+        assert_eq!(tr.horizon(), 1234);
+    }
+
+    #[test]
+    fn for_resource_filters() {
+        let mut tr = TraceRecorder::new();
+        let nce = tr.intern("nce");
+        let bus = tr.intern("bus");
+        let l = tr.intern("x");
+        tr.record(nce, l, 0, IntervalKind::Compute, 0, 10);
+        tr.record(bus, l, 0, IntervalKind::Transfer, 0, 20);
+        tr.record(nce, l, 1, IntervalKind::Compute, 10, 30);
+        assert_eq!(tr.for_resource(nce).count(), 2);
+        assert_eq!(tr.for_resource(bus).count(), 1);
+        assert_eq!(tr.resources(), vec![(nce, "nce"), (bus, "bus")]);
+    }
+}

@@ -1,0 +1,309 @@
+//! Task graph structure: nodes, dependencies, validation and graph
+//! analyses (topological order, critical path, per-kind totals).
+
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+pub type TaskId = u32;
+
+/// Which on-chip buffer a DMA transaction targets. The compiler's tiler
+/// sizes tiles so the working set of one tile fits these buffers; the
+/// simulators use the kind only for labeling/statistics, the *sizes* were
+/// already honoured at compile time — mirroring how the paper's task graph
+/// "considers the memory hierarchy and the on-chip memory sizes".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufferKind {
+    /// Input feature-map tile.
+    Ifm,
+    /// Weight tile.
+    Weights,
+    /// Output feature-map tile (stores).
+    Ofm,
+}
+
+/// What a task occupies: the DMA/bus (memory transactions) or the NCE
+/// (processing cycles) — the two node flavours of the paper's task graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Move `bytes` from external memory into an on-chip buffer.
+    DmaLoad { bytes: u64, buffer: BufferKind },
+    /// Move `bytes` from the OFM buffer back to external memory.
+    DmaStore { bytes: u64 },
+    /// Occupy the NCE for `cycles` NCE-clock cycles (`macs` is bookkeeping
+    /// for utilization/roofline reporting).
+    Compute { cycles: u64, macs: u64 },
+    /// Zero-cost ordering node (layer boundaries).
+    Barrier,
+}
+
+impl TaskKind {
+    pub fn is_dma(&self) -> bool {
+        matches!(self, TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. })
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match *self {
+            TaskKind::DmaLoad { bytes, .. } | TaskKind::DmaStore { bytes } => bytes,
+            _ => 0,
+        }
+    }
+}
+
+/// One node of the task graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    pub id: TaskId,
+    /// DNN-graph layer index this task belongs to (per-layer timing, Fig 5).
+    pub layer: u32,
+    /// Human-readable label, e.g. `conv1_0/t3/load_w`.
+    pub label: String,
+    pub kind: TaskKind,
+    /// Tasks that must complete before this one may start.
+    pub deps: Vec<TaskId>,
+}
+
+/// The hardware-adapted task graph. Nodes are appended by the compiler in
+/// an order where dependencies always point backwards, but [`validate`]
+/// re-checks acyclicity for graphs arriving from JSON.
+///
+/// [`validate`]: TaskGraph::validate
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaskGraph {
+    pub name: String,
+    tasks: Vec<Task>,
+}
+
+impl TaskGraph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), tasks: Vec::new() }
+    }
+
+    pub fn push(&mut self, layer: u32, label: impl Into<String>, kind: TaskKind, deps: Vec<TaskId>) -> TaskId {
+        let id = self.tasks.len() as TaskId;
+        self.tasks.push(Task { id, layer, label: label.into(), kind, deps });
+        id
+    }
+
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id as usize]
+    }
+
+    /// Dependents adjacency (forward edges), computed on demand.
+    pub fn dependents(&self) -> Vec<Vec<TaskId>> {
+        let mut fwd = vec![Vec::new(); self.tasks.len()];
+        for t in &self.tasks {
+            for &d in &t.deps {
+                fwd[d as usize].push(t.id);
+            }
+        }
+        fwd
+    }
+
+    /// In-degree per task.
+    pub fn indegrees(&self) -> Vec<u32> {
+        self.tasks.iter().map(|t| t.deps.len() as u32).collect()
+    }
+
+    /// Structural validation: dep ids in range, no self-deps, acyclic,
+    /// ids consistent with positions.
+    pub fn validate(&self) -> Result<()> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id as usize != i {
+                bail!("task {} has id {} out of order", i, t.id);
+            }
+            for &d in &t.deps {
+                if d as usize >= self.tasks.len() {
+                    bail!("task {:?} depends on unknown task {d}", t.label);
+                }
+                if d == t.id {
+                    bail!("task {:?} depends on itself", t.label);
+                }
+            }
+        }
+        if self.topo_order().len() != self.tasks.len() {
+            bail!("task graph contains a cycle");
+        }
+        Ok(())
+    }
+
+    /// Kahn topological order; shorter than `len()` iff the graph is cyclic.
+    pub fn topo_order(&self) -> Vec<TaskId> {
+        let mut indeg = self.indegrees();
+        let fwd = self.dependents();
+        let mut q: VecDeque<TaskId> = self
+            .tasks
+            .iter()
+            .filter(|t| t.deps.is_empty())
+            .map(|t| t.id)
+            .collect();
+        let mut order = Vec::with_capacity(self.tasks.len());
+        while let Some(id) = q.pop_front() {
+            order.push(id);
+            for &nxt in &fwd[id as usize] {
+                indeg[nxt as usize] -= 1;
+                if indeg[nxt as usize] == 0 {
+                    q.push_back(nxt);
+                }
+            }
+        }
+        order
+    }
+
+    /// Critical-path length under a caller-supplied duration model —
+    /// the absolute lower bound on makespan for *any* resource schedule,
+    /// used by property tests and the analytical baseline.
+    pub fn critical_path<F: FnMut(&Task) -> u64>(&self, mut duration: F) -> u64 {
+        let mut finish = vec![0u64; self.tasks.len()];
+        let mut best = 0;
+        for &id in &self.topo_order() {
+            let t = &self.tasks[id as usize];
+            let ready = t.deps.iter().map(|&d| finish[d as usize]).max().unwrap_or(0);
+            finish[id as usize] = ready + duration(t);
+            best = best.max(finish[id as usize]);
+        }
+        best
+    }
+
+    /// Sum of all durations — the makespan upper bound (fully serial).
+    pub fn serial_sum<F: FnMut(&Task) -> u64>(&self, duration: F) -> u64 {
+        self.tasks.iter().map(duration).sum()
+    }
+
+    /// (compute tasks, dma tasks, barriers) node counts.
+    pub fn kind_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for t in &self.tasks {
+            match t.kind {
+                TaskKind::Compute { .. } => c.0 += 1,
+                TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. } => c.1 += 1,
+                TaskKind::Barrier => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Total bytes moved over the bus by DMA tasks.
+    pub fn total_dma_bytes(&self) -> u64 {
+        self.tasks.iter().map(|t| t.kind.bytes()).sum()
+    }
+
+    /// Total NCE compute cycles.
+    pub fn total_compute_cycles(&self) -> u64 {
+        self.tasks
+            .iter()
+            .map(|t| match t.kind {
+                TaskKind::Compute { cycles, .. } => cycles,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Highest layer index + 1 (number of layers with tasks).
+    pub fn layer_count(&self) -> u32 {
+        self.tasks.iter().map(|t| t.layer + 1).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// load -> compute -> store chain per "tile", two tiles in parallel.
+    fn two_tile_graph() -> TaskGraph {
+        let mut g = TaskGraph::new("t");
+        let l0 = g.push(0, "t0/load", TaskKind::DmaLoad { bytes: 64, buffer: BufferKind::Ifm }, vec![]);
+        let c0 = g.push(0, "t0/mac", TaskKind::Compute { cycles: 100, macs: 6400 }, vec![l0]);
+        let s0 = g.push(0, "t0/store", TaskKind::DmaStore { bytes: 32 }, vec![c0]);
+        let l1 = g.push(0, "t1/load", TaskKind::DmaLoad { bytes: 64, buffer: BufferKind::Ifm }, vec![]);
+        let c1 = g.push(0, "t1/mac", TaskKind::Compute { cycles: 100, macs: 6400 }, vec![l1]);
+        let s1 = g.push(0, "t1/store", TaskKind::DmaStore { bytes: 32 }, vec![c1]);
+        g.push(1, "sync", TaskKind::Barrier, vec![s0, s1]);
+        g
+    }
+
+    fn dur(t: &Task) -> u64 {
+        match t.kind {
+            TaskKind::Compute { cycles, .. } => cycles,
+            TaskKind::DmaLoad { bytes, .. } | TaskKind::DmaStore { bytes } => bytes,
+            TaskKind::Barrier => 0,
+        }
+    }
+
+    #[test]
+    fn valid_graph_passes() {
+        two_tile_graph().validate().unwrap();
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let g = two_tile_graph();
+        let order = g.topo_order();
+        assert_eq!(order.len(), g.len());
+        let pos: Vec<usize> =
+            (0..g.len()).map(|id| order.iter().position(|&o| o == id as u32).unwrap()).collect();
+        for t in g.tasks() {
+            for &d in &t.deps {
+                assert!(pos[d as usize] < pos[t.id as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = two_tile_graph();
+        // Introduce a cycle 0 -> 1 -> 0 by appending dep 1 to task 0.
+        g.tasks[0].deps.push(1);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn out_of_range_dep_detected() {
+        let mut g = two_tile_graph();
+        g.tasks[0].deps.push(999);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn self_dep_detected() {
+        let mut g = two_tile_graph();
+        g.tasks[2].deps.push(2);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn critical_path_is_chain() {
+        let g = two_tile_graph();
+        // chain: load(64) + mac(100) + store(32) = 196; barrier adds 0.
+        assert_eq!(g.critical_path(dur), 196);
+        assert_eq!(g.serial_sum(dur), 2 * 196);
+    }
+
+    #[test]
+    fn totals_and_counts() {
+        let g = two_tile_graph();
+        assert_eq!(g.kind_counts(), (2, 4, 1));
+        assert_eq!(g.total_dma_bytes(), 2 * 96);
+        assert_eq!(g.total_compute_cycles(), 200);
+        assert_eq!(g.layer_count(), 2);
+    }
+
+    #[test]
+    fn empty_graph_is_fine() {
+        let g = TaskGraph::new("empty");
+        g.validate().unwrap();
+        assert_eq!(g.critical_path(dur), 0);
+        assert!(g.is_empty());
+    }
+}

@@ -1,0 +1,13 @@
+//! The hardware-adapted task graph — the paper's "virtual software model".
+//!
+//! The deep-learning compiler (Fig 1) breaks the DNN graph into nodes that
+//! each represent either a memory transaction (DMA load/store of a tile) or
+//! processing cycles on the NCE. The HKP virtual model executes this graph
+//! during simulation; the same graph drives both the AVSM and the detailed
+//! prototype model, exactly as the paper shares one compiler between the
+//! virtual and implementation flows.
+
+pub mod graph;
+pub mod serialize;
+
+pub use graph::{BufferKind, Task, TaskGraph, TaskId, TaskKind};

@@ -1,0 +1,163 @@
+//! Task-graph JSON serialization (schema `avsm-task-graph-v1`).
+//!
+//! The paper's flow imports/exports the hardware-adapted task graph between
+//! the compiler and the model-generation engine (their Fig 3 charges 91 % of
+//! flow runtime to exactly this import/export!). Our serializer exists for
+//! the same flow boundary — and the Fig 3 bench measures it.
+
+use super::graph::{BufferKind, Task, TaskGraph, TaskId, TaskKind};
+use crate::json::{self, obj, Value};
+use anyhow::{bail, Context, Result};
+
+const SCHEMA: &str = "avsm-task-graph-v1";
+
+/// Serialize compactly (single line): the flow boundary is machine-to-
+/// machine, and compact form is ~35% fewer bytes to write and re-parse —
+/// part of keeping the paper's 91%-of-runtime import/export phase cheap
+/// (§Perf). Use `jq` to pretty-print when inspecting by hand.
+pub fn to_json(g: &TaskGraph) -> String {
+    let tasks: Vec<Value> = g.tasks().iter().map(task_to_value).collect();
+    obj(vec![
+        ("schema", SCHEMA.into()),
+        ("name", g.name.as_str().into()),
+        ("tasks", Value::Array(tasks)),
+    ])
+    .to_string_compact()
+}
+
+fn task_to_value(t: &Task) -> Value {
+    let mut pairs: Vec<(&str, Value)> = vec![
+        ("id", t.id.into()),
+        ("layer", t.layer.into()),
+        ("label", t.label.as_str().into()),
+        ("deps", Value::Array(t.deps.iter().map(|&d| d.into()).collect())),
+    ];
+    match t.kind {
+        TaskKind::DmaLoad { bytes, buffer } => {
+            pairs.push(("kind", "dma_load".into()));
+            pairs.push(("bytes", bytes.into()));
+            pairs.push((
+                "buffer",
+                match buffer {
+                    BufferKind::Ifm => "ifm",
+                    BufferKind::Weights => "weights",
+                    BufferKind::Ofm => "ofm",
+                }
+                .into(),
+            ));
+        }
+        TaskKind::DmaStore { bytes } => {
+            pairs.push(("kind", "dma_store".into()));
+            pairs.push(("bytes", bytes.into()));
+        }
+        TaskKind::Compute { cycles, macs } => {
+            pairs.push(("kind", "compute".into()));
+            pairs.push(("cycles", cycles.into()));
+            pairs.push(("macs", macs.into()));
+        }
+        TaskKind::Barrier => pairs.push(("kind", "barrier".into())),
+    }
+    obj(pairs)
+}
+
+pub fn from_json(text: &str) -> Result<TaskGraph> {
+    let root = json::parse(text).context("task graph JSON parse")?;
+    if root.get("schema").as_str() != Some(SCHEMA) {
+        bail!("unsupported task graph schema");
+    }
+    let mut g = TaskGraph::new(root.req_str("name")?);
+    for (i, tv) in root.req_array("tasks")?.iter().enumerate() {
+        let id = tv.req_u64("id")? as TaskId;
+        if id as usize != i {
+            bail!("task ids must be dense and ordered (task {i} has id {id})");
+        }
+        let deps: Vec<TaskId> = tv
+            .req_array("deps")?
+            .iter()
+            .map(|d| d.as_u64().map(|v| v as TaskId).context("bad dep id"))
+            .collect::<Result<_>>()?;
+        let kind = match tv.get("kind").as_str().unwrap_or_default() {
+            "dma_load" => TaskKind::DmaLoad {
+                bytes: tv.req_u64("bytes")?,
+                buffer: match tv.get("buffer").as_str().unwrap_or_default() {
+                    "ifm" => BufferKind::Ifm,
+                    "weights" => BufferKind::Weights,
+                    "ofm" => BufferKind::Ofm,
+                    other => bail!("unknown buffer kind {other:?}"),
+                },
+            },
+            "dma_store" => TaskKind::DmaStore { bytes: tv.req_u64("bytes")? },
+            "compute" => TaskKind::Compute {
+                cycles: tv.req_u64("cycles")?,
+                macs: tv.req_u64("macs")?,
+            },
+            "barrier" => TaskKind::Barrier,
+            other => bail!("unknown task kind {other:?}"),
+        };
+        g.push(tv.req_u64("layer")? as u32, tv.req_str("label")?, kind, deps);
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> TaskGraph {
+        let mut g = TaskGraph::new("demo");
+        let l = g.push(0, "load", TaskKind::DmaLoad { bytes: 128, buffer: BufferKind::Weights }, vec![]);
+        let c = g.push(0, "mac", TaskKind::Compute { cycles: 64, macs: 2048 }, vec![l]);
+        let s = g.push(0, "store", TaskKind::DmaStore { bytes: 99 }, vec![c]);
+        g.push(1, "end", TaskKind::Barrier, vec![s]);
+        g
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = demo();
+        let text = to_json(&g);
+        let g2 = from_json(&text).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn rejects_sparse_ids() {
+        let g = demo();
+        let text = to_json(&g).replace("\"id\":3", "\"id\":7");
+        assert!(from_json(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let text = to_json(&demo()).replace("barrier", "teleport");
+        assert!(from_json(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        assert!(from_json(r#"{"schema": "x", "name": "n", "tasks": []}"#).is_err());
+    }
+
+    #[test]
+    fn large_graph_roundtrip() {
+        let mut g = TaskGraph::new("big");
+        let mut prev: Vec<u32> = vec![];
+        for layer in 0..20 {
+            let mut cur = vec![];
+            for t in 0..50 {
+                let deps = prev.clone();
+                let id = g.push(
+                    layer,
+                    format!("l{layer}/t{t}"),
+                    TaskKind::Compute { cycles: t as u64 + 1, macs: 1 },
+                    deps,
+                );
+                cur.push(id);
+            }
+            prev = cur;
+        }
+        let g2 = from_json(&to_json(&g)).unwrap();
+        assert_eq!(g, g2);
+    }
+}

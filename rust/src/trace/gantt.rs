@@ -1,0 +1,223 @@
+//! Gantt renderer: ASCII for terminals, SVG + CSV artifacts for reports.
+
+use crate::sim::{IntervalKind, SimTime, TraceRecorder};
+
+/// Rendering options.
+#[derive(Debug, Clone, Copy)]
+pub struct GanttOptions {
+    /// Window start/end in ps (None = whole trace).
+    pub window: Option<(SimTime, SimTime)>,
+    /// Character width of the ASCII rendering.
+    pub width: usize,
+}
+
+impl Default for GanttOptions {
+    fn default() -> Self {
+        Self { window: None, width: 100 }
+    }
+}
+
+/// A Gantt view over a recorded trace.
+pub struct Gantt<'a> {
+    trace: &'a TraceRecorder,
+    opts: GanttOptions,
+}
+
+impl<'a> Gantt<'a> {
+    pub fn new(trace: &'a TraceRecorder, opts: GanttOptions) -> Self {
+        Self { trace, opts }
+    }
+
+    fn window(&self) -> (SimTime, SimTime) {
+        self.opts.window.unwrap_or((0, self.trace.horizon().max(1)))
+    }
+
+    /// ASCII art: one row per resource, `#` compute, `=` transfer,
+    /// `.` idle — the terminal Fig 4.
+    pub fn render_ascii(&self) -> String {
+        let (w0, w1) = self.window();
+        let span = (w1 - w0).max(1);
+        let width = self.opts.width.max(10);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "gantt {:.3} ms .. {:.3} ms ({} cols, {:.1} us/col)\n",
+            w0 as f64 / 1e9,
+            w1 as f64 / 1e9,
+            width,
+            span as f64 / width as f64 / 1e6
+        ));
+        for (rid, name) in self.trace.resources() {
+            let mut row = vec!['.'; width];
+            for iv in self.trace.for_resource(rid) {
+                let s = iv.start.max(w0);
+                let e = iv.end.min(w1);
+                if s >= e {
+                    continue;
+                }
+                let c0 = ((s - w0) as u128 * width as u128 / span as u128) as usize;
+                let c1 = (((e - w0) as u128 * width as u128).div_ceil(span as u128) as usize)
+                    .min(width);
+                let ch = match iv.kind {
+                    IntervalKind::Compute => '#',
+                    IntervalKind::Transfer => '=',
+                    IntervalKind::Control => '+',
+                    IntervalKind::Stall => 'x',
+                };
+                for c in row.iter_mut().take(c1).skip(c0) {
+                    *c = ch;
+                }
+            }
+            out.push_str(&format!("{name:>6} |"));
+            out.extend(row);
+            out.push_str("|\n");
+        }
+        out
+    }
+
+    /// CSV export: resource,label,task,kind,start_ps,end_ps.
+    pub fn render_csv(&self) -> String {
+        let (w0, w1) = self.window();
+        let mut out = String::from("resource,label,task,kind,start_ps,end_ps\n");
+        for iv in self.trace.intervals() {
+            if iv.end <= w0 || iv.start >= w1 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{},{},{},{:?},{},{}\n",
+                self.trace.name(iv.resource),
+                self.trace.name(iv.label),
+                iv.task,
+                iv.kind,
+                iv.start,
+                iv.end
+            ));
+        }
+        out
+    }
+
+    /// SVG rendering with one lane per resource.
+    pub fn render_svg(&self) -> String {
+        let (w0, w1) = self.window();
+        let span = (w1 - w0).max(1) as f64;
+        let resources = self.trace.resources();
+        let lane_h = 28.0;
+        let ml = 64.0;
+        let w = 900.0;
+        let h = 30.0 + lane_h * resources.len() as f64 + 30.0;
+        let x = |t: SimTime| ml + (t.saturating_sub(w0)) as f64 / span * (w - ml - 10.0);
+        let mut s = format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="monospace" font-size="11">"#
+        );
+        s.push_str(&format!(r#"<rect width="{w}" height="{h}" fill="white"/>"#));
+        for (li, (rid, name)) in resources.iter().enumerate() {
+            let y0 = 20.0 + lane_h * li as f64;
+            s.push_str(&format!(
+                r#"<text x="4" y="{:.1}">{name}</text>"#,
+                y0 + lane_h * 0.6
+            ));
+            for iv in self.trace.for_resource(*rid) {
+                let a = iv.start.max(w0);
+                let b = iv.end.min(w1);
+                if a >= b {
+                    continue;
+                }
+                let color = match iv.kind {
+                    IntervalKind::Compute => "#c0392b",
+                    IntervalKind::Transfer => "#2980b9",
+                    IntervalKind::Control => "#27ae60",
+                    IntervalKind::Stall => "#f39c12",
+                };
+                s.push_str(&format!(
+                    r#"<rect x="{:.2}" y="{:.1}" width="{:.2}" height="{:.1}" fill="{color}"/>"#,
+                    x(a),
+                    y0 + 4.0,
+                    (x(b) - x(a)).max(0.4),
+                    lane_h - 8.0
+                ));
+            }
+        }
+        s.push_str(&format!(
+            r#"<text x="{:.0}" y="{:.0}">time: {:.3} .. {:.3} ms</text>"#,
+            w / 2.0 - 90.0,
+            h - 8.0,
+            w0 as f64 / 1e9,
+            w1 as f64 / 1e9
+        ));
+        s.push_str("</svg>");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::config::SystemConfig;
+    use crate::graph::models;
+    use crate::hw::simulate_avsm;
+
+    fn traced() -> (TraceRecorder, crate::hw::SimResult) {
+        let sys = SystemConfig::base_paper();
+        let net = models::lenet(28);
+        let c = compile(&net, &sys, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::new();
+        let sim = simulate_avsm(&c, &sys, &mut tr);
+        (tr, sim)
+    }
+
+    #[test]
+    fn ascii_has_all_resources_and_marks() {
+        let (tr, _) = traced();
+        let g = Gantt::new(&tr, GanttOptions::default());
+        let txt = g.render_ascii();
+        assert!(txt.contains("nce") && txt.contains("bus"));
+        assert!(txt.contains('#'), "no compute marks:\n{txt}");
+        assert!(txt.contains('='), "no transfer marks:\n{txt}");
+    }
+
+    #[test]
+    fn windowed_view_clips() {
+        let (tr, sim) = traced();
+        let mid = sim.total_ps / 2;
+        let g = Gantt::new(&tr, GanttOptions { window: Some((0, mid)), width: 50 });
+        let txt = g.render_ascii();
+        assert!(txt.contains("gantt"));
+        let csv_all = Gantt::new(&tr, GanttOptions::default()).render_csv();
+        let csv_half = g.render_csv();
+        assert!(csv_half.lines().count() <= csv_all.lines().count());
+    }
+
+    #[test]
+    fn csv_schema() {
+        let (tr, _) = traced();
+        let csv = Gantt::new(&tr, GanttOptions::default()).render_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "resource,label,task,kind,start_ps,end_ps");
+        let first = lines.next().unwrap();
+        assert_eq!(first.split(',').count(), 6);
+    }
+
+    #[test]
+    fn svg_is_wellformed_enough() {
+        let (tr, _) = traced();
+        let svg = Gantt::new(&tr, GanttOptions::default()).render_svg();
+        assert!(svg.starts_with("<svg") && svg.ends_with("</svg>"));
+        assert!(svg.matches("<rect").count() > 3);
+    }
+
+    #[test]
+    fn compute_and_comm_bound_phases_visible() {
+        // Fig 4's observation: some windows have busy NCE + idle DMA and
+        // others the reverse. Check utilization asymmetry across windows.
+        let sys = SystemConfig::base_paper();
+        let net = models::dilated_vgg_paper();
+        let c = compile(&net, &sys, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::new();
+        let sim = simulate_avsm(&c, &sys, &mut tr);
+        // dense1 window: NCE busy; pool1 window: bus busy.
+        let dense1 = sim.layer("dense1").unwrap();
+        let pool1 = sim.layer("pool1").unwrap();
+        assert!(dense1.nce_utilization() > 0.9 && dense1.bus_utilization() < 0.5);
+        assert!(pool1.bus_utilization() > 0.9 && pool1.nce_utilization() < 0.5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Gantt-chart rendering of simulation traces (paper Fig 4): per-resource
+//! busy intervals for the computation (NCE) and communication (bus, DMA
+//! channels) resources, showing dependency patterns — NCE continuously
+//! occupied on compute-bound layers while the DMA idles, and vice versa.
+
+pub mod chrome;
+pub mod gantt;
+
+pub use chrome::to_chrome_trace;
+pub use gantt::{Gantt, GanttOptions};

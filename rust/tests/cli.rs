@@ -1,0 +1,101 @@
+//! CLI smoke tests: spawn the built `avsm` binary the way a user would.
+
+use std::process::Command;
+
+fn avsm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_avsm"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = avsm().args(args).output().expect("spawn avsm");
+    assert!(
+        out.status.success(),
+        "avsm {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn help_lists_commands() {
+    let text = run_ok(&["help"]);
+    for cmd in ["simulate", "compare", "roofline", "gantt", "flow", "sweep", "infer"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn simulate_prints_layers_and_energy() {
+    let text = run_ok(&["simulate", "--net", "lenet"]);
+    assert!(text.contains("TOTAL"));
+    assert!(text.contains("energy/inference"));
+    assert!(text.contains("compute-bound") || text.contains("communication-bound") || text.contains("neither"));
+}
+
+#[test]
+fn compare_reports_accuracy() {
+    let text = run_ok(&["compare", "--net", "dilated_vgg_tiny"]);
+    assert!(text.contains("accuracy"));
+    assert!(text.contains("deviation"));
+}
+
+#[test]
+fn roofline_full_and_zoom() {
+    let full = run_ok(&["roofline", "--net", "dilated_vgg_tiny"]);
+    let zoom = run_ok(&["roofline", "--net", "dilated_vgg_tiny", "--zoom"]);
+    assert!(full.contains("ridge"));
+    assert!(zoom.lines().count() <= full.lines().count());
+}
+
+#[test]
+fn gantt_formats() {
+    let ascii = run_ok(&["gantt", "--net", "lenet"]);
+    assert!(ascii.contains("nce") && ascii.contains('|'));
+    let csv = run_ok(&["gantt", "--net", "lenet", "--format", "csv"]);
+    assert!(csv.starts_with("resource,label,task,kind"));
+    let chrome = run_ok(&["gantt", "--net", "lenet", "--format", "chrome"]);
+    assert!(chrome.trim_start().starts_with('['));
+    assert!(chrome.contains("\"ph\":\"X\""));
+}
+
+#[test]
+fn flow_writes_reports() {
+    let dir = std::env::temp_dir().join(format!("avsm_cli_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let text = run_ok(&["flow", "--net", "lenet", "--outdir", dir.to_str().unwrap()]);
+    assert!(text.contains("Fig 3"));
+    assert!(dir.join("fig3.json").exists());
+    assert!(dir.join("task_graph.json").exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn config_roundtrips_through_file() {
+    let dir = std::env::temp_dir().join(format!("avsm_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("sys.json");
+    let dump = run_ok(&["config"]);
+    std::fs::write(&cfg_path, &dump).unwrap();
+    let text = run_ok(&["simulate", "--net", "lenet", "--system", cfg_path.to_str().unwrap()]);
+    assert!(text.contains("base_paper_virtex7"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = avsm().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
+
+#[test]
+fn mobilenet_workload_simulates() {
+    let text = run_ok(&["simulate", "--net", "mobilenet", "--hw", "64"]);
+    assert!(text.contains("dw0") && text.contains("pw0"));
+}
+
+#[test]
+fn topdown_answers() {
+    let text = run_ok(&["topdown", "--net", "lenet", "--target-ms", "1"]);
+    assert!(text.contains("minimum NCE frequency") || text.contains("not reachable"));
+}

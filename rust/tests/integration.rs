@@ -1,0 +1,185 @@
+//! Integration tests: the whole flow across modules, multiple workloads and
+//! multiple system design points — compile -> task graph -> both simulators
+//! -> reports, plus the shipped system description files.
+
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::coordinator::{run_flow, FlowOptions};
+use avsm::detailed::simulate_prototype;
+use avsm::graph::{graph_from_json, graph_to_json, models, DnnGraph};
+use avsm::hw::simulate_avsm;
+use avsm::report::Fig5Report;
+use avsm::roofline::RooflineModel;
+use avsm::sim::TraceRecorder;
+
+fn all_nets() -> Vec<DnnGraph> {
+    vec![
+        models::lenet(28),
+        models::dilated_vgg_tiny(),
+        models::dilated_vgg(128, 2, 16),
+        models::vgg16(64, 10),
+        models::tiny_resnet(32, 16, 3),
+    ]
+}
+
+#[test]
+fn every_builtin_net_flows_end_to_end() {
+    let sys = SystemConfig::base_paper();
+    for net in all_nets() {
+        let out = run_flow(&net, &sys, &FlowOptions::default(), None)
+            .unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        assert!(out.sim.total_ps > 0, "{}", net.name);
+        assert_eq!(out.sim.layers.len(), net.layers.len(), "{}", net.name);
+        // Layer windows partition the run.
+        let sum: u64 = out.sim.layers.iter().map(|l| l.duration_ps()).sum();
+        assert_eq!(sum, out.sim.total_ps, "{}", net.name);
+    }
+}
+
+#[test]
+fn every_shipped_config_simulates_dilated_vgg() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+    let mut tested = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let sys = SystemConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let net = models::dilated_vgg_tiny();
+        let compiled = compile(&net, &sys, CompileOptions::default())
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&compiled, &sys, &mut tr);
+        assert!(sim.total_ps > 0, "{path:?}");
+        tested += 1;
+    }
+    assert!(tested >= 3, "expected at least 3 shipped configs, found {tested}");
+}
+
+#[test]
+fn avsm_tracks_prototype_on_all_workloads() {
+    // The Fig 5 property is not DilatedVGG-specific: the AVSM must stay
+    // within ~12 % of the detailed model on every built-in workload.
+    let sys = SystemConfig::base_paper();
+    for net in all_nets() {
+        let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        let a = simulate_avsm(&compiled, &sys, &mut tr);
+        let mut tr = TraceRecorder::disabled();
+        let p = simulate_prototype(&compiled, &sys, &mut tr);
+        let dev = (a.total_ps as f64 - p.total_ps as f64).abs() / p.total_ps as f64;
+        assert!(dev < 0.12, "{}: deviation {:.1}%", net.name, dev * 100.0);
+    }
+}
+
+#[test]
+fn fig5_report_on_paper_workload_meets_band() {
+    let sys = SystemConfig::base_paper();
+    let compiled =
+        compile(&models::dilated_vgg_paper(), &sys, CompileOptions::default()).unwrap();
+    let r = Fig5Report::compute(&compiled, &sys);
+    assert!(r.accuracy_pct() >= 91.7, "accuracy {:.2}%", r.accuracy_pct());
+    assert!(r.max_abs_layer_deviation() <= 12.0);
+}
+
+#[test]
+fn mxu_like_config_changes_bound_structure() {
+    // On a 128x128 array the conv4 layers stop being compute-bound at this
+    // workload size — the cross-config behaviour DSE relies on.
+    let base = SystemConfig::base_paper();
+    let mxu = SystemConfig::from_file(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/configs/mxu_like.json"
+    ))
+    .unwrap();
+    let net = models::dilated_vgg_paper();
+    let eval = |sys: &SystemConfig| {
+        let compiled = compile(&net, sys, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        simulate_avsm(&compiled, sys, &mut tr).total_ps
+    };
+    let t_base = eval(&base);
+    let t_mxu = eval(&mxu);
+    assert!(
+        t_mxu < t_base / 3,
+        "128x128 @940MHz should be >3x faster: {t_mxu} vs {t_base}"
+    );
+}
+
+#[test]
+fn roofline_consistent_with_sim_utilization() {
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_paper();
+    let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+    let mut tr = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, &sys, &mut tr);
+    let ops: Vec<u64> = net.layer_costs().iter().map(|c| c.arith_ops).collect();
+    let model = RooflineModel::from_sim(&sys, &sim, &ops);
+    // A layer whose roofline says compute-bound must show high NCE
+    // occupancy in the simulation.
+    for (p, l) in model.points.iter().zip(&sim.layers) {
+        if p.bound == avsm::roofline::RoofBound::Compute && l.macs > 0 {
+            assert!(
+                l.nce_utilization() > 0.7,
+                "{}: roofline compute-bound but NCE util {:.2}",
+                l.name,
+                l.nce_utilization()
+            );
+        }
+    }
+}
+
+#[test]
+fn graph_json_cross_checks_python_export() {
+    // If `make artifacts` ran, the python-exported DNN graph must equal the
+    // rust builder exactly (the two front-ends share DESIGN.md §7).
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/dilated_vgg.graph.json");
+    let Ok(text) = std::fs::read_to_string(path) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let imported = graph_from_json(&text).unwrap();
+    assert_eq!(imported, models::dilated_vgg(256, 1, 16));
+    // And our own export round-trips through their schema.
+    let re = graph_from_json(&graph_to_json(&imported)).unwrap();
+    assert_eq!(re, imported);
+}
+
+#[test]
+fn flow_export_files_parse_back() {
+    let dir = std::env::temp_dir().join(format!("avsm_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sys = SystemConfig::base_paper();
+    let net = models::dilated_vgg_tiny();
+    run_flow(&net, &sys, &FlowOptions::default(), Some(&dir)).unwrap();
+    // Task graph re-imports.
+    let tg = std::fs::read_to_string(dir.join("task_graph.json")).unwrap();
+    let graph = avsm::taskgraph::serialize::from_json(&tg).unwrap();
+    graph.validate().unwrap();
+    // Gantt CSV has the expected schema.
+    let csv = std::fs::read_to_string(dir.join("gantt.csv")).unwrap();
+    assert!(csv.starts_with("resource,label,task,kind,start_ps,end_ps"));
+    // layers.csv rows = layer count.
+    let layers = std::fs::read_to_string(dir.join("layers.csv")).unwrap();
+    assert_eq!(layers.lines().count(), 1 + net.layers.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn single_channel_and_rr_arbitration_variants_work() {
+    let net = models::dilated_vgg_tiny();
+    for (channels, policy) in [
+        (1u32, avsm::config::ArbPolicy::FixedPriority),
+        (4, avsm::config::ArbPolicy::RoundRobin),
+    ] {
+        let mut sys = SystemConfig::base_paper();
+        sys.dma.channels = channels;
+        sys.bus.arbitration = policy;
+        let compiled = compile(&net, &sys, CompileOptions::default()).unwrap();
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&compiled, &sys, &mut tr);
+        assert!(sim.total_ps > 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Property-based tests over randomly generated networks and system
+//! configurations (DESIGN.md §10), using the in-tree SplitMix64 generator
+//! in place of proptest.
+//!
+//! Invariants checked per random case:
+//! * the compiler's MAC/byte accounting is exact vs the graph IR;
+//! * OFM bytes are stored exactly once per layer;
+//! * the task graph is a DAG whose simulation completes all tasks;
+//! * makespan lies between the critical-path lower bound and the serial
+//!   upper bound (+ HKP dispatch overhead);
+//! * layer windows partition the run; busy time never exceeds the window;
+//! * simulation is deterministic;
+//! * task-graph and DNN-graph JSON round-trip losslessly.
+
+use avsm::compiler::{compile, CompileOptions};
+use avsm::config::SystemConfig;
+use avsm::graph::{graph_from_json, graph_to_json, Activation, DnnGraph, Layer, Op, Padding, TensorShape};
+use avsm::hw::{simulate_avsm, AvsmTiming, TimingModel};
+use avsm::sim::{ClockDomain, TraceRecorder};
+use avsm::taskgraph::{serialize, TaskKind};
+use avsm::testkit::Rng;
+
+/// Random small CNN: 1–6 layers of conv/pool/upsample with consistent
+/// channel chains.
+fn random_net(rng: &mut Rng) -> DnnGraph {
+    let hw = *rng.pick(&[8u32, 12, 16, 24, 32]);
+    let cin = *rng.pick(&[1u32, 3, 4, 8]);
+    let mut g = DnnGraph::new(
+        format!("rand{}", rng.next_u64() % 1000),
+        TensorShape::new(1, cin, hw, hw),
+        *rng.pick(&[1u32, 2, 4]),
+    );
+    let n_layers = rng.range(1, 6) as usize;
+    let mut c = cin;
+    let mut h = hw;
+    for i in 0..n_layers {
+        // Keep pooling legal (h must stay >= 4). Rng::range is inclusive.
+        let can_pool = h >= 8;
+        let kind = rng.range(0, if can_pool { 2 } else { 1 });
+        match kind {
+            0 | 1 => {
+                let cout = *rng.pick(&[2u32, 4, 8, 16, 24]);
+                let k = *rng.pick(&[1u32, 3, 5]);
+                let dilation = if k > 1 { *rng.pick(&[1u32, 2]) } else { 1 };
+                g.push(Layer::new(
+                    format!("conv{i}"),
+                    Op::Conv2d {
+                        cin: c,
+                        cout,
+                        kh: k,
+                        kw: k,
+                        stride: 1,
+                        dilation,
+                        padding: Padding::Same,
+                        activation: if rng.bool() { Activation::Relu } else { Activation::None },
+                    },
+                ));
+                c = cout;
+            }
+            2 => {
+                g.push(Layer::new(format!("pool{i}"), Op::MaxPool { window: 2, stride: 2 }));
+                h /= 2;
+            }
+            _ => unreachable!(),
+        }
+    }
+    g.validate().expect("generator produced an invalid net");
+    g
+}
+
+/// Random feasible system config around the base point.
+fn random_sys(rng: &mut Rng) -> SystemConfig {
+    let mut sys = SystemConfig::base_paper();
+    sys.nce.array_rows = *rng.pick(&[8u32, 16, 32, 64]);
+    sys.nce.array_cols = *rng.pick(&[16u32, 32, 64, 128]);
+    sys.nce.freq_mhz = *rng.pick(&[100u64, 250, 500]);
+    sys.nce.ifm_buffer_kib = *rng.pick(&[64u32, 256, 1536]);
+    sys.nce.weight_buffer_kib = *rng.pick(&[64u32, 128, 256]);
+    sys.nce.ofm_buffer_kib = *rng.pick(&[64u32, 128, 256]);
+    sys.bus.bytes_per_cycle = *rng.pick(&[8u64, 16, 32, 64]);
+    sys.dma.channels = rng.range_u32(1, 3);
+    sys.validate().unwrap();
+    sys
+}
+
+fn duration_model(sys: &SystemConfig) -> impl FnMut(&avsm::taskgraph::Task) -> u64 {
+    let mut t = AvsmTiming::new(sys);
+    move |task: &avsm::taskgraph::Task| match task.kind {
+        TaskKind::Compute { .. } => t.compute_ps(&task.kind),
+        TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. } => {
+            t.dma_pre_ps(&task.kind) + t.dma_bus_ps(&task.kind, 0)
+        }
+        TaskKind::Barrier => 0,
+    }
+}
+
+#[test]
+fn compiled_accounting_matches_graph_ir() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..40 {
+        let net = random_net(&mut rng);
+        let sys = random_sys(&mut rng);
+        let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
+            continue; // tiny buffers can be infeasible for a random net: fine
+        };
+        compiled.graph.validate().unwrap();
+        // MACs exact.
+        let macs: u64 = compiled.layers.iter().map(|l| l.macs).sum();
+        assert_eq!(macs, net.total_macs(), "case {case} net {}", net.name);
+        // OFM stored exactly once per layer.
+        let shapes = net.layer_shapes();
+        for (li, shape) in shapes.iter().enumerate() {
+            let stored: u64 = compiled
+                .graph
+                .tasks()
+                .iter()
+                .filter(|t| t.layer == li as u32)
+                .map(|t| match t.kind {
+                    TaskKind::DmaStore { bytes } => bytes,
+                    _ => 0,
+                })
+                .sum();
+            assert_eq!(
+                stored,
+                shape.bytes(net.dtype_bytes),
+                "case {case} layer {li} of {}",
+                net.name
+            );
+        }
+    }
+}
+
+#[test]
+fn makespan_bounds_hold_for_random_cases() {
+    let mut rng = Rng::new(0xBEEF);
+    let mut checked = 0;
+    for _ in 0..30 {
+        let net = random_net(&mut rng);
+        let sys = random_sys(&mut rng);
+        let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
+            continue;
+        };
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&compiled, &sys, &mut tr);
+        assert_eq!(sim.tasks, compiled.graph.len() as u64, "all tasks must finish");
+
+        let cp = compiled.graph.critical_path(duration_model(&sys));
+        let serial = compiled.graph.serial_sum(duration_model(&sys));
+        let hkp = ClockDomain::from_mhz(sys.hkp.freq_mhz)
+            .cycles_to_ps(sys.hkp.dispatch_cycles)
+            * compiled.graph.len() as u64;
+        assert!(
+            sim.total_ps >= cp,
+            "{}: makespan {} < critical path {cp}",
+            net.name,
+            sim.total_ps
+        );
+        assert!(
+            sim.total_ps <= serial + hkp,
+            "{}: makespan {} > serial bound {}",
+            net.name,
+            sim.total_ps,
+            serial + hkp
+        );
+        checked += 1;
+    }
+    assert!(checked >= 20, "too few feasible random cases ({checked})");
+}
+
+#[test]
+fn layer_windows_partition_and_bound_busy_time() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..25 {
+        let net = random_net(&mut rng);
+        let sys = random_sys(&mut rng);
+        let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
+            continue;
+        };
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&compiled, &sys, &mut tr);
+        let mut prev = 0;
+        for l in &sim.layers {
+            assert_eq!(l.start_ps, prev, "{}: windows must be contiguous", net.name);
+            assert!(l.end_ps >= l.start_ps);
+            assert!(l.nce_busy_ps <= l.duration_ps());
+            assert!(l.bus_busy_ps <= l.duration_ps());
+            prev = l.end_ps;
+        }
+        assert_eq!(prev, sim.total_ps);
+    }
+}
+
+#[test]
+fn simulation_is_deterministic_for_random_cases() {
+    let mut rng = Rng::new(0xD00D);
+    for _ in 0..15 {
+        let net = random_net(&mut rng);
+        let sys = random_sys(&mut rng);
+        let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
+            continue;
+        };
+        let run = || {
+            let mut tr = TraceRecorder::disabled();
+            simulate_avsm(&compiled, &sys, &mut tr)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.total_ps, b.total_ps);
+        assert_eq!(a.events, b.events);
+    }
+}
+
+#[test]
+fn double_buffering_never_hurts() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..20 {
+        let net = random_net(&mut rng);
+        let sys = random_sys(&mut rng);
+        let db = compile(&net, &sys, CompileOptions { double_buffer: true, labels: false });
+        let sb = compile(&net, &sys, CompileOptions { double_buffer: false, labels: false });
+        let (Ok(db), Ok(sb)) = (db, sb) else { continue };
+        let mut tr = TraceRecorder::disabled();
+        let t_db = simulate_avsm(&db, &sys, &mut tr).total_ps;
+        let mut tr = TraceRecorder::disabled();
+        let t_sb = simulate_avsm(&sb, &sys, &mut tr).total_ps;
+        assert!(
+            t_db <= t_sb,
+            "{}: double buffering slowed the net ({t_db} vs {t_sb})",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn json_roundtrips_for_random_graphs() {
+    let mut rng = Rng::new(0xFACADE);
+    for _ in 0..30 {
+        let net = random_net(&mut rng);
+        let back = graph_from_json(&graph_to_json(&net)).unwrap();
+        assert_eq!(net, back);
+
+        let sys = random_sys(&mut rng);
+        if let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) {
+            let tg = serialize::from_json(&serialize::to_json(&compiled.graph)).unwrap();
+            assert_eq!(compiled.graph, tg);
+        }
+    }
+}
+
+#[test]
+fn system_config_json_roundtrips_for_random_configs() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..30 {
+        let sys = random_sys(&mut rng);
+        let back = SystemConfig::from_json(&sys.to_json()).unwrap();
+        assert_eq!(sys, back);
+    }
+}
