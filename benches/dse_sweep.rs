@@ -10,26 +10,76 @@ use avsm::dse;
 use avsm::graph::models;
 use avsm::hw::simulate_avsm;
 use avsm::sim::TraceRecorder;
+use std::path::Path;
 
 fn main() {
     let mut bench = Bench::new("dse_sweep");
     let sys = SystemConfig::base_paper();
     let net = models::dilated_vgg(128, 1, 16);
 
-    // Sweep throughput: full compile+simulate per point.
+    // Sweep throughput on the canonical 9-point grid (3 geometries x 3
+    // frequencies). The default sweep is the fast path: one compilation per
+    // geometry shared across the frequency axis, points simulated in
+    // parallel. The uncached-serial case is the pre-cache pipeline (full
+    // compile+simulate per point, one thread) for an in-run speedup figure.
     let axes = dse::SweepAxes {
         array_geometries: vec![(16, 32), (32, 64), (64, 64)],
         nce_freqs_mhz: vec![125, 250, 500],
         ..Default::default()
     };
     let med = bench.case("sweep_9_points", || dse::sweep(&net, &sys, &axes)).median;
+    let med_seq = bench
+        .case("sweep_9_points_cached_serial", || dse::sweep_seq(&net, &sys, &axes))
+        .median;
+    let med_uncached = bench
+        .case("sweep_9_points_uncached_serial", || {
+            // Same grid as `axes` above, evaluated the pre-cache way: a
+            // full compile+simulate per point, single-threaded.
+            let mut points = Vec::new();
+            for &(r, c) in &axes.array_geometries {
+                for &f in &axes.nce_freqs_mhz {
+                    let mut s = sys.clone();
+                    s.nce.array_rows = r;
+                    s.nce.array_cols = c;
+                    s.nce.freq_mhz = f;
+                    s.name = format!(
+                        "nce{r}x{c}_f{f}_bus{}_ifm{}",
+                        s.bus.bytes_per_cycle, s.nce.ifm_buffer_kib
+                    );
+                    if let Ok(p) = dse::evaluate(&net, &s, s.name.clone()) {
+                        points.push(p);
+                    }
+                }
+            }
+            points
+        })
+        .median;
     let pts = dse::sweep(&net, &sys, &axes);
+    let pps = pts.len() as f64 / med.as_secs_f64();
+    bench.metric("points_per_sec", pps, "design points/s");
     bench.metric(
-        "points_per_sec",
-        pts.len() as f64 / med.as_secs_f64(),
-        "design points/s",
+        "speedup_vs_uncached_serial",
+        med_uncached.as_secs_f64() / med.as_secs_f64(),
+        "x",
+    );
+    bench.metric(
+        "cache_speedup_serial",
+        med_uncached.as_secs_f64() / med_seq.as_secs_f64(),
+        "x",
     );
     bench.metric("pareto_size", dse::pareto(&pts).len() as f64, "points");
+
+    // Machine-readable perf snapshot at the repo root (the package lives in
+    // rust/, so the manifest dir's parent is the repository).
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_dse_sweep.json"))
+        .unwrap_or_else(|| "BENCH_dse_sweep.json".into());
+    if let Err(e) = bench.write_json(&out, &[("points_per_sec", pps)]) {
+        eprintln!("warning: could not write {}: {e}", out.display());
+    } else {
+        println!("wrote {}", out.display());
+    }
 
     // Ablation: double buffering on/off (a software design choice the
     // compiler owns — DESIGN.md calls this out).

@@ -4,7 +4,13 @@
 //! uses this module to time closures with warmup, report median/mean/min
 //! and print a stable, grep-friendly table. Not statistics-grade, but
 //! deterministic workloads + medians give repeatable numbers.
+//!
+//! [`Bench::write_json`] additionally emits a machine-readable
+//! `BENCH_<group>.json` snapshot (median_ns per case plus free-form
+//! headline metrics) so the perf trajectory can be tracked across PRs.
 
+use crate::json::{obj, Value};
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -107,6 +113,50 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Machine-readable snapshot: `{"name": <group>, "median_ns": ...,
+    /// "cases": [...], <headline metrics>}`. `median_ns` at the top level
+    /// is the first recorded case's median (the group's headline timing);
+    /// `headline` metrics (e.g. `points_per_sec`) are flattened to top
+    /// level for trivial downstream parsing.
+    pub fn to_json(&self, headline: &[(&str, f64)]) -> Value {
+        let cases = Value::Array(
+            self.results
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("name", r.name.as_str().into()),
+                        ("median_ns", (r.median.as_nanos() as u64).into()),
+                        ("mean_ns", (r.mean.as_nanos() as u64).into()),
+                        ("min_ns", (r.min.as_nanos() as u64).into()),
+                        ("max_ns", (r.max.as_nanos() as u64).into()),
+                        ("iters", r.iters.into()),
+                    ])
+                })
+                .collect(),
+        );
+        let mut pairs: Vec<(&str, Value)> = vec![
+            ("name", self.group.as_str().into()),
+            (
+                "median_ns",
+                self.results
+                    .first()
+                    .map(|r| r.median.as_nanos() as u64)
+                    .unwrap_or(0)
+                    .into(),
+            ),
+        ];
+        for &(k, v) in headline {
+            pairs.push((k, v.into()));
+        }
+        pairs.push(("cases", cases));
+        obj(pairs)
+    }
+
+    /// Write [`Bench::to_json`] to `path`.
+    pub fn write_json(&self, path: impl AsRef<Path>, headline: &[(&str, f64)]) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(headline).to_string_pretty() + "\n")
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +176,24 @@ mod tests {
         assert!(r.min <= r.median && r.median <= r.max);
         assert_eq!(b.results().len(), 1);
         assert!(b.results()[0].name.contains("test/spin"));
+    }
+
+    #[test]
+    fn json_snapshot_has_headline_and_cases() {
+        let mut b = Bench::new("dse_sweep").with_iters(0, 2);
+        b.case("sweep_9_points", || 42u64);
+        let j = b.to_json(&[("points_per_sec", 123.5)]);
+        assert_eq!(j.get("name").as_str(), Some("dse_sweep"));
+        assert!(j.get("median_ns").as_u64().is_some());
+        assert!((j.get("points_per_sec").as_f64().unwrap() - 123.5).abs() < 1e-9);
+        let cases = j.get("cases").as_array().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").as_str(), Some("dse_sweep/sweep_9_points"));
+        assert!(cases[0].get("median_ns").as_u64().is_some());
+        // Round-trips through the writer.
+        let text = j.to_string_pretty();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back.get("name").as_str(), Some("dse_sweep"));
     }
 
     #[test]

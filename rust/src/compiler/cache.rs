@@ -1,0 +1,378 @@
+//! Config-keyed compilation cache — the heart of the fast DSE pipeline.
+//!
+//! The compiler's output (tiling + lowered task graph) depends only on a
+//! *structural* subset of [`SystemConfig`]: array geometry, per-task setup,
+//! on-chip buffer capacities and datapath widths. Clock frequencies are
+//! deliberately not part of that subset — the tiler's objective runs at
+//! pinned reference clocks (see `compiler::tiling`), and the emitted task
+//! graph carries frequency-free quantities (NCE cycles, DMA bytes). A
+//! frequency change is therefore a pure *retime*: reuse the cached
+//! [`CompiledNet`] and re-simulate under the new annotations, instead of a
+//! full recompile per design point. This is what makes "design space
+//! exploration by a click of a button" fast: a sweep over G geometries x
+//! F frequencies costs G compilations, not G*F, and every `dse::topdown`
+//! binary-search probe after the first is compile-free.
+//!
+//! The cache is internally synchronized (mutex-guarded map + `Arc`'d
+//! entries) so parallel sweep workers share one instance by reference.
+//! Compilation happens *outside* the lock, so distinct design points
+//! compile concurrently; racers on the *same* key find an in-flight
+//! marker and wait on a condvar instead of duplicating the compile — a
+//! cold parallel sweep does exactly one compile per structural key.
+//! Infeasible points are memoized as negative entries, so an infeasible
+//! geometry fails once rather than once per frequency point.
+
+use super::lower::{compile, CompileOptions, CompiledNet};
+use crate::config::SystemConfig;
+use crate::graph::DnnGraph;
+use anyhow::{anyhow, Result};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Content fingerprint of a DNN graph: every field the compiler reads
+/// (input shape, dtype, per-layer name/op/skip), so two nets that would
+/// compile differently can never share a cache entry even when they carry
+/// the same display name.
+fn net_fingerprint(net: &DnnGraph) -> u64 {
+    let mut h = DefaultHasher::new();
+    net.dtype_bytes.hash(&mut h);
+    (net.input.n, net.input.c, net.input.h, net.input.w).hash(&mut h);
+    for layer in &net.layers {
+        layer.name.hash(&mut h);
+        layer.op.hash(&mut h);
+        layer.skip_from.hash(&mut h);
+    }
+    h.finish()
+}
+
+/// The subset of the compilation inputs that the tiler and the lowering
+/// pass actually read. Two `(net, sys)` pairs with equal keys compile to
+/// byte-identical [`CompiledNet`]s; in particular the key contains no clock
+/// frequency, so frequency-only config changes hit the cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CompileKey {
+    // --- net identity (one cache may serve sweeps over several models) ---
+    net_name: String,
+    net_fingerprint: u64,
+    dtype_bytes: u32,
+    // --- NCE structure ---
+    array_rows: u32,
+    array_cols: u32,
+    task_setup_cycles: u64,
+    ifm_buffer_kib: u32,
+    weight_buffer_kib: u32,
+    ofm_buffer_kib: u32,
+    // --- datapath widths entering the tiler's objective ---
+    bus_bytes_per_cycle: u64,
+    mem_data_bytes_per_cycle: u64,
+    avsm_eff_bw_pct: u64,
+    // --- compiler options ---
+    double_buffer: bool,
+    labels: bool,
+}
+
+impl CompileKey {
+    pub fn new(net: &DnnGraph, sys: &SystemConfig, opts: CompileOptions) -> Self {
+        Self {
+            net_name: net.name.clone(),
+            net_fingerprint: net_fingerprint(net),
+            dtype_bytes: net.dtype_bytes,
+            array_rows: sys.nce.array_rows,
+            array_cols: sys.nce.array_cols,
+            task_setup_cycles: sys.nce.task_setup_cycles,
+            ifm_buffer_kib: sys.nce.ifm_buffer_kib,
+            weight_buffer_kib: sys.nce.weight_buffer_kib,
+            ofm_buffer_kib: sys.nce.ofm_buffer_kib,
+            bus_bytes_per_cycle: sys.bus.bytes_per_cycle,
+            mem_data_bytes_per_cycle: sys.memory.data_bytes_per_cycle,
+            avsm_eff_bw_pct: sys.memory.avsm_eff_bw_pct,
+            double_buffer: opts.double_buffer,
+            labels: opts.labels,
+        }
+    }
+}
+
+/// One memoized outcome: a compiled artifact, or the rendered error of an
+/// infeasible structural point (negative entry — an infeasible geometry
+/// fails once, not once per frequency point sharing it).
+type CacheEntry = Result<Arc<CompiledNet>, String>;
+
+fn entry_to_result(entry: &CacheEntry) -> Result<Arc<CompiledNet>> {
+    match entry {
+        Ok(compiled) => Ok(Arc::clone(compiled)),
+        Err(msg) => Err(anyhow!("{msg}")),
+    }
+}
+
+/// Map slot: either a finished outcome or a marker that some thread is
+/// compiling this key right now (racers wait on the condvar for it).
+#[derive(Debug)]
+enum Slot {
+    InFlight,
+    Ready(CacheEntry),
+}
+
+/// Thread-safe memoization of [`compile`] keyed by [`CompileKey`].
+#[derive(Debug, Default)]
+pub struct CompileCache {
+    opts: CompileOptions,
+    map: Mutex<HashMap<CompileKey, Slot>>,
+    done: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CompileCache {
+    pub fn new(opts: CompileOptions) -> Self {
+        Self {
+            opts,
+            map: Mutex::new(HashMap::new()),
+            done: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn options(&self) -> CompileOptions {
+        self.opts
+    }
+
+    /// Return the cached compilation for the structural key of `(net, sys)`,
+    /// compiling on miss. Infeasible points are memoized too (as errors).
+    /// The compile itself runs unlocked so distinct keys compile in
+    /// parallel from worker threads; racers on the same key block until
+    /// the first thread's result lands, so each key compiles exactly once.
+    pub fn get_or_compile(&self, net: &DnnGraph, sys: &SystemConfig) -> Result<Arc<CompiledNet>> {
+        // Validate the full inputs up front, on every call: validation
+        // covers non-structural fields (clocks, DMA channels, DRAM
+        // geometry) that are deliberately absent from the key, so a cache
+        // hit must not skip it, and a validation failure must never be
+        // memoized under the structural key. Past this point, any
+        // `compile` error is structural (tiling infeasibility) and safe
+        // to memoize.
+        net.validate()?;
+        sys.validate()?;
+
+        let key = CompileKey::new(net, sys, self.opts);
+        let mut guard = self.map.lock().unwrap();
+        loop {
+            match guard.get(&key) {
+                None => {
+                    guard.insert(key.clone(), Slot::InFlight);
+                    break;
+                }
+                Some(Slot::Ready(entry)) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return entry_to_result(entry);
+                }
+                Some(Slot::InFlight) => {
+                    guard = self.done.wait(guard).unwrap();
+                }
+            }
+        }
+        drop(guard);
+
+        // If `compile` unwinds, the in-flight marker must not strand the
+        // racers blocked on the condvar (std::thread::scope joins every
+        // worker before re-raising a panic, so a stranded marker would
+        // hang the sweep, not abort it). The guard converts an unwind
+        // into a poisoned negative entry and wakes everyone.
+        struct Unwind<'a> {
+            cache: &'a CompileCache,
+            key: Option<CompileKey>,
+        }
+        impl Drop for Unwind<'_> {
+            fn drop(&mut self) {
+                if let Some(key) = self.key.take() {
+                    let mut map = self.cache.map.lock().unwrap();
+                    map.insert(key, Slot::Ready(Err("compile panicked".into())));
+                    self.cache.done.notify_all();
+                }
+            }
+        }
+        let mut unwind = Unwind { cache: self, key: Some(key) };
+
+        let entry: CacheEntry = match compile(net, sys, self.opts) {
+            Ok(compiled) => Ok(Arc::new(compiled)),
+            Err(e) => Err(format!("{e:#}")),
+        };
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = entry_to_result(&entry);
+        let key = unwind.key.take().expect("unwind guard already fired");
+        let mut guard = self.map.lock().unwrap();
+        guard.insert(key, Slot::Ready(entry));
+        self.done.notify_all();
+        result
+    }
+
+    /// Cache hits so far (probes that skipped a compile).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far (actual compile attempts, successful or not —
+    /// exactly one per distinct structural key).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct structural keys held (compiled artifacts plus
+    /// memoized infeasibilities).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn opts() -> CompileOptions {
+        CompileOptions { double_buffer: true, labels: false }
+    }
+
+    #[test]
+    fn frequency_change_hits_cache_and_matches_scratch_compile() {
+        let net = models::dilated_vgg_tiny();
+        let base = SystemConfig::base_paper();
+        let cache = CompileCache::new(opts());
+        let a = cache.get_or_compile(&net, &base).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+
+        // Frequency-only change: must be a cache hit...
+        let mut fast = base.clone();
+        fast.nce.freq_mhz = 500;
+        fast.bus.freq_mhz = 125;
+        fast.hkp.freq_mhz = 100;
+        let b = cache.get_or_compile(&net, &fast).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b));
+
+        // ...and the shared artifact must equal a from-scratch compile of
+        // the retimed config (tiling is clock-independent by construction).
+        let scratch = compile(&net, &fast, opts()).unwrap();
+        assert_eq!(scratch.graph, b.graph);
+    }
+
+    #[test]
+    fn structural_change_misses_cache() {
+        let net = models::lenet(28);
+        let base = SystemConfig::base_paper();
+        let cache = CompileCache::new(opts());
+        cache.get_or_compile(&net, &base).unwrap();
+        let mut wide = base.clone();
+        wide.nce.array_cols *= 2;
+        cache.get_or_compile(&net, &wide).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn distinct_nets_do_not_collide() {
+        let base = SystemConfig::base_paper();
+        let cache = CompileCache::new(opts());
+        let a = cache.get_or_compile(&models::lenet(28), &base).unwrap();
+        let b = cache.get_or_compile(&models::dilated_vgg_tiny(), &base).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn infeasible_config_error_is_memoized() {
+        // A 512-wide input row (3 halo rows x 512 px x 2 B = 3 KiB) cannot
+        // fit a 1 KiB IFM buffer even at single-channel tiles.
+        let net = models::dilated_vgg(512, 4, 16);
+        let mut tiny = SystemConfig::base_paper();
+        tiny.nce.ifm_buffer_kib = 1;
+        tiny.nce.weight_buffer_kib = 1;
+        tiny.nce.ofm_buffer_kib = 1;
+        let cache = CompileCache::new(opts());
+        let first = cache.get_or_compile(&net, &tiny);
+        assert!(first.is_err());
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 1, 1));
+        // A frequency-only variant of the same infeasible structure fails
+        // from the negative entry without re-running the tiler...
+        let mut retimed = tiny.clone();
+        retimed.nce.freq_mhz = 500;
+        let second = cache.get_or_compile(&net, &retimed);
+        assert!(second.is_err());
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+        // ...and the memoized error keeps the original diagnostic.
+        assert_eq!(
+            format!("{:#}", second.unwrap_err()),
+            format!("{:#}", first.unwrap_err())
+        );
+    }
+
+    #[test]
+    fn invalid_annotations_rejected_in_both_orders() {
+        let net = models::lenet(28);
+        let base = SystemConfig::base_paper();
+        let mut bad = base.clone();
+        bad.nce.freq_mhz = 0; // same structural key as base, invalid clocks
+
+        // Warm-then-invalid: the hit path must still validate.
+        let cache = CompileCache::new(opts());
+        cache.get_or_compile(&net, &base).unwrap();
+        assert!(cache.get_or_compile(&net, &bad).is_err());
+        assert_eq!(cache.len(), 1, "validation failures must not be memoized");
+        cache.get_or_compile(&net, &base).unwrap();
+
+        // Invalid-then-valid: the failure must not poison the key.
+        let cache = CompileCache::new(opts());
+        assert!(cache.get_or_compile(&net, &bad).is_err());
+        assert!(cache.is_empty());
+        cache.get_or_compile(&net, &base).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+    }
+
+    #[test]
+    fn racing_workers_compile_each_key_once() {
+        // Eight threads hit one structural key (different clocks only) on a
+        // cold cache: the in-flight marker must funnel them into a single
+        // compile, with everyone else counted as a hit.
+        let net = models::lenet(28);
+        let base = SystemConfig::base_paper();
+        let cache = CompileCache::new(opts());
+        std::thread::scope(|s| {
+            for i in 0u64..8 {
+                let cache = &cache;
+                let net = &net;
+                let base = &base;
+                s.spawn(move || {
+                    let mut sys = base.clone();
+                    sys.nce.freq_mhz = 100 + i;
+                    cache.get_or_compile(net, &sys).unwrap();
+                });
+            }
+        });
+        assert_eq!(cache.misses(), 1, "same structural key must compile once");
+        assert_eq!(cache.hits(), 7);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn same_name_different_layers_do_not_collide() {
+        // Both nets are named "dilated_vgg" with identical input shape,
+        // dtype and layer count — only dense2's width differs. The content
+        // fingerprint must keep them apart.
+        let a = models::dilated_vgg(128, 1, 16);
+        let b = models::dilated_vgg(128, 1, 32);
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.layers.len(), b.layers.len());
+        let base = SystemConfig::base_paper();
+        let cache = CompileCache::new(opts());
+        let ca = cache.get_or_compile(&a, &base).unwrap();
+        let cb = cache.get_or_compile(&b, &base).unwrap();
+        assert_eq!(cache.misses(), 2, "distinct nets must not share a key");
+        assert!(!Arc::ptr_eq(&ca, &cb));
+    }
+}

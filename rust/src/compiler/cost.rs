@@ -15,6 +15,7 @@
 
 use crate::config::NceConfig;
 use crate::graph::Op;
+use crate::util::div_ceil64;
 
 /// The cost model, parameterised over the NCE geometry — the same machinery
 /// models the paper's 32x64 FPGA array, an MXU-like 128x128 array, or any
@@ -108,10 +109,6 @@ impl CostModel {
         let cycles = self.conv_tile_cycles(oh, ow, kh, kw, cin_t, cout_t) as f64;
         macs / (cycles * self.peak_macs_per_cycle() as f64)
     }
-}
-
-pub(crate) fn div_ceil64(a: u64, b: u64) -> u64 {
-    (a + b - 1) / b
 }
 
 #[cfg(test)]

@@ -11,14 +11,18 @@
 //! NCE cycle model shared with the roofline analysis; [`analytical`] is the
 //! statistical/static baseline the paper argues *under*-models causality
 //! (no blocking, no arbitration) — reproduced here for the comparison
-//! benches.
+//! benches; [`cache`] memoizes whole compilations by their structural
+//! config subset so DSE sweeps and top-down probes retime instead of
+//! recompiling.
 
 pub mod analytical;
+pub mod cache;
 pub mod cost;
 pub mod lower;
 pub mod tiling;
 
 pub use analytical::{analytical_estimate, analytical_estimate_compiled, AnalyticalEstimate};
+pub use cache::{CompileCache, CompileKey};
 pub use cost::CostModel;
 pub use lower::{compile, CompileOptions, CompiledLayer, CompiledNet};
 pub use tiling::{LayerTiling, TilingChoice};

@@ -22,7 +22,35 @@
 
 use crate::config::{NceConfig, SystemConfig};
 use crate::graph::{Op, TensorShape};
+use crate::util::{div_ceil, div_ceil64};
 use anyhow::{bail, Result};
+
+/// Reference clocks for the tiler's compute-vs-traffic objective, fixed at
+/// the paper's base design point (NCE 250 MHz, 256-bit AXI @ 250 MHz, DDR3
+/// @ 533 MHz). Pinning the objective's clocks — instead of reading the
+/// config's frequency annotations — makes the chosen tiling a pure function
+/// of *structural* parameters (array geometry, buffer capacities, datapath
+/// widths, per-task setup): exactly the fields in
+/// [`crate::compiler::CompileKey`]. That is what lets the DSE reuse one
+/// compilation across every frequency point of a sweep and every
+/// `dse::topdown` probe, with a retime-by-simulation instead of a full
+/// recompile. Frequencies still shape the simulated timing of the resulting
+/// task graph; they just no longer flip the tiler's argmin between
+/// candidates.
+///
+/// The deliberate tradeoff: for a config whose clock *ratios* differ from
+/// the base point (say memory at 400 MHz instead of 533, or an NCE swept
+/// to 2x the base clock), the objective prices streaming vs compute at the
+/// reference ratio, so the chosen tiling can be modestly off-optimal for
+/// that system — feasibility (buffer fits) is still checked exactly, only
+/// the argmin among *feasible* candidates is biased, and the simulation of
+/// whatever tiling is chosen remains exact. The DSE trades that bounded
+/// bias for evaluating frequency axes and top-down probes with zero
+/// recompiles; callers who want a clock-ratio-optimal tiling for one
+/// specific system can still judge it by simulating competing configs.
+const REF_NCE_MHZ: f64 = 250.0;
+const REF_BUS_MHZ: f64 = 250.0;
+const REF_MEM_MHZ: f64 = 533.0;
 
 /// Tile geometry chosen for a conv layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,10 +93,6 @@ pub enum LayerTiling {
 /// Effective kernel extent under dilation.
 pub fn effective_k(k: u32, dilation: u32) -> u32 {
     (k - 1) * dilation + 1
-}
-
-fn div_ceil(a: u32, b: u32) -> u32 {
-    (a + b - 1) / b
 }
 
 /// IFM stripe height needed to produce `oh_t` output rows.
@@ -173,12 +197,10 @@ pub fn conv_compute_cycles(
     };
     let kk = kh as u64 * kw as u64;
     let spatial = axis_sum(out.h, choice.oh_t, &|rows| rows as u64 * out.w as u64 * kk);
-    let row_passes = axis_sum(cin, choice.cin_t, &|c| {
-        (c as u64 + nce.array_rows as u64 - 1) / nce.array_rows as u64
-    });
-    let col_passes = axis_sum(cout, choice.cout_t, &|c| {
-        (c as u64 + nce.array_cols as u64 - 1) / nce.array_cols as u64
-    });
+    let row_passes =
+        axis_sum(cin, choice.cin_t, &|c| div_ceil64(c as u64, nce.array_rows as u64));
+    let col_passes =
+        axis_sum(cout, choice.cout_t, &|c| div_ceil64(c as u64, nce.array_cols as u64));
     let tiles = choice.n_oh as u64 * choice.n_cin as u64 * choice.n_cout as u64;
     // spatial varies over oh tiles only, passes over channel tiles only —
     // the cross product equals the sum over all tiles.
@@ -210,15 +232,18 @@ pub fn tile_conv(
     let eff_kh = effective_k(kh, dilation);
 
     // Effective streaming bandwidth (bytes/s): min of bus and annotated
-    // memory — same numbers the AVSM timing uses.
-    let bus_bps = sys.bus.bytes_per_cycle as f64 * sys.bus.freq_mhz as f64 * 1e6;
+    // memory, both taken at the *reference* clocks (see REF_* above) so the
+    // objective — and therefore the chosen tiling — is independent of the
+    // config's frequency annotations. Only the datapath widths and the
+    // effective-bandwidth annotation enter.
+    let bus_bps = sys.bus.bytes_per_cycle as f64 * REF_BUS_MHZ * 1e6;
     let mem_bps = sys.memory.data_bytes_per_cycle as f64
-        * sys.memory.freq_mhz as f64
+        * REF_MEM_MHZ
         * 1e6
         * sys.memory.avsm_eff_bw_pct as f64
         / 100.0;
     let stream_bps = bus_bps.min(mem_bps);
-    let nce_hz = nce.freq_mhz as f64 * 1e6;
+    let nce_hz = REF_NCE_MHZ * 1e6;
 
     let mut best: Option<(f64, u64, TilingChoice)> = None;
     for &cin_t in &channel_candidates(cin, nce.array_rows) {
@@ -496,6 +521,27 @@ mod tests {
             time(&big, &tb) <= time(&small, &ts) * 1.0001,
             "bigger buffers worsened the design"
         );
+    }
+
+    #[test]
+    fn tiling_is_frequency_independent() {
+        // The DSE compile cache is keyed on structural fields only
+        // (`compiler::CompileKey`); that is sound because the tiler's
+        // objective runs at pinned reference clocks — changing any clock
+        // annotation must leave the chosen tiling bit-identical.
+        let input = TensorShape::new(1, 256, 64, 64);
+        let op = conv_op(256, 256, 3, 1);
+        let out = op.out_shape(input);
+        let base = tile_conv(&sys(), input, out, 256, 256, 3, 3, 1, 1, 2).unwrap();
+        for f in [50u64, 125, 500, 1000] {
+            let mut s = sys();
+            s.nce.freq_mhz = f;
+            s.bus.freq_mhz = f;
+            s.memory.freq_mhz = 2 * f;
+            s.hkp.freq_mhz = f;
+            let t = tile_conv(&s, input, out, 256, 256, 3, 3, 1, 1, 2).unwrap();
+            assert_eq!(t, base, "tiling changed at {f} MHz");
+        }
     }
 
     #[test]

@@ -64,8 +64,8 @@ impl TimingModel for PrototypeTiming {
         self.bus_clk.cycles_to_ps(self.dma_setup_cycles)
     }
 
-    fn dma_bus_ps(&mut self, kind: &TaskKind, start: SimTime) -> SimTime {
-        let bytes = kind.bytes().max(1);
+    fn dma_bus_ps(&mut self, kind: &TaskKind, bytes: u64, start: SimTime) -> SimTime {
+        let bytes = bytes.max(1);
         let cursor = match kind {
             TaskKind::DmaLoad { buffer: BufferKind::Weights, .. } => &mut self.w_cursor,
             TaskKind::DmaLoad { .. } => &mut self.ifm_cursor,
@@ -80,7 +80,7 @@ impl TimingModel for PrototypeTiming {
         let proto_ps = self.bus_clk.cycles_to_ps(BUS_PROTO_CYCLES);
         // The interconnect data movement itself cannot beat the bus width:
         // the slower of DRAM and bus paces the transfer.
-        let bus_cycles = (bytes + self.bus_bytes_per_cycle - 1) / self.bus_bytes_per_cycle;
+        let bus_cycles = crate::util::div_ceil64(bytes, self.bus_bytes_per_cycle);
         let bus_ps = self.bus_clk.cycles_to_ps(bus_cycles);
         proto_ps + dram_ps.max(bus_ps)
     }
@@ -157,7 +157,7 @@ mod tests {
         let mut probe = PrototypeTiming::new(&s);
         for t in c.graph.tasks() {
             if t.kind.is_dma() {
-                probe.dma_bus_ps(&t.kind, 0);
+                probe.dma_bus_ps(&t.kind, t.kind.bytes(), 0);
             }
         }
         assert!(probe.dram_hit_rate() > 0.8, "hit rate {}", probe.dram_hit_rate());

@@ -5,19 +5,52 @@
 //! * [`sweep`] — cartesian sweeps over NCE geometry, frequencies, bus
 //!   widths and buffer sizes, simulating each point (traces disabled,
 //!   labels off: the fast path).
-//! * [`topdown`] — the paper's §2 "top-down" mode: given a target
-//!   performance, derive the physical requirement (e.g. minimum NCE
-//!   frequency); `bottomup` is the ordinary estimate for annotated
+//! * [`topdown_min_nce_freq`] — the paper's §2 "top-down" mode: given a
+//!   target performance, derive the physical requirement (e.g. minimum NCE
+//!   frequency); [`bottomup`] is the ordinary estimate for annotated
 //!   components.
-//! * [`pareto`] — extract the latency/cost frontier.
+//! * [`pareto`] — extract the latency/cost frontier (sort-based,
+//!   O(n log n)).
+//!
+//! # Evaluation pipeline: compile cache + parallel execution
+//!
+//! Evaluating a design point is `compile` (tiling + lowering) followed by
+//! `simulate`. Two structural facts make sweeps much cheaper than
+//! points x (compile + simulate):
+//!
+//! 1. **Compilation is memoized across points.** The compiler's output
+//!    depends only on the *structural* subset of the config — array
+//!    geometry, per-task setup cycles, buffer capacities, datapath widths
+//!    and the effective-bandwidth annotation (the fields of
+//!    [`crate::compiler::CompileKey`]) — never on clock frequencies: the
+//!    tiler's objective runs at pinned reference clocks (see
+//!    `compiler::tiling`), and the emitted task graph carries
+//!    frequency-free NCE cycle counts and DMA byte counts. All frequency
+//!    points of a sweep and every binary-search probe of
+//!    [`topdown_min_nce_freq`] therefore share one [`CompiledNet`] held in
+//!    a [`CompileCache`], and a "recompile" for a new frequency is a pure
+//!    retime: re-simulate the cached graph under the new annotations.
+//!
+//! 2. **Points simulate in parallel.** [`sweep`] fans the enumerated
+//!    design points out over `std::thread::scope` workers (worker `w`
+//!    takes points `w, w + T, w + 2T, ...`), all sharing the compile cache
+//!    by reference; results are scattered back by point index, so the
+//!    returned vector is byte-identical — same order, same `latency_ps` —
+//!    to the sequential sweep ([`sweep_seq`]), which the test suite
+//!    enforces. Simulation of one point is single-threaded and
+//!    deterministic; parallelism is purely across points.
 
-use crate::compiler::{compile, CompileOptions};
+use crate::compiler::{CompileCache, CompileOptions, CompiledNet};
 use crate::config::SystemConfig;
 use crate::graph::DnnGraph;
 use crate::hw::simulate_avsm;
 use crate::json::{obj, Value};
 use crate::sim::TraceRecorder;
 use anyhow::Result;
+
+/// Compiler options used for every DSE evaluation: double buffering on (the
+/// base software design point), labels off (never read on the fast path).
+const DSE_COMPILE_OPTS: CompileOptions = CompileOptions { double_buffer: true, labels: false };
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -51,6 +84,14 @@ impl SweepAxes {
     }
 }
 
+/// Execution policy for [`sweep_with`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepOptions {
+    /// Worker threads; 0 (the default) = one per available CPU, capped by
+    /// the point count.
+    pub threads: usize,
+}
+
 fn cost_proxy(sys: &SystemConfig) -> f64 {
     let mults = sys.nce.macs_per_cycle() as f64;
     let ram_kib = (sys.nce.ifm_buffer_kib + sys.nce.weight_buffer_kib + sys.nce.ofm_buffer_kib)
@@ -58,27 +99,44 @@ fn cost_proxy(sys: &SystemConfig) -> f64 {
     mults + 2.0 * ram_kib
 }
 
-/// Evaluate one design point (compile + simulate, fast path).
-pub fn evaluate(net: &DnnGraph, sys: &SystemConfig, name: impl Into<String>) -> Result<DesignPoint> {
-    let compiled = compile(
-        net,
-        sys,
-        CompileOptions { double_buffer: true, labels: false },
-    )?;
-    let mut trace = TraceRecorder::disabled();
-    let sim = simulate_avsm(&compiled, sys, &mut trace);
-    Ok(DesignPoint {
-        name: name.into(),
+fn point_from_sim(sys: &SystemConfig, name: String, total_ps: u64) -> DesignPoint {
+    DesignPoint {
+        name,
         sys: sys.clone(),
-        latency_ps: sim.total_ps,
+        latency_ps: total_ps,
         cost: cost_proxy(sys),
-        throughput: 1e12 / sim.total_ps as f64,
-    })
+        throughput: 1e12 / total_ps as f64,
+    }
 }
 
-/// Cartesian sweep around a base system. Infeasible points (tiling fails)
-/// are skipped.
-pub fn sweep(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<DesignPoint> {
+/// Evaluate one design point from scratch (compile + simulate, fast path).
+pub fn evaluate(net: &DnnGraph, sys: &SystemConfig, name: impl Into<String>) -> Result<DesignPoint> {
+    let compiled = crate::compiler::compile(net, sys, DSE_COMPILE_OPTS)?;
+    let mut trace = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, sys, &mut trace);
+    Ok(point_from_sim(sys, name.into(), sim.total_ps))
+}
+
+/// Evaluate one design point through a [`CompileCache`]: points that differ
+/// only in clock frequencies reuse one compilation and just re-simulate
+/// (retime). Produces byte-identical results to [`evaluate`].
+pub fn evaluate_cached(
+    net: &DnnGraph,
+    sys: &SystemConfig,
+    name: impl Into<String>,
+    cache: &CompileCache,
+) -> Result<DesignPoint> {
+    // `get_or_compile` validates the full config on every call (hits
+    // included), so an invalid swept point is rejected, never simulated.
+    let compiled: std::sync::Arc<CompiledNet> = cache.get_or_compile(net, sys)?;
+    let mut trace = TraceRecorder::disabled();
+    let sim = simulate_avsm(&compiled, sys, &mut trace);
+    Ok(point_from_sim(sys, name.into(), sim.total_ps))
+}
+
+/// Enumerate the cartesian grid of configs in deterministic axis order
+/// (geometry, frequency, bus width, IFM buffer — outermost to innermost).
+fn expand_configs(base: &SystemConfig, axes: &SweepAxes) -> Vec<SystemConfig> {
     let geoms = SweepAxes::or_base(
         &axes.array_geometries,
         &(base.nce.array_rows, base.nce.array_cols),
@@ -86,7 +144,7 @@ pub fn sweep(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<Desig
     let freqs = SweepAxes::or_base(&axes.nce_freqs_mhz, &base.nce.freq_mhz);
     let widths = SweepAxes::or_base(&axes.bus_bytes_per_cycle, &base.bus.bytes_per_cycle);
     let ifms = SweepAxes::or_base(&axes.ifm_buffer_kib, &base.nce.ifm_buffer_kib);
-    let mut points = Vec::new();
+    let mut configs = Vec::with_capacity(geoms.len() * freqs.len() * widths.len() * ifms.len());
     for &(rows, cols) in &geoms {
         for &f in &freqs {
             for &w in &widths {
@@ -98,29 +156,118 @@ pub fn sweep(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<Desig
                     sys.bus.bytes_per_cycle = w;
                     sys.nce.ifm_buffer_kib = ifm;
                     sys.name = format!("nce{rows}x{cols}_f{f}_bus{w}_ifm{ifm}");
-                    if let Ok(p) = evaluate(net, &sys, sys.name.clone()) {
-                        points.push(p);
-                    }
+                    configs.push(sys);
                 }
             }
         }
     }
-    points
+    configs
 }
 
-/// Pareto frontier: points not dominated in (latency, cost).
-pub fn pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
-    let mut front: Vec<&DesignPoint> = Vec::new();
-    for p in points {
-        let dominated = points.iter().any(|q| {
-            (q.latency_ps < p.latency_ps && q.cost <= p.cost)
-                || (q.latency_ps <= p.latency_ps && q.cost < p.cost)
-        });
-        if !dominated {
-            front.push(p);
-        }
+/// Cartesian sweep around a base system, parallel across design points with
+/// one shared compile cache. Infeasible points (tiling fails) are skipped.
+/// Result order is deterministic and identical to [`sweep_seq`].
+pub fn sweep(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<DesignPoint> {
+    sweep_with(net, base, axes, &SweepOptions::default())
+}
+
+/// Sequential reference sweep (one worker, same cache, same results).
+pub fn sweep_seq(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<DesignPoint> {
+    sweep_with(net, base, axes, &SweepOptions { threads: 1 })
+}
+
+/// Sweep with an explicit execution policy.
+pub fn sweep_with(
+    net: &DnnGraph,
+    base: &SystemConfig,
+    axes: &SweepAxes,
+    opts: &SweepOptions,
+) -> Vec<DesignPoint> {
+    let configs = expand_configs(base, axes);
+    let cache = CompileCache::new(DSE_COMPILE_OPTS);
+    let threads = if opts.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        opts.threads
     }
-    front.sort_by_key(|p| p.latency_ps);
+    .min(configs.len())
+    .max(1);
+
+    if threads == 1 {
+        return configs
+            .iter()
+            .filter_map(|sys| evaluate_cached(net, sys, sys.name.clone(), &cache).ok())
+            .collect();
+    }
+
+    // Strided fan-out: worker w evaluates points w, w+T, w+2T, ... and
+    // results scatter back by point index, so the output order matches the
+    // sequential enumeration exactly regardless of worker timing.
+    let mut slots: Vec<Option<DesignPoint>> = vec![None; configs.len()];
+    std::thread::scope(|scope| {
+        let cache = &cache;
+        let configs = &configs;
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out: Vec<(usize, Option<DesignPoint>)> = Vec::new();
+                    let mut i = w;
+                    while i < configs.len() {
+                        let sys = &configs[i];
+                        out.push((i, evaluate_cached(net, sys, sys.name.clone(), cache).ok()));
+                        i += threads;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, p) in h.join().expect("sweep worker panicked") {
+                slots[i] = p;
+            }
+        }
+    });
+    slots.into_iter().flatten().collect()
+}
+
+/// Pareto frontier: points not dominated in (latency, cost), sorted by
+/// latency. Sort-based O(n log n): after ordering by (latency, cost,
+/// input index), a point is on the frontier iff its cost is the minimum of
+/// its latency group and strictly below every cheaper-latency group's
+/// minimum — a single forward scan.
+pub fn pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        points[a]
+            .latency_ps
+            .cmp(&points[b].latency_ps)
+            .then_with(|| points[a].cost.total_cmp(&points[b].cost))
+            .then_with(|| a.cmp(&b))
+    });
+    let mut front: Vec<&DesignPoint> = Vec::new();
+    // Min cost over all strictly-faster points seen so far.
+    let mut best_faster_cost = f64::INFINITY;
+    let mut i = 0;
+    while i < idx.len() {
+        let lat = points[idx[i]].latency_ps;
+        let group_min = points[idx[i]].cost;
+        let mut j = i;
+        while j < idx.len() && points[idx[j]].latency_ps == lat {
+            j += 1;
+        }
+        if group_min < best_faster_cost {
+            // Frontier members of the group are exactly the (possibly
+            // duplicated) minimum-cost points; ties keep input order.
+            for &k in &idx[i..j] {
+                if points[k].cost > group_min {
+                    break;
+                }
+                front.push(&points[k]);
+            }
+            best_faster_cost = group_min;
+        }
+        i = j;
+    }
     front
 }
 
@@ -132,7 +279,9 @@ pub fn bottomup(net: &DnnGraph, sys: &SystemConfig) -> Result<DesignPoint> {
 
 /// Top-down assessment (paper §2): given a target end-to-end latency,
 /// derive the minimum NCE frequency that meets it (binary search over the
-/// simulated system; other annotations fixed).
+/// simulated system; other annotations fixed). Every probe after the first
+/// is compile-free: frequency is not part of the compile key, so the
+/// binary search retimes one cached compilation.
 pub fn topdown_min_nce_freq(
     net: &DnnGraph,
     base: &SystemConfig,
@@ -140,10 +289,11 @@ pub fn topdown_min_nce_freq(
     freq_range_mhz: (u64, u64),
 ) -> Result<Option<u64>> {
     let (mut lo, mut hi) = freq_range_mhz;
+    let cache = CompileCache::new(DSE_COMPILE_OPTS);
     let latency_at = |mhz: u64| -> Result<u64> {
         let mut sys = base.clone();
         sys.nce.freq_mhz = mhz;
-        Ok(evaluate(net, &sys, "probe")?.latency_ps)
+        Ok(evaluate_cached(net, &sys, "probe", &cache)?.latency_ps)
     };
     if latency_at(hi)? > target_latency_ps {
         return Ok(None); // unreachable even at the top of the range
@@ -227,6 +377,70 @@ mod tests {
     }
 
     #[test]
+    fn parallel_sweep_is_byte_identical_to_sequential() {
+        let net = models::lenet(28);
+        let axes = SweepAxes {
+            array_geometries: vec![(16, 32), (32, 64)],
+            nce_freqs_mhz: vec![125, 250, 500],
+            ifm_buffer_kib: vec![512, 1536],
+            ..Default::default()
+        };
+        let b = base();
+        let par = sweep_with(&net, &b, &axes, &SweepOptions { threads: 4 });
+        let seq = sweep_seq(&net, &b, &axes);
+        assert_eq!(par.len(), seq.len());
+        assert_eq!(par.len(), 12);
+        for (p, s) in par.iter().zip(&seq) {
+            assert_eq!(p.name, s.name);
+            assert_eq!(p.latency_ps, s.latency_ps, "{}", p.name);
+            assert_eq!(p.sys, s.sys);
+            assert_eq!(p.cost.to_bits(), s.cost.to_bits());
+            assert_eq!(p.throughput.to_bits(), s.throughput.to_bits());
+        }
+    }
+
+    #[test]
+    fn cached_frequency_point_matches_from_scratch_compile() {
+        // Warm the cache at the base clocks, then evaluate a point that
+        // differs only in frequency annotations: it must hit the cache and
+        // still produce exactly what a from-scratch compile+simulate does.
+        let net = models::dilated_vgg_tiny();
+        let b = base();
+        let cache = CompileCache::new(DSE_COMPILE_OPTS);
+        evaluate_cached(&net, &b, "warm", &cache).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+
+        let mut sys = b.clone();
+        sys.nce.freq_mhz = 425;
+        sys.bus.freq_mhz = 300;
+        sys.hkp.freq_mhz = 125;
+        let cached = evaluate_cached(&net, &sys, "p", &cache).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+
+        let scratch = evaluate(&net, &sys, "p").unwrap();
+        assert_eq!(cached.latency_ps, scratch.latency_ps);
+        assert_eq!(cached.cost.to_bits(), scratch.cost.to_bits());
+        assert_eq!(cached.throughput.to_bits(), scratch.throughput.to_bits());
+    }
+
+    #[test]
+    fn frequency_only_sweep_compiles_once() {
+        let net = models::lenet(28);
+        let axes = SweepAxes {
+            nce_freqs_mhz: vec![125, 250, 500, 1000],
+            ..Default::default()
+        };
+        // The public sweep shares one cache internally; verify the same
+        // sharing property directly through the cache it is built on.
+        let cache = CompileCache::new(DSE_COMPILE_OPTS);
+        for sys in expand_configs(&base(), &axes) {
+            evaluate_cached(&net, &sys, sys.name.clone(), &cache).unwrap();
+        }
+        assert_eq!(cache.misses(), 1, "frequency axis must not recompile");
+        assert_eq!(cache.hits(), 3);
+    }
+
+    #[test]
     fn pareto_front_is_monotone() {
         let net = models::lenet(28);
         let axes = SweepAxes {
@@ -242,6 +456,59 @@ mod tests {
             assert!(w[0].latency_ps <= w[1].latency_ps);
             assert!(w[0].cost >= w[1].cost);
         }
+    }
+
+    /// The O(n^2) dominance definition, kept as the reference oracle.
+    fn naive_pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
+        let mut front: Vec<&DesignPoint> = Vec::new();
+        for p in points {
+            let dominated = points.iter().any(|q| {
+                (q.latency_ps < p.latency_ps && q.cost <= p.cost)
+                    || (q.latency_ps <= p.latency_ps && q.cost < p.cost)
+            });
+            if !dominated {
+                front.push(p);
+            }
+        }
+        front.sort_by_key(|p| p.latency_ps);
+        front
+    }
+
+    #[test]
+    fn pareto_matches_naive_reference_with_ties_and_duplicates() {
+        let mk = |lat: u64, cost: f64, i: usize| DesignPoint {
+            name: format!("p{i}"),
+            sys: base(),
+            latency_ps: lat,
+            cost,
+            throughput: 0.0,
+        };
+        let grid: &[(u64, f64)] = &[
+            (10, 5.0),
+            (10, 5.0),
+            (10, 4.0),
+            (20, 3.0),
+            (20, 6.0),
+            (5, 9.0),
+            (30, 3.0),
+            (30, 2.0),
+            (40, 2.0),
+            (7, 9.0),
+            (20, 3.0), // duplicate frontier point
+        ];
+        let pts: Vec<DesignPoint> =
+            grid.iter().enumerate().map(|(i, &(l, c))| mk(l, c, i)).collect();
+        let fast = pareto(&pts);
+        let slow = naive_pareto(&pts);
+        assert_eq!(fast.len(), slow.len());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert!(std::ptr::eq(*a, *b), "frontier mismatch: {} vs {}", a.name, b.name);
+        }
+    }
+
+    #[test]
+    fn pareto_of_empty_is_empty() {
+        assert!(pareto(&[]).is_empty());
     }
 
     #[test]

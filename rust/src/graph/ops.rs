@@ -1,5 +1,7 @@
 //! Tensor shapes and layer operations.
 
+use crate::util::div_ceil;
+
 
 /// NCHW tensor shape (feature maps throughout the system are channel-major,
 /// matching the FPGA NCE's channel-tile streaming order).
@@ -172,10 +174,6 @@ impl Op {
     pub fn is_conv(&self) -> bool {
         matches!(self, Op::Conv2d { .. })
     }
-}
-
-pub(crate) fn div_ceil(a: u32, b: u32) -> u32 {
-    (a + b - 1) / b
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@ use super::exec::TimingModel;
 use crate::config::SystemConfig;
 use crate::sim::{ClockDomain, SimTime};
 use crate::taskgraph::TaskKind;
+use crate::util::div_ceil64;
 
 #[derive(Debug, Clone)]
 pub struct AvsmTiming {
@@ -51,9 +52,8 @@ impl TimingModel for AvsmTiming {
         self.bus_clk.cycles_to_ps(self.dma_setup_cycles) + self.mem_latency_ps
     }
 
-    fn dma_bus_ps(&mut self, kind: &TaskKind, _start: SimTime) -> SimTime {
-        let bytes = kind.bytes();
-        let cycles = (bytes + self.bus_bytes_per_cycle - 1) / self.bus_bytes_per_cycle;
+    fn dma_bus_ps(&mut self, _kind: &TaskKind, bytes: u64, _start: SimTime) -> SimTime {
+        let cycles = div_ceil64(bytes, self.bus_bytes_per_cycle);
         let bus_ps = self.bus_clk.cycles_to_ps(cycles.max(1));
         // The transfer is paced by the slower of interconnect and the
         // annotated effective memory bandwidth.
@@ -91,7 +91,7 @@ mod tests {
         // Data: paced by the slower of bus (1600/32 = 50 cycles @4 ns =
         // 200_000 ps) and annotated memory bandwidth
         // (4.26 GB/s * 88% = 3.75 GB/s -> ~426 ns for 1600 B).
-        let got = t.dma_bus_ps(&load, 0);
+        let got = t.dma_bus_ps(&load, load.bytes(), 0);
         assert!(got >= 200_000, "data phase {got} below bus time");
         let eff = 533e6 * 8.0 * 0.85;
         let mem_ps = 1600.0 / eff * 1e12;
@@ -102,11 +102,11 @@ mod tests {
     fn bus_time_rounds_up_and_has_floor() {
         let mut t = timing();
         let tiny = TaskKind::DmaStore { bytes: 1 };
-        assert_eq!(t.dma_bus_ps(&tiny, 0), 4000); // one beat minimum
+        assert_eq!(t.dma_bus_ps(&tiny, tiny.bytes(), 0), 4000); // one beat minimum
         let odd = TaskKind::DmaStore { bytes: 33 };
         // 33 B -> 2 beats of 32 (8000 ps) vs memory annotation (~8.8 ns):
         // the slower memory paces.
-        let got = t.dma_bus_ps(&odd, 0);
+        let got = t.dma_bus_ps(&odd, odd.bytes(), 0);
         assert!(got >= 2 * 4000 && got < 10_000, "{got}");
     }
 
@@ -116,7 +116,7 @@ mod tests {
         // big streams run at the memory annotation.
         let mut t = timing();
         let mb = TaskKind::DmaLoad { bytes: 1 << 20, buffer: BufferKind::Ifm };
-        let ps = t.dma_bus_ps(&mb, 0);
+        let ps = t.dma_bus_ps(&mb, mb.bytes(), 0);
         let gbs = (1u64 << 20) as f64 / (ps as f64 / 1e12) / 1e9;
         assert!(gbs < 4.0 && gbs > 3.5, "effective {gbs:.2} GB/s");
     }

@@ -24,9 +24,11 @@ use std::collections::VecDeque;
 pub trait TimingModel {
     /// Channel-held pre-bus phase (descriptor setup + memory access latency).
     fn dma_pre_ps(&mut self, kind: &TaskKind) -> SimTime;
-    /// Bus-held data phase; `start` is the absolute start time (the detailed
-    /// model uses it for refresh windows).
-    fn dma_bus_ps(&mut self, kind: &TaskKind, start: SimTime) -> SimTime;
+    /// Bus-held data phase for one `bytes`-sized chunk of `kind` (the
+    /// executor re-arbitrates per chunk, so `bytes <= kind.bytes()`; the
+    /// kind itself is passed for region/direction dispatch). `start` is the
+    /// absolute start time (the detailed model uses it for refresh windows).
+    fn dma_bus_ps(&mut self, kind: &TaskKind, bytes: u64, start: SimTime) -> SimTime;
     /// NCE occupancy of a compute task.
     fn compute_ps(&mut self, kind: &TaskKind) -> SimTime;
     /// HKP per-task dispatch overhead.
@@ -56,15 +58,6 @@ struct Channel {
     chunk: u64,
 }
 
-/// A copy of `kind` with its byte count replaced by one chunk's worth.
-fn with_bytes(kind: &TaskKind, bytes: u64) -> TaskKind {
-    match *kind {
-        TaskKind::DmaLoad { buffer, .. } => TaskKind::DmaLoad { bytes, buffer },
-        TaskKind::DmaStore { .. } => TaskKind::DmaStore { bytes },
-        other => other,
-    }
-}
-
 /// The executor. Create one per simulation run.
 pub struct Executor<'a, T: TimingModel> {
     sys: &'a SystemConfig,
@@ -76,14 +69,32 @@ impl<'a, T: TimingModel> Executor<'a, T> {
         Self { sys, timing }
     }
 
-    pub fn run(mut self, compiled: &CompiledNet, trace: &mut TraceRecorder) -> SimResult {
+    /// Run the simulation. Monomorphized over whether tracing is on so the
+    /// DSE fast path (disabled recorder) carries zero per-event trace
+    /// branches or label bookkeeping.
+    pub fn run(self, compiled: &CompiledNet, trace: &mut TraceRecorder) -> SimResult {
+        if trace.is_enabled() {
+            self.run_inner::<true>(compiled, trace)
+        } else {
+            self.run_inner::<false>(compiled, trace)
+        }
+    }
+
+    fn run_inner<const TRACED: bool>(
+        mut self,
+        compiled: &CompiledNet,
+        trace: &mut TraceRecorder,
+    ) -> SimResult {
         let tg = &compiled.graph;
         let tasks = tg.tasks();
         let n_layers = tg.layer_count() as usize;
         let fwd = tg.dependents();
         let mut indeg = tg.indegrees();
 
-        let mut engine: Engine<Ev> = Engine::new();
+        // Pre-size the event heap from the task graph: every task produces
+        // a bounded number of in-flight events, so this eliminates heap
+        // regrowth from the hot loop.
+        let mut engine: Engine<Ev> = Engine::with_capacity(tasks.len() + 8);
         let mut nce_queue: VecDeque<TaskId> = VecDeque::new();
         let mut nce_current: Option<TaskId> = None;
         let n_ch = self.sys.dma.channels.max(1) as usize;
@@ -100,11 +111,31 @@ impl<'a, T: TimingModel> Executor<'a, T> {
         let mut bus_busy = false;
         let mut bus_wait = Arbiter::new(n_ch);
 
-        // Trace resource rows (paper Fig 4: computation + communication).
-        let r_nce = trace.intern("nce");
-        let r_bus = trace.intern("bus");
-        let r_ch: Vec<u32> = (0..n_ch).map(|c| trace.intern(&format!("dma{c}"))).collect();
-        let empty_label = trace.intern("");
+        // Trace resource rows (paper Fig 4: computation + communication)
+        // and per-task label ids, pre-interned once so the traced hot loop
+        // does a plain vector read instead of a hash lookup per interval
+        // (§Perf: ~25% faster traced simulation). The untraced path skips
+        // all of it.
+        let (r_nce, r_bus, r_ch, label_ids) = if TRACED {
+            let r_nce = trace.intern("nce");
+            let r_bus = trace.intern("bus");
+            let r_ch: Vec<u32> =
+                (0..n_ch).map(|c| trace.intern(&format!("dma{c}"))).collect();
+            let empty_label = trace.intern("");
+            let label_ids: Vec<u32> = tasks
+                .iter()
+                .map(|t| {
+                    if t.label.is_empty() {
+                        empty_label
+                    } else {
+                        trace.intern(&t.label)
+                    }
+                })
+                .collect();
+            (r_nce, r_bus, r_ch, label_ids)
+        } else {
+            (0, 0, Vec::new(), Vec::new())
+        };
 
         // Per-layer busy accounting (works with tracing disabled too).
         let mut nce_busy = vec![0u64; n_layers];
@@ -121,23 +152,6 @@ impl<'a, T: TimingModel> Executor<'a, T> {
             if t.deps.is_empty() {
                 engine.schedule(dispatch, Ev::Issue(t.id));
             }
-        }
-
-        // Pre-intern every task label once — the hot loop then does a
-        // plain vector read instead of a hash lookup per interval
-        // (§Perf: ~25% faster traced simulation).
-        let label_ids: Vec<u32> = if trace.is_enabled() {
-            tasks
-                .iter()
-                .map(|t| if t.label.is_empty() { empty_label } else { trace.intern(&t.label) })
-                .collect()
-        } else {
-            vec![empty_label; tasks.len()]
-        };
-        macro_rules! label_of {
-            ($trace:expr, $t:expr) => {
-                label_ids[$t as usize]
-            };
         }
 
         // Main loop. Completion logic is inlined via a queue of completed
@@ -179,15 +193,16 @@ impl<'a, T: TimingModel> Executor<'a, T> {
                     } else {
                         let id =
                             channels[ch].current.take().expect("channel idle at DmaDone");
-                        let lbl = label_of!(trace, id);
-                        trace.record(
-                            r_ch[ch],
-                            lbl,
-                            id,
-                            IntervalKind::Transfer,
-                            channels[ch].started,
-                            now,
-                        );
+                        if TRACED {
+                            trace.record(
+                                r_ch[ch],
+                                label_ids[id as usize],
+                                id,
+                                IntervalKind::Transfer,
+                                channels[ch].started,
+                                now,
+                            );
+                        }
                         completed.push(id);
                     }
                 }
@@ -202,8 +217,16 @@ impl<'a, T: TimingModel> Executor<'a, T> {
                 if let Some(id) = nce_queue.pop_front() {
                     let dur = self.timing.compute_ps(&tasks[id as usize].kind);
                     nce_current = Some(id);
-                    let lbl = label_of!(trace, id);
-                    trace.record(r_nce, lbl, id, IntervalKind::Compute, now, now + dur);
+                    if TRACED {
+                        trace.record(
+                            r_nce,
+                            label_ids[id as usize],
+                            id,
+                            IntervalKind::Compute,
+                            now,
+                            now + dur,
+                        );
+                    }
                     nce_busy[tasks[id as usize].layer as usize] += dur;
                     engine.schedule(dur, Ev::NceDone);
                 }
@@ -232,11 +255,18 @@ impl<'a, T: TimingModel> Executor<'a, T> {
                     let id = channels[ch].current.expect("granted channel has no task");
                     let chunk = channels[ch].remaining.min(max_txn).max(1);
                     channels[ch].chunk = chunk;
-                    let chunk_kind = with_bytes(&tasks[id as usize].kind, chunk);
-                    let dur = self.timing.dma_bus_ps(&chunk_kind, now);
+                    let dur = self.timing.dma_bus_ps(&tasks[id as usize].kind, chunk, now);
                     bus_busy = true;
-                    let lbl = label_of!(trace, id);
-                    trace.record(r_bus, lbl, id, IntervalKind::Transfer, now, now + dur);
+                    if TRACED {
+                        trace.record(
+                            r_bus,
+                            label_ids[id as usize],
+                            id,
+                            IntervalKind::Transfer,
+                            now,
+                            now + dur,
+                        );
+                    }
                     bus_busy_ps[tasks[id as usize].layer as usize] += dur;
                     engine.schedule(dur, Ev::DmaDone { ch });
                 }
@@ -267,6 +297,9 @@ impl<'a, T: TimingModel> Executor<'a, T> {
         );
 
         let total = engine.now();
+        // Publish the makespan to the recorder even on the untraced path,
+        // where no `record` call ever ran (horizon contract).
+        trace.note_horizon(total);
         // Build per-layer windows from barrier completions.
         let mut layers = Vec::with_capacity(compiled.layers.len());
         let mut prev_end = 0u64;
@@ -356,7 +389,7 @@ mod tests {
         let dur = |t: &crate::taskgraph::Task| match t.kind {
             TaskKind::Compute { .. } => t1.compute_ps(&t.kind),
             TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. } => {
-                t1.dma_pre_ps(&t.kind) + t1.dma_bus_ps(&t.kind, 0)
+                t1.dma_pre_ps(&t.kind) + t1.dma_bus_ps(&t.kind, t.kind.bytes(), 0)
             }
             TaskKind::Barrier => 0,
         };
@@ -365,7 +398,7 @@ mod tests {
         let serial: u64 = c.graph.serial_sum(|t| match t.kind {
             TaskKind::Compute { .. } => t2.compute_ps(&t.kind),
             TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. } => {
-                t2.dma_pre_ps(&t.kind) + t2.dma_bus_ps(&t.kind, 0)
+                t2.dma_pre_ps(&t.kind) + t2.dma_bus_ps(&t.kind, t.kind.bytes(), 0)
             }
             TaskKind::Barrier => 0,
         });

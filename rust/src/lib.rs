@@ -40,3 +40,4 @@ pub mod sim;
 pub mod taskgraph;
 pub mod testkit;
 pub mod trace;
+pub mod util;

@@ -61,6 +61,13 @@ impl<E: Eq> Engine<E> {
         Self { queue: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
     }
 
+    /// An engine whose event heap is pre-sized for `cap` pending events.
+    /// The executor sizes this from the task-graph length so the hot loop
+    /// never reallocates the heap mid-simulation.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { queue: BinaryHeap::with_capacity(cap), now: 0, seq: 0, processed: 0 }
+    }
+
     /// Current simulated time (time of the most recently popped event).
     pub fn now(&self) -> SimTime {
         self.now
@@ -176,6 +183,17 @@ mod tests {
             }
         }
         assert_eq!(fired, vec![(1, 0), (8, 1), (15, 2), (22, 3), (29, 4)]);
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut eng: Engine<u32> = Engine::with_capacity(64);
+        eng.schedule(5, 1);
+        eng.schedule(3, 0);
+        assert_eq!(eng.pop(), Some(0));
+        assert_eq!(eng.pop(), Some(1));
+        assert_eq!(eng.pop(), None);
+        assert_eq!(eng.processed(), 2);
     }
 
     #[test]

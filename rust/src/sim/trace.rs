@@ -101,6 +101,14 @@ impl TraceRecorder {
         }
     }
 
+    /// Advance the horizon without recording an interval. The untraced
+    /// executor fast path skips `record` entirely, so it publishes the
+    /// final makespan through this instead — keeping the documented
+    /// "disabled recorder still tracks the horizon" contract intact.
+    pub fn note_horizon(&mut self, t: SimTime) {
+        self.horizon = self.horizon.max(t);
+    }
+
     pub fn intervals(&self) -> &[Interval] {
         &self.intervals
     }
@@ -171,6 +179,15 @@ mod tests {
         tr.record(r, r, 0, IntervalKind::Transfer, 0, 1234);
         assert!(tr.intervals().is_empty());
         assert_eq!(tr.horizon(), 1234);
+    }
+
+    #[test]
+    fn note_horizon_advances_without_intervals() {
+        let mut tr = TraceRecorder::disabled();
+        tr.note_horizon(500);
+        tr.note_horizon(200); // never moves backwards
+        assert_eq!(tr.horizon(), 500);
+        assert!(tr.intervals().is_empty());
     }
 
     #[test]

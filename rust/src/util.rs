@@ -1,0 +1,32 @@
+//! Small shared numeric helpers.
+//!
+//! One definition of ceiling division for the whole crate — the compiler's
+//! tiler, the graph IR's shape arithmetic and the cost model all round the
+//! same way, and a single copy keeps them provably consistent.
+
+/// `ceil(a / b)` for `u32`. `b` must be non-zero.
+pub fn div_ceil(a: u32, b: u32) -> u32 {
+    (a + b - 1) / b
+}
+
+/// `ceil(a / b)` for `u64`. `b` must be non-zero.
+pub fn div_ceil64(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_up() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+        assert_eq!(div_ceil64(0, 3), 0);
+        assert_eq!(div_ceil64(6, 3), 2);
+        assert_eq!(div_ceil64(7, 3), 3);
+        assert_eq!(div_ceil64(u64::from(u32::MAX) + 1, 2), 1 << 31);
+    }
+}

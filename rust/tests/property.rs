@@ -88,7 +88,7 @@ fn duration_model(sys: &SystemConfig) -> impl FnMut(&avsm::taskgraph::Task) -> u
     move |task: &avsm::taskgraph::Task| match task.kind {
         TaskKind::Compute { .. } => t.compute_ps(&task.kind),
         TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. } => {
-            t.dma_pre_ps(&task.kind) + t.dma_bus_ps(&task.kind, 0)
+            t.dma_pre_ps(&task.kind) + t.dma_bus_ps(&task.kind, task.kind.bytes(), 0)
         }
         TaskKind::Barrier => 0,
     }

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Repo check: build, tests, and a smoke run of the DSE sweep bench.
+# Usable both locally and as the CI entrypoint:
+#
+#     scripts/check.sh
+#
+# AVSM_BENCH_FAST=1 puts benchkit into its quick mode (1 warmup, 3 iters)
+# so the bench smoke finishes in CI time while still exercising the full
+# parallel compile-cached sweep pipeline and writing BENCH_dse_sweep.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== dse_sweep bench (smoke mode)"
+AVSM_BENCH_FAST=1 cargo bench --bench dse_sweep
+
+echo "== OK"
