@@ -1,0 +1,92 @@
+//! Campaign throughput: multi-workload sweeps through the shared worker
+//! pool, cold disk cache (compile + serialize + persist) vs warm disk
+//! cache (deserialize only — zero compilations). Emits the machine-
+//! readable `BENCH_campaign.json` snapshot at the repo root with
+//! points/sec for both regimes.
+
+use avsm::benchkit::Bench;
+use avsm::campaign::{self, CampaignOptions, CampaignSpec};
+use avsm::config::SystemConfig;
+use avsm::dse;
+use avsm::graph::models;
+use std::path::Path;
+
+fn spec() -> CampaignSpec {
+    CampaignSpec {
+        nets: vec![
+            models::lenet(28),
+            models::dilated_vgg_tiny(),
+            models::tiny_resnet(32, 16, 3),
+        ],
+        base: SystemConfig::base_paper(),
+        axes: dse::SweepAxes {
+            array_geometries: vec![(16, 32), (32, 64), (64, 64)],
+            nce_freqs_mhz: vec![125, 250, 500],
+            ..Default::default()
+        },
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("campaign");
+    let spec = spec();
+    let units =
+        (spec.nets.len() * dse::expand_configs(&spec.base, &spec.axes).len()) as f64;
+
+    // Memory-only baseline: the shared-pool fan-out without a disk tier.
+    let mem_opts = CampaignOptions::default();
+    let med_mem = bench
+        .case("campaign_3nets_9pts_mem", || campaign::run(&spec, &mem_opts).unwrap())
+        .median;
+
+    let dir = std::env::temp_dir().join(format!("avsm_bench_campaign_{}", std::process::id()));
+    let disk_opts = CampaignOptions { cache_dir: Some(dir.clone()), ..Default::default() };
+
+    // Cold: every iteration starts from an empty directory, so the case
+    // times compile + serialize + persist for all structural keys.
+    let med_cold = bench
+        .case("campaign_cold_disk_cache", || {
+            let _ = std::fs::remove_dir_all(&dir);
+            campaign::run(&spec, &disk_opts).unwrap()
+        })
+        .median;
+
+    // Warm: populate once, then every iteration deserializes instead of
+    // compiling (the repeated-CLI-invocation scenario).
+    campaign::run(&spec, &disk_opts).unwrap();
+    let med_warm = bench
+        .case("campaign_warm_disk_cache", || campaign::run(&spec, &disk_opts).unwrap())
+        .median;
+
+    let warm = campaign::run(&spec, &disk_opts).unwrap();
+    assert_eq!(warm.compiles, 0, "warm campaign must be compile-free");
+    assert!(warm.disk_hits > 0);
+
+    let pps_cold = units / med_cold.as_secs_f64();
+    let pps_warm = units / med_warm.as_secs_f64();
+    bench.metric("points_per_sec_cold", pps_cold, "design points/s");
+    bench.metric("points_per_sec_warm", pps_warm, "design points/s");
+    bench.metric(
+        "warm_speedup_vs_cold",
+        med_cold.as_secs_f64() / med_warm.as_secs_f64(),
+        "x",
+    );
+    bench.metric("points_per_sec_mem", units / med_mem.as_secs_f64(), "design points/s");
+    bench.metric("frontier_sizes_total", warm.nets.iter().map(|n| n.frontier.len()).sum::<usize>() as f64, "points");
+
+    // Machine-readable perf snapshot at the repo root (the package lives
+    // in rust/, so the manifest dir's parent is the repository).
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_campaign.json"))
+        .unwrap_or_else(|| "BENCH_campaign.json".into());
+    if let Err(e) = bench.write_json(
+        &out,
+        &[("points_per_sec_cold", pps_cold), ("points_per_sec_warm", pps_warm)],
+    ) {
+        eprintln!("warning: could not write {}: {e}", out.display());
+    } else {
+        println!("wrote {}", out.display());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

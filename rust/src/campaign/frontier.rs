@@ -1,0 +1,263 @@
+//! Online (streaming) Pareto frontier over `(latency, cost)`.
+//!
+//! [`crate::dse::pareto`] recomputes the frontier from a complete sweep;
+//! the campaign instead inserts design points *as workers finish* and
+//! prunes dominated members incrementally, so a huge multi-workload sweep
+//! streams results with O(frontier) memory for the frontier itself instead
+//! of buffering every point.
+//!
+//! # Batch equivalence
+//!
+//! The maintained set is exactly the non-dominated subset of everything
+//! inserted so far, ordered by `(latency, cost, seq)` — the same
+//! definition, duplicate handling (all copies of a frontier point are
+//! kept) and tie order as [`crate::dse::pareto`]. `seq` is the caller's
+//! stable point index ([`StreamingFrontier::insert_with_seq`]); when the
+//! campaign passes each point's sweep-enumeration index, the final
+//! frontier is **byte-identical to `dse::pareto(dse::sweep(..))`** no
+//! matter in which order workers delivered the points — the property the
+//! test suite enforces against randomized point sets.
+//!
+//! Insertion is O(log n) to locate + amortized O(1) per pruned member
+//! (each point is evicted at most once over a frontier's lifetime).
+
+use crate::dse::DesignPoint;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    latency_ps: u64,
+    cost: f64,
+    seq: usize,
+    point: DesignPoint,
+}
+
+impl Entry {
+    /// Sort key comparison: (latency, cost, seq), total order (costs are
+    /// finite by construction).
+    fn key_cmp(&self, lat: u64, cost: f64, seq: usize) -> std::cmp::Ordering {
+        self.latency_ps
+            .cmp(&lat)
+            .then_with(|| self.cost.total_cmp(&cost))
+            .then_with(|| self.seq.cmp(&seq))
+    }
+}
+
+/// Incrementally maintained Pareto frontier (minimize latency and cost).
+#[derive(Debug, Default)]
+pub struct StreamingFrontier {
+    /// Invariant: sorted by `(latency, cost, seq)`; costs non-increasing
+    /// along the vector — strictly decreasing across distinct latencies,
+    /// equal within a latency group (duplicate frontier points).
+    entries: Vec<Entry>,
+    next_seq: usize,
+    inserted: usize,
+    dominated: usize,
+    pruned: usize,
+}
+
+impl StreamingFrontier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a point with an auto-assigned sequence number (arrival
+    /// order). Use [`StreamingFrontier::insert_with_seq`] when a stable
+    /// enumeration index exists and batch-identical tie order matters.
+    /// Returns `true` iff the point joined the frontier.
+    pub fn insert(&mut self, point: DesignPoint) -> bool {
+        let seq = self.next_seq;
+        self.insert_with_seq(point, seq)
+    }
+
+    /// Insert a point under an explicit sequence number (its index in some
+    /// stable enumeration). Ties in `(latency, cost)` keep ascending `seq`
+    /// order, which is what makes out-of-order streaming reproduce the
+    /// batch frontier exactly. Returns `true` iff the point joined.
+    pub fn insert_with_seq(&mut self, point: DesignPoint, seq: usize) -> bool {
+        self.next_seq = self.next_seq.max(seq + 1);
+        self.inserted += 1;
+        let (lat, cost) = (point.latency_ps, point.cost);
+        // First entry sorted after (lat, cost, seq).
+        let pos = self
+            .entries
+            .partition_point(|e| e.key_cmp(lat, cost, seq) == std::cmp::Ordering::Less);
+        // Dominance test against the cheapest no-slower member: entries
+        // before `pos` all have key < (lat, cost, seq), and by the cost
+        // invariant the last of them carries the minimum cost among them.
+        if pos > 0 {
+            let e = &self.entries[pos - 1];
+            let strictly_better =
+                e.cost < cost || (e.cost == cost && e.latency_ps < lat);
+            if strictly_better {
+                self.dominated += 1;
+                return false;
+            }
+            // Remaining case: e.cost == cost && e.latency_ps == lat — a
+            // duplicate of a frontier point, which the batch definition
+            // keeps; fall through and keep it too. (e.cost > cost cannot
+            // dominate.)
+        }
+        self.entries.insert(pos, Entry { latency_ps: lat, cost, seq, point });
+        // Prune members the new point dominates. They sit directly after
+        // it: skip exact (latency, cost) ties (kept duplicates), then
+        // evict while cost has not dropped below the new point's.
+        let mut tie_end = pos + 1;
+        while tie_end < self.entries.len()
+            && self.entries[tie_end].latency_ps == lat
+            && self.entries[tie_end].cost == cost
+        {
+            tie_end += 1;
+        }
+        let mut prune_end = tie_end;
+        while prune_end < self.entries.len() && self.entries[prune_end].cost >= cost {
+            prune_end += 1;
+        }
+        self.pruned += prune_end - tie_end;
+        self.entries.drain(tie_end..prune_end);
+        true
+    }
+
+    /// Current frontier, ordered by `(latency, cost, seq)`.
+    pub fn points(&self) -> impl Iterator<Item = &DesignPoint> {
+        self.entries.iter().map(|e| &e.point)
+    }
+
+    /// Consume the frontier into owned points, ordered by
+    /// `(latency, cost, seq)`.
+    pub fn into_points(self) -> Vec<DesignPoint> {
+        self.entries.into_iter().map(|e| e.point).collect()
+    }
+
+    /// Members currently on the frontier.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Points offered so far.
+    pub fn inserted(&self) -> usize {
+        self.inserted
+    }
+
+    /// Points rejected on arrival (already dominated).
+    pub fn dominated(&self) -> usize {
+        self.dominated
+    }
+
+    /// Former members evicted by later points.
+    pub fn pruned(&self) -> usize {
+        self.pruned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::dse;
+
+    fn pt(lat: u64, cost: f64, i: usize) -> DesignPoint {
+        DesignPoint {
+            name: format!("p{i}"),
+            sys: SystemConfig::base_paper(),
+            latency_ps: lat,
+            cost,
+            throughput: 0.0,
+        }
+    }
+
+    /// The tie/duplicate-heavy grid from the dse::pareto unit tests.
+    fn grid() -> Vec<DesignPoint> {
+        [
+            (10, 5.0),
+            (10, 5.0),
+            (10, 4.0),
+            (20, 3.0),
+            (20, 6.0),
+            (5, 9.0),
+            (30, 3.0),
+            (30, 2.0),
+            (40, 2.0),
+            (7, 9.0),
+            (20, 3.0),
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, &(l, c))| pt(l, c, i))
+        .collect()
+    }
+
+    fn assert_matches_batch(stream: &[DesignPoint], all: &[DesignPoint]) {
+        let batch = dse::pareto(all);
+        assert_eq!(stream.len(), batch.len(), "frontier size mismatch");
+        for (s, b) in stream.iter().zip(&batch) {
+            assert_eq!(s.name, b.name);
+            assert_eq!(s.latency_ps, b.latency_ps);
+            assert_eq!(s.cost.to_bits(), b.cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn in_order_insertion_matches_batch_pareto() {
+        let all = grid();
+        let mut f = StreamingFrontier::new();
+        for (i, p) in all.iter().enumerate() {
+            f.insert_with_seq(p.clone(), i);
+        }
+        assert_eq!(f.inserted(), all.len());
+        let stream: Vec<DesignPoint> = f.into_points();
+        assert_matches_batch(&stream, &all);
+    }
+
+    #[test]
+    fn out_of_order_insertion_matches_batch_pareto() {
+        let all = grid();
+        // Reversed and interleaved arrival orders.
+        for order in [
+            (0..all.len()).rev().collect::<Vec<_>>(),
+            (0..all.len()).step_by(2).chain((0..all.len()).skip(1).step_by(2)).collect(),
+        ] {
+            let mut f = StreamingFrontier::new();
+            for &i in &order {
+                f.insert_with_seq(all[i].clone(), i);
+            }
+            let stream: Vec<DesignPoint> = f.into_points();
+            assert_matches_batch(&stream, &all);
+        }
+    }
+
+    #[test]
+    fn duplicates_of_a_frontier_point_are_kept() {
+        let mut f = StreamingFrontier::new();
+        assert!(f.insert(pt(10, 5.0, 0)));
+        assert!(f.insert(pt(10, 5.0, 1)));
+        assert_eq!(f.len(), 2);
+        // A strictly better point evicts both copies.
+        assert!(f.insert(pt(10, 4.0, 2)));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.pruned(), 2);
+    }
+
+    #[test]
+    fn dominated_arrivals_are_counted_not_stored() {
+        let mut f = StreamingFrontier::new();
+        assert!(f.insert(pt(10, 5.0, 0)));
+        assert!(!f.insert(pt(12, 5.0, 1)), "slower, same cost");
+        assert!(!f.insert(pt(10, 6.0, 2)), "same latency, pricier");
+        assert!(!f.insert(pt(15, 9.0, 3)), "worse on both");
+        assert_eq!((f.len(), f.dominated(), f.pruned()), (1, 3, 0));
+        // Incomparable point joins.
+        assert!(f.insert(pt(5, 7.0, 4)));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn empty_frontier() {
+        let f = StreamingFrontier::new();
+        assert!(f.is_empty());
+        assert_eq!(f.points().count(), 0);
+    }
+}

@@ -1,0 +1,317 @@
+//! Campaign engine: multi-workload co-design sweeps on one shared worker
+//! pool, with streaming Pareto frontiers and a persistent compile cache.
+//!
+//! The paper's pitch is "design space exploration by a click of a button"
+//! across *systems*: a co-design loop ranks one hardware configuration
+//! grid against a whole portfolio of workloads (the way SMAUG evaluates
+//! full-stack design points across several DNNs, and ANNETTE amortizes
+//! per-platform model building across networks). [`crate::dse::sweep`]
+//! covers one net; [`run`] covers the portfolio.
+//!
+//! # Execution model
+//!
+//! A campaign is `N` workloads x one [`SweepAxes`] grid around a base
+//! [`SystemConfig`]. The grid is expanded **once** (deterministic axis
+//! order, shared by every net) and the full `N x P` unit matrix fans out
+//! over a single worker pool ([`pool`]) — workers do not idle at per-net
+//! boundaries the way `N` back-to-back sweeps would. Each unit:
+//!
+//! 1. resolves its compiled artifact through its net's
+//!    [`PersistentCache`] (memory → disk → compile; frequency-only
+//!    config changes always share one compilation, exactly as in
+//!    single-net DSE),
+//! 2. simulates the point (AVSM fast path, traces off), and
+//! 3. streams the resulting [`DesignPoint`] back to the coordinating
+//!    thread, which folds it into that net's online
+//!    [`StreamingFrontier`] — dominated points are dropped on arrival,
+//!    so memory stays O(frontier + grid), not O(evaluations), and
+//!    frontiers are live while the sweep still runs.
+//!
+//! Each point carries its grid-enumeration index as the frontier sequence
+//! number, which makes the final per-net frontier **byte-identical** to
+//! batch `dse::pareto(dse::sweep(..))` regardless of worker timing — the
+//! equivalence the test suite enforces.
+//!
+//! # Persistence model
+//!
+//! With [`CampaignOptions::cache_dir`] set, every successful compilation
+//! is serialized (task graph + per-layer records + full [`CompileKey`])
+//! into the directory via [`store`]; a later run — same process or a new
+//! CLI invocation — resolves every structural key from disk and performs
+//! **zero compilations** (assertable via [`CampaignResult::compiles`]).
+//! Corrupted or stale entries are detected (schema/key verification,
+//! task-graph validation), rejected, recompiled and rewritten. Without a
+//! cache directory the campaign still shares compilations in memory, per
+//! net, across the whole grid.
+//!
+//! [`CompileKey`]: crate::compiler::CompileKey
+
+pub mod frontier;
+pub mod pool;
+pub mod store;
+
+pub use frontier::StreamingFrontier;
+pub use store::PersistentCache;
+
+use crate::config::SystemConfig;
+use crate::dse::{self, DesignPoint, SweepAxes};
+use crate::graph::DnnGraph;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// What to sweep: a portfolio of workloads against one config grid.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub nets: Vec<DnnGraph>,
+    /// Base system; axes replace fields of this config (empty axes keep
+    /// the base value), exactly as in [`dse::sweep`].
+    pub base: SystemConfig,
+    pub axes: SweepAxes,
+}
+
+/// Execution policy for [`run`].
+#[derive(Debug, Clone, Default)]
+pub struct CampaignOptions {
+    /// Worker threads; 0 (default) = one per available CPU, capped by the
+    /// unit count.
+    pub threads: usize,
+    /// Directory for the persistent compile cache; `None` keeps the cache
+    /// in memory only.
+    pub cache_dir: Option<PathBuf>,
+    /// Also retain every feasible evaluated point per net (in grid order,
+    /// identical to `dse::sweep` output). Off by default: a campaign
+    /// normally streams, keeping only the frontier.
+    pub keep_points: bool,
+}
+
+/// Per-workload outcome.
+#[derive(Debug, Clone)]
+pub struct NetOutcome {
+    pub net: String,
+    /// Pareto frontier, ordered by (latency, cost, grid index) — byte-
+    /// identical to `dse::pareto(dse::sweep(..))` for the same grid.
+    pub frontier: Vec<DesignPoint>,
+    /// All feasible points in grid order (empty unless
+    /// [`CampaignOptions::keep_points`]).
+    pub points: Vec<DesignPoint>,
+    /// Grid points evaluated (the full grid).
+    pub evaluated: usize,
+    /// Points that compiled and simulated (infeasible tilings excluded).
+    pub feasible: usize,
+    /// Feasible points dominated on arrival at the frontier.
+    pub dominated: usize,
+    /// Former frontier members evicted by later points.
+    pub pruned: usize,
+    /// Compiler invocations for this net (0 on a warm disk cache).
+    pub compiles: u64,
+    /// Structural keys served from the disk tier.
+    pub disk_hits: u64,
+    /// Probes served from the in-memory tier.
+    pub mem_hits: u64,
+    /// Corrupted/stale disk entries rejected.
+    pub rejected: u64,
+}
+
+/// Result of one campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub nets: Vec<NetOutcome>,
+    /// Design points in the (shared) expanded grid.
+    pub grid_points: usize,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Compiler invocations across all nets — zero on a warm disk cache.
+    pub compiles: u64,
+    pub disk_hits: u64,
+    pub mem_hits: u64,
+    pub rejected_entries: u64,
+}
+
+impl CampaignResult {
+    /// Feasible evaluations across all workloads.
+    pub fn total_feasible(&self) -> usize {
+        self.nets.iter().map(|n| n.feasible).sum()
+    }
+
+    /// Units (workloads x grid points) evaluated.
+    pub fn total_units(&self) -> usize {
+        self.nets.len() * self.grid_points
+    }
+}
+
+/// Run a campaign: every workload x every grid point in one fan-out.
+pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult> {
+    if spec.nets.is_empty() {
+        bail!("campaign needs at least one workload");
+    }
+    for net in &spec.nets {
+        net.validate()?;
+    }
+    spec.base.validate()?;
+
+    let configs = dse::expand_configs(&spec.base, &spec.axes);
+    let n_nets = spec.nets.len();
+    let n_cfg = configs.len();
+    let jobs = n_nets * n_cfg;
+    let threads = pool::resolve_threads(opts.threads, jobs);
+
+    let caches: Vec<PersistentCache> = spec
+        .nets
+        .iter()
+        .map(|_| PersistentCache::new(dse::DSE_COMPILE_OPTS, opts.cache_dir.clone()))
+        .collect::<Result<_>>()?;
+
+    let mut frontiers: Vec<StreamingFrontier> =
+        (0..n_nets).map(|_| StreamingFrontier::new()).collect();
+    let mut kept: Vec<Vec<Option<DesignPoint>>> = (0..n_nets)
+        .map(|_| if opts.keep_points { vec![None; n_cfg] } else { Vec::new() })
+        .collect();
+    let mut feasible = vec![0usize; n_nets];
+
+    // Unit u covers net u / n_cfg at grid point u % n_cfg (net-major, so
+    // one net's units are contiguous and its compile cache warms early).
+    // Workers evaluate; the coordinating thread streams arrivals into the
+    // per-net frontiers.
+    pool::for_each_completed(
+        jobs,
+        opts.threads,
+        |u| {
+            let (ni, ci) = (u / n_cfg, u % n_cfg);
+            let sys = &configs[ci];
+            caches[ni]
+                .get_or_compile(&spec.nets[ni], sys)
+                .ok()
+                .map(|compiled| dse::evaluate_compiled(&compiled, sys, sys.name.clone()))
+        },
+        |u, maybe_point| {
+            if let Some(p) = maybe_point {
+                let (ni, ci) = (u / n_cfg, u % n_cfg);
+                feasible[ni] += 1;
+                if opts.keep_points {
+                    kept[ni][ci] = Some(p.clone());
+                }
+                frontiers[ni].insert_with_seq(p, ci);
+            }
+        },
+    );
+
+    let mut nets = Vec::with_capacity(n_nets);
+    let (mut compiles, mut disk_hits, mut mem_hits, mut rejected) = (0u64, 0u64, 0u64, 0u64);
+    for (ni, frontier) in frontiers.into_iter().enumerate() {
+        let cache = &caches[ni];
+        compiles += cache.compiles();
+        disk_hits += cache.disk_hits();
+        mem_hits += cache.mem_hits();
+        rejected += cache.rejected();
+        let dominated = frontier.dominated();
+        let pruned = frontier.pruned();
+        nets.push(NetOutcome {
+            net: spec.nets[ni].name.clone(),
+            evaluated: n_cfg,
+            feasible: feasible[ni],
+            dominated,
+            pruned,
+            compiles: cache.compiles(),
+            disk_hits: cache.disk_hits(),
+            mem_hits: cache.mem_hits(),
+            rejected: cache.rejected(),
+            points: kept[ni].drain(..).flatten().collect(),
+            frontier: frontier.into_points(),
+        });
+    }
+    Ok(CampaignResult {
+        nets,
+        grid_points: n_cfg,
+        threads,
+        compiles,
+        disk_hits,
+        mem_hits,
+        rejected_entries: rejected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn small_spec() -> CampaignSpec {
+        CampaignSpec {
+            nets: vec![models::lenet(28), models::dilated_vgg_tiny()],
+            base: SystemConfig::base_paper(),
+            axes: SweepAxes {
+                array_geometries: vec![(16, 32), (32, 64)],
+                nce_freqs_mhz: vec![125, 250],
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn empty_portfolio_is_rejected() {
+        let spec = CampaignSpec {
+            nets: vec![],
+            base: SystemConfig::base_paper(),
+            axes: SweepAxes::default(),
+        };
+        assert!(run(&spec, &CampaignOptions::default()).is_err());
+    }
+
+    #[test]
+    fn frontier_matches_per_net_sweep_and_points_keep_grid_order() {
+        let spec = small_spec();
+        let opts = CampaignOptions { keep_points: true, ..Default::default() };
+        let result = run(&spec, &opts).unwrap();
+        assert_eq!(result.grid_points, 4);
+        assert_eq!(result.nets.len(), 2);
+        for (ni, net) in spec.nets.iter().enumerate() {
+            let sweep = dse::sweep(net, &spec.base, &spec.axes);
+            let batch = dse::pareto(&sweep);
+            let got = &result.nets[ni];
+            assert_eq!(got.net, net.name);
+            // keep_points reproduces the sweep exactly, order included.
+            assert_eq!(got.points.len(), sweep.len());
+            for (a, b) in got.points.iter().zip(&sweep) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.latency_ps, b.latency_ps);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            }
+            // Streaming frontier == batch frontier.
+            assert_eq!(got.frontier.len(), batch.len());
+            for (a, b) in got.frontier.iter().zip(&batch) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.latency_ps, b.latency_ps);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+                assert_eq!(a.sys, b.sys);
+            }
+            // Accounting adds up.
+            assert_eq!(got.feasible, sweep.len());
+            assert_eq!(
+                got.frontier.len() + got.dominated + got.pruned,
+                got.feasible,
+                "every feasible point is on the frontier, dominated, or pruned"
+            );
+        }
+        // One compile per structural key per net: 2 geometries.
+        assert_eq!(result.compiles, 4);
+        assert_eq!(result.disk_hits, 0);
+    }
+
+    #[test]
+    fn single_threaded_run_matches_parallel() {
+        let spec = small_spec();
+        let par = run(&spec, &CampaignOptions::default()).unwrap();
+        let seq = run(
+            &spec,
+            &CampaignOptions { threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        for (a, b) in par.nets.iter().zip(&seq.nets) {
+            assert_eq!(a.frontier.len(), b.frontier.len());
+            for (x, y) in a.frontier.iter().zip(&b.frontier) {
+                assert_eq!(x.name, y.name);
+                assert_eq!(x.latency_ps, y.latency_ps);
+            }
+        }
+    }
+}

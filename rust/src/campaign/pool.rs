@@ -1,0 +1,147 @@
+//! Shared worker pool for fan-out across design points, workloads and
+//! fidelity levels.
+//!
+//! One strided-scheduling implementation serves every parallel consumer in
+//! the crate — [`crate::dse::sweep`] (points of one net),
+//! [`crate::campaign::run`] (workloads x points in a single fan-out) and
+//! the Fig 5 AVSM-vs-prototype comparison
+//! ([`crate::report::Fig5Report::compute_many`], independent simulation
+//! runs). Worker `w` of `T` executes jobs `w, w + T, w + 2T, ...`:
+//!
+//! * [`parallel_map`] scatters results back by job index, so the output
+//!   order is deterministic — identical to the one-worker run — no matter
+//!   how workers interleave.
+//! * [`for_each_completed`] hands `(index, result)` pairs to a collector
+//!   on the calling thread *as workers finish* (mpsc channel), which is
+//!   what lets the campaign feed its online Pareto frontier without
+//!   buffering a whole sweep first. With more than one worker the arrival
+//!   order is timing-dependent; with one worker (or `jobs <= 1`) the
+//!   collector runs inline in job order.
+//!
+//! A panic in a job propagates: the channel drains, the scope joins every
+//! worker, and the panic resumes on the caller. A panic in the collector
+//! closes the receiver, which workers observe as a send error and exit.
+
+use std::sync::mpsc;
+
+/// Number of workers for `requested` threads (0 = one per available CPU),
+/// capped by the job count, floored at one.
+pub fn resolve_threads(requested: usize, jobs: usize) -> usize {
+    let threads = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    threads.min(jobs).max(1)
+}
+
+/// Run `jobs` invocations of `f` on up to `threads` workers (0 = all CPUs)
+/// and return the results in job order.
+pub fn parallel_map<T, F>(jobs: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(jobs);
+    slots.resize_with(jobs, || None);
+    for_each_completed(jobs, threads, f, |i, v| slots[i] = Some(v));
+    slots
+        .into_iter()
+        .map(|s| s.expect("pool: job produced no result"))
+        .collect()
+}
+
+/// Run `jobs` invocations of `f` on up to `threads` workers (0 = all CPUs),
+/// delivering each `(job index, result)` to `collect` on the calling thread
+/// as soon as it is available — the streaming primitive behind the
+/// campaign's online Pareto frontier.
+pub fn for_each_completed<T, F, C>(jobs: usize, threads: usize, f: F, mut collect: C)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    C: FnMut(usize, T),
+{
+    if jobs == 0 {
+        return;
+    }
+    let threads = resolve_threads(threads, jobs);
+    if threads == 1 {
+        for i in 0..jobs {
+            let v = f(i);
+            collect(i, v);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        let f = &f;
+        for w in 0..threads {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let mut i = w;
+                while i < jobs {
+                    // A send error means the receiver is gone (collector
+                    // panicked): stop producing.
+                    if tx.send((i, f(i))).is_err() {
+                        return;
+                    }
+                    i += threads;
+                }
+            });
+        }
+        drop(tx);
+        for (i, v) in rx {
+            collect(i, v);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_job_order_regardless_of_workers() {
+        for threads in [0usize, 1, 2, 7] {
+            let out = parallel_map(23, threads, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn streaming_delivers_every_job_exactly_once() {
+        let mut seen = vec![0u32; 50];
+        for_each_completed(50, 4, |i| i, |i, v| {
+            assert_eq!(i, v);
+            seen[i] += 1;
+        });
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn single_worker_streams_in_job_order() {
+        let mut order = Vec::new();
+        for_each_completed(10, 1, |i| i, |i, _| order.push(i));
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_jobs_is_a_no_op() {
+        let calls = AtomicUsize::new(0);
+        let out: Vec<u32> = parallel_map(0, 4, |_| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            0
+        });
+        assert!(out.is_empty());
+        assert_eq!(calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn thread_resolution_caps_and_floors() {
+        assert_eq!(resolve_threads(8, 3), 3);
+        assert_eq!(resolve_threads(2, 100), 2);
+        assert!(resolve_threads(0, 100) >= 1);
+        assert_eq!(resolve_threads(5, 0), 1);
+    }
+}

@@ -1,0 +1,409 @@
+//! Disk-persistent compile cache (schema `avsm-compile-cache-v1`).
+//!
+//! `compiler::CompileCache` memoizes compilations within one process; this
+//! module adds the disk tier that carries them **across CLI invocations**
+//! (ROADMAP "cache persistence"): each compiled artifact is serialized —
+//! the task graph via [`crate::taskgraph::serialize`], the per-layer
+//! records alongside — into one JSON document keyed by
+//! [`CompileKey::fingerprint`] (which already covers the net's content
+//! fingerprint plus every structural config field). A warm directory makes
+//! a repeated campaign or sweep **compile-free**: every structural key is
+//! deserialized instead of re-tiled and re-lowered.
+//!
+//! Safety properties:
+//!
+//! * Every entry embeds its full [`CompileKey::to_json`]; a load verifies
+//!   it field by field against the expected key, so stale entries, hash
+//!   collisions and schema drift read as misses, never as wrong artifacts.
+//! * Corrupted or truncated files fail JSON parsing or task-graph
+//!   validation and fall back to recompilation (counted in
+//!   [`PersistentCache::rejected`]); the fresh compile then overwrites the
+//!   bad entry.
+//! * Writes go through a per-process temp file + rename, so concurrent
+//!   processes sharing a cache directory never observe half-written
+//!   entries. Within one process the in-memory tier's in-flight marker
+//!   already guarantees one writer per key.
+//!
+//! Only successful compilations are persisted; infeasible structural
+//! points are memoized in memory per process (they are cheap to rediscover
+//! and keeping the disk format artifact-only keeps it trivially
+//! verifiable).
+
+use crate::compiler::tiling::VectorTiling;
+use crate::compiler::{
+    compile, CompileCache, CompileKey, CompileOptions, CompiledLayer, CompiledNet, LayerTiling,
+    TilingChoice,
+};
+use crate::config::SystemConfig;
+use crate::graph::DnnGraph;
+use crate::json::{self, obj, Value};
+use crate::taskgraph::serialize;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+const SCHEMA: &str = "avsm-compile-cache-v1";
+
+/// File that stores the artifact for `key` under `dir`.
+pub fn entry_path(dir: &Path, key: &CompileKey) -> PathBuf {
+    dir.join(format!("{:016x}.compiled.json", key.fingerprint()))
+}
+
+/// Serialize one compiled artifact (plus its full key, for verification on
+/// load) into a single compact JSON document.
+pub fn entry_to_json(key: &CompileKey, compiled: &CompiledNet) -> String {
+    obj(vec![
+        ("schema", SCHEMA.into()),
+        ("key", key.to_json()),
+        (
+            "layers",
+            Value::Array(compiled.layers.iter().map(layer_to_value).collect()),
+        ),
+        // The task graph rides along as an embedded `avsm-task-graph-v1`
+        // document (string form), reusing the flow-boundary serializer.
+        ("task_graph", serialize::to_json(&compiled.graph).into()),
+    ])
+    .to_string_compact()
+}
+
+fn layer_to_value(l: &CompiledLayer) -> Value {
+    let tiling = match l.tiling {
+        LayerTiling::Conv(t) => obj(vec![
+            ("kind", "conv".into()),
+            ("cin_t", t.cin_t.into()),
+            ("cout_t", t.cout_t.into()),
+            ("oh_t", t.oh_t.into()),
+            ("n_cin", t.n_cin.into()),
+            ("n_cout", t.n_cout.into()),
+            ("n_oh", t.n_oh.into()),
+            ("ifm_resident", t.ifm_resident.into()),
+        ]),
+        LayerTiling::Vector(v) => obj(vec![
+            ("kind", "vector".into()),
+            ("oh_t", v.oh_t.into()),
+            ("n_oh", v.n_oh.into()),
+        ]),
+    };
+    obj(vec![
+        ("index", l.index.into()),
+        ("name", l.name.as_str().into()),
+        ("tiling", tiling),
+        ("compute_cycles", l.compute_cycles.into()),
+        ("dma_bytes", l.dma_bytes.into()),
+        ("macs", l.macs.into()),
+        ("barrier", l.barrier.into()),
+    ])
+}
+
+fn layer_from_value(lv: &Value) -> Result<CompiledLayer> {
+    let tv = lv.get("tiling");
+    let tiling = match tv.get("kind").as_str().unwrap_or_default() {
+        "conv" => LayerTiling::Conv(TilingChoice {
+            cin_t: tv.req_u64("cin_t")? as u32,
+            cout_t: tv.req_u64("cout_t")? as u32,
+            oh_t: tv.req_u64("oh_t")? as u32,
+            n_cin: tv.req_u64("n_cin")? as u32,
+            n_cout: tv.req_u64("n_cout")? as u32,
+            n_oh: tv.req_u64("n_oh")? as u32,
+            ifm_resident: tv
+                .get("ifm_resident")
+                .as_bool()
+                .context("missing/invalid ifm_resident")?,
+        }),
+        "vector" => LayerTiling::Vector(VectorTiling {
+            oh_t: tv.req_u64("oh_t")? as u32,
+            n_oh: tv.req_u64("n_oh")? as u32,
+        }),
+        other => bail!("unknown tiling kind {other:?}"),
+    };
+    Ok(CompiledLayer {
+        index: lv.req_u64("index")? as u32,
+        name: lv.req_str("name")?.to_string(),
+        tiling,
+        compute_cycles: lv.req_u64("compute_cycles")?,
+        dma_bytes: lv.req_u64("dma_bytes")?,
+        macs: lv.req_u64("macs")?,
+        barrier: lv.req_u64("barrier")? as u32,
+    })
+}
+
+/// Parse and verify one cache entry. `expect_key` is the key the caller is
+/// looking up; any mismatch with the stored key is an error (stale entry
+/// or fingerprint collision).
+pub fn entry_from_json(text: &str, expect_key: &CompileKey) -> Result<CompiledNet> {
+    let v = json::parse(text).context("compile cache entry parse")?;
+    if v.get("schema").as_str() != Some(SCHEMA) {
+        bail!("unsupported compile cache schema");
+    }
+    if v.get("key") != &expect_key.to_json() {
+        bail!("cache entry key mismatch (stale entry or fingerprint collision)");
+    }
+    let graph = serialize::from_json(v.req_str("task_graph")?)
+        .context("embedded task graph")?;
+    let mut layers = Vec::new();
+    for lv in v.req_array("layers")? {
+        layers.push(layer_from_value(lv)?);
+    }
+    if layers.is_empty() {
+        bail!("cache entry has no layers");
+    }
+    for l in &layers {
+        if l.barrier as usize >= graph.len() {
+            bail!("layer {:?} barrier id out of range", l.name);
+        }
+    }
+    Ok(CompiledNet { graph, layers })
+}
+
+/// Write an entry atomically (temp file + rename). The temp name is
+/// unique per process *and* per write (atomic counter): the per-key
+/// in-flight marker only dedups writers within one `CompileCache`
+/// instance, so two caches sharing a directory in one process must not
+/// collide on the temp inode either.
+pub fn write_entry(dir: &Path, key: &CompileKey, compiled: &CompiledNet) -> Result<()> {
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let path = entry_path(dir, key);
+    let tmp = dir.join(format!(
+        "{:016x}.tmp.{}.{}",
+        key.fingerprint(),
+        std::process::id(),
+        WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, entry_to_json(key, compiled))
+        .with_context(|| format!("writing cache entry {tmp:?}"))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing cache entry {path:?}"))?;
+    Ok(())
+}
+
+/// Two-tier compile cache: the in-process [`CompileCache`] backed by an
+/// optional on-disk directory. Lookup order per structural key: memory →
+/// disk → compile (writing the artifact back to disk on success).
+#[derive(Debug)]
+pub struct PersistentCache {
+    mem: CompileCache,
+    dir: Option<PathBuf>,
+    disk_hits: AtomicU64,
+    compiles: AtomicU64,
+    rejected: AtomicU64,
+    write_errors: AtomicU64,
+}
+
+impl PersistentCache {
+    /// Create a cache backed by `dir` (created if absent). `None` disables
+    /// the disk tier — behaviourally identical to a plain [`CompileCache`].
+    pub fn new(opts: CompileOptions, dir: Option<PathBuf>) -> Result<Self> {
+        if let Some(d) = &dir {
+            std::fs::create_dir_all(d)
+                .with_context(|| format!("creating compile cache dir {d:?}"))?;
+        }
+        Ok(Self {
+            mem: CompileCache::new(opts),
+            dir,
+            disk_hits: AtomicU64::new(0),
+            compiles: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+        })
+    }
+
+    /// Memory-only variant (no disk tier, infallible construction).
+    pub fn memory_only(opts: CompileOptions) -> Self {
+        Self::new(opts, None).expect("memory-only cache cannot fail")
+    }
+
+    pub fn options(&self) -> CompileOptions {
+        self.mem.options()
+    }
+
+    /// Cached compilation of `(net, sys)` through both tiers. Semantics
+    /// match [`CompileCache::get_or_compile`] exactly (validation on every
+    /// call, negative memoization of infeasible points in memory, one
+    /// source run per key across racing workers); only where a missing
+    /// artifact comes *from* differs.
+    pub fn get_or_compile(
+        &self,
+        net: &DnnGraph,
+        sys: &SystemConfig,
+    ) -> Result<Arc<CompiledNet>> {
+        self.mem.get_or_compile_via(net, sys, |key| {
+            if let Some(dir) = &self.dir {
+                if let Some(compiled) = self.try_load(dir, key) {
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Arc::new(compiled));
+                }
+            }
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            match compile(net, sys, self.mem.options()) {
+                Ok(compiled) => {
+                    if let Some(dir) = &self.dir {
+                        // Best-effort persistence: a full disk must not
+                        // fail the evaluation, only the warm-start.
+                        if write_entry(dir, key, &compiled).is_err() {
+                            self.write_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Ok(Arc::new(compiled))
+                }
+                Err(e) => Err(format!("{e:#}")),
+            }
+        })
+    }
+
+    fn try_load(&self, dir: &Path, key: &CompileKey) -> Option<CompiledNet> {
+        let text = std::fs::read_to_string(entry_path(dir, key)).ok()?;
+        match entry_from_json(&text, key) {
+            Ok(compiled) => Some(compiled),
+            Err(_) => {
+                // Corrupted/stale entry: count it and recompile (the write
+                // path will replace the bad file).
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Actual compiler invocations (the number the warm-cache acceptance
+    /// check asserts to be zero).
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Keys served by deserializing a disk entry.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// Disk entries rejected as corrupted or stale.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Failed best-effort entry writes.
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors.load(Ordering::Relaxed)
+    }
+
+    /// In-memory tier hits (probes that skipped both disk and compiler).
+    pub fn mem_hits(&self) -> u64 {
+        self.mem.hits()
+    }
+
+    /// In-memory tier misses (keys that went to disk and/or the compiler).
+    pub fn mem_misses(&self) -> u64 {
+        self.mem.misses()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn opts() -> CompileOptions {
+        CompileOptions { double_buffer: true, labels: false }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("avsm_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn entry_roundtrip_is_lossless() {
+        let net = models::dilated_vgg_tiny();
+        let sys = SystemConfig::base_paper();
+        let compiled = compile(&net, &sys, opts()).unwrap();
+        let key = CompileKey::new(&net, &sys, opts());
+        let text = entry_to_json(&key, &compiled);
+        let back = entry_from_json(&text, &key).unwrap();
+        assert_eq!(back, compiled);
+    }
+
+    #[test]
+    fn entry_rejects_mismatched_key() {
+        let sys = SystemConfig::base_paper();
+        let net = models::lenet(28);
+        let compiled = compile(&net, &sys, opts()).unwrap();
+        let key = CompileKey::new(&net, &sys, opts());
+        let text = entry_to_json(&key, &compiled);
+        // Same file presented under a different net's key must be refused.
+        let other = CompileKey::new(&models::dilated_vgg_tiny(), &sys, opts());
+        assert!(entry_from_json(&text, &other).is_err());
+        // And under a structurally different config.
+        let mut wide = sys.clone();
+        wide.nce.array_cols *= 2;
+        let wider = CompileKey::new(&net, &wide, opts());
+        assert!(entry_from_json(&text, &wider).is_err());
+    }
+
+    #[test]
+    fn warm_directory_skips_compilation() {
+        let dir = tmp_dir("warm");
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+
+        let cold = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let a = cold.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((cold.compiles(), cold.disk_hits()), (1, 0));
+        assert!(entry_path(&dir, &CompileKey::new(&net, &sys, opts())).exists());
+
+        // Fresh cache instance, same directory: served from disk, zero
+        // compiles, identical artifact.
+        let warm = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let b = warm.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((warm.compiles(), warm.disk_hits()), (0, 1));
+        assert_eq!(*a, *b);
+
+        // Second probe of the same key stays in memory.
+        warm.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((warm.disk_hits(), warm.mem_hits()), (1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_entry_falls_back_to_recompilation() {
+        let dir = tmp_dir("corrupt");
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        let key = CompileKey::new(&net, &sys, opts());
+
+        let seed = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let a = seed.get_or_compile(&net, &sys).unwrap();
+        std::fs::write(entry_path(&dir, &key), "{ this is not json").unwrap();
+
+        let healed = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let b = healed.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((healed.compiles(), healed.rejected()), (1, 1));
+        assert_eq!(*a, *b);
+        // The recompile healed the entry on disk.
+        let again = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        again.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((again.compiles(), again.disk_hits()), (0, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_entry_is_rejected() {
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        let compiled = compile(&net, &sys, opts()).unwrap();
+        let key = CompileKey::new(&net, &sys, opts());
+        let text = entry_to_json(&key, &compiled);
+        assert!(entry_from_json(&text[..text.len() / 2], &key).is_err());
+    }
+
+    #[test]
+    fn memory_only_cache_never_touches_disk() {
+        let cache = PersistentCache::memory_only(opts());
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        cache.get_or_compile(&net, &sys).unwrap();
+        cache.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((cache.compiles(), cache.disk_hits(), cache.mem_hits()), (1, 0, 1));
+    }
+}

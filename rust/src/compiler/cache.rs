@@ -25,6 +25,7 @@
 use super::lower::{compile, CompileOptions, CompiledNet};
 use crate::config::SystemConfig;
 use crate::graph::DnnGraph;
+use crate::json::{obj, Value};
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -75,6 +76,43 @@ pub struct CompileKey {
 }
 
 impl CompileKey {
+    /// Content hash of the whole key, used to *name* persistent cache
+    /// entries (`campaign::store`). Deterministic within one Rust release
+    /// (DefaultHasher with its fixed default state); a cross-release hash
+    /// change merely renames entries, which read as cache misses and
+    /// recompile — never as wrong artifacts, because every entry also
+    /// embeds [`CompileKey::to_json`] and a load verifies it field by
+    /// field.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.hash(&mut h);
+        h.finish()
+    }
+
+    /// JSON rendering of every key field — embedded in persistent cache
+    /// entries so a load can verify the stored key against the expected
+    /// one exactly (stale-entry and hash-collision guard). The 64-bit net
+    /// fingerprint is rendered as a hex string to avoid the f64 fallback
+    /// for integers beyond i64.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("net_name", self.net_name.as_str().into()),
+            ("net_fingerprint", format!("{:016x}", self.net_fingerprint).into()),
+            ("dtype_bytes", self.dtype_bytes.into()),
+            ("array_rows", self.array_rows.into()),
+            ("array_cols", self.array_cols.into()),
+            ("task_setup_cycles", self.task_setup_cycles.into()),
+            ("ifm_buffer_kib", self.ifm_buffer_kib.into()),
+            ("weight_buffer_kib", self.weight_buffer_kib.into()),
+            ("ofm_buffer_kib", self.ofm_buffer_kib.into()),
+            ("bus_bytes_per_cycle", self.bus_bytes_per_cycle.into()),
+            ("mem_data_bytes_per_cycle", self.mem_data_bytes_per_cycle.into()),
+            ("avsm_eff_bw_pct", self.avsm_eff_bw_pct.into()),
+            ("double_buffer", self.double_buffer.into()),
+            ("labels", self.labels.into()),
+        ])
+    }
+
     pub fn new(net: &DnnGraph, sys: &SystemConfig, opts: CompileOptions) -> Self {
         Self {
             net_name: net.name.clone(),
@@ -146,12 +184,36 @@ impl CompileCache {
     /// parallel from worker threads; racers on the same key block until
     /// the first thread's result lands, so each key compiles exactly once.
     pub fn get_or_compile(&self, net: &DnnGraph, sys: &SystemConfig) -> Result<Arc<CompiledNet>> {
+        self.get_or_compile_via(net, sys, |_| match compile(net, sys, self.opts) {
+            Ok(compiled) => Ok(Arc::new(compiled)),
+            Err(e) => Err(format!("{e:#}")),
+        })
+    }
+
+    /// Like [`CompileCache::get_or_compile`], but the artifact for a
+    /// missing key comes from `source` instead of the in-process compiler —
+    /// the hook the campaign's disk-persistent cache layers on (try a
+    /// serialized entry first, fall back to compiling; see
+    /// `campaign::store::PersistentCache`). Everything else is identical:
+    /// validation runs on every call, `source` runs unlocked exactly once
+    /// per key (racers wait on the condvar), and an `Err` return is
+    /// memoized as a negative entry. [`CompileCache::misses`] counts
+    /// `source` invocations.
+    pub fn get_or_compile_via<F>(
+        &self,
+        net: &DnnGraph,
+        sys: &SystemConfig,
+        source: F,
+    ) -> Result<Arc<CompiledNet>>
+    where
+        F: FnOnce(&CompileKey) -> Result<Arc<CompiledNet>, String>,
+    {
         // Validate the full inputs up front, on every call: validation
         // covers non-structural fields (clocks, DMA channels, DRAM
         // geometry) that are deliberately absent from the key, so a cache
         // hit must not skip it, and a validation failure must never be
         // memoized under the structural key. Past this point, any
-        // `compile` error is structural (tiling infeasibility) and safe
+        // `source` error is structural (tiling infeasibility) and safe
         // to memoize.
         net.validate()?;
         sys.validate()?;
@@ -175,7 +237,7 @@ impl CompileCache {
         }
         drop(guard);
 
-        // If `compile` unwinds, the in-flight marker must not strand the
+        // If `source` unwinds, the in-flight marker must not strand the
         // racers blocked on the condvar (std::thread::scope joins every
         // worker before re-raising a panic, so a stranded marker would
         // hang the sweep, not abort it). The guard converts an unwind
@@ -188,17 +250,15 @@ impl CompileCache {
             fn drop(&mut self) {
                 if let Some(key) = self.key.take() {
                     let mut map = self.cache.map.lock().unwrap();
-                    map.insert(key, Slot::Ready(Err("compile panicked".into())));
+                    map.insert(key, Slot::Ready(Err("cache source panicked".into())));
                     self.cache.done.notify_all();
                 }
             }
         }
         let mut unwind = Unwind { cache: self, key: Some(key) };
 
-        let entry: CacheEntry = match compile(net, sys, self.opts) {
-            Ok(compiled) => Ok(Arc::new(compiled)),
-            Err(e) => Err(format!("{e:#}")),
-        };
+        let entry: CacheEntry =
+            source(unwind.key.as_ref().expect("unwind guard already fired"));
         self.misses.fetch_add(1, Ordering::Relaxed);
         let result = entry_to_result(&entry);
         let key = unwind.key.take().expect("unwind guard already fired");
@@ -213,8 +273,9 @@ impl CompileCache {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Cache misses so far (actual compile attempts, successful or not —
-    /// exactly one per distinct structural key).
+    /// Cache misses so far (source invocations — a compile, or a disk
+    /// load for the persistent tier — successful or not; exactly one per
+    /// distinct structural key).
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }

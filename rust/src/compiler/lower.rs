@@ -39,7 +39,7 @@ impl Default for CompileOptions {
 }
 
 /// Per-layer compilation record (feeds Fig 5/6/7 reporting).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CompiledLayer {
     pub index: u32,
     pub name: String,
@@ -54,7 +54,7 @@ pub struct CompiledLayer {
 }
 
 /// The compiler's output: the task graph plus per-layer metadata.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CompiledNet {
     pub graph: TaskGraph,
     pub layers: Vec<CompiledLayer>,

@@ -32,13 +32,17 @@
 //!    retime: re-simulate the cached graph under the new annotations.
 //!
 //! 2. **Points simulate in parallel.** [`sweep`] fans the enumerated
-//!    design points out over `std::thread::scope` workers (worker `w`
-//!    takes points `w, w + T, w + 2T, ...`), all sharing the compile cache
-//!    by reference; results are scattered back by point index, so the
+//!    design points out over the shared worker pool
+//!    (`crate::campaign::pool`; worker `w` takes points
+//!    `w, w + T, w + 2T, ...`), all sharing the compile cache by
+//!    reference; results are scattered back by point index, so the
 //!    returned vector is byte-identical — same order, same `latency_ps` —
 //!    to the sequential sweep ([`sweep_seq`]), which the test suite
 //!    enforces. Simulation of one point is single-threaded and
-//!    deterministic; parallelism is purely across points.
+//!    deterministic; parallelism is purely across points. Sweeping a whole
+//!    *portfolio* of nets against one grid — with streaming Pareto
+//!    frontiers and a disk-persistent compile cache — is
+//!    `crate::campaign::run`.
 
 use crate::compiler::{CompileCache, CompileOptions, CompiledNet};
 use crate::config::SystemConfig;
@@ -50,7 +54,10 @@ use anyhow::Result;
 
 /// Compiler options used for every DSE evaluation: double buffering on (the
 /// base software design point), labels off (never read on the fast path).
-const DSE_COMPILE_OPTS: CompileOptions = CompileOptions { double_buffer: true, labels: false };
+/// Public because the campaign engine (`crate::campaign`) must evaluate
+/// with byte-identical options for its frontiers to equal per-net sweeps.
+pub const DSE_COMPILE_OPTS: CompileOptions =
+    CompileOptions { double_buffer: true, labels: false };
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -112,9 +119,21 @@ fn point_from_sim(sys: &SystemConfig, name: String, total_ps: u64) -> DesignPoin
 /// Evaluate one design point from scratch (compile + simulate, fast path).
 pub fn evaluate(net: &DnnGraph, sys: &SystemConfig, name: impl Into<String>) -> Result<DesignPoint> {
     let compiled = crate::compiler::compile(net, sys, DSE_COMPILE_OPTS)?;
+    Ok(evaluate_compiled(&compiled, sys, name))
+}
+
+/// Simulate an already-compiled net under `sys`'s annotations and tabulate
+/// the design point (the retime step shared by [`evaluate`],
+/// [`evaluate_cached`] and the campaign engine, which resolves `compiled`
+/// through its own persistent cache).
+pub fn evaluate_compiled(
+    compiled: &CompiledNet,
+    sys: &SystemConfig,
+    name: impl Into<String>,
+) -> DesignPoint {
     let mut trace = TraceRecorder::disabled();
-    let sim = simulate_avsm(&compiled, sys, &mut trace);
-    Ok(point_from_sim(sys, name.into(), sim.total_ps))
+    let sim = simulate_avsm(compiled, sys, &mut trace);
+    point_from_sim(sys, name.into(), sim.total_ps)
 }
 
 /// Evaluate one design point through a [`CompileCache`]: points that differ
@@ -129,14 +148,14 @@ pub fn evaluate_cached(
     // `get_or_compile` validates the full config on every call (hits
     // included), so an invalid swept point is rejected, never simulated.
     let compiled: std::sync::Arc<CompiledNet> = cache.get_or_compile(net, sys)?;
-    let mut trace = TraceRecorder::disabled();
-    let sim = simulate_avsm(&compiled, sys, &mut trace);
-    Ok(point_from_sim(sys, name.into(), sim.total_ps))
+    Ok(evaluate_compiled(&compiled, sys, name))
 }
 
 /// Enumerate the cartesian grid of configs in deterministic axis order
 /// (geometry, frequency, bus width, IFM buffer — outermost to innermost).
-fn expand_configs(base: &SystemConfig, axes: &SweepAxes) -> Vec<SystemConfig> {
+/// Public so the campaign engine expands the same grid once and shares it
+/// across every workload of a portfolio.
+pub fn expand_configs(base: &SystemConfig, axes: &SweepAxes) -> Vec<SystemConfig> {
     let geoms = SweepAxes::or_base(
         &axes.array_geometries,
         &(base.nce.array_rows, base.nce.array_cols),
@@ -177,6 +196,12 @@ pub fn sweep_seq(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<D
 }
 
 /// Sweep with an explicit execution policy.
+///
+/// Fan-out runs on the shared campaign worker pool
+/// (`crate::campaign::pool`): worker `w` of `T` evaluates points
+/// `w, w + T, w + 2T, ...` against one shared compile cache, and results
+/// scatter back by point index, so the output order matches the sequential
+/// enumeration exactly regardless of worker timing.
 pub fn sweep_with(
     net: &DnnGraph,
     base: &SystemConfig,
@@ -185,49 +210,13 @@ pub fn sweep_with(
 ) -> Vec<DesignPoint> {
     let configs = expand_configs(base, axes);
     let cache = CompileCache::new(DSE_COMPILE_OPTS);
-    let threads = if opts.threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        opts.threads
-    }
-    .min(configs.len())
-    .max(1);
-
-    if threads == 1 {
-        return configs
-            .iter()
-            .filter_map(|sys| evaluate_cached(net, sys, sys.name.clone(), &cache).ok())
-            .collect();
-    }
-
-    // Strided fan-out: worker w evaluates points w, w+T, w+2T, ... and
-    // results scatter back by point index, so the output order matches the
-    // sequential enumeration exactly regardless of worker timing.
-    let mut slots: Vec<Option<DesignPoint>> = vec![None; configs.len()];
-    std::thread::scope(|scope| {
-        let cache = &cache;
-        let configs = &configs;
-        let handles: Vec<_> = (0..threads)
-            .map(|w| {
-                scope.spawn(move || {
-                    let mut out: Vec<(usize, Option<DesignPoint>)> = Vec::new();
-                    let mut i = w;
-                    while i < configs.len() {
-                        let sys = &configs[i];
-                        out.push((i, evaluate_cached(net, sys, sys.name.clone(), cache).ok()));
-                        i += threads;
-                    }
-                    out
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, p) in h.join().expect("sweep worker panicked") {
-                slots[i] = p;
-            }
-        }
-    });
-    slots.into_iter().flatten().collect()
+    crate::campaign::pool::parallel_map(configs.len(), opts.threads, |i| {
+        let sys = &configs[i];
+        evaluate_cached(net, sys, sys.name.clone(), &cache).ok()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Pareto frontier: points not dominated in (latency, cost), sorted by

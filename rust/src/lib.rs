@@ -18,10 +18,13 @@
 //! * [`detailed`] — the cycle-level "physical prototype" reference model.
 //! * [`roofline`], [`trace`], [`report`] — Fig 4/5/6/7 analyses.
 //! * [`dse`] — design-space exploration sweeps.
+//! * [`campaign`] — multi-workload co-design sweeps: shared worker pool,
+//!   streaming Pareto frontiers, disk-persistent compile cache.
 //! * [`runtime`] — PJRT loader executing the AOT JAX/Pallas artifacts.
 //! * [`coordinator`] — the end-to-end flow of Fig 1 with phase timing (Fig 3).
 
 pub mod benchkit;
+pub mod campaign;
 pub mod cli;
 pub mod compiler;
 pub mod config;

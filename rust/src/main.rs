@@ -6,6 +6,7 @@
 //! the AOT JAX/Pallas artifacts over PJRT.
 
 use anyhow::{bail, Context, Result};
+use avsm::campaign;
 use avsm::cli::Args;
 use avsm::compiler::{analytical_estimate, compile, CompileOptions};
 use avsm::config::SystemConfig;
@@ -14,7 +15,7 @@ use avsm::dse;
 use avsm::graph::{graph_from_json, models, DnnGraph};
 use avsm::hw::simulate_avsm;
 use avsm::metrics::{fmt_bytes, fmt_ps};
-use avsm::report::Fig5Report;
+use avsm::report::{CampaignReport, Fig5Report};
 use avsm::roofline::RooflineModel;
 use avsm::runtime::{self, Manifest, Runtime};
 use avsm::sim::TraceRecorder;
@@ -34,6 +35,9 @@ COMMANDS:
   gantt      Fig 4: resource Gantt chart (--format ascii|csv|svg)
   flow       full flow with the Fig 3 runtime breakdown (--outdir DIR)
   sweep      design-space exploration over NCE/bus/buffer axes
+  campaign   multi-workload co-design sweep: one config grid vs a net
+             portfolio, streaming per-net Pareto frontiers + cross-net
+             summary (--nets A,B,C --cache-dir DIR --threads N)
   topdown    minimum NCE frequency for a latency target (--target-ms X)
   analytical static (Zhang'15-style) estimate — the no-causality baseline
   infer      functional inference of the AOT artifact over PJRT
@@ -48,6 +52,11 @@ COMMON OPTIONS:
   --hw N              input H=W for built-in nets (default per net)
   --outdir DIR        where to write artifacts/reports
   --artifacts DIR     AOT artifact dir for `infer` (default: artifacts/)
+  --nets A,B,C        workload portfolio for `campaign` (default:
+                      lenet,dilated_vgg_tiny,tiny_resnet)
+  --cache-dir DIR     persistent compile cache for `campaign`: a second
+                      invocation against a warm directory compiles nothing
+  --threads N         worker threads for `campaign` (default: all CPUs)
 ";
 
 fn load_sys(args: &Args) -> Result<SystemConfig> {
@@ -58,8 +67,11 @@ fn load_sys(args: &Args) -> Result<SystemConfig> {
 }
 
 fn load_net(args: &Args) -> Result<DnnGraph> {
-    let name = args.get_or("net", "dilated_vgg");
-    let hw = args.get_u64("hw", 0)? as u32;
+    named_net(args.get_or("net", "dilated_vgg"), args.get_u64("hw", 0)? as u32)
+}
+
+/// Resolve one workload by builder name or `.graph.json` path.
+fn named_net(name: &str, hw: u32) -> Result<DnnGraph> {
     let net = match name {
         "dilated_vgg" => models::dilated_vgg(if hw == 0 { 256 } else { hw }, 1, 16),
         "dilated_vgg_tiny" => models::dilated_vgg(if hw == 0 { 64 } else { hw }, 8, 16),
@@ -86,6 +98,7 @@ fn main() -> Result<()> {
         "gantt" => cmd_gantt(&args),
         "flow" => cmd_flow(&args),
         "sweep" => cmd_sweep(&args),
+        "campaign" => cmd_campaign(&args),
         "topdown" => cmd_topdown(&args),
         "analytical" => cmd_analytical(&args),
         "infer" => cmd_infer(&args),
@@ -253,6 +266,39 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             PathBuf::from(dir).join("sweep.json"),
             dse::sweep_to_json(&points).to_string_pretty(),
         )?;
+    }
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let base = load_sys(args)?;
+    let hw = args.get_u64("hw", 0)? as u32;
+    let nets: Vec<DnnGraph> = args
+        .get_or("nets", "lenet,dilated_vgg_tiny,tiny_resnet")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|name| named_net(name, hw))
+        .collect::<Result<_>>()?;
+    let axes = dse::SweepAxes {
+        array_geometries: vec![(16, 32), (32, 64), (64, 64)],
+        nce_freqs_mhz: vec![125, 250, 500],
+        ..Default::default()
+    };
+    let spec = campaign::CampaignSpec { nets, base, axes };
+    let opts = campaign::CampaignOptions {
+        threads: args.get_u64("threads", 0)? as usize,
+        cache_dir: args.get("cache-dir").map(PathBuf::from),
+        keep_points: false,
+    };
+    let result = campaign::run(&spec, &opts)?;
+    let report = CampaignReport::new(&result);
+    print!("{}", report.render_text());
+    if let Some(dir) = args.get("outdir") {
+        std::fs::create_dir_all(dir)?;
+        let path = PathBuf::from(dir).join("campaign.json");
+        std::fs::write(&path, report.to_json().to_string_pretty())?;
+        println!("wrote {}", path.display());
     }
     Ok(())
 }

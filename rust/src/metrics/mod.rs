@@ -1,17 +1,25 @@
 //! Small statistics helpers shared by reports and the bench harness.
 
 /// Relative deviation of `estimate` vs `reference`, signed, in percent.
+///
+/// A zero reference has two distinct cases: a zero estimate is a perfect
+/// prediction (0 %), while a non-zero estimate is infinitely off and
+/// returns a signed infinity matching the estimate's sign — silently
+/// reporting 0 % there would let a report claim perfect accuracy for a
+/// prediction of something that never happened.
 pub fn deviation_pct(estimate: f64, reference: f64) -> f64 {
     if reference == 0.0 {
-        return 0.0;
+        return if estimate == 0.0 { 0.0 } else { estimate.signum() * f64::INFINITY };
     }
     100.0 * (estimate - reference) / reference
 }
 
 /// Prediction accuracy in percent (the paper's "up to 92 % accuracy"):
-/// 100 - |deviation|.
+/// 100 - |deviation|, clamped to [0, 100] so deviations beyond 100 %
+/// (including the infinite zero-reference case) read as 0 % accuracy
+/// rather than going negative.
 pub fn accuracy_pct(estimate: f64, reference: f64) -> f64 {
-    100.0 - deviation_pct(estimate, reference).abs()
+    (100.0 - deviation_pct(estimate, reference).abs()).clamp(0.0, 100.0)
 }
 
 /// Summary statistics of a sample.
@@ -86,7 +94,26 @@ mod tests {
         assert!((deviation_pct(108.3, 100.0) - 8.3).abs() < 1e-9);
         assert!((accuracy_pct(108.3, 100.0) - 91.7).abs() < 1e-9);
         assert!((deviation_pct(95.0, 100.0) + 5.0).abs() < 1e-9);
-        assert_eq!(deviation_pct(5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn zero_reference_deviation_is_signed_infinity() {
+        // Perfect prediction of a zero reference: zero deviation.
+        assert_eq!(deviation_pct(0.0, 0.0), 0.0);
+        assert_eq!(accuracy_pct(0.0, 0.0), 100.0);
+        // A non-zero estimate of a zero reference is infinitely off,
+        // signed like the estimate — never silently "perfect".
+        assert_eq!(deviation_pct(5.0, 0.0), f64::INFINITY);
+        assert_eq!(deviation_pct(-5.0, 0.0), f64::NEG_INFINITY);
+        assert_eq!(accuracy_pct(5.0, 0.0), 0.0);
+        assert_eq!(accuracy_pct(-5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn accuracy_clamps_to_unit_range() {
+        // >100 % deviation must not produce negative accuracy.
+        assert_eq!(accuracy_pct(300.0, 100.0), 0.0);
+        assert_eq!(accuracy_pct(100.0, 100.0), 100.0);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Campaign report: per-workload Pareto frontiers plus the cross-net
+//! summary (JSON schema `avsm-campaign-v1`) — the co-design deliverable a
+//! portfolio sweep exists to produce: which hardware configurations stay
+//! on the frontier for *every* workload.
+
+use crate::campaign::{CampaignResult, NetOutcome};
+use crate::dse;
+use crate::json::{obj, Value};
+use crate::metrics::fmt_ps;
+use std::collections::BTreeMap;
+
+/// Report over one [`CampaignResult`].
+pub struct CampaignReport<'a> {
+    result: &'a CampaignResult,
+    /// Design-point name -> number of workloads whose frontier contains it
+    /// (duplicate frontier entries within one net counted once).
+    membership: BTreeMap<String, usize>,
+}
+
+impl<'a> CampaignReport<'a> {
+    pub fn new(result: &'a CampaignResult) -> Self {
+        let mut membership: BTreeMap<String, usize> = BTreeMap::new();
+        for net in &result.nets {
+            let mut seen: Vec<&str> = Vec::new();
+            for p in &net.frontier {
+                if !seen.contains(&p.name.as_str()) {
+                    seen.push(&p.name);
+                    *membership.entry(p.name.clone()).or_insert(0) += 1;
+                }
+            }
+        }
+        Self { result, membership }
+    }
+
+    /// Design points on *every* workload's frontier — the portfolio-robust
+    /// configurations a co-designer shortlists first.
+    pub fn common_frontier(&self) -> Vec<&str> {
+        self.membership
+            .iter()
+            .filter(|&(_, &count)| count == self.result.nets.len())
+            .map(|(name, _)| name.as_str())
+            .collect()
+    }
+
+    pub fn render_text(&self) -> String {
+        let r = self.result;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "campaign: {} workloads x {} design points ({} workers)\n",
+            r.nets.len(),
+            r.grid_points,
+            r.threads
+        ));
+        for net in &r.nets {
+            out.push_str(&format!(
+                "\n== {} — frontier ({} of {} feasible points, {} evaluated)\n",
+                net.net,
+                net.frontier.len(),
+                net.feasible,
+                net.evaluated
+            ));
+            out.push_str(&format!(
+                "{:<28} {:>14} {:>12} {:>10}\n",
+                "design point", "latency", "infer/s", "cost"
+            ));
+            for p in &net.frontier {
+                out.push_str(&format!(
+                    "{:<28} {:>14} {:>12.2} {:>10.0}\n",
+                    p.name,
+                    fmt_ps(p.latency_ps),
+                    p.throughput,
+                    p.cost
+                ));
+            }
+        }
+        out.push_str("\n== cross-net summary\n");
+        let common = self.common_frontier();
+        if common.is_empty() {
+            out.push_str("designs on every frontier: none\n");
+        } else {
+            out.push_str(&format!("designs on every frontier: {}\n", common.join(", ")));
+        }
+        for (name, count) in &self.membership {
+            out.push_str(&format!(
+                "  {:<28} on {}/{} frontiers\n",
+                name,
+                count,
+                r.nets.len()
+            ));
+        }
+        out.push_str(&format!(
+            "\n== compile cache\ncompilations: {}  memory hits: {}  disk hits: {}  \
+             rejected entries: {}\n",
+            r.compiles, r.mem_hits, r.disk_hits, r.rejected_entries
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let r = self.result;
+        obj(vec![
+            ("schema", "avsm-campaign-v1".into()),
+            ("workloads", r.nets.len().into()),
+            ("grid_points", r.grid_points.into()),
+            ("threads", r.threads.into()),
+            (
+                "nets",
+                Value::Array(r.nets.iter().map(net_to_value).collect()),
+            ),
+            (
+                "cross_net",
+                obj(vec![
+                    (
+                        "common_frontier",
+                        Value::Array(
+                            self.common_frontier().iter().map(|&s| s.into()).collect(),
+                        ),
+                    ),
+                    (
+                        "frontier_membership",
+                        Value::Object(
+                            self.membership
+                                .iter()
+                                .map(|(k, &v)| (k.clone(), Value::from(v)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "cache",
+                obj(vec![
+                    ("compilations", r.compiles.into()),
+                    ("memory_hits", r.mem_hits.into()),
+                    ("disk_hits", r.disk_hits.into()),
+                    ("rejected_entries", r.rejected_entries.into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn net_to_value(net: &NetOutcome) -> Value {
+    obj(vec![
+        ("name", net.net.as_str().into()),
+        ("evaluated", net.evaluated.into()),
+        ("feasible", net.feasible.into()),
+        ("dominated", net.dominated.into()),
+        ("pruned", net.pruned.into()),
+        ("compilations", net.compiles.into()),
+        ("disk_hits", net.disk_hits.into()),
+        ("memory_hits", net.mem_hits.into()),
+        ("frontier", dse::sweep_to_json(&net.frontier)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::dse::DesignPoint;
+
+    fn pt(name: &str, lat: u64, cost: f64) -> DesignPoint {
+        DesignPoint {
+            name: name.into(),
+            sys: SystemConfig::base_paper(),
+            latency_ps: lat,
+            cost,
+            throughput: 1e12 / lat as f64,
+        }
+    }
+
+    fn net(name: &str, frontier: Vec<DesignPoint>) -> NetOutcome {
+        NetOutcome {
+            net: name.into(),
+            feasible: frontier.len() + 1,
+            evaluated: frontier.len() + 2,
+            dominated: 1,
+            pruned: 0,
+            compiles: 2,
+            disk_hits: 0,
+            mem_hits: 1,
+            rejected: 0,
+            points: Vec::new(),
+            frontier,
+        }
+    }
+
+    fn result() -> CampaignResult {
+        CampaignResult {
+            nets: vec![
+                net("lenet", vec![pt("a", 10, 5.0), pt("b", 20, 3.0)]),
+                net("vgg", vec![pt("a", 30, 5.0), pt("c", 40, 3.0)]),
+            ],
+            grid_points: 4,
+            threads: 2,
+            compiles: 4,
+            disk_hits: 0,
+            mem_hits: 2,
+            rejected_entries: 0,
+        }
+    }
+
+    #[test]
+    fn common_frontier_intersects_by_name() {
+        let r = result();
+        let report = CampaignReport::new(&r);
+        assert_eq!(report.common_frontier(), vec!["a"]);
+        assert_eq!(report.membership.get("b"), Some(&1));
+        assert_eq!(report.membership.get("c"), Some(&1));
+    }
+
+    #[test]
+    fn text_report_names_everything() {
+        let r = result();
+        let text = CampaignReport::new(&r).render_text();
+        assert!(text.contains("2 workloads x 4 design points"));
+        assert!(text.contains("== lenet"));
+        assert!(text.contains("== vgg"));
+        assert!(text.contains("designs on every frontier: a"));
+        assert!(text.contains("compilations: 4"));
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = result();
+        let j = CampaignReport::new(&r).to_json();
+        assert_eq!(j.get("schema").as_str(), Some("avsm-campaign-v1"));
+        assert_eq!(j.get("grid_points").as_u64(), Some(4));
+        assert_eq!(j.get("nets").as_array().unwrap().len(), 2);
+        assert_eq!(
+            j.get("cross_net").get("common_frontier").at(0).as_str(),
+            Some("a")
+        );
+        assert_eq!(j.get("cache").get("compilations").as_u64(), Some(4));
+        // Serializes and parses back.
+        let back = crate::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back, j);
+    }
+}

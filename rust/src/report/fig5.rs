@@ -2,10 +2,11 @@
 //! (detailed prototype model) vs the AVSM, with per-layer and total
 //! deviations — the paper's headline accuracy experiment.
 
+use crate::campaign::pool;
 use crate::compiler::CompiledNet;
 use crate::config::SystemConfig;
 use crate::detailed::simulate_prototype;
-use crate::hw::simulate_avsm;
+use crate::hw::{simulate_avsm, SimResult};
 use crate::json::{obj, Value};
 use crate::metrics::{deviation_pct, fmt_ps};
 use crate::sim::TraceRecorder;
@@ -29,11 +30,43 @@ pub struct Fig5Report {
 
 impl Fig5Report {
     /// Run both fidelity levels on the same compiled net and tabulate.
+    /// The two runs are independent and execute in parallel
+    /// (see [`Fig5Report::compute_many`]).
     pub fn compute(compiled: &CompiledNet, sys: &SystemConfig) -> Self {
-        let mut tr = TraceRecorder::disabled();
-        let avsm = simulate_avsm(compiled, sys, &mut tr);
-        let mut tr = TraceRecorder::disabled();
-        let hw = simulate_prototype(compiled, sys, &mut tr);
+        Self::compute_many(&[(compiled, sys)])
+            .pop()
+            .expect("one report per design point")
+    }
+
+    /// Fig 5 comparisons for a batch of design points. Every simulation
+    /// run — two fidelity levels per point, all mutually independent —
+    /// fans out over the shared campaign worker pool
+    /// ([`crate::campaign::pool`]; ROADMAP "parallel detailed-model
+    /// comparisons"), and the reports assemble deterministically in input
+    /// order.
+    pub fn compute_many(points: &[(&CompiledNet, &SystemConfig)]) -> Vec<Self> {
+        let sims = pool::parallel_map(points.len() * 2, 0, |u| {
+            let (compiled, sys) = points[u / 2];
+            let mut tr = TraceRecorder::disabled();
+            if u % 2 == 0 {
+                simulate_avsm(compiled, sys, &mut tr)
+            } else {
+                simulate_prototype(compiled, sys, &mut tr)
+            }
+        });
+        let mut it = sims.into_iter();
+        points
+            .iter()
+            .map(|_| {
+                let avsm = it.next().expect("missing AVSM run");
+                let hw = it.next().expect("missing prototype run");
+                Self::tabulate(&avsm, &hw)
+            })
+            .collect()
+    }
+
+    /// Tabulate one AVSM-vs-prototype pair into the Fig 5 rows.
+    fn tabulate(avsm: &SimResult, hw: &SimResult) -> Self {
         let rows = avsm
             .layers
             .iter()
@@ -53,9 +86,11 @@ impl Fig5Report {
         }
     }
 
-    /// Prediction accuracy, the paper's headline metric ("up to 92 %").
+    /// Prediction accuracy, the paper's headline metric ("up to 92 %"):
+    /// [`crate::metrics::accuracy_pct`] of the total AVSM time vs the
+    /// prototype total (clamped to [0, 100]).
     pub fn accuracy_pct(&self) -> f64 {
-        100.0 - self.total_deviation_pct.abs()
+        crate::metrics::accuracy_pct(self.total_avsm_ps as f64, self.total_hw_ps as f64)
     }
 
     pub fn max_abs_layer_deviation(&self) -> f64 {
@@ -224,6 +259,29 @@ mod tests {
         let sum_hw: u64 = r.rows.iter().map(|x| x.hw_ps).sum();
         assert_eq!(sum_avsm, r.total_avsm_ps);
         assert_eq!(sum_hw, r.total_hw_ps);
+    }
+
+    #[test]
+    fn compute_many_matches_single_computes() {
+        // The batched (pool fan-out) path must reproduce the per-point
+        // reports exactly, in input order.
+        let sys = SystemConfig::base_paper();
+        let a = compile(&models::dilated_vgg_tiny(), &sys, CompileOptions::default()).unwrap();
+        let b = compile(&models::lenet(28), &sys, CompileOptions::default()).unwrap();
+        let many = Fig5Report::compute_many(&[(&a, &sys), (&b, &sys)]);
+        assert_eq!(many.len(), 2);
+        for (batch, single) in
+            many.iter().zip([Fig5Report::compute(&a, &sys), Fig5Report::compute(&b, &sys)].iter())
+        {
+            assert_eq!(batch.total_avsm_ps, single.total_avsm_ps);
+            assert_eq!(batch.total_hw_ps, single.total_hw_ps);
+            assert_eq!(batch.rows.len(), single.rows.len());
+            for (x, y) in batch.rows.iter().zip(&single.rows) {
+                assert_eq!(x.layer, y.layer);
+                assert_eq!(x.avsm_ps, y.avsm_ps);
+                assert_eq!(x.hw_ps, y.hw_ps);
+            }
+        }
     }
 
     #[test]

@@ -4,10 +4,14 @@
 //!   comparison with deviations (paper Fig 5 + the 8.3 % headline).
 //! * [`fig3`] — flow runtime breakdown table (paper Fig 3), fed by the
 //!   coordinator's phase timers.
+//! * [`campaign`] — multi-workload campaign report: per-net frontiers plus
+//!   the cross-net summary (which configs survive every workload).
 //! * Fig 4 lives in [`crate::trace`], Fig 6/7 in [`crate::roofline`].
 
+pub mod campaign;
 pub mod fig3;
 pub mod fig5;
 
+pub use campaign::CampaignReport;
 pub use fig3::FlowBreakdown;
 pub use fig5::Fig5Report;

@@ -95,6 +95,34 @@ fn mobilenet_workload_simulates() {
 }
 
 #[test]
+fn campaign_sweeps_portfolio_and_warm_cache_is_compile_free() {
+    let dir = std::env::temp_dir().join(format!("avsm_cli_campaign_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().unwrap();
+    let args = [
+        "campaign",
+        "--nets",
+        "lenet,dilated_vgg_tiny",
+        "--cache-dir",
+        dir_s,
+        "--outdir",
+        dir_s,
+    ];
+    let cold = run_ok(&args);
+    assert!(cold.contains("frontier"));
+    assert!(cold.contains("cross-net summary"));
+    assert!(dir.join("campaign.json").exists());
+    // A second CLI invocation hits the persistent cache: no compilations.
+    let warm = run_ok(&args);
+    assert!(
+        warm.contains("compilations: 0"),
+        "warm campaign should be compile-free:\n{warm}"
+    );
+    assert!(warm.contains("disk hits: 6"), "2 nets x 3 structural keys:\n{warm}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn topdown_answers() {
     let text = run_ok(&["topdown", "--net", "lenet", "--target-ms", "1"]);
     assert!(text.contains("minimum NCE frequency") || text.contains("not reachable"));

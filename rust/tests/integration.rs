@@ -2,10 +2,12 @@
 //! multiple system design points — compile -> task graph -> both simulators
 //! -> reports, plus the shipped system description files.
 
+use avsm::campaign::{self, CampaignOptions, CampaignSpec};
 use avsm::compiler::{compile, CompileOptions};
 use avsm::config::SystemConfig;
 use avsm::coordinator::{run_flow, FlowOptions};
 use avsm::detailed::simulate_prototype;
+use avsm::dse;
 use avsm::graph::{graph_from_json, graph_to_json, models, DnnGraph};
 use avsm::hw::simulate_avsm;
 use avsm::report::Fig5Report;
@@ -164,6 +166,89 @@ fn flow_export_files_parse_back() {
     // layers.csv rows = layer count.
     let layers = std::fs::read_to_string(dir.join("layers.csv")).unwrap();
     assert_eq!(layers.lines().count(), 1 + net.layers.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn campaign_matches_per_net_sweeps_and_warm_cache_compiles_nothing() {
+    // The campaign acceptance contract: >= 3 nets x a >= 9-point grid,
+    // per-net frontiers byte-identical to per-net sweep + pareto, and a
+    // second run against the warm disk cache performing zero compilations.
+    let spec = CampaignSpec {
+        nets: vec![
+            models::lenet(28),
+            models::dilated_vgg_tiny(),
+            models::tiny_resnet(32, 16, 2),
+        ],
+        base: SystemConfig::base_paper(),
+        axes: dse::SweepAxes {
+            array_geometries: vec![(16, 32), (32, 64), (64, 64)],
+            nce_freqs_mhz: vec![125, 250, 500],
+            ..Default::default()
+        },
+    };
+    let dir = std::env::temp_dir().join(format!("avsm_campaign_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = CampaignOptions {
+        cache_dir: Some(dir.clone()),
+        keep_points: true,
+        ..Default::default()
+    };
+
+    let assert_identical = |result: &campaign::CampaignResult, tag: &str| {
+        assert_eq!(result.grid_points, 9, "{tag}");
+        for (ni, net) in spec.nets.iter().enumerate() {
+            let sweep = dse::sweep(net, &spec.base, &spec.axes);
+            let batch = dse::pareto(&sweep);
+            let got = &result.nets[ni];
+            // The whole grid must be feasible here, or the warm-cache
+            // zero-compile assertion below would be vacuous.
+            assert_eq!(got.feasible, 9, "{tag}: {} grid not fully feasible", net.name);
+            assert_eq!(got.points.len(), sweep.len(), "{tag}: {}", net.name);
+            for (a, b) in got.points.iter().zip(&sweep) {
+                assert_eq!(a.name, b.name, "{tag}");
+                assert_eq!(a.latency_ps, b.latency_ps, "{tag}: {}", a.name);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{tag}");
+                assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{tag}");
+            }
+            assert_eq!(got.frontier.len(), batch.len(), "{tag}: {}", net.name);
+            for (a, b) in got.frontier.iter().zip(&batch) {
+                assert_eq!(a.name, b.name, "{tag}");
+                assert_eq!(a.latency_ps, b.latency_ps, "{tag}: {}", a.name);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{tag}");
+                assert_eq!(a.sys, b.sys, "{tag}");
+            }
+        }
+    };
+
+    // Cold run: one compile per structural key (3 geometries) per net.
+    let cold = campaign::run(&spec, &opts).unwrap();
+    assert_identical(&cold, "cold");
+    assert_eq!(cold.compiles, 9, "3 nets x 3 geometries");
+    assert_eq!(cold.disk_hits, 0);
+
+    // Warm run (fresh caches, same directory): zero compilations, every
+    // structural key served from disk, identical results.
+    let warm = campaign::run(&spec, &opts).unwrap();
+    assert_identical(&warm, "warm");
+    assert_eq!(warm.compiles, 0, "warm disk cache must be compile-free");
+    assert_eq!(warm.disk_hits, 9);
+
+    // Corrupt one entry: the next run detects it, recompiles just that
+    // key, heals the file, and still produces identical frontiers.
+    let victim = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .expect("cache directory should hold entries");
+    std::fs::write(&victim, "{ definitely not a cache entry").unwrap();
+    let healed = campaign::run(&spec, &opts).unwrap();
+    assert_identical(&healed, "healed");
+    assert_eq!(healed.rejected_entries, 1);
+    assert_eq!(healed.compiles, 1, "only the corrupted key recompiles");
+    assert_eq!(healed.disk_hits, 8);
+
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

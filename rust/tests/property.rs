@@ -12,8 +12,10 @@
 //! * simulation is deterministic;
 //! * task-graph and DNN-graph JSON round-trip losslessly.
 
+use avsm::campaign::StreamingFrontier;
 use avsm::compiler::{compile, CompileOptions};
 use avsm::config::SystemConfig;
+use avsm::dse::{self, DesignPoint};
 use avsm::graph::{graph_from_json, graph_to_json, Activation, DnnGraph, Layer, Op, Padding, TensorShape};
 use avsm::hw::{simulate_avsm, AvsmTiming, TimingModel};
 use avsm::sim::{ClockDomain, TraceRecorder};
@@ -227,6 +229,54 @@ fn double_buffering_never_hurts() {
             "{}: double buffering slowed the net ({t_db} vs {t_sb})",
             net.name
         );
+    }
+}
+
+#[test]
+fn streaming_frontier_equals_batch_pareto_on_random_point_sets() {
+    // The campaign's online frontier must reproduce `dse::pareto` exactly
+    // — same members, same duplicate handling, same tie order — for any
+    // point set and ANY arrival order, as long as each point carries its
+    // stable enumeration index as the sequence number.
+    let mut rng = Rng::new(0xF407);
+    let sys = SystemConfig::base_paper();
+    for case in 0..60 {
+        let n = rng.range(0, 50) as usize;
+        // Small value ranges force heavy tie/duplicate traffic — the cases
+        // where tie order and duplicate retention can diverge.
+        let points: Vec<DesignPoint> = (0..n)
+            .map(|i| DesignPoint {
+                name: format!("p{i}"),
+                sys: sys.clone(),
+                latency_ps: rng.range(1, 15),
+                cost: rng.range(1, 10) as f64,
+                throughput: 0.0,
+            })
+            .collect();
+        // Random arrival order (Fisher-Yates on the index vector).
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            order.swap(i, j);
+        }
+        let mut frontier = StreamingFrontier::new();
+        for &i in &order {
+            frontier.insert_with_seq(points[i].clone(), i);
+        }
+        assert_eq!(frontier.inserted(), n, "case {case}");
+        assert_eq!(
+            frontier.len() + frontier.dominated() + frontier.pruned(),
+            n,
+            "case {case}: accounting must cover every insertion"
+        );
+        let stream = frontier.into_points();
+        let batch = dse::pareto(&points);
+        assert_eq!(stream.len(), batch.len(), "case {case}: frontier size");
+        for (s, b) in stream.iter().zip(&batch) {
+            assert_eq!(s.name, b.name, "case {case}: member/tie-order mismatch");
+            assert_eq!(s.latency_ps, b.latency_ps, "case {case}");
+            assert_eq!(s.cost.to_bits(), b.cost.to_bits(), "case {case}");
+        }
     }
 }
 

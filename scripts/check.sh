@@ -19,4 +19,7 @@ cargo test -q
 echo "== dse_sweep bench (smoke mode)"
 AVSM_BENCH_FAST=1 cargo bench --bench dse_sweep
 
+echo "== campaign bench (smoke mode)"
+AVSM_BENCH_FAST=1 cargo bench --bench campaign
+
 echo "== OK"
