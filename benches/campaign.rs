@@ -1,8 +1,11 @@
 //! Campaign throughput: multi-workload sweeps through the shared worker
 //! pool, cold disk cache (compile + serialize + persist) vs warm disk
-//! cache (deserialize only — zero compilations). Emits the machine-
-//! readable `BENCH_campaign.json` snapshot at the repo root with
-//! points/sec for both regimes.
+//! cache (deserialize only — zero compilations), and lower-bound pruning
+//! vs full evaluation on a frontier-sparse frequency grid (most points are
+//! provably dominated, so the bound skips their simulations outright —
+//! losslessly, which the bench asserts). Emits the machine-readable
+//! `BENCH_campaign.json` snapshot at the repo root with points/sec for
+//! every regime.
 
 use avsm::benchkit::Bench;
 use avsm::campaign::{self, CampaignOptions, CampaignSpec};
@@ -27,6 +30,21 @@ fn spec() -> CampaignSpec {
     }
 }
 
+/// Frontier-sparse grid: one geometry, a wide descending frequency axis.
+/// Cost is frequency-independent, so the fastest (first-enumerated) point
+/// dominates the whole axis and the low-frequency points' compute-roof
+/// lower bounds refuse them before simulation.
+fn sparse_spec() -> CampaignSpec {
+    CampaignSpec {
+        nets: vec![models::lenet(28), models::dilated_vgg_tiny()],
+        base: SystemConfig::base_paper(),
+        axes: dse::SweepAxes {
+            nce_freqs_mhz: vec![1000, 500, 250, 125, 100, 80, 64, 50],
+            ..Default::default()
+        },
+    }
+}
+
 fn main() {
     let mut bench = Bench::new("campaign");
     let spec = spec();
@@ -34,13 +52,17 @@ fn main() {
         (spec.nets.len() * dse::expand_configs(&spec.base, &spec.axes).len()) as f64;
 
     // Memory-only baseline: the shared-pool fan-out without a disk tier.
-    let mem_opts = CampaignOptions::default();
+    // The cache-focused cases run with pruning off so points_per_sec_mem/
+    // cold/warm measure cache effects alone and stay comparable to earlier
+    // snapshots; the sparse cases below isolate pruning explicitly.
+    let mem_opts = CampaignOptions { prune: false, ..Default::default() };
     let med_mem = bench
         .case("campaign_3nets_9pts_mem", || campaign::run(&spec, &mem_opts).unwrap())
         .median;
 
     let dir = std::env::temp_dir().join(format!("avsm_bench_campaign_{}", std::process::id()));
-    let disk_opts = CampaignOptions { cache_dir: Some(dir.clone()), ..Default::default() };
+    let disk_opts =
+        CampaignOptions { cache_dir: Some(dir.clone()), prune: false, ..Default::default() };
 
     // Cold: every iteration starts from an empty directory, so the case
     // times compile + serialize + persist for all structural keys.
@@ -62,8 +84,51 @@ fn main() {
     assert_eq!(warm.compiles, 0, "warm campaign must be compile-free");
     assert!(warm.disk_hits > 0);
 
+    // Bound-and-prune vs full evaluation on the frontier-sparse grid.
+    // Single worker on both sides: deterministic arrival order makes the
+    // skip set reproducible and the comparison apples-to-apples.
+    let sparse = sparse_spec();
+    let sparse_units =
+        (sparse.nets.len() * dse::expand_configs(&sparse.base, &sparse.axes).len()) as f64;
+    let pruned_opts = CampaignOptions { threads: 1, ..Default::default() };
+    let unpruned_opts = CampaignOptions { threads: 1, prune: false, ..Default::default() };
+    let med_pruned = bench
+        .case("campaign_sparse_pruned", || campaign::run(&sparse, &pruned_opts).unwrap())
+        .median;
+    let med_unpruned = bench
+        .case("campaign_sparse_unpruned", || campaign::run(&sparse, &unpruned_opts).unwrap())
+        .median;
+
+    // Pruning must be lossless and must actually skip simulations here.
+    let pruned = campaign::run(&sparse, &pruned_opts).unwrap();
+    let unpruned = campaign::run(&sparse, &unpruned_opts).unwrap();
+    assert!(pruned.skipped_by_bound > 0, "sparse grid must trigger pruning");
+    assert_eq!(unpruned.skipped_by_bound, 0);
+    for (a, b) in pruned.nets.iter().zip(&unpruned.nets) {
+        assert_eq!(a.frontier.len(), b.frontier.len(), "{}: pruning changed the frontier", a.net);
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.latency_ps, y.latency_ps);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+        }
+    }
+
     let pps_cold = units / med_cold.as_secs_f64();
     let pps_warm = units / med_warm.as_secs_f64();
+    let pps_pruned = sparse_units / med_pruned.as_secs_f64();
+    let pps_unpruned = sparse_units / med_unpruned.as_secs_f64();
+    bench.metric("points_per_sec_pruned", pps_pruned, "design points/s");
+    bench.metric("points_per_sec_unpruned", pps_unpruned, "design points/s");
+    bench.metric(
+        "prune_speedup",
+        med_unpruned.as_secs_f64() / med_pruned.as_secs_f64(),
+        "x",
+    );
+    bench.metric(
+        "skipped_by_bound",
+        pruned.skipped_by_bound as f64,
+        &format!("of {} units", pruned.total_units()),
+    );
     bench.metric("points_per_sec_cold", pps_cold, "design points/s");
     bench.metric("points_per_sec_warm", pps_warm, "design points/s");
     bench.metric(
@@ -82,7 +147,12 @@ fn main() {
         .unwrap_or_else(|| "BENCH_campaign.json".into());
     if let Err(e) = bench.write_json(
         &out,
-        &[("points_per_sec_cold", pps_cold), ("points_per_sec_warm", pps_warm)],
+        &[
+            ("points_per_sec_cold", pps_cold),
+            ("points_per_sec_warm", pps_warm),
+            ("points_per_sec_pruned", pps_pruned),
+            ("points_per_sec_unpruned", pps_unpruned),
+        ],
     ) {
         eprintln!("warning: could not write {}: {e}", out.display());
     } else {

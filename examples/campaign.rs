@@ -48,10 +48,12 @@ fn main() -> anyhow::Result<()> {
     let cold_wall = t0.elapsed();
     print!("{}", CampaignReport::new(&cold).render_text());
     println!(
-        "\ncold run: {} units in {:.2} s — {} compilations, cached to {}",
+        "\ncold run: {} units in {:.2} s — {} compilations, {} skipped by \
+         lower bound, cached to {}",
         cold.total_units(),
         cold_wall.as_secs_f64(),
         cold.compiles,
+        cold.skipped_by_bound,
         cache_dir.display()
     );
 

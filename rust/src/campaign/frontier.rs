@@ -117,6 +117,37 @@ impl StreamingFrontier {
         true
     }
 
+    /// Bound-and-prune query: could a candidate whose simulated latency is
+    /// only known to satisfy `latency >= lower_bound_ps`, at price `cost`,
+    /// still join this frontier?
+    ///
+    /// Returns `false` exactly when an existing member **strictly
+    /// dominates the hypothetical point `(lower_bound_ps, cost)`** — in
+    /// which case it strictly dominates every realizable candidate
+    /// `(latency >= lower_bound_ps, cost)` too, so simulating it is
+    /// provably wasted work. Strict dominance also survives later
+    /// evictions (whatever evicts the dominating member dominates the
+    /// candidate transitively), which is what makes pruning on this query
+    /// **lossless**: a refused candidate could never appear on any future
+    /// state of the frontier, duplicates-kept tie semantics included.
+    ///
+    /// Returns `true` (admit → simulate) whenever the candidate *might*
+    /// join — including the exact-tie case, which the batch definition
+    /// keeps as a duplicate.
+    pub fn admits(&self, lower_bound_ps: u64, cost: f64) -> bool {
+        // Mirror the insert-time dominance test at the hypothetical key
+        // (lower_bound_ps, cost, MAX): the predecessor under the sort order
+        // carries the minimum cost among all no-slower members.
+        let pos = self.entries.partition_point(|e| {
+            e.key_cmp(lower_bound_ps, cost, usize::MAX) == std::cmp::Ordering::Less
+        });
+        if pos == 0 {
+            return true;
+        }
+        let e = &self.entries[pos - 1];
+        !(e.cost < cost || (e.cost == cost && e.latency_ps < lower_bound_ps))
+    }
+
     /// Current frontier, ordered by `(latency, cost, seq)`.
     pub fn points(&self) -> impl Iterator<Item = &DesignPoint> {
         self.entries.iter().map(|e| &e.point)
@@ -259,5 +290,38 @@ mod tests {
         let f = StreamingFrontier::new();
         assert!(f.is_empty());
         assert_eq!(f.points().count(), 0);
+    }
+
+    #[test]
+    fn admits_mirrors_strict_dominance() {
+        let mut f = StreamingFrontier::new();
+        assert!(f.admits(100, 100.0), "empty frontier admits anything");
+        f.insert(pt(10, 5.0, 0));
+        // Strictly dominated hypotheticals are refused...
+        assert!(!f.admits(11, 5.0), "slower, same cost");
+        assert!(!f.admits(10, 6.0), "same bound, pricier");
+        assert!(!f.admits(15, 9.0), "worse on both");
+        // ...everything that might join is admitted.
+        assert!(f.admits(10, 5.0), "exact tie is a kept duplicate");
+        assert!(f.admits(9, 6.0), "maybe faster, pricier: incomparable");
+        assert!(f.admits(10, 4.0), "cheaper at the same bound");
+        assert!(f.admits(20, 3.0), "slower but cheaper");
+    }
+
+    #[test]
+    fn refused_candidates_could_never_join_even_after_evictions() {
+        // A bound-refused candidate must stay off the frontier under every
+        // later state: eviction only happens via dominating points, and
+        // strict dominance is transitive through them.
+        let mut f = StreamingFrontier::new();
+        f.insert(pt(10, 5.0, 0));
+        assert!(!f.admits(12, 5.0));
+        // Evict the member with a strictly better point; the refused
+        // candidate is still dominated by the evictor.
+        f.insert(pt(9, 4.0, 1));
+        assert_eq!(f.len(), 1);
+        assert!(!f.admits(12, 5.0), "refusal must survive evictions");
+        // Inserting the refused point directly confirms it is dominated.
+        assert!(!f.insert(pt(12, 5.0, 2)));
     }
 }

@@ -32,6 +32,35 @@
 //! batch `dse::pareto(dse::sweep(..))` regardless of worker timing — the
 //! equivalence the test suite enforces.
 //!
+//! # Bound-and-prune
+//!
+//! Before simulating a compiled unit, the worker computes the point's
+//! **admissible latency lower bound**
+//! ([`crate::compiler::latency_lower_bound`]: max of NCE and bus occupancy
+//! at the candidate's actual clocks, one O(tasks) pass over the cached
+//! graph, no simulation) and asks that net's frontier
+//! [`StreamingFrontier::admits`] whether a point at `(bound, cost)` could
+//! still join. A refusal means an existing member *strictly dominates*
+//! every latency the candidate could realize, and strict dominance
+//! survives later evictions — so skipping the simulation is **lossless**:
+//! pruned frontiers are byte-identical to unpruned ones (property-tested),
+//! only [`NetOutcome::skipped_by_bound`] changes. Which points get skipped
+//! depends on arrival timing under parallelism (a conservative race: a
+//! not-yet-inserted dominator just means one extra simulation), never the
+//! result. [`CampaignOptions::prune`] (CLI `--no-prune`) is the escape
+//! hatch; [`CampaignOptions::keep_points`] disables pruning implicitly
+//! because it asks for every feasible point, not just the frontier.
+//!
+//! # Outcome classification
+//!
+//! Every unit resolves to exactly one of *feasible* (simulated),
+//! *infeasible* (the tiler proved no legal tiling exists — a real hole in
+//! the grid), *error* (invalid swept config — a defect in the sweep, never
+//! conflated with infeasibility) or *skipped by bound*. The per-net
+//! accounting satisfies `evaluated == feasible + infeasible + errors +
+//! skipped_by_bound` and errors are surfaced with a sample diagnostic
+//! instead of silently vanishing from the results.
+//!
 //! # Persistence model
 //!
 //! With [`CampaignOptions::cache_dir`] set, every successful compilation
@@ -39,10 +68,14 @@
 //! into the directory via [`store`]; a later run — same process or a new
 //! CLI invocation — resolves every structural key from disk and performs
 //! **zero compilations** (assertable via [`CampaignResult::compiles`]).
-//! Corrupted or stale entries are detected (schema/key verification,
-//! task-graph validation), rejected, recompiled and rewritten. Without a
-//! cache directory the campaign still shares compilations in memory, per
-//! net, across the whole grid.
+//! Structurally *infeasible* keys are persisted too (negative records with
+//! the tiler's diagnostic), so warm campaigns also perform zero tiling
+//! attempts on the infeasible corners of a grid
+//! ([`NetOutcome::neg_hits`]). Corrupted or stale entries of either kind
+//! are detected (schema/key verification, task-graph validation),
+//! rejected, recompiled and rewritten. Without a cache directory the
+//! campaign still shares compilations in memory, per net, across the
+//! whole grid.
 //!
 //! [`CompileKey`]: crate::compiler::CompileKey
 
@@ -70,7 +103,7 @@ pub struct CampaignSpec {
 }
 
 /// Execution policy for [`run`].
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct CampaignOptions {
     /// Worker threads; 0 (default) = one per available CPU, capped by the
     /// unit count.
@@ -80,8 +113,20 @@ pub struct CampaignOptions {
     pub cache_dir: Option<PathBuf>,
     /// Also retain every feasible evaluated point per net (in grid order,
     /// identical to `dse::sweep` output). Off by default: a campaign
-    /// normally streams, keeping only the frontier.
+    /// normally streams, keeping only the frontier. Implies no pruning —
+    /// asking for every point means every point must simulate.
     pub keep_points: bool,
+    /// Lower-bound early termination (on by default): skip simulating grid
+    /// points whose admissible latency lower bound proves they cannot join
+    /// the frontier. Lossless — frontiers are byte-identical either way;
+    /// `false` (CLI `--no-prune`) forces every point to simulate.
+    pub prune: bool,
+}
+
+impl Default for CampaignOptions {
+    fn default() -> Self {
+        Self { threads: 0, cache_dir: None, keep_points: false, prune: true }
+    }
 }
 
 /// Per-workload outcome.
@@ -94,10 +139,21 @@ pub struct NetOutcome {
     /// All feasible points in grid order (empty unless
     /// [`CampaignOptions::keep_points`]).
     pub points: Vec<DesignPoint>,
-    /// Grid points evaluated (the full grid).
+    /// Grid points evaluated (the full grid). Always equals
+    /// `feasible + infeasible + errors + skipped_by_bound`.
     pub evaluated: usize,
-    /// Points that compiled and simulated (infeasible tilings excluded).
+    /// Points that compiled and simulated.
     pub feasible: usize,
+    /// Structurally infeasible tilings — genuine holes in the grid.
+    pub infeasible: usize,
+    /// Evaluations that failed for non-structural reasons (invalid swept
+    /// config). Never folded into `infeasible`.
+    pub errors: usize,
+    /// First error diagnostic, for the report.
+    pub error_sample: Option<String>,
+    /// Grid points whose latency lower bound proved they could not join
+    /// the frontier — compiled (or cache-resolved) but never simulated.
+    pub skipped_by_bound: usize,
     /// Feasible points dominated on arrival at the frontier.
     pub dominated: usize,
     /// Former frontier members evicted by later points.
@@ -106,10 +162,15 @@ pub struct NetOutcome {
     pub compiles: u64,
     /// Structural keys served from the disk tier.
     pub disk_hits: u64,
+    /// Keys answered "infeasible" from a persisted negative record (zero
+    /// tiling attempts).
+    pub neg_hits: u64,
     /// Probes served from the in-memory tier.
     pub mem_hits: u64,
     /// Corrupted/stale disk entries rejected.
     pub rejected: u64,
+    /// Disk-tier I/O read failures (other than "entry absent").
+    pub read_errors: u64,
 }
 
 /// Result of one campaign run.
@@ -123,8 +184,14 @@ pub struct CampaignResult {
     /// Compiler invocations across all nets — zero on a warm disk cache.
     pub compiles: u64,
     pub disk_hits: u64,
+    pub neg_hits: u64,
     pub mem_hits: u64,
     pub rejected_entries: u64,
+    pub read_errors: u64,
+    /// Units skipped by lower-bound pruning across all nets.
+    pub skipped_by_bound: usize,
+    /// Non-structural evaluation failures across all nets.
+    pub errors: usize,
 }
 
 impl CampaignResult {
@@ -137,6 +204,14 @@ impl CampaignResult {
     pub fn total_units(&self) -> usize {
         self.nets.len() * self.grid_points
     }
+}
+
+/// Classified result of one (net, grid point) unit.
+enum UnitOutcome {
+    Feasible(DesignPoint),
+    Infeasible,
+    Error(String),
+    SkippedByBound,
 }
 
 /// Run a campaign: every workload x every grid point in one fan-out.
@@ -161,60 +236,106 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         .map(|_| PersistentCache::new(dse::DSE_COMPILE_OPTS, opts.cache_dir.clone()))
         .collect::<Result<_>>()?;
 
-    let mut frontiers: Vec<StreamingFrontier> =
-        (0..n_nets).map(|_| StreamingFrontier::new()).collect();
+    // Frontiers live behind mutexes so *workers* can consult
+    // `StreamingFrontier::admits` before paying for a simulation, while
+    // insertions stay on the coordinating thread. keep_points asks for
+    // every feasible point, so it implies no pruning.
+    let prune = opts.prune && !opts.keep_points;
+    let frontiers: Vec<std::sync::Mutex<StreamingFrontier>> =
+        (0..n_nets).map(|_| std::sync::Mutex::new(StreamingFrontier::new())).collect();
     let mut kept: Vec<Vec<Option<DesignPoint>>> = (0..n_nets)
         .map(|_| if opts.keep_points { vec![None; n_cfg] } else { Vec::new() })
         .collect();
     let mut feasible = vec![0usize; n_nets];
+    let mut infeasible = vec![0usize; n_nets];
+    let mut errors = vec![0usize; n_nets];
+    let mut error_sample: Vec<Option<String>> = vec![None; n_nets];
+    let mut skipped = vec![0usize; n_nets];
 
     // Unit u covers net u / n_cfg at grid point u % n_cfg (net-major, so
     // one net's units are contiguous and its compile cache warms early).
-    // Workers evaluate; the coordinating thread streams arrivals into the
-    // per-net frontiers.
+    // Workers classify + evaluate; the coordinating thread streams
+    // arrivals into the per-net frontiers.
     pool::for_each_completed(
         jobs,
         opts.threads,
         |u| {
             let (ni, ci) = (u / n_cfg, u % n_cfg);
             let sys = &configs[ci];
-            caches[ni]
-                .get_or_compile(&spec.nets[ni], sys)
-                .ok()
-                .map(|compiled| dse::evaluate_compiled(&compiled, sys, sys.name.clone()))
-        },
-        |u, maybe_point| {
-            if let Some(p) = maybe_point {
-                let (ni, ci) = (u / n_cfg, u % n_cfg);
-                feasible[ni] += 1;
-                if opts.keep_points {
-                    kept[ni][ci] = Some(p.clone());
+            // One classifier shared with `dse::evaluate_outcome`: invalid
+            // swept configs and poisoned cache slots are errors; a
+            // post-validation cache failure is structural tiling
+            // infeasibility (possibly replayed from a persisted negative
+            // record).
+            let compiled = match dse::resolve_classified(&spec.nets[ni], sys, &sys.name, || {
+                caches[ni].get_or_compile(&spec.nets[ni], sys)
+            }) {
+                Ok(c) => c,
+                Err(dse::EvalOutcome::Error { name, reason }) => {
+                    return UnitOutcome::Error(format!("{name}: {reason}"))
                 }
-                frontiers[ni].insert_with_seq(p, ci);
+                Err(_) => return UnitOutcome::Infeasible,
+            };
+            if prune {
+                let bound = crate::compiler::latency_lower_bound(&compiled, sys);
+                let admitted =
+                    frontiers[ni].lock().unwrap().admits(bound, dse::cost_proxy(sys));
+                if !admitted {
+                    return UnitOutcome::SkippedByBound;
+                }
+            }
+            UnitOutcome::Feasible(dse::evaluate_compiled(&compiled, sys, sys.name.clone()))
+        },
+        |u, outcome| {
+            let (ni, ci) = (u / n_cfg, u % n_cfg);
+            match outcome {
+                UnitOutcome::Feasible(p) => {
+                    feasible[ni] += 1;
+                    if opts.keep_points {
+                        kept[ni][ci] = Some(p.clone());
+                    }
+                    frontiers[ni].lock().unwrap().insert_with_seq(p, ci);
+                }
+                UnitOutcome::Infeasible => infeasible[ni] += 1,
+                UnitOutcome::Error(reason) => {
+                    errors[ni] += 1;
+                    error_sample[ni].get_or_insert(reason);
+                }
+                UnitOutcome::SkippedByBound => skipped[ni] += 1,
             }
         },
     );
 
     let mut nets = Vec::with_capacity(n_nets);
-    let (mut compiles, mut disk_hits, mut mem_hits, mut rejected) = (0u64, 0u64, 0u64, 0u64);
+    let (mut compiles, mut disk_hits, mut neg_hits, mut mem_hits) = (0u64, 0u64, 0u64, 0u64);
+    let (mut rejected, mut read_errors) = (0u64, 0u64);
     for (ni, frontier) in frontiers.into_iter().enumerate() {
+        let frontier = frontier.into_inner().unwrap();
         let cache = &caches[ni];
         compiles += cache.compiles();
         disk_hits += cache.disk_hits();
+        neg_hits += cache.neg_hits();
         mem_hits += cache.mem_hits();
         rejected += cache.rejected();
+        read_errors += cache.read_errors();
         let dominated = frontier.dominated();
         let pruned = frontier.pruned();
         nets.push(NetOutcome {
             net: spec.nets[ni].name.clone(),
             evaluated: n_cfg,
             feasible: feasible[ni],
+            infeasible: infeasible[ni],
+            errors: errors[ni],
+            error_sample: error_sample[ni].take(),
+            skipped_by_bound: skipped[ni],
             dominated,
             pruned,
             compiles: cache.compiles(),
             disk_hits: cache.disk_hits(),
+            neg_hits: cache.neg_hits(),
             mem_hits: cache.mem_hits(),
             rejected: cache.rejected(),
+            read_errors: cache.read_errors(),
             points: kept[ni].drain(..).flatten().collect(),
             frontier: frontier.into_points(),
         });
@@ -225,8 +346,12 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         threads,
         compiles,
         disk_hits,
+        neg_hits,
         mem_hits,
         rejected_entries: rejected,
+        read_errors,
+        skipped_by_bound: skipped.iter().sum(),
+        errors: errors.iter().sum(),
     })
 }
 
@@ -291,10 +416,98 @@ mod tests {
                 got.feasible,
                 "every feasible point is on the frontier, dominated, or pruned"
             );
+            assert_eq!(
+                got.evaluated,
+                got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+                "every grid point must be classified exactly once"
+            );
+            // keep_points implies no pruning and this grid has no errors.
+            assert_eq!((got.skipped_by_bound, got.errors, got.infeasible), (0, 0, 0));
         }
         // One compile per structural key per net: 2 geometries.
         assert_eq!(result.compiles, 4);
         assert_eq!(result.disk_hits, 0);
+    }
+
+    #[test]
+    fn pruned_frontiers_are_byte_identical_to_unpruned_and_skip_points() {
+        // Frequency-sparse grid: the fast points arrive first (axis order),
+        // so low-frequency points' compute-roof lower bounds prove them
+        // dominated before simulation. Pruning must change *only* the
+        // skipped accounting — frontiers stay byte-identical to batch
+        // sweep + pareto at any worker count.
+        let spec = CampaignSpec {
+            nets: vec![models::lenet(28), models::dilated_vgg_tiny()],
+            base: SystemConfig::base_paper(),
+            axes: SweepAxes {
+                array_geometries: vec![(16, 32), (32, 64)],
+                nce_freqs_mhz: vec![500, 250, 125, 50],
+                ..Default::default()
+            },
+        };
+        for threads in [1usize, 0] {
+            let pruned =
+                run(&spec, &CampaignOptions { threads, ..Default::default() }).unwrap();
+            let unpruned = run(
+                &spec,
+                &CampaignOptions { threads, prune: false, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(unpruned.skipped_by_bound, 0);
+            for (ni, net) in spec.nets.iter().enumerate() {
+                let batch = dse::sweep(net, &spec.base, &spec.axes);
+                let batch_front = dse::pareto(&batch);
+                for (tag, result) in [("pruned", &pruned), ("unpruned", &unpruned)] {
+                    let got = &result.nets[ni];
+                    assert_eq!(
+                        got.frontier.len(),
+                        batch_front.len(),
+                        "{tag}/{threads}t: {}",
+                        net.name
+                    );
+                    for (a, b) in got.frontier.iter().zip(&batch_front) {
+                        assert_eq!(a.name, b.name, "{tag}/{threads}t");
+                        assert_eq!(a.latency_ps, b.latency_ps, "{tag}/{threads}t: {}", a.name);
+                        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{tag}/{threads}t");
+                        assert_eq!(a.sys, b.sys, "{tag}/{threads}t");
+                    }
+                    assert_eq!(
+                        got.evaluated,
+                        got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+                        "{tag}/{threads}t: {}",
+                        net.name
+                    );
+                }
+            }
+        }
+        // Single-threaded (deterministic arrival order) the 50 MHz points
+        // must actually be skipped: their compute occupancy alone exceeds
+        // the 500 MHz member's whole makespan.
+        let seq = run(&spec, &CampaignOptions { threads: 1, ..Default::default() }).unwrap();
+        assert!(
+            seq.skipped_by_bound > 0,
+            "expected lower-bound pruning on a frequency-sparse grid"
+        );
+    }
+
+    #[test]
+    fn invalid_swept_config_counts_as_error_not_infeasible() {
+        // A 0 MHz point in the frequency axis is a broken sweep, not a
+        // hole in the design space; it must surface in the error count
+        // with a diagnostic instead of vanishing.
+        let spec = CampaignSpec {
+            nets: vec![models::lenet(28)],
+            base: SystemConfig::base_paper(),
+            axes: SweepAxes { nce_freqs_mhz: vec![250, 0], ..Default::default() },
+        };
+        let result = run(&spec, &CampaignOptions::default()).unwrap();
+        let got = &result.nets[0];
+        assert_eq!((got.feasible, got.errors, got.infeasible), (1, 1, 0));
+        let sample = got.error_sample.as_deref().expect("error diagnostic retained");
+        assert!(sample.contains("invalid configuration"), "{sample}");
+        assert_eq!(result.errors, 1);
+        // The feasible point still made the frontier.
+        assert_eq!(got.frontier.len(), 1);
     }
 
     #[test]

@@ -24,10 +24,17 @@
 //!   entries. Within one process the in-memory tier's in-flight marker
 //!   already guarantees one writer per key.
 //!
-//! Only successful compilations are persisted; infeasible structural
-//! points are memoized in memory per process (they are cheap to rediscover
-//! and keeping the disk format artifact-only keeps it trivially
-//! verifiable).
+//! Infeasible structural points are persisted too, as **negative entries**
+//! (sidecar schema `avsm-compile-cache-neg-v1`): a record of the full
+//! [`CompileKey::to_json`] plus the tiler's diagnostic, written when a
+//! compile fails *past validation* (so only genuine structural
+//! infeasibility is ever recorded — never an I/O error or an invalid
+//! config). A warm campaign thereby skips re-tiling the infeasible corners
+//! of a large grid entirely: zero tiling attempts on persisted-infeasible
+//! keys, with the original diagnostic replayed. Negative entries verify
+//! their key on load exactly like artifacts; corrupted ones are rejected,
+//! re-tiled and rewritten. A positive artifact always shadows a negative
+//! record for the same key (lookup order: artifact → negative → compile).
 
 use crate::compiler::tiling::VectorTiling;
 use crate::compiler::{
@@ -44,10 +51,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 const SCHEMA: &str = "avsm-compile-cache-v1";
+const NEG_SCHEMA: &str = "avsm-compile-cache-neg-v1";
 
 /// File that stores the artifact for `key` under `dir`.
 pub fn entry_path(dir: &Path, key: &CompileKey) -> PathBuf {
     dir.join(format!("{:016x}.compiled.json", key.fingerprint()))
+}
+
+/// Sidecar file recording that `key` is structurally infeasible.
+pub fn negative_path(dir: &Path, key: &CompileKey) -> PathBuf {
+    dir.join(format!("{:016x}.infeasible.json", key.fingerprint()))
 }
 
 /// Serialize one compiled artifact (plus its full key, for verification on
@@ -98,34 +111,63 @@ fn layer_to_value(l: &CompiledLayer) -> Value {
 
 fn layer_from_value(lv: &Value) -> Result<CompiledLayer> {
     let tv = lv.get("tiling");
+    // All narrowing is checked (`req_u32`): a corrupted entry carrying an
+    // oversized value must read as rejection, never wrap into a plausible
+    // tiling — the module's "corrupted entries never load as wrong
+    // artifacts" guarantee.
     let tiling = match tv.get("kind").as_str().unwrap_or_default() {
         "conv" => LayerTiling::Conv(TilingChoice {
-            cin_t: tv.req_u64("cin_t")? as u32,
-            cout_t: tv.req_u64("cout_t")? as u32,
-            oh_t: tv.req_u64("oh_t")? as u32,
-            n_cin: tv.req_u64("n_cin")? as u32,
-            n_cout: tv.req_u64("n_cout")? as u32,
-            n_oh: tv.req_u64("n_oh")? as u32,
+            cin_t: tv.req_u32("cin_t")?,
+            cout_t: tv.req_u32("cout_t")?,
+            oh_t: tv.req_u32("oh_t")?,
+            n_cin: tv.req_u32("n_cin")?,
+            n_cout: tv.req_u32("n_cout")?,
+            n_oh: tv.req_u32("n_oh")?,
             ifm_resident: tv
                 .get("ifm_resident")
                 .as_bool()
                 .context("missing/invalid ifm_resident")?,
         }),
         "vector" => LayerTiling::Vector(VectorTiling {
-            oh_t: tv.req_u64("oh_t")? as u32,
-            n_oh: tv.req_u64("n_oh")? as u32,
+            oh_t: tv.req_u32("oh_t")?,
+            n_oh: tv.req_u32("n_oh")?,
         }),
         other => bail!("unknown tiling kind {other:?}"),
     };
     Ok(CompiledLayer {
-        index: lv.req_u64("index")? as u32,
+        index: lv.req_u32("index")?,
         name: lv.req_str("name")?.to_string(),
         tiling,
         compute_cycles: lv.req_u64("compute_cycles")?,
         dma_bytes: lv.req_u64("dma_bytes")?,
         macs: lv.req_u64("macs")?,
-        barrier: lv.req_u64("barrier")? as u32,
+        barrier: lv.req_u32("barrier")?,
     })
+}
+
+/// Serialize one negative (infeasible-key) record.
+pub fn negative_to_json(key: &CompileKey, diagnostic: &str) -> String {
+    obj(vec![
+        ("schema", NEG_SCHEMA.into()),
+        ("key", key.to_json()),
+        ("diagnostic", diagnostic.into()),
+    ])
+    .to_string_compact()
+}
+
+/// Parse and verify one negative record, returning the stored diagnostic.
+/// Key verification is identical to artifact entries: any mismatch reads
+/// as a miss, so a stale or colliding record can never mark a *feasible*
+/// key infeasible.
+pub fn negative_from_json(text: &str, expect_key: &CompileKey) -> Result<String> {
+    let v = json::parse(text).context("negative cache entry parse")?;
+    if v.get("schema").as_str() != Some(NEG_SCHEMA) {
+        bail!("unsupported negative cache schema");
+    }
+    if v.get("key") != &expect_key.to_json() {
+        bail!("negative entry key mismatch (stale entry or fingerprint collision)");
+    }
+    Ok(v.req_str("diagnostic")?.to_string())
 }
 
 /// Parse and verify one cache entry. `expect_key` is the key the caller is
@@ -162,17 +204,26 @@ pub fn entry_from_json(text: &str, expect_key: &CompileKey) -> Result<CompiledNe
 /// instance, so two caches sharing a directory in one process must not
 /// collide on the temp inode either.
 pub fn write_entry(dir: &Path, key: &CompileKey, compiled: &CompiledNet) -> Result<()> {
+    write_atomic(dir, key, &entry_path(dir, key), entry_to_json(key, compiled))
+}
+
+/// Persist a negative record atomically (same temp-file + rename protocol
+/// as [`write_entry`]).
+pub fn write_negative(dir: &Path, key: &CompileKey, diagnostic: &str) -> Result<()> {
+    write_atomic(dir, key, &negative_path(dir, key), negative_to_json(key, diagnostic))
+}
+
+fn write_atomic(dir: &Path, key: &CompileKey, path: &Path, content: String) -> Result<()> {
     static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
-    let path = entry_path(dir, key);
     let tmp = dir.join(format!(
         "{:016x}.tmp.{}.{}",
         key.fingerprint(),
         std::process::id(),
         WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
     ));
-    std::fs::write(&tmp, entry_to_json(key, compiled))
+    std::fs::write(&tmp, content)
         .with_context(|| format!("writing cache entry {tmp:?}"))?;
-    std::fs::rename(&tmp, &path)
+    std::fs::rename(&tmp, path)
         .with_context(|| format!("publishing cache entry {path:?}"))?;
     Ok(())
 }
@@ -185,9 +236,11 @@ pub struct PersistentCache {
     mem: CompileCache,
     dir: Option<PathBuf>,
     disk_hits: AtomicU64,
+    neg_hits: AtomicU64,
     compiles: AtomicU64,
     rejected: AtomicU64,
     write_errors: AtomicU64,
+    read_errors: AtomicU64,
 }
 
 impl PersistentCache {
@@ -202,9 +255,11 @@ impl PersistentCache {
             mem: CompileCache::new(opts),
             dir,
             disk_hits: AtomicU64::new(0),
+            neg_hits: AtomicU64::new(0),
             compiles: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             write_errors: AtomicU64::new(0),
+            read_errors: AtomicU64::new(0),
         })
     }
 
@@ -233,6 +288,13 @@ impl PersistentCache {
                     self.disk_hits.fetch_add(1, Ordering::Relaxed);
                     return Ok(Arc::new(compiled));
                 }
+                // No artifact: a persisted negative record replays the
+                // structural-infeasibility diagnostic with zero tiling
+                // attempts (the whole point of persisting them).
+                if let Some(diag) = self.try_load_negative(dir, key) {
+                    self.neg_hits.fetch_add(1, Ordering::Relaxed);
+                    return Err(diag);
+                }
             }
             self.compiles.fetch_add(1, Ordering::Relaxed);
             match compile(net, sys, self.mem.options()) {
@@ -246,19 +308,56 @@ impl PersistentCache {
                     }
                     Ok(Arc::new(compiled))
                 }
-                Err(e) => Err(format!("{e:#}")),
+                Err(e) => {
+                    // Past validation, a compile failure is structural —
+                    // safe to persist as a negative entry (best effort,
+                    // like artifacts).
+                    let diag = format!("{e:#}");
+                    if let Some(dir) = &self.dir {
+                        if write_negative(dir, key, &diag).is_err() {
+                            self.write_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Err(diag)
+                }
             }
         })
     }
 
     fn try_load(&self, dir: &Path, key: &CompileKey) -> Option<CompiledNet> {
-        let text = std::fs::read_to_string(entry_path(dir, key)).ok()?;
+        let text = self.read_cache_file(&entry_path(dir, key))?;
         match entry_from_json(&text, key) {
             Ok(compiled) => Some(compiled),
             Err(_) => {
                 // Corrupted/stale entry: count it and recompile (the write
                 // path will replace the bad file).
                 self.rejected.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn try_load_negative(&self, dir: &Path, key: &CompileKey) -> Option<String> {
+        let text = self.read_cache_file(&negative_path(dir, key))?;
+        match negative_from_json(&text, key) {
+            Ok(diag) => Some(diag),
+            Err(_) => {
+                // Corrupted negative record: reject, re-tile, rewrite.
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Read one cache file, distinguishing "entry absent" (a normal miss)
+    /// from a genuine I/O failure, which is *counted* instead of silently
+    /// degrading into an eternal miss.
+    fn read_cache_file(&self, path: &Path) -> Option<String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Some(text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(_) => {
+                self.read_errors.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
@@ -275,6 +374,12 @@ impl PersistentCache {
         self.disk_hits.load(Ordering::Relaxed)
     }
 
+    /// Keys answered "infeasible" from a persisted negative record —
+    /// structural holes resolved with zero tiling attempts.
+    pub fn neg_hits(&self) -> u64 {
+        self.neg_hits.load(Ordering::Relaxed)
+    }
+
     /// Disk entries rejected as corrupted or stale.
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
@@ -283,6 +388,12 @@ impl PersistentCache {
     /// Failed best-effort entry writes.
     pub fn write_errors(&self) -> u64 {
         self.write_errors.load(Ordering::Relaxed)
+    }
+
+    /// Disk-tier read failures other than "entry absent" — I/O errors that
+    /// would previously have been indistinguishable from cold misses.
+    pub fn read_errors(&self) -> u64 {
+        self.read_errors.load(Ordering::Relaxed)
     }
 
     /// In-memory tier hits (probes that skipped both disk and compiler).
@@ -395,6 +506,108 @@ mod tests {
         let key = CompileKey::new(&net, &sys, opts());
         let text = entry_to_json(&key, &compiled);
         assert!(entry_from_json(&text[..text.len() / 2], &key).is_err());
+    }
+
+    #[test]
+    fn oversized_layer_field_is_rejected_and_healed() {
+        // A corrupted entry whose `index` exceeds u32 must be *rejected*
+        // (previously `as u32` silently wrapped it to a plausible value),
+        // and the persistent tier must recompile and heal the file.
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        let compiled = compile(&net, &sys, opts()).unwrap();
+        let key = CompileKey::new(&net, &sys, opts());
+        let text = entry_to_json(&key, &compiled);
+        let bad = text.replace("\"index\":0", "\"index\":4294967296");
+        assert_ne!(bad, text, "fixture must actually corrupt a field");
+        let err = entry_from_json(&bad, &key).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds u32"), "{err:#}");
+
+        let dir = tmp_dir("oversized");
+        std::fs::write(entry_path(&dir, &key), &bad).unwrap();
+        let cache = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let a = cache.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((cache.compiles(), cache.rejected()), (1, 1));
+        assert_eq!(*a, compiled);
+        // Healed on disk: a fresh cache loads it cleanly.
+        let again = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        again.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((again.compiles(), again.rejected()), (0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The (net, config) pair from the compiler cache tests whose tiling is
+    /// provably infeasible (a 512-px 4-byte input row cannot fit 1 KiB).
+    fn infeasible_pair() -> (DnnGraph, SystemConfig) {
+        let net = models::dilated_vgg(512, 4, 16);
+        let mut tiny = SystemConfig::base_paper();
+        tiny.nce.ifm_buffer_kib = 1;
+        tiny.nce.weight_buffer_kib = 1;
+        tiny.nce.ofm_buffer_kib = 1;
+        (net, tiny)
+    }
+
+    #[test]
+    fn negative_entry_roundtrips_and_verifies_key() {
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        let key = CompileKey::new(&net, &sys, opts());
+        let text = negative_to_json(&key, "tiling infeasible: no fit");
+        assert_eq!(
+            negative_from_json(&text, &key).unwrap(),
+            "tiling infeasible: no fit"
+        );
+        // Wrong key refuses — a stale record can never mark a feasible key
+        // infeasible.
+        let other = CompileKey::new(&models::dilated_vgg_tiny(), &sys, opts());
+        assert!(negative_from_json(&text, &other).is_err());
+        // Corruption refuses.
+        assert!(negative_from_json(&text[..text.len() / 2], &key).is_err());
+        // An artifact entry is not a negative entry (schema check).
+        let compiled = compile(&net, &sys, opts()).unwrap();
+        assert!(negative_from_json(&entry_to_json(&key, &compiled), &key).is_err());
+    }
+
+    #[test]
+    fn persisted_negative_entry_skips_retiling() {
+        let dir = tmp_dir("negative");
+        let (net, tiny) = infeasible_pair();
+
+        // Cold: one tiling attempt, fails, negative entry persisted.
+        let cold = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let first = cold.get_or_compile(&net, &tiny);
+        assert!(first.is_err());
+        assert_eq!((cold.compiles(), cold.neg_hits()), (1, 0));
+        let key = CompileKey::new(&net, &tiny, opts());
+        assert!(negative_path(&dir, &key).exists());
+
+        // Warm (fresh cache, same directory): zero tiling attempts, the
+        // diagnostic replays from disk.
+        let warm = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let second = warm.get_or_compile(&net, &tiny);
+        assert!(second.is_err());
+        assert_eq!((warm.compiles(), warm.neg_hits()), (0, 1));
+        assert_eq!(
+            format!("{:#}", second.unwrap_err()),
+            format!("{:#}", first.unwrap_err()),
+            "persisted diagnostic must replay verbatim"
+        );
+        // A second probe of the same key stays in the memory tier.
+        assert!(warm.get_or_compile(&net, &tiny).is_err());
+        assert_eq!((warm.neg_hits(), warm.mem_hits()), (1, 1));
+
+        // Corrupted negative record: rejected, re-tiled once, rewritten.
+        std::fs::write(negative_path(&dir, &key), "{ not a record").unwrap();
+        let healed = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        assert!(healed.get_or_compile(&net, &tiny).is_err());
+        assert_eq!(
+            (healed.compiles(), healed.rejected(), healed.neg_hits()),
+            (1, 1, 0)
+        );
+        let again = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        assert!(again.get_or_compile(&net, &tiny).is_err());
+        assert_eq!((again.compiles(), again.neg_hits()), (0, 1));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -133,6 +133,12 @@ impl CompileKey {
     }
 }
 
+/// Sentinel diagnostic memoized when a cache source unwound mid-compile: a
+/// poisoned slot, not a statement about the design point. Outcome
+/// classification (`dse::resolve_classified`) matches on this to report an
+/// *error* rather than an infeasible tiling.
+pub const POISONED_SOURCE_DIAG: &str = "cache source panicked";
+
 /// One memoized outcome: a compiled artifact, or the rendered error of an
 /// infeasible structural point (negative entry — an infeasible geometry
 /// fails once, not once per frequency point sharing it).
@@ -250,7 +256,7 @@ impl CompileCache {
             fn drop(&mut self) {
                 if let Some(key) = self.key.take() {
                     let mut map = self.cache.map.lock().unwrap();
-                    map.insert(key, Slot::Ready(Err("cache source panicked".into())));
+                    map.insert(key, Slot::Ready(Err(POISONED_SOURCE_DIAG.into())));
                     self.cache.done.notify_all();
                 }
             }

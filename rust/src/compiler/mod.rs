@@ -21,8 +21,10 @@ pub mod cost;
 pub mod lower;
 pub mod tiling;
 
-pub use analytical::{analytical_estimate, analytical_estimate_compiled, AnalyticalEstimate};
-pub use cache::{CompileCache, CompileKey};
+pub use analytical::{
+    analytical_estimate, analytical_estimate_compiled, latency_lower_bound, AnalyticalEstimate,
+};
+pub use cache::{CompileCache, CompileKey, POISONED_SOURCE_DIAG};
 pub use cost::CostModel;
 pub use lower::{compile, CompileOptions, CompiledLayer, CompiledNet};
 pub use tiling::{LayerTiling, TilingChoice};

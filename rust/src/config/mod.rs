@@ -298,14 +298,14 @@ impl SystemConfig {
         let cfg = Self {
             name: v.req_str("name")?.to_string(),
             nce: NceConfig {
-                array_rows: nce.req_u64("array_rows")? as u32,
-                array_cols: nce.req_u64("array_cols")? as u32,
+                array_rows: nce.req_u32("array_rows")?,
+                array_cols: nce.req_u32("array_cols")?,
                 freq_mhz: nce.req_u64("freq_mhz")?,
                 task_setup_cycles: nce.req_u64("task_setup_cycles")?,
-                ifm_buffer_kib: nce.req_u64("ifm_buffer_kib")? as u32,
-                weight_buffer_kib: nce.req_u64("weight_buffer_kib")? as u32,
-                ofm_buffer_kib: nce.req_u64("ofm_buffer_kib")? as u32,
-                pipeline_depth: nce.req_u64("pipeline_depth")? as u32,
+                ifm_buffer_kib: nce.req_u32("ifm_buffer_kib")?,
+                weight_buffer_kib: nce.req_u32("weight_buffer_kib")?,
+                ofm_buffer_kib: nce.req_u32("ofm_buffer_kib")?,
+                pipeline_depth: nce.req_u32("pipeline_depth")?,
             },
             bus: BusConfig {
                 freq_mhz: bus.req_u64("freq_mhz")?,
@@ -322,7 +322,7 @@ impl SystemConfig {
                 data_bytes_per_cycle: mem.req_u64("data_bytes_per_cycle")?,
                 avg_latency_ns: mem.req_u64("avg_latency_ns")?,
                 avsm_eff_bw_pct: mem.req_u64("avsm_eff_bw_pct")?,
-                banks: mem.req_u64("banks")? as u32,
+                banks: mem.req_u32("banks")?,
                 row_bytes: mem.req_u64("row_bytes")?,
                 t_rcd: mem.req_u64("t_rcd")?,
                 t_rp: mem.req_u64("t_rp")?,
@@ -332,7 +332,7 @@ impl SystemConfig {
                 t_rfc: mem.req_u64("t_rfc")?,
             },
             dma: DmaConfig {
-                channels: dma.req_u64("channels")? as u32,
+                channels: dma.req_u32("channels")?,
                 setup_cycles: dma.req_u64("setup_cycles")?,
             },
             hkp: HkpConfig {
@@ -390,6 +390,18 @@ mod tests {
         let mut c = SystemConfig::base_paper();
         c.dma.channels = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn oversized_u32_field_rejected_not_wrapped() {
+        // 2^32 rows would wrap to 0 under an unchecked `as u32` and then be
+        // rejected as "empty array" — or worse, 2^32 + 32 would wrap to a
+        // plausible 32. Narrowing must read as rejection.
+        let text = SystemConfig::base_paper()
+            .to_json()
+            .replace("\"array_rows\": 32,", "\"array_rows\": 4294967328,");
+        let err = SystemConfig::from_json(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("array_rows"), "{err:#}");
     }
 
     #[test]

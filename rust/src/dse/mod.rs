@@ -50,7 +50,7 @@ use crate::graph::DnnGraph;
 use crate::hw::simulate_avsm;
 use crate::json::{obj, Value};
 use crate::sim::TraceRecorder;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Compiler options used for every DSE evaluation: double buffering on (the
 /// base software design point), labels off (never read on the fast path).
@@ -99,7 +99,11 @@ pub struct SweepOptions {
     pub threads: usize,
 }
 
-fn cost_proxy(sys: &SystemConfig) -> f64 {
+/// Crude area/cost proxy of a design point: multipliers + 2x KiB of on-chip
+/// RAM. Public because the campaign's bound-and-prune check must price a
+/// candidate *before* simulating it, with the exact value its
+/// [`DesignPoint`] would carry.
+pub fn cost_proxy(sys: &SystemConfig) -> f64 {
     let mults = sys.nce.macs_per_cycle() as f64;
     let ram_kib = (sys.nce.ifm_buffer_kib + sys.nce.weight_buffer_kib + sys.nce.ofm_buffer_kib)
         as f64;
@@ -112,7 +116,10 @@ fn point_from_sim(sys: &SystemConfig, name: String, total_ps: u64) -> DesignPoin
         sys: sys.clone(),
         latency_ps: total_ps,
         cost: cost_proxy(sys),
-        throughput: 1e12 / total_ps as f64,
+        // Guard the degenerate zero-latency simulation (empty task graph):
+        // report zero throughput instead of +inf, which would poison JSON
+        // exports and any averaging downstream.
+        throughput: if total_ps == 0 { 0.0 } else { 1e12 / total_ps as f64 },
     }
 }
 
@@ -151,6 +158,87 @@ pub fn evaluate_cached(
     Ok(evaluate_compiled(&compiled, sys, name))
 }
 
+/// Classified outcome of evaluating one design point. An evaluation can
+/// fail for two *very* different reasons, and a sweep must never conflate
+/// them: "this tiling cannot fit the buffers" is a property of the design
+/// point (a legitimate hole in the grid), while "the swept config is
+/// invalid" is a defect in the sweep itself that would otherwise vanish
+/// silently from the results.
+#[derive(Debug, Clone)]
+pub enum EvalOutcome {
+    /// Compiled and simulated.
+    Feasible(DesignPoint),
+    /// Structurally infeasible: the tiler proved no legal tiling exists for
+    /// this (net, geometry, buffers) combination. Carries the compiler's
+    /// diagnostic.
+    Infeasible { name: String, reason: String },
+    /// Not a statement about the design point: invalid swept configuration
+    /// or a poisoned cache slot. Must be surfaced, never counted as
+    /// "infeasible tiling".
+    Error { name: String, reason: String },
+}
+
+impl EvalOutcome {
+    /// The feasible design point, if any.
+    pub fn point(self) -> Option<DesignPoint> {
+        match self {
+            EvalOutcome::Feasible(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+/// Validate `(net, sys)` and resolve its compiled artifact through
+/// `resolve`, classifying every failure: validation problems and poisoned
+/// cache slots ([`crate::compiler::POISONED_SOURCE_DIAG`]) are
+/// [`EvalOutcome::Error`]; anything else `resolve` reports is, by the
+/// compile cache's invariant, structural tiling infeasibility. `Ok` hands
+/// the artifact back to the caller — to simulate, or to bound-check first
+/// the way the campaign's pruning pipeline does. The single classifier
+/// shared by [`evaluate_outcome`] and `campaign::run`, so the sweep and
+/// campaign surfaces can never drift apart on the same grid.
+pub fn resolve_classified(
+    net: &DnnGraph,
+    sys: &SystemConfig,
+    name: &str,
+    resolve: impl FnOnce() -> Result<std::sync::Arc<CompiledNet>>,
+) -> Result<std::sync::Arc<CompiledNet>, EvalOutcome> {
+    if let Err(e) = net.validate().and_then(|_| sys.validate()) {
+        return Err(EvalOutcome::Error {
+            name: name.to_string(),
+            reason: format!("invalid configuration: {e:#}"),
+        });
+    }
+    match resolve() {
+        Ok(compiled) => Ok(compiled),
+        Err(e) => {
+            let reason = format!("{e:#}");
+            if reason.contains(crate::compiler::POISONED_SOURCE_DIAG) {
+                // A worker unwound mid-compile and poisoned the slot: not a
+                // property of the design point, never "infeasible".
+                Err(EvalOutcome::Error { name: name.to_string(), reason })
+            } else {
+                Err(EvalOutcome::Infeasible { name: name.to_string(), reason })
+            }
+        }
+    }
+}
+
+/// Evaluate one design point and classify the outcome (see
+/// [`resolve_classified`] for the failure taxonomy).
+pub fn evaluate_outcome(
+    net: &DnnGraph,
+    sys: &SystemConfig,
+    name: impl Into<String>,
+    cache: &CompileCache,
+) -> EvalOutcome {
+    let name = name.into();
+    match resolve_classified(net, sys, &name, || cache.get_or_compile(net, sys)) {
+        Ok(compiled) => EvalOutcome::Feasible(evaluate_compiled(&compiled, sys, name)),
+        Err(outcome) => outcome,
+    }
+}
+
 /// Enumerate the cartesian grid of configs in deterministic axis order
 /// (geometry, frequency, bus width, IFM buffer — outermost to innermost).
 /// Public so the campaign engine expands the same grid once and shares it
@@ -185,7 +273,10 @@ pub fn expand_configs(base: &SystemConfig, axes: &SweepAxes) -> Vec<SystemConfig
 
 /// Cartesian sweep around a base system, parallel across design points with
 /// one shared compile cache. Infeasible points (tiling fails) are skipped.
-/// Result order is deterministic and identical to [`sweep_seq`].
+/// Result order is deterministic and identical to [`sweep_seq`]. Callers
+/// that must tell infeasible holes apart from evaluation *errors* (invalid
+/// swept configs) should use [`sweep_outcomes`], which classifies every
+/// grid point instead of silently dropping the failures.
 pub fn sweep(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<DesignPoint> {
     sweep_with(net, base, axes, &SweepOptions::default())
 }
@@ -208,15 +299,31 @@ pub fn sweep_with(
     axes: &SweepAxes,
     opts: &SweepOptions,
 ) -> Vec<DesignPoint> {
+    sweep_outcomes(net, base, axes, opts)
+        .into_iter()
+        .filter_map(EvalOutcome::point)
+        .collect()
+}
+
+/// Like [`sweep_with`], but returns every grid point's *classified* outcome
+/// (one entry per enumerated config, in grid order): feasible points carry
+/// their [`DesignPoint`], infeasible tilings and genuine errors each carry
+/// a diagnostic. This is the honest form of the sweep — [`sweep`] is the
+/// feasible-only projection of it, so callers that must distinguish "hole
+/// in the design space" from "broken sweep" (the campaign engine, reports)
+/// use this.
+pub fn sweep_outcomes(
+    net: &DnnGraph,
+    base: &SystemConfig,
+    axes: &SweepAxes,
+    opts: &SweepOptions,
+) -> Vec<EvalOutcome> {
     let configs = expand_configs(base, axes);
     let cache = CompileCache::new(DSE_COMPILE_OPTS);
     crate::campaign::pool::parallel_map(configs.len(), opts.threads, |i| {
         let sys = &configs[i];
-        evaluate_cached(net, sys, sys.name.clone(), &cache).ok()
+        evaluate_outcome(net, sys, sys.name.clone(), &cache)
     })
-    .into_iter()
-    .flatten()
-    .collect()
 }
 
 /// Pareto frontier: points not dominated in (latency, cost), sorted by
@@ -278,6 +385,13 @@ pub fn topdown_min_nce_freq(
     freq_range_mhz: (u64, u64),
 ) -> Result<Option<u64>> {
     let (mut lo, mut hi) = freq_range_mhz;
+    // An inverted or zero range would not fail loudly: the two boundary
+    // probes alone would "answer" with a frequency that means nothing.
+    if lo == 0 || lo > hi {
+        bail!(
+            "topdown frequency range must satisfy 0 < lo <= hi, got ({lo}, {hi}) MHz"
+        );
+    }
     let cache = CompileCache::new(DSE_COMPILE_OPTS);
     let latency_at = |mhz: u64| -> Result<u64> {
         let mut sys = base.clone();
@@ -527,6 +641,58 @@ mod tests {
         let net = models::lenet(28);
         let got = topdown_min_nce_freq(&net, &base(), 1, (50, 1000)).unwrap();
         assert!(got.is_none());
+    }
+
+    #[test]
+    fn topdown_rejects_inverted_and_zero_ranges() {
+        let net = models::lenet(28);
+        let b = base();
+        // lo > hi: previously returned a silently-wrong answer from the two
+        // boundary probes; must now be a descriptive error.
+        let err = topdown_min_nce_freq(&net, &b, 1_000_000, (1000, 50)).unwrap_err();
+        assert!(format!("{err:#}").contains("lo <= hi"), "{err:#}");
+        // lo == 0 is not a probe-able frequency.
+        let err = topdown_min_nce_freq(&net, &b, 1_000_000, (0, 1000)).unwrap_err();
+        assert!(format!("{err:#}").contains("0 < lo"), "{err:#}");
+        // Degenerate single-point range stays legal.
+        assert!(topdown_min_nce_freq(&net, &b, 1, (250, 250)).is_ok());
+    }
+
+    #[test]
+    fn sweep_outcomes_tell_errors_apart_from_infeasible() {
+        let net = models::lenet(28);
+        // One valid frequency, one invalid (0 MHz fails validation).
+        let axes = SweepAxes { nce_freqs_mhz: vec![250, 0], ..Default::default() };
+        let outs = sweep_outcomes(&net, &base(), &axes, &SweepOptions { threads: 1 });
+        assert_eq!(outs.len(), 2);
+        assert!(matches!(outs[0], EvalOutcome::Feasible(_)), "{:?}", outs[0]);
+        match &outs[1] {
+            EvalOutcome::Error { reason, .. } => {
+                assert!(reason.contains("invalid configuration"), "{reason}")
+            }
+            other => panic!("0 MHz must classify as Error, got {other:?}"),
+        }
+        // The feasible-only projection drops it, as before.
+        assert_eq!(sweep(&net, &base(), &axes).len(), 1);
+    }
+
+    #[test]
+    fn sweep_outcomes_classify_true_tiling_infeasibility() {
+        // The 512-wide 4-byte input row cannot fit a 1 KiB IFM buffer (see
+        // compiler::cache tests) — a genuine hole in the design space.
+        let net = models::dilated_vgg(512, 4, 16);
+        let mut tiny = base();
+        tiny.nce.ifm_buffer_kib = 1;
+        tiny.nce.weight_buffer_kib = 1;
+        tiny.nce.ofm_buffer_kib = 1;
+        let outs =
+            sweep_outcomes(&net, &tiny, &SweepAxes::default(), &SweepOptions { threads: 1 });
+        assert_eq!(outs.len(), 1);
+        assert!(
+            matches!(outs[0], EvalOutcome::Infeasible { .. }),
+            "tiny buffers must classify as Infeasible, got {:?}",
+            outs[0]
+        );
     }
 
     #[test]

@@ -106,6 +106,14 @@ impl Value {
             .ok_or_else(|| anyhow!("missing/invalid unsigned field {key:?}"))
     }
 
+    /// Like [`Value::req_u64`] but additionally requires the value to fit
+    /// `u32` — checked narrowing that reads as rejection, never as a
+    /// silent wrap (`as u32` on an oversized value would).
+    pub fn req_u32(&self, key: &str) -> Result<u32> {
+        let v = self.req_u64(key)?;
+        u32::try_from(v).map_err(|_| anyhow!("field {key:?}: {v} exceeds u32 range"))
+    }
+
     pub fn req_f64(&self, key: &str) -> Result<f64> {
         self.get(key)
             .as_f64()
@@ -566,6 +574,17 @@ mod tests {
         assert!(v.req_str("a").is_err());
         assert!(v.req_u64("missing").is_err());
         assert_eq!(v.get("nope").get("deeper").at(3), &Value::Null);
+    }
+
+    #[test]
+    fn req_u32_rejects_oversized_values_instead_of_wrapping() {
+        let v = parse(r#"{"ok": 42, "big": 4294967296, "neg": -1}"#).unwrap();
+        assert_eq!(v.req_u32("ok").unwrap(), 42);
+        // 2^32 would silently wrap to 0 under `as u32`; it must error.
+        let err = v.req_u32("big").unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds u32"));
+        assert!(v.req_u32("neg").is_err());
+        assert!(v.req_u32("missing").is_err());
     }
 
     #[test]

@@ -56,7 +56,12 @@ COMMON OPTIONS:
                       lenet,dilated_vgg_tiny,tiny_resnet)
   --cache-dir DIR     persistent compile cache for `campaign`: a second
                       invocation against a warm directory compiles nothing
+                      (feasible *and* infeasible keys are both persisted)
   --threads N         worker threads for `campaign` (default: all CPUs)
+  --no-prune          disable the campaign's lower-bound early termination
+                      and simulate every grid point (pruning is lossless —
+                      frontiers are identical either way — so this is a
+                      diagnostic/benchmark escape hatch)
 ";
 
 fn load_sys(args: &Args) -> Result<SystemConfig> {
@@ -290,6 +295,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         threads: args.get_u64("threads", 0)? as usize,
         cache_dir: args.get("cache-dir").map(PathBuf::from),
         keep_points: false,
+        prune: !args.has("no-prune"),
     };
     let result = campaign::run(&spec, &opts)?;
     let report = CampaignReport::new(&result);

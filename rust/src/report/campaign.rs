@@ -53,12 +53,19 @@ impl<'a> CampaignReport<'a> {
         ));
         for net in &r.nets {
             out.push_str(&format!(
-                "\n== {} — frontier ({} of {} feasible points, {} evaluated)\n",
+                "\n== {} — frontier ({} of {} feasible points, {} evaluated, \
+                 {} skipped by bound, {} infeasible, {} errors)\n",
                 net.net,
                 net.frontier.len(),
                 net.feasible,
-                net.evaluated
+                net.evaluated,
+                net.skipped_by_bound,
+                net.infeasible,
+                net.errors
             ));
+            if let Some(sample) = &net.error_sample {
+                out.push_str(&format!("!! first error: {sample}\n"));
+            }
             out.push_str(&format!(
                 "{:<28} {:>14} {:>12} {:>10}\n",
                 "design point", "latency", "infer/s", "cost"
@@ -90,8 +97,8 @@ impl<'a> CampaignReport<'a> {
         }
         out.push_str(&format!(
             "\n== compile cache\ncompilations: {}  memory hits: {}  disk hits: {}  \
-             rejected entries: {}\n",
-            r.compiles, r.mem_hits, r.disk_hits, r.rejected_entries
+             negative hits: {}  rejected entries: {}  read errors: {}\n",
+            r.compiles, r.mem_hits, r.disk_hits, r.neg_hits, r.rejected_entries, r.read_errors
         ));
         out
     }
@@ -103,6 +110,8 @@ impl<'a> CampaignReport<'a> {
             ("workloads", r.nets.len().into()),
             ("grid_points", r.grid_points.into()),
             ("threads", r.threads.into()),
+            ("skipped_by_bound", r.skipped_by_bound.into()),
+            ("errors", r.errors.into()),
             (
                 "nets",
                 Value::Array(r.nets.iter().map(net_to_value).collect()),
@@ -133,7 +142,9 @@ impl<'a> CampaignReport<'a> {
                     ("compilations", r.compiles.into()),
                     ("memory_hits", r.mem_hits.into()),
                     ("disk_hits", r.disk_hits.into()),
+                    ("negative_hits", r.neg_hits.into()),
                     ("rejected_entries", r.rejected_entries.into()),
+                    ("read_errors", r.read_errors.into()),
                 ]),
             ),
         ])
@@ -145,10 +156,18 @@ fn net_to_value(net: &NetOutcome) -> Value {
         ("name", net.net.as_str().into()),
         ("evaluated", net.evaluated.into()),
         ("feasible", net.feasible.into()),
+        ("infeasible", net.infeasible.into()),
+        ("errors", net.errors.into()),
+        (
+            "error_sample",
+            net.error_sample.as_deref().map_or(Value::Null, Value::from),
+        ),
+        ("skipped_by_bound", net.skipped_by_bound.into()),
         ("dominated", net.dominated.into()),
         ("pruned", net.pruned.into()),
         ("compilations", net.compiles.into()),
         ("disk_hits", net.disk_hits.into()),
+        ("negative_hits", net.neg_hits.into()),
         ("memory_hits", net.mem_hits.into()),
         ("frontier", dse::sweep_to_json(&net.frontier)),
     ])
@@ -174,13 +193,19 @@ mod tests {
         NetOutcome {
             net: name.into(),
             feasible: frontier.len() + 1,
-            evaluated: frontier.len() + 2,
+            evaluated: frontier.len() + 4,
+            infeasible: 1,
+            errors: 1,
+            error_sample: Some("nce0x0_f0: invalid configuration".into()),
+            skipped_by_bound: 1,
             dominated: 1,
             pruned: 0,
             compiles: 2,
             disk_hits: 0,
+            neg_hits: 1,
             mem_hits: 1,
             rejected: 0,
+            read_errors: 0,
             points: Vec::new(),
             frontier,
         }
@@ -192,12 +217,16 @@ mod tests {
                 net("lenet", vec![pt("a", 10, 5.0), pt("b", 20, 3.0)]),
                 net("vgg", vec![pt("a", 30, 5.0), pt("c", 40, 3.0)]),
             ],
-            grid_points: 4,
+            grid_points: 6,
             threads: 2,
             compiles: 4,
             disk_hits: 0,
+            neg_hits: 2,
             mem_hits: 2,
             rejected_entries: 0,
+            read_errors: 0,
+            skipped_by_bound: 2,
+            errors: 2,
         }
     }
 
@@ -214,11 +243,17 @@ mod tests {
     fn text_report_names_everything() {
         let r = result();
         let text = CampaignReport::new(&r).render_text();
-        assert!(text.contains("2 workloads x 4 design points"));
+        assert!(text.contains("2 workloads x 6 design points"));
         assert!(text.contains("== lenet"));
         assert!(text.contains("== vgg"));
         assert!(text.contains("designs on every frontier: a"));
         assert!(text.contains("compilations: 4"));
+        // The new accounting is visible, errors loudly so.
+        assert!(text.contains("1 skipped by bound"), "{text}");
+        assert!(text.contains("1 infeasible"));
+        assert!(text.contains("1 errors"));
+        assert!(text.contains("!! first error: nce0x0_f0"));
+        assert!(text.contains("negative hits: 2"));
     }
 
     #[test]
@@ -226,13 +261,23 @@ mod tests {
         let r = result();
         let j = CampaignReport::new(&r).to_json();
         assert_eq!(j.get("schema").as_str(), Some("avsm-campaign-v1"));
-        assert_eq!(j.get("grid_points").as_u64(), Some(4));
+        assert_eq!(j.get("grid_points").as_u64(), Some(6));
+        assert_eq!(j.get("skipped_by_bound").as_u64(), Some(2));
+        assert_eq!(j.get("errors").as_u64(), Some(2));
         assert_eq!(j.get("nets").as_array().unwrap().len(), 2);
+        let n0 = j.get("nets").at(0);
+        assert_eq!(n0.get("skipped_by_bound").as_u64(), Some(1));
+        assert_eq!(n0.get("infeasible").as_u64(), Some(1));
+        assert_eq!(n0.get("errors").as_u64(), Some(1));
+        assert!(n0.get("error_sample").as_str().unwrap().contains("invalid"));
+        assert_eq!(n0.get("negative_hits").as_u64(), Some(1));
         assert_eq!(
             j.get("cross_net").get("common_frontier").at(0).as_str(),
             Some("a")
         );
         assert_eq!(j.get("cache").get("compilations").as_u64(), Some(4));
+        assert_eq!(j.get("cache").get("negative_hits").as_u64(), Some(2));
+        assert_eq!(j.get("cache").get("read_errors").as_u64(), Some(0));
         // Serializes and parses back.
         let back = crate::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(back, j);

@@ -183,20 +183,33 @@ impl RooflineModel {
             Some(z) => self.zoom(z),
             None => self.points.iter().collect(),
         };
-        let xmin: f64 = zoom.unwrap_or(
-            pts.iter().map(|p| p.intensity).fold(f64::MAX, f64::min).max(0.1) * 0.5,
-        );
-        let xmax = pts
+        // Axis bounds. An empty point set (zoom filtered everything out, or
+        // a model with no layers) must not fold to `f64::MAX * 0.5 > xmax`
+        // — that yields NaN/degenerate coordinates. Fall back to a window
+        // around the ridge so the roofs alone still render, and keep
+        // `xmin < xmax` under every zoom value.
+        let xmin: f64 = zoom
+            .unwrap_or_else(|| {
+                if pts.is_empty() {
+                    (self.ridge * 0.25).max(0.1)
+                } else {
+                    pts.iter().map(|p| p.intensity).fold(f64::MAX, f64::min).max(0.1) * 0.5
+                }
+            })
+            .max(1e-6);
+        let xmax = (pts
             .iter()
             .map(|p| p.intensity)
             .fold(self.ridge, f64::max)
-            * 4.0;
+            * 4.0)
+            .max(xmin * 2.0);
         let ymax = self.peak_ops * 2.0;
-        let ymin = pts
+        let ymin = (pts
             .iter()
             .map(|p| p.achieved_ops)
             .fold(self.peak_ops, f64::min)
-            * 0.3;
+            * 0.3)
+            .max(f64::MIN_POSITIVE);
         let x = |v: f64| ml + (v.ln() - xmin.ln()) / (xmax.ln() - xmin.ln()) * (w - ml - 20.0);
         let y = |v: f64| {
             h - mb - (v.ln() - ymin.ln()) / (ymax.ln() - ymin.ln()) * (h - mb - 20.0)
@@ -334,6 +347,23 @@ mod tests {
         let zoomed = m.zoom(m.ridge * 0.8);
         assert!(zoomed.len() < m.points.len());
         assert!(zoomed.iter().all(|p| p.intensity >= m.ridge * 0.8));
+    }
+
+    #[test]
+    fn empty_zoom_still_renders_finite_svg_and_text() {
+        // A zoom threshold above every layer's intensity filters out all
+        // points; the renders must stay finite (previously the empty fold
+        // produced xmin = f64::MAX * 0.5 > xmax and NaN coordinates).
+        let m = model_for(&models::dilated_vgg_tiny());
+        let huge = m.points.iter().map(|p| p.intensity).fold(0.0, f64::max) * 10.0;
+        assert!(m.zoom(huge).is_empty(), "fixture zoom must filter everything");
+        let svg = m.render_svg(Some(huge));
+        assert!(svg.starts_with("<svg") && svg.ends_with("</svg>"));
+        assert!(!svg.contains("NaN") && !svg.contains("inf"), "{svg}");
+        // The roofs themselves still render.
+        assert!(svg.contains("polyline"));
+        let txt = m.render_text(Some(huge));
+        assert!(txt.contains("roofline"));
     }
 
     #[test]

@@ -226,6 +226,8 @@ fn campaign_matches_per_net_sweeps_and_warm_cache_compiles_nothing() {
     assert_identical(&cold, "cold");
     assert_eq!(cold.compiles, 9, "3 nets x 3 geometries");
     assert_eq!(cold.disk_hits, 0);
+    // keep_points implies no pruning, and this grid is error-free.
+    assert_eq!((cold.errors, cold.skipped_by_bound), (0, 0));
 
     // Warm run (fresh caches, same directory): zero compilations, every
     // structural key served from disk, identical results.
@@ -248,6 +250,48 @@ fn campaign_matches_per_net_sweeps_and_warm_cache_compiles_nothing() {
     assert_eq!(healed.rejected_entries, 1);
     assert_eq!(healed.compiles, 1, "only the corrupted key recompiles");
     assert_eq!(healed.disk_hits, 8);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_campaign_skips_tiling_of_persisted_infeasible_keys() {
+    // A grid whose every structural key is infeasible (512-px 4-byte rows
+    // cannot fit 1 KiB buffers): the cold run attempts each tiling once
+    // and persists negative records; the warm run performs *zero* tiling
+    // attempts, answering every corner from disk.
+    let mut base = SystemConfig::base_paper();
+    base.nce.ifm_buffer_kib = 1;
+    base.nce.weight_buffer_kib = 1;
+    base.nce.ofm_buffer_kib = 1;
+    let spec = CampaignSpec {
+        nets: vec![models::dilated_vgg(512, 4, 16)],
+        base,
+        axes: dse::SweepAxes {
+            array_geometries: vec![(16, 32), (32, 64)],
+            nce_freqs_mhz: vec![125, 250],
+            ..Default::default()
+        },
+    };
+    let dir = std::env::temp_dir().join(format!("avsm_neg_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = CampaignOptions { cache_dir: Some(dir.clone()), ..Default::default() };
+
+    let cold = campaign::run(&spec, &opts).unwrap();
+    let got = &cold.nets[0];
+    assert_eq!((got.feasible, got.infeasible, got.errors), (0, 4, 0));
+    assert!(got.frontier.is_empty());
+    assert_eq!(cold.compiles, 2, "one tiling attempt per structural key");
+    assert_eq!(cold.neg_hits, 0);
+
+    // Warm run, fresh caches: the 2 structural keys resolve from negative
+    // records (zero tiling attempts); the other 2 units are memory hits.
+    let warm = campaign::run(&spec, &opts).unwrap();
+    let got = &warm.nets[0];
+    assert_eq!((got.feasible, got.infeasible), (0, 4));
+    assert_eq!(warm.compiles, 0, "warm campaign must not re-tile infeasible keys");
+    assert_eq!(warm.neg_hits, 2);
+    assert_eq!(warm.read_errors, 0);
 
     std::fs::remove_dir_all(&dir).unwrap();
 }

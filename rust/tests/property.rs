@@ -13,7 +13,7 @@
 //! * task-graph and DNN-graph JSON round-trip losslessly.
 
 use avsm::campaign::StreamingFrontier;
-use avsm::compiler::{compile, CompileOptions};
+use avsm::compiler::{compile, latency_lower_bound, CompileOptions};
 use avsm::config::SystemConfig;
 use avsm::dse::{self, DesignPoint};
 use avsm::graph::{graph_from_json, graph_to_json, Activation, DnnGraph, Layer, Op, Padding, TensorShape};
@@ -229,6 +229,79 @@ fn double_buffering_never_hurts() {
             "{}: double buffering slowed the net ({t_db} vs {t_sb})",
             net.name
         );
+    }
+}
+
+#[test]
+fn latency_lower_bound_is_admissible_for_random_cases() {
+    // The bound-and-prune contract: for every (net, config) the analytical
+    // lower bound must never exceed the simulated latency — otherwise
+    // campaign pruning could drop genuine frontier members. Random nets x
+    // random structural configs x random clock retimes of one compilation.
+    let mut rng = Rng::new(0x10B0);
+    let mut checked = 0;
+    for case in 0..30 {
+        let net = random_net(&mut rng);
+        let sys = random_sys(&mut rng);
+        let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
+            continue;
+        };
+        // The compiled artifact is clock-free: probe several frequency
+        // annotations of the same compilation, as a campaign retime does.
+        for mhz in [50u64, sys.nce.freq_mhz, 4 * sys.nce.freq_mhz] {
+            let mut retimed = sys.clone();
+            retimed.nce.freq_mhz = mhz;
+            let lb = latency_lower_bound(&compiled, &retimed);
+            let mut tr = TraceRecorder::disabled();
+            let sim = simulate_avsm(&compiled, &retimed, &mut tr);
+            assert!(
+                lb <= sim.total_ps,
+                "case {case} ({} @ {mhz} MHz): lower bound {lb} > simulated {}",
+                net.name,
+                sim.total_ps
+            );
+            assert!(lb > 0, "case {case}: bound must be non-trivial");
+        }
+        checked += 1;
+    }
+    assert!(checked >= 15, "too few feasible random cases ({checked})");
+}
+
+#[test]
+fn frontier_admits_is_consistent_with_insertion() {
+    // If `admits(lb, cost)` refuses, then *no* point with latency >= lb at
+    // that cost may ever join the frontier — across later insertions too.
+    let mut rng = Rng::new(0xADA117);
+    let sys = SystemConfig::base_paper();
+    let pt = |lat: u64, cost: f64, i: usize| DesignPoint {
+        name: format!("p{i}"),
+        sys: sys.clone(),
+        latency_ps: lat,
+        cost,
+        throughput: 0.0,
+    };
+    for case in 0..40 {
+        let mut frontier = StreamingFrontier::new();
+        let n = rng.range(1, 30) as usize;
+        for i in 0..n {
+            frontier.insert_with_seq(pt(rng.range(1, 20), rng.range(1, 12) as f64, i), i);
+        }
+        for probe in 0..30 {
+            let lb = rng.range(1, 20);
+            let cost = rng.range(1, 12) as f64;
+            if !frontier.admits(lb, cost) {
+                // The tightest realizable candidate (latency == lb) must be
+                // rejected as dominated, leaving the frontier untouched.
+                let before: Vec<u64> =
+                    frontier.points().map(|p| p.latency_ps).collect();
+                assert!(
+                    !frontier.insert_with_seq(pt(lb, cost, n + probe), n + probe),
+                    "case {case}: refused candidate ({lb}, {cost}) joined"
+                );
+                let after: Vec<u64> = frontier.points().map(|p| p.latency_ps).collect();
+                assert_eq!(before, after, "case {case}: refusal mutated the frontier");
+            }
+        }
     }
 }
 

@@ -19,7 +19,11 @@ cargo test -q
 echo "== dse_sweep bench (smoke mode)"
 AVSM_BENCH_FAST=1 cargo bench --bench dse_sweep
 
-echo "== campaign bench (smoke mode)"
+# The campaign bench also smokes the bound-and-prune path: it runs the
+# frontier-sparse grid pruned and unpruned, asserts the frontiers are
+# byte-identical (lossless pruning) and that the bound actually skipped
+# simulations, and reports points/sec for both regimes.
+echo "== campaign bench (smoke mode, incl. pruned vs unpruned)"
 AVSM_BENCH_FAST=1 cargo bench --bench campaign
 
 echo "== OK"
