@@ -15,19 +15,17 @@ use avsm::graph::models;
 use std::path::Path;
 
 fn spec() -> CampaignSpec {
-    CampaignSpec {
-        nets: vec![
+    CampaignSpec::homogeneous(
+        vec![
             models::lenet(28),
             models::dilated_vgg_tiny(),
             models::tiny_resnet(32, 16, 3),
         ],
-        base: SystemConfig::base_paper(),
-        axes: dse::SweepAxes {
-            array_geometries: vec![(16, 32), (32, 64), (64, 64)],
-            nce_freqs_mhz: vec![125, 250, 500],
-            ..Default::default()
-        },
-    }
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500]),
+    )
 }
 
 /// Frontier-sparse grid: one geometry, a wide descending frequency axis.
@@ -35,21 +33,30 @@ fn spec() -> CampaignSpec {
 /// dominates the whole axis and the low-frequency points' compute-roof
 /// lower bounds refuse them before simulation.
 fn sparse_spec() -> CampaignSpec {
-    CampaignSpec {
-        nets: vec![models::lenet(28), models::dilated_vgg_tiny()],
-        base: SystemConfig::base_paper(),
-        axes: dse::SweepAxes {
-            nce_freqs_mhz: vec![1000, 500, 250, 125, 100, 80, 64, 50],
-            ..Default::default()
-        },
-    }
+    CampaignSpec::homogeneous(
+        vec![models::lenet(28), models::dilated_vgg_tiny()],
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new().nce_freqs_mhz(vec![1000, 500, 250, 125, 100, 80, 64, 50]),
+    )
+}
+
+/// The adversarial arrival order for pruning: the same frequency axis
+/// *ascending*, so plain grid order simulates the slowest point first and
+/// every later point evicts it — zero skips without bound-guided
+/// ordering, near-total skips with it.
+fn ascending_spec() -> CampaignSpec {
+    CampaignSpec::homogeneous(
+        vec![models::lenet(28), models::dilated_vgg_tiny()],
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new().nce_freqs_mhz(vec![50, 64, 80, 100, 125, 250, 500, 1000]),
+    )
 }
 
 fn main() {
     let mut bench = Bench::new("campaign");
     let spec = spec();
     let units =
-        (spec.nets.len() * dse::expand_configs(&spec.base, &spec.axes).len()) as f64;
+        (spec.workloads.len() * dse::expand_configs(&spec.base, &spec.axes).len()) as f64;
 
     // Memory-only baseline: the shared-pool fan-out without a disk tier.
     // The cache-focused cases run with pruning off so points_per_sec_mem/
@@ -89,7 +96,7 @@ fn main() {
     // skip set reproducible and the comparison apples-to-apples.
     let sparse = sparse_spec();
     let sparse_units =
-        (sparse.nets.len() * dse::expand_configs(&sparse.base, &sparse.axes).len()) as f64;
+        (sparse.workloads.len() * dse::expand_configs(&sparse.base, &sparse.axes).len()) as f64;
     let pruned_opts = CampaignOptions { threads: 1, ..Default::default() };
     let unpruned_opts = CampaignOptions { threads: 1, prune: false, ..Default::default() };
     let med_pruned = bench
@@ -112,6 +119,42 @@ fn main() {
             assert_eq!(x.cost.to_bits(), y.cost.to_bits());
         }
     }
+
+    // Bound-guided unit ordering vs plain grid order on the ascending
+    // (adversarial) grid: ordering inserts likely dominators first, so the
+    // skip rate — and with it throughput — rises while frontiers stay
+    // byte-identical (the campaign's own tests enforce the identity; here
+    // we compare the rates).
+    let asc = ascending_spec();
+    let asc_units = asc
+        .workloads
+        .iter()
+        .enumerate()
+        .map(|(ni, _)| dse::expand_configs(asc.base_of(ni), asc.axes_of(ni)).len())
+        .sum::<usize>() as f64;
+    let ordered_opts = CampaignOptions { threads: 1, ..Default::default() };
+    let unordered_opts =
+        CampaignOptions { threads: 1, order_by_bound: false, ..Default::default() };
+    bench.case("campaign_ascending_ordered", || campaign::run(&asc, &ordered_opts).unwrap());
+    bench.case("campaign_ascending_unordered", || {
+        campaign::run(&asc, &unordered_opts).unwrap()
+    });
+    let ordered = campaign::run(&asc, &ordered_opts).unwrap();
+    let unordered = campaign::run(&asc, &unordered_opts).unwrap();
+    assert!(
+        ordered.skipped_by_bound >= unordered.skipped_by_bound,
+        "ordering must never lower the skip rate"
+    );
+    bench.metric(
+        "skip_rate_ordered",
+        100.0 * ordered.skipped_by_bound as f64 / asc_units,
+        "% of units",
+    );
+    bench.metric(
+        "skip_rate_unordered",
+        100.0 * unordered.skipped_by_bound as f64 / asc_units,
+        "% of units",
+    );
 
     let pps_cold = units / med_cold.as_secs_f64();
     let pps_warm = units / med_warm.as_secs_f64();

@@ -22,11 +22,9 @@ fn main() {
     // geometry shared across the frequency axis, points simulated in
     // parallel. The uncached-serial case is the pre-cache pipeline (full
     // compile+simulate per point, one thread) for an in-run speedup figure.
-    let axes = dse::SweepAxes {
-        array_geometries: vec![(16, 32), (32, 64), (64, 64)],
-        nce_freqs_mhz: vec![125, 250, 500],
-        ..Default::default()
-    };
+    let axes = dse::SweepAxes::new()
+        .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+        .nce_freqs_mhz(vec![125, 250, 500]);
     let med = bench.case("sweep_9_points", || dse::sweep(&net, &sys, &axes)).median;
     let med_seq = bench
         .case("sweep_9_points_cached_serial", || dse::sweep_seq(&net, &sys, &axes))
@@ -36,19 +34,9 @@ fn main() {
             // Same grid as `axes` above, evaluated the pre-cache way: a
             // full compile+simulate per point, single-threaded.
             let mut points = Vec::new();
-            for &(r, c) in &axes.array_geometries {
-                for &f in &axes.nce_freqs_mhz {
-                    let mut s = sys.clone();
-                    s.nce.array_rows = r;
-                    s.nce.array_cols = c;
-                    s.nce.freq_mhz = f;
-                    s.name = format!(
-                        "nce{r}x{c}_f{f}_bus{}_ifm{}",
-                        s.bus.bytes_per_cycle, s.nce.ifm_buffer_kib
-                    );
-                    if let Ok(p) = dse::evaluate(&net, &s, s.name.clone()) {
-                        points.push(p);
-                    }
+            for s in dse::expand_configs(&sys, &axes) {
+                if let Ok(p) = dse::evaluate(&net, &s, s.name.clone()) {
+                    points.push(p);
                 }
             }
             points
@@ -68,6 +56,21 @@ fn main() {
         "x",
     );
     bench.metric("pareto_size", dse::pareto(&pts).len() as f64, "points");
+
+    // Generic requirement solver (paper §2 top-down, any axis): the
+    // structural/retime split must hold — one compilation total on a
+    // retime-only axis (NCE frequency), no matter how many binary-search
+    // probes the target needs.
+    let target_ps = dse::evaluate(&net, &sys, "base").unwrap().latency_ps * 3 / 2;
+    let sol = dse::solve_requirement(&net, &sys, dse::Axis::NceFreqMhz, target_ps, (25, 2000))
+        .unwrap();
+    assert_eq!(
+        sol.compiles, 1,
+        "retime-only axis must compile exactly once across the whole solve"
+    );
+    assert!(sol.value.is_some(), "1.5x baseline latency must be reachable");
+    bench.metric("solver_compiles", sol.compiles as f64, "compilations");
+    bench.metric("solver_probes", sol.probes as f64, "simulations");
 
     // Machine-readable perf snapshot at the repo root (the package lives in
     // rust/, so the manifest dir's parent is the repository).

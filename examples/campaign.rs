@@ -9,7 +9,7 @@
 //! cargo run --release --example campaign
 //! ```
 
-use avsm::campaign::{self, CampaignOptions, CampaignSpec};
+use avsm::campaign::{self, CampaignOptions, CampaignSpec, WorkloadSpec};
 use avsm::config::SystemConfig;
 use avsm::dse;
 use avsm::graph::models;
@@ -17,19 +17,17 @@ use avsm::report::CampaignReport;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let spec = CampaignSpec {
-        nets: vec![
+    let spec = CampaignSpec::homogeneous(
+        vec![
             models::lenet(28),
             models::dilated_vgg_tiny(),
             models::tiny_resnet(32, 16, 3),
         ],
-        base: SystemConfig::base_paper(),
-        axes: dse::SweepAxes {
-            array_geometries: vec![(16, 32), (32, 64), (64, 64)],
-            nce_freqs_mhz: vec![125, 250, 500],
-            ..Default::default()
-        },
-    };
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500]),
+    );
     let cache_dir = std::env::temp_dir().join(format!(
         "avsm_campaign_example_{}",
         std::process::id()
@@ -76,5 +74,40 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(c.frontier.len(), w.frontier.len());
     }
     let _ = std::fs::remove_dir_all(&cache_dir);
+
+    // Heterogeneous portfolio (SMAUG-style): each DNN against its *own*
+    // accelerator design space — the tiny edge net sweeps an
+    // embedded-sized geometry grid around a small-buffer base, while
+    // LeNet sweeps the shared frequency axis — in one fan-out over the
+    // same worker pool.
+    let mut embedded = SystemConfig::base_paper();
+    embedded.name = "embedded_small_buffers".into();
+    embedded.nce.ifm_buffer_kib = 256;
+    embedded.nce.weight_buffer_kib = 128;
+    let hetero = CampaignSpec {
+        workloads: vec![
+            WorkloadSpec::new(models::lenet(28)),
+            WorkloadSpec::new(models::dilated_vgg_tiny())
+                .with_base(embedded)
+                .with_axes(
+                    dse::SweepAxes::new()
+                        .array_geometries(vec![(8, 16), (16, 32), (32, 64)])
+                        .nce_freqs_mhz(vec![250, 500]),
+                ),
+        ],
+        base: SystemConfig::base_paper(),
+        axes: dse::SweepAxes::new().nce_freqs_mhz(vec![125, 250, 500]),
+    };
+    let result = campaign::run(&hetero, &CampaignOptions::default())?;
+    println!("\nheterogeneous campaign ({} units):", result.total_units());
+    for net in &result.nets {
+        println!(
+            "  {} on base {:?}: {} grid points, frontier of {}",
+            net.net,
+            net.base,
+            net.evaluated,
+            net.frontier.len()
+        );
+    }
     Ok(())
 }

@@ -23,12 +23,15 @@ fn main() -> anyhow::Result<()> {
     // layer mix; swap in dilated_vgg_paper() for the full-size sweep.
     let net = models::dilated_vgg(128, 1, 16);
 
-    let axes = dse::SweepAxes {
-        array_geometries: vec![(16, 32), (32, 32), (32, 64), (64, 64), (128, 128)],
-        nce_freqs_mhz: vec![125, 250, 500],
-        bus_bytes_per_cycle: vec![16, 32, 64],
-        ..Default::default()
-    };
+    // Axes are first-class values (dse::Axis): the same sweep can be
+    // written as a JSON axis spec for the CLI —
+    //   avsm sweep --axes '[{"axis":"array_geometry","values":[[16,32],...]},
+    //                       {"axis":"nce_freq_mhz","values":[125,250,500]},
+    //                       {"axis":"bus_bytes_per_cycle","values":[16,32,64]}]'
+    let axes = dse::SweepAxes::new()
+        .array_geometries(vec![(16, 32), (32, 32), (32, 64), (64, 64), (128, 128)])
+        .nce_freqs_mhz(vec![125, 250, 500])
+        .bus_bytes_per_cycle(vec![16, 32, 64]);
     let n_points = 5 * 3 * 3;
     println!("sweeping {n_points} design points of {} ...", net.name);
     let t0 = Instant::now();
@@ -61,17 +64,43 @@ fn main() -> anyhow::Result<()> {
         fmt_ps(bu.latency_ps)
     );
 
-    // Top-down: what NCE clock hits 15 inferences/s?
+    // Top-down: what NCE clock hits 15 inferences/s? The solver works on
+    // any monotone scalar axis; the NCE clock is retime-only, so every
+    // binary-search probe reuses one compilation.
     let target_ps = 1_000_000_000_000u64 / 15;
-    match dse::topdown_min_nce_freq(&net, &base, target_ps, (25, 2000))? {
+    let sol = dse::solve_requirement(&net, &base, dse::Axis::NceFreqMhz, target_ps, (25, 2000))?;
+    match sol.value {
         Some(mhz) => println!(
             "top-down (paper §2): ≥15 inference/s requires NCE ≥ {mhz} MHz \
-             (other annotations fixed)"
+             (other annotations fixed; {} probes, {} compilation)",
+            sol.probes, sol.compiles
         ),
         None => println!(
             "top-down: 15 inference/s unreachable by clock scaling alone — \
              the system is communication-bound; widen the bus/buffers"
         ),
+    }
+
+    // The same question on a *structural* axis: the minimum bus width that
+    // sustains the base config's latency plus 10% slack. Each probed width
+    // re-tiles (the width is part of the compile key), which the solution
+    // reports honestly.
+    let sol = dse::solve_requirement(
+        &net,
+        &base,
+        dse::Axis::BusBytesPerCycle,
+        bu.latency_ps + bu.latency_ps / 10,
+        (4, 64),
+    )?;
+    match sol.value {
+        Some(w) => println!(
+            "top-down on the bus-width axis: ≥{:.1} inference/s needs ≥ {w} B/cycle \
+             ({} probes, {} compilations — structural axis)",
+            1e12 / (bu.latency_ps + bu.latency_ps / 10) as f64,
+            sol.probes,
+            sol.compiles
+        ),
+        None => println!("top-down: bus width alone cannot reach the target in (4, 64)"),
     }
     Ok(())
 }

@@ -10,31 +10,36 @@
 //!
 //! # Execution model
 //!
-//! A campaign is `N` workloads x one [`SweepAxes`] grid around a base
-//! [`SystemConfig`]. The grid is expanded **once** (deterministic axis
-//! order, shared by every net) and the full `N x P` unit matrix fans out
-//! over a single worker pool ([`pool`]) — workers do not idle at per-net
-//! boundaries the way `N` back-to-back sweeps would. Each unit:
+//! A campaign is `N` workloads, each against its **own** grid: a
+//! [`WorkloadSpec`] may override the campaign-wide base [`SystemConfig`]
+//! and/or [`SweepAxes`], so one run can sweep a heterogeneous portfolio —
+//! each DNN against its own accelerator grid, SMAUG-style — while a
+//! homogeneous portfolio ([`CampaignSpec::homogeneous`]) behaves exactly
+//! as before. Per-net grids are expanded up front (deterministic axis
+//! order) and the full unit list (net-major) fans out over a single
+//! worker pool ([`pool`]) in two phases:
 //!
-//! 1. resolves its compiled artifact through its net's
-//!    [`PersistentCache`] (memory → disk → compile; frequency-only
-//!    config changes always share one compilation, exactly as in
-//!    single-net DSE),
-//! 2. simulates the point (AVSM fast path, traces off), and
-//! 3. streams the resulting [`DesignPoint`] back to the coordinating
-//!    thread, which folds it into that net's online
-//!    [`StreamingFrontier`] — dominated points are dropped on arrival,
-//!    so memory stays O(frontier + grid), not O(evaluations), and
-//!    frontiers are live while the sweep still runs.
+//! 1. **Resolve**: every unit resolves its compiled artifact through its
+//!    net's [`PersistentCache`] (memory → disk → compile; retime-only
+//!    axis moves always share one compilation, exactly as in single-net
+//!    DSE) and, when pruning is on, computes its admissible latency lower
+//!    bound.
+//! 2. **Simulate**: compiled units are re-fanned out — in **ascending
+//!    lower-bound order** per net when
+//!    [`CampaignOptions::order_by_bound`] is set (the default), so likely
+//!    dominators are simulated and inserted into the per-net
+//!    [`StreamingFrontier`] first, maximizing the skip rate — and each
+//!    simulated [`DesignPoint`] streams back to the coordinating thread,
+//!    which folds it into that net's frontier.
 //!
 //! Each point carries its grid-enumeration index as the frontier sequence
 //! number, which makes the final per-net frontier **byte-identical** to
-//! batch `dse::pareto(dse::sweep(..))` regardless of worker timing — the
-//! equivalence the test suite enforces.
+//! batch `dse::pareto(dse::sweep(..))` regardless of worker timing *and*
+//! of the evaluation order — the equivalence the test suite enforces.
 //!
 //! # Bound-and-prune
 //!
-//! Before simulating a compiled unit, the worker computes the point's
+//! Before simulating a compiled unit, the worker takes the point's
 //! **admissible latency lower bound**
 //! ([`crate::compiler::latency_lower_bound`]: max of NCE and bus occupancy
 //! at the candidate's actual clocks, one O(tasks) pass over the cached
@@ -47,11 +52,13 @@
 //! only [`NetOutcome::skipped_by_bound`] changes. Which points get skipped
 //! depends on arrival timing under parallelism (a conservative race: a
 //! not-yet-inserted dominator just means one extra simulation), never the
-//! result. [`CampaignOptions::prune`] (CLI `--no-prune`) is the escape
-//! hatch; [`CampaignOptions::keep_points`] disables pruning implicitly
-//! because it asks for every feasible point, not just the frontier.
+//! result; bound-ascending ordering exists precisely to make the lucky
+//! order the *common* order. [`CampaignOptions::prune`] (CLI `--no-prune`)
+//! is the escape hatch; [`CampaignOptions::keep_points`] disables pruning
+//! implicitly because it asks for every feasible point, not just the
+//! frontier.
 //!
-//! # Outcome classification
+//! # Outcome classification & error policy
 //!
 //! Every unit resolves to exactly one of *feasible* (simulated),
 //! *infeasible* (the tiler proved no legal tiling exists — a real hole in
@@ -60,6 +67,10 @@
 //! accounting satisfies `evaluated == feasible + infeasible + errors +
 //! skipped_by_bound` and errors are surfaced with a sample diagnostic
 //! instead of silently vanishing from the results.
+//! [`CampaignOptions::fail_fast`] (CLI `--fail-fast`) turns the first
+//! *error*-classified unit into a hard abort of the whole run with that
+//! unit's diagnostic — the CI-gate mode; infeasible tilings and
+//! bound-skips are legitimate outcomes and never trigger it.
 //!
 //! # Persistence model
 //!
@@ -92,14 +103,69 @@ use crate::graph::DnnGraph;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
-/// What to sweep: a portfolio of workloads against one config grid.
+/// One workload of a campaign: a net plus optional overrides of the
+/// campaign-wide base config and sweep axes. With both overrides `None`
+/// the workload sweeps the shared grid, exactly as campaigns always did;
+/// setting them gives the net its own accelerator design space
+/// (heterogeneous, SMAUG-style portfolios) while still sharing the worker
+/// pool, the persistent cache directory and the streaming frontiers.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub net: DnnGraph,
+    /// Per-net base system; `None` uses [`CampaignSpec::base`].
+    pub base: Option<SystemConfig>,
+    /// Per-net sweep axes; `None` uses [`CampaignSpec::axes`].
+    pub axes: Option<SweepAxes>,
+}
+
+impl WorkloadSpec {
+    pub fn new(net: DnnGraph) -> Self {
+        Self { net, base: None, axes: None }
+    }
+
+    pub fn with_base(mut self, base: SystemConfig) -> Self {
+        self.base = Some(base);
+        self
+    }
+
+    pub fn with_axes(mut self, axes: SweepAxes) -> Self {
+        self.axes = Some(axes);
+        self
+    }
+}
+
+/// What to sweep: a portfolio of workloads, each against the shared
+/// base x axes grid unless its [`WorkloadSpec`] overrides them.
 #[derive(Debug, Clone)]
 pub struct CampaignSpec {
-    pub nets: Vec<DnnGraph>,
-    /// Base system; axes replace fields of this config (empty axes keep
-    /// the base value), exactly as in [`dse::sweep`].
+    pub workloads: Vec<WorkloadSpec>,
+    /// Campaign-wide base system; axes replace fields of this config
+    /// (empty axes keep the base value), exactly as in [`dse::sweep`].
     pub base: SystemConfig,
+    /// Campaign-wide sweep axes.
     pub axes: SweepAxes,
+}
+
+impl CampaignSpec {
+    /// The classic homogeneous campaign: every net against one shared
+    /// base + axes grid (compatibility constructor).
+    pub fn homogeneous(nets: Vec<DnnGraph>, base: SystemConfig, axes: SweepAxes) -> Self {
+        Self {
+            workloads: nets.into_iter().map(WorkloadSpec::new).collect(),
+            base,
+            axes,
+        }
+    }
+
+    /// Effective base config for workload `ni`.
+    pub fn base_of(&self, ni: usize) -> &SystemConfig {
+        self.workloads[ni].base.as_ref().unwrap_or(&self.base)
+    }
+
+    /// Effective sweep axes for workload `ni`.
+    pub fn axes_of(&self, ni: usize) -> &SweepAxes {
+        self.workloads[ni].axes.as_ref().unwrap_or(&self.axes)
+    }
 }
 
 /// Execution policy for [`run`].
@@ -111,6 +177,10 @@ pub struct CampaignOptions {
     /// Directory for the persistent compile cache; `None` keeps the cache
     /// in memory only.
     pub cache_dir: Option<PathBuf>,
+    /// Bound on the number of structural keys the disk cache retains
+    /// (LRU-evicted via the `avsm-compile-cache-index-v1` sidecar; see
+    /// [`store`]). `None` (default) = unbounded, today's behaviour.
+    pub cache_max_entries: Option<usize>,
     /// Also retain every feasible evaluated point per net (in grid order,
     /// identical to `dse::sweep` output). Off by default: a campaign
     /// normally streams, keeping only the frontier. Implies no pruning —
@@ -121,11 +191,31 @@ pub struct CampaignOptions {
     /// the frontier. Lossless — frontiers are byte-identical either way;
     /// `false` (CLI `--no-prune`) forces every point to simulate.
     pub prune: bool,
+    /// Simulate each net's compiled units in ascending lower-bound order
+    /// (on by default): likely dominators enter the frontier first, which
+    /// maximizes [`NetOutcome::skipped_by_bound`] under pruning. Purely a
+    /// scheduling heuristic — frontiers are byte-identical in any order —
+    /// and inert when `prune` is off.
+    pub order_by_bound: bool,
+    /// Abort the whole run on the first *error*-classified unit (invalid
+    /// swept config, poisoned cache slot), returning that unit's
+    /// diagnostic as the campaign error — the CI co-design-gate mode.
+    /// Infeasible tilings and bound-skips never trigger it. Off by
+    /// default.
+    pub fail_fast: bool,
 }
 
 impl Default for CampaignOptions {
     fn default() -> Self {
-        Self { threads: 0, cache_dir: None, keep_points: false, prune: true }
+        Self {
+            threads: 0,
+            cache_dir: None,
+            cache_max_entries: None,
+            keep_points: false,
+            prune: true,
+            order_by_bound: true,
+            fail_fast: false,
+        }
     }
 }
 
@@ -133,6 +223,11 @@ impl Default for CampaignOptions {
 #[derive(Debug, Clone)]
 pub struct NetOutcome {
     pub net: String,
+    /// Name of the base config this net's grid was expanded around —
+    /// provenance for heterogeneous portfolios.
+    pub base: String,
+    /// The axes this net actually swept (its override, or the campaign's).
+    pub axes: SweepAxes,
     /// Pareto frontier, ordered by (latency, cost, grid index) — byte-
     /// identical to `dse::pareto(dse::sweep(..))` for the same grid.
     pub frontier: Vec<DesignPoint>,
@@ -177,7 +272,9 @@ pub struct NetOutcome {
 #[derive(Debug, Clone)]
 pub struct CampaignResult {
     pub nets: Vec<NetOutcome>,
-    /// Design points in the (shared) expanded grid.
+    /// Grid points summed across the per-net grids (= total units; with a
+    /// heterogeneous portfolio the per-net sizes live in
+    /// [`NetOutcome::evaluated`]).
     pub grid_points: usize,
     /// Worker threads actually used.
     pub threads: usize,
@@ -200,94 +297,203 @@ impl CampaignResult {
         self.nets.iter().map(|n| n.feasible).sum()
     }
 
-    /// Units (workloads x grid points) evaluated.
+    /// Units evaluated (sum of the per-net grid sizes).
     pub fn total_units(&self) -> usize {
-        self.nets.len() * self.grid_points
+        self.grid_points
     }
 }
 
-/// Classified result of one (net, grid point) unit.
-enum UnitOutcome {
-    Feasible(DesignPoint),
+/// Phase-1 result of one (net, grid point) unit: its compiled artifact
+/// plus the bound-and-prune inputs, or its terminal classification.
+enum Resolved {
+    Compiled {
+        compiled: std::sync::Arc<crate::compiler::CompiledNet>,
+        bound: u64,
+        cost: f64,
+    },
     Infeasible,
     Error(String),
+    /// Fail-fast cancellation marker: the run is aborting, this unit was
+    /// never classified. Only produced when `fail_fast` is set, and a run
+    /// that produced any is guaranteed to abort (the flag is only raised
+    /// by a real error).
+    Cancelled,
+}
+
+/// Classified phase-2 result of one compiled unit.
+enum UnitOutcome {
+    Feasible(DesignPoint),
     SkippedByBound,
 }
 
-/// Run a campaign: every workload x every grid point in one fan-out.
+/// Run a campaign: every workload x its grid in one two-phase fan-out
+/// (resolve + bound, then simulate in bound order).
 pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult> {
-    if spec.nets.is_empty() {
+    if spec.workloads.is_empty() {
         bail!("campaign needs at least one workload");
     }
-    for net in &spec.nets {
-        net.validate()?;
-    }
     spec.base.validate()?;
+    for w in &spec.workloads {
+        w.net.validate()?;
+        if let Some(base) = &w.base {
+            base.validate()?;
+        }
+    }
 
-    let configs = dse::expand_configs(&spec.base, &spec.axes);
-    let n_nets = spec.nets.len();
-    let n_cfg = configs.len();
-    let jobs = n_nets * n_cfg;
+    // Per-net grids: each workload expands its own effective base x axes
+    // (identical across nets for a homogeneous portfolio). Units are laid
+    // out net-major: net ni owns units offsets[ni]..offsets[ni + 1].
+    let n_nets = spec.workloads.len();
+    let grids: Vec<Vec<SystemConfig>> = (0..n_nets)
+        .map(|ni| dse::expand_configs(spec.base_of(ni), spec.axes_of(ni)))
+        .collect();
+    let mut offsets = vec![0usize; n_nets + 1];
+    for ni in 0..n_nets {
+        offsets[ni + 1] = offsets[ni] + grids[ni].len();
+    }
+    let jobs = offsets[n_nets];
     let threads = pool::resolve_threads(opts.threads, jobs);
+    let locate = |u: usize| -> (usize, usize) {
+        let ni = offsets.partition_point(|&o| o <= u) - 1;
+        (ni, u - offsets[ni])
+    };
 
     let caches: Vec<PersistentCache> = spec
-        .nets
+        .workloads
         .iter()
-        .map(|_| PersistentCache::new(dse::DSE_COMPILE_OPTS, opts.cache_dir.clone()))
+        .map(|_| {
+            PersistentCache::with_max_entries(
+                dse::DSE_COMPILE_OPTS,
+                opts.cache_dir.clone(),
+                opts.cache_max_entries,
+            )
+        })
         .collect::<Result<_>>()?;
+
+    let prune = opts.prune && !opts.keep_points;
+
+    // Phase 1 — resolve every unit's compiled artifact (memory → disk →
+    // compile) and its admissible lower bound. One classifier shared with
+    // `dse::evaluate_outcome`: invalid swept configs and poisoned cache
+    // slots are errors; a post-validation cache failure is structural
+    // tiling infeasibility (possibly replayed from a persisted negative
+    // record). Under fail_fast the first error raises a flag that lets
+    // the remaining workers bail out cheaply — the run aborts either way.
+    let cancelled = std::sync::atomic::AtomicBool::new(false);
+    let resolved: Vec<Resolved> = pool::parallel_map(jobs, opts.threads, |u| {
+        use std::sync::atomic::Ordering;
+        if opts.fail_fast && cancelled.load(Ordering::Relaxed) {
+            return Resolved::Cancelled;
+        }
+        let (ni, ci) = locate(u);
+        let sys = &grids[ni][ci];
+        let net = &spec.workloads[ni].net;
+        match dse::resolve_classified(net, sys, &sys.name, || {
+            caches[ni].get_or_compile(net, sys)
+        }) {
+            Ok(compiled) => {
+                let (bound, cost) = if prune {
+                    (
+                        crate::compiler::latency_lower_bound(&compiled, sys),
+                        dse::cost_proxy(sys),
+                    )
+                } else {
+                    (0, 0.0)
+                };
+                Resolved::Compiled { compiled, bound, cost }
+            }
+            Err(dse::EvalOutcome::Error { name, reason }) => {
+                if opts.fail_fast {
+                    cancelled.store(true, Ordering::Relaxed);
+                }
+                Resolved::Error(format!("{name}: {reason}"))
+            }
+            Err(_) => Resolved::Infeasible,
+        }
+    });
+
+    // Fail-fast gate: abort on the first error in deterministic unit
+    // order, before any simulation runs.
+    if opts.fail_fast {
+        for (u, r) in resolved.iter().enumerate() {
+            if let Resolved::Error(reason) = r {
+                let (ni, _) = locate(u);
+                bail!(
+                    "campaign aborted (fail_fast) on workload {:?}: {reason}",
+                    spec.workloads[ni].net.name
+                );
+            }
+        }
+    }
+
+    let mut infeasible = vec![0usize; n_nets];
+    let mut errors = vec![0usize; n_nets];
+    let mut error_sample: Vec<Option<String>> = vec![None; n_nets];
+    for (u, r) in resolved.iter().enumerate() {
+        let (ni, _) = locate(u);
+        match r {
+            Resolved::Infeasible => infeasible[ni] += 1,
+            Resolved::Error(reason) => {
+                errors[ni] += 1;
+                if error_sample[ni].is_none() {
+                    error_sample[ni] = Some(reason.clone());
+                }
+            }
+            Resolved::Compiled { .. } => {}
+            Resolved::Cancelled => unreachable!("cancellation implies a fail_fast abort"),
+        }
+    }
+
+    // Phase-2 schedule: per net, the compiled units — in ascending
+    // lower-bound order (grid order breaking ties, so the order is
+    // deterministic) when ordering is on and pruning can profit from it,
+    // in grid order otherwise.
+    let mut eval_units: Vec<usize> = Vec::new();
+    for ni in 0..n_nets {
+        let start = eval_units.len();
+        eval_units.extend(
+            (offsets[ni]..offsets[ni + 1])
+                .filter(|&u| matches!(resolved[u], Resolved::Compiled { .. })),
+        );
+        if prune && opts.order_by_bound {
+            eval_units[start..].sort_by_key(|&u| match &resolved[u] {
+                Resolved::Compiled { bound, .. } => (*bound, u),
+                _ => unreachable!(),
+            });
+        }
+    }
 
     // Frontiers live behind mutexes so *workers* can consult
     // `StreamingFrontier::admits` before paying for a simulation, while
     // insertions stay on the coordinating thread. keep_points asks for
     // every feasible point, so it implies no pruning.
-    let prune = opts.prune && !opts.keep_points;
     let frontiers: Vec<std::sync::Mutex<StreamingFrontier>> =
         (0..n_nets).map(|_| std::sync::Mutex::new(StreamingFrontier::new())).collect();
     let mut kept: Vec<Vec<Option<DesignPoint>>> = (0..n_nets)
-        .map(|_| if opts.keep_points { vec![None; n_cfg] } else { Vec::new() })
+        .map(|ni| if opts.keep_points { vec![None; grids[ni].len()] } else { Vec::new() })
         .collect();
     let mut feasible = vec![0usize; n_nets];
-    let mut infeasible = vec![0usize; n_nets];
-    let mut errors = vec![0usize; n_nets];
-    let mut error_sample: Vec<Option<String>> = vec![None; n_nets];
     let mut skipped = vec![0usize; n_nets];
 
-    // Unit u covers net u / n_cfg at grid point u % n_cfg (net-major, so
-    // one net's units are contiguous and its compile cache warms early).
-    // Workers classify + evaluate; the coordinating thread streams
-    // arrivals into the per-net frontiers.
+    // Phase 2 — simulate the admitted units, streaming arrivals into the
+    // per-net frontiers on the coordinating thread.
     pool::for_each_completed(
-        jobs,
+        eval_units.len(),
         opts.threads,
-        |u| {
-            let (ni, ci) = (u / n_cfg, u % n_cfg);
-            let sys = &configs[ci];
-            // One classifier shared with `dse::evaluate_outcome`: invalid
-            // swept configs and poisoned cache slots are errors; a
-            // post-validation cache failure is structural tiling
-            // infeasibility (possibly replayed from a persisted negative
-            // record).
-            let compiled = match dse::resolve_classified(&spec.nets[ni], sys, &sys.name, || {
-                caches[ni].get_or_compile(&spec.nets[ni], sys)
-            }) {
-                Ok(c) => c,
-                Err(dse::EvalOutcome::Error { name, reason }) => {
-                    return UnitOutcome::Error(format!("{name}: {reason}"))
-                }
-                Err(_) => return UnitOutcome::Infeasible,
+        |j| {
+            let u = eval_units[j];
+            let (ni, ci) = locate(u);
+            let sys = &grids[ni][ci];
+            let Resolved::Compiled { compiled, bound, cost } = &resolved[u] else {
+                unreachable!("eval schedule only lists compiled units");
             };
-            if prune {
-                let bound = crate::compiler::latency_lower_bound(&compiled, sys);
-                let admitted =
-                    frontiers[ni].lock().unwrap().admits(bound, dse::cost_proxy(sys));
-                if !admitted {
-                    return UnitOutcome::SkippedByBound;
-                }
+            if prune && !frontiers[ni].lock().unwrap().admits(*bound, *cost) {
+                return UnitOutcome::SkippedByBound;
             }
-            UnitOutcome::Feasible(dse::evaluate_compiled(&compiled, sys, sys.name.clone()))
+            UnitOutcome::Feasible(dse::evaluate_compiled(compiled, sys, sys.name.clone()))
         },
-        |u, outcome| {
-            let (ni, ci) = (u / n_cfg, u % n_cfg);
+        |j, outcome| {
+            let (ni, ci) = locate(eval_units[j]);
             match outcome {
                 UnitOutcome::Feasible(p) => {
                     feasible[ni] += 1;
@@ -295,11 +501,6 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
                         kept[ni][ci] = Some(p.clone());
                     }
                     frontiers[ni].lock().unwrap().insert_with_seq(p, ci);
-                }
-                UnitOutcome::Infeasible => infeasible[ni] += 1,
-                UnitOutcome::Error(reason) => {
-                    errors[ni] += 1;
-                    error_sample[ni].get_or_insert(reason);
                 }
                 UnitOutcome::SkippedByBound => skipped[ni] += 1,
             }
@@ -321,8 +522,10 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         let dominated = frontier.dominated();
         let pruned = frontier.pruned();
         nets.push(NetOutcome {
-            net: spec.nets[ni].name.clone(),
-            evaluated: n_cfg,
+            net: spec.workloads[ni].net.name.clone(),
+            base: spec.base_of(ni).name.clone(),
+            axes: spec.axes_of(ni).clone(),
+            evaluated: grids[ni].len(),
             feasible: feasible[ni],
             infeasible: infeasible[ni],
             errors: errors[ni],
@@ -342,7 +545,7 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
     }
     Ok(CampaignResult {
         nets,
-        grid_points: n_cfg,
+        grid_points: jobs,
         threads,
         compiles,
         disk_hits,
@@ -361,24 +564,22 @@ mod tests {
     use crate::graph::models;
 
     fn small_spec() -> CampaignSpec {
-        CampaignSpec {
-            nets: vec![models::lenet(28), models::dilated_vgg_tiny()],
-            base: SystemConfig::base_paper(),
-            axes: SweepAxes {
-                array_geometries: vec![(16, 32), (32, 64)],
-                nce_freqs_mhz: vec![125, 250],
-                ..Default::default()
-            },
-        }
+        CampaignSpec::homogeneous(
+            vec![models::lenet(28), models::dilated_vgg_tiny()],
+            SystemConfig::base_paper(),
+            SweepAxes::new()
+                .array_geometries(vec![(16, 32), (32, 64)])
+                .nce_freqs_mhz(vec![125, 250]),
+        )
     }
 
     #[test]
     fn empty_portfolio_is_rejected() {
-        let spec = CampaignSpec {
-            nets: vec![],
-            base: SystemConfig::base_paper(),
-            axes: SweepAxes::default(),
-        };
+        let spec = CampaignSpec::homogeneous(
+            vec![],
+            SystemConfig::base_paper(),
+            SweepAxes::default(),
+        );
         assert!(run(&spec, &CampaignOptions::default()).is_err());
     }
 
@@ -387,9 +588,10 @@ mod tests {
         let spec = small_spec();
         let opts = CampaignOptions { keep_points: true, ..Default::default() };
         let result = run(&spec, &opts).unwrap();
-        assert_eq!(result.grid_points, 4);
+        assert_eq!(result.grid_points, 8, "2 nets x 4 grid points");
         assert_eq!(result.nets.len(), 2);
-        for (ni, net) in spec.nets.iter().enumerate() {
+        for (ni, w) in spec.workloads.iter().enumerate() {
+            let net = &w.net;
             let sweep = dse::sweep(net, &spec.base, &spec.axes);
             let batch = dse::pareto(&sweep);
             let got = &result.nets[ni];
@@ -436,15 +638,13 @@ mod tests {
         // dominated before simulation. Pruning must change *only* the
         // skipped accounting — frontiers stay byte-identical to batch
         // sweep + pareto at any worker count.
-        let spec = CampaignSpec {
-            nets: vec![models::lenet(28), models::dilated_vgg_tiny()],
-            base: SystemConfig::base_paper(),
-            axes: SweepAxes {
-                array_geometries: vec![(16, 32), (32, 64)],
-                nce_freqs_mhz: vec![500, 250, 125, 50],
-                ..Default::default()
-            },
-        };
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28), models::dilated_vgg_tiny()],
+            SystemConfig::base_paper(),
+            SweepAxes::new()
+                .array_geometries(vec![(16, 32), (32, 64)])
+                .nce_freqs_mhz(vec![500, 250, 125, 50]),
+        );
         for threads in [1usize, 0] {
             let pruned =
                 run(&spec, &CampaignOptions { threads, ..Default::default() }).unwrap();
@@ -454,7 +654,8 @@ mod tests {
             )
             .unwrap();
             assert_eq!(unpruned.skipped_by_bound, 0);
-            for (ni, net) in spec.nets.iter().enumerate() {
+            for (ni, w) in spec.workloads.iter().enumerate() {
+                let net = &w.net;
                 let batch = dse::sweep(net, &spec.base, &spec.axes);
                 let batch_front = dse::pareto(&batch);
                 for (tag, result) in [("pruned", &pruned), ("unpruned", &unpruned)] {
@@ -495,11 +696,11 @@ mod tests {
         // A 0 MHz point in the frequency axis is a broken sweep, not a
         // hole in the design space; it must surface in the error count
         // with a diagnostic instead of vanishing.
-        let spec = CampaignSpec {
-            nets: vec![models::lenet(28)],
-            base: SystemConfig::base_paper(),
-            axes: SweepAxes { nce_freqs_mhz: vec![250, 0], ..Default::default() },
-        };
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().nce_freqs_mhz(vec![250, 0]),
+        );
         let result = run(&spec, &CampaignOptions::default()).unwrap();
         let got = &result.nets[0];
         assert_eq!((got.feasible, got.errors, got.infeasible), (1, 1, 0));
@@ -524,6 +725,147 @@ mod tests {
             for (x, y) in a.frontier.iter().zip(&b.frontier) {
                 assert_eq!(x.name, y.name);
                 assert_eq!(x.latency_ps, y.latency_ps);
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_workloads_use_their_own_base_and_axes() {
+        // Each net gets its own accelerator design space; the per-net
+        // results must match what an independent per-net sweep over that
+        // same space produces, and the provenance fields must say whose
+        // grid each net swept.
+        let mut embedded = SystemConfig::base_paper();
+        embedded.name = "embedded".into();
+        embedded.nce.ifm_buffer_kib = 256;
+        let spec = CampaignSpec {
+            workloads: vec![
+                WorkloadSpec::new(models::lenet(28)),
+                WorkloadSpec::new(models::dilated_vgg_tiny())
+                    .with_base(embedded.clone())
+                    .with_axes(
+                        SweepAxes::new()
+                            .array_geometries(vec![(16, 32), (32, 64), (64, 64)]),
+                    ),
+            ],
+            base: SystemConfig::base_paper(),
+            axes: SweepAxes::new().nce_freqs_mhz(vec![125, 250]),
+        };
+        let opts = CampaignOptions { keep_points: true, ..Default::default() };
+        let result = run(&spec, &opts).unwrap();
+        assert_eq!(result.grid_points, 2 + 3, "heterogeneous grids sum");
+        assert_eq!(result.nets[0].evaluated, 2);
+        assert_eq!(result.nets[1].evaluated, 3);
+        assert_eq!(result.nets[0].base, "base_paper_virtex7");
+        assert_eq!(result.nets[1].base, "embedded");
+        assert_eq!(result.nets[1].axes, *spec.axes_of(1));
+        for ni in 0..2 {
+            let sweep = dse::sweep(&spec.workloads[ni].net, spec.base_of(ni), spec.axes_of(ni));
+            let batch = dse::pareto(&sweep);
+            let got = &result.nets[ni];
+            assert_eq!(got.points.len(), sweep.len(), "net {ni}");
+            for (a, b) in got.points.iter().zip(&sweep) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.latency_ps, b.latency_ps);
+                assert_eq!(a.sys, b.sys);
+            }
+            assert_eq!(got.frontier.len(), batch.len(), "net {ni}");
+            for (a, b) in got.frontier.iter().zip(&batch) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.latency_ps, b.latency_ps);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            }
+        }
+        // The override net's points actually carry the embedded base.
+        assert!(result.nets[1].points.iter().all(|p| p.sys.nce.ifm_buffer_kib == 256));
+    }
+
+    #[test]
+    fn fail_fast_aborts_on_error_but_not_on_infeasible() {
+        // An invalid swept config (0 MHz) must abort a fail-fast run with
+        // the unit's diagnostic...
+        let broken = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().nce_freqs_mhz(vec![250, 0]),
+        );
+        let err = run(
+            &broken,
+            &CampaignOptions { fail_fast: true, ..Default::default() },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fail_fast"), "{msg}");
+        assert!(msg.contains("invalid configuration"), "{msg}");
+        // ...while the default policy completes and counts it.
+        assert!(run(&broken, &CampaignOptions::default()).is_ok());
+
+        // Structural infeasibility is a legitimate hole, never an abort:
+        // tiny buffers cannot fit the 512-px rows, yet fail_fast passes.
+        let mut tiny = SystemConfig::base_paper();
+        tiny.nce.ifm_buffer_kib = 1;
+        tiny.nce.weight_buffer_kib = 1;
+        tiny.nce.ofm_buffer_kib = 1;
+        let infeasible = CampaignSpec::homogeneous(
+            vec![models::dilated_vgg(512, 4, 16)],
+            tiny,
+            SweepAxes::default(),
+        );
+        let result = run(
+            &infeasible,
+            &CampaignOptions { fail_fast: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(result.nets[0].infeasible, 1);
+    }
+
+    #[test]
+    fn bound_ordering_maximizes_skips_and_keeps_frontiers_identical() {
+        // Ascending-frequency grid: in grid order the slowest point
+        // arrives first, joins the frontier, and is evicted over and over
+        // — nothing gets skipped. Ordered by ascending lower bound the
+        // fastest point simulates first and dominates the rest of the
+        // axis outright.
+        // Same nets + frequency set as the proven-to-skip sparse-frontier
+        // test above, just enumerated ascending.
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28), models::dilated_vgg_tiny()],
+            SystemConfig::base_paper(),
+            SweepAxes::new().nce_freqs_mhz(vec![50, 64, 80, 100, 125, 250, 500, 1000]),
+        );
+        let ordered = run(
+            &spec,
+            &CampaignOptions { threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        let unordered = run(
+            &spec,
+            &CampaignOptions { threads: 1, order_by_bound: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            unordered.skipped_by_bound, 0,
+            "ascending arrival order never skips: each point out-runs the members"
+        );
+        assert!(
+            ordered.skipped_by_bound > 0,
+            "bound ordering must recover the skips on the ascending grid"
+        );
+        // Ordering is a scheduling heuristic only: frontiers identical.
+        for (ni, w) in spec.workloads.iter().enumerate() {
+            let batch = dse::pareto(&dse::sweep(&w.net, &spec.base, &spec.axes));
+            for result in [&ordered, &unordered] {
+                let got = &result.nets[ni];
+                assert_eq!(got.frontier.len(), batch.len(), "{}", w.net.name);
+                for (a, b) in got.frontier.iter().zip(&batch) {
+                    assert_eq!(a.name, b.name);
+                    assert_eq!(a.latency_ps, b.latency_ps);
+                    assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+                }
+                assert_eq!(
+                    got.evaluated,
+                    got.feasible + got.infeasible + got.errors + got.skipped_by_bound
+                );
             }
         }
     }

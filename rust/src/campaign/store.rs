@@ -35,6 +35,27 @@
 //! their key on load exactly like artifacts; corrupted ones are rejected,
 //! re-tiled and rewritten. A positive artifact always shadows a negative
 //! record for the same key (lookup order: artifact → negative → compile).
+//!
+//! # Size bound (LRU eviction)
+//!
+//! An unbounded shared cache directory grows forever. Constructing the
+//! cache with [`PersistentCache::with_max_entries`] bounds the number of
+//! structural keys it retains on disk: a small **index sidecar**
+//! (`index.json`, schema `avsm-compile-cache-index-v1`) records a logical
+//! last-used clock per fingerprint; every disk hit or write *touches* the
+//! key, and when the index exceeds the bound the least-recently-used keys
+//! are evicted — the artifact file **and** its negative sidecar are both
+//! removed, so an evicted key leaves no trace. Eviction is purely a cache
+//! policy: an evicted key reads as a miss and recompiles. Keys present on
+//! disk but missing from the index (an unbounded cache's leftovers, or a
+//! lost index) are adopted into the index the first time they are touched.
+//! The index is advisory and crash-tolerant — corrupted or missing, it is
+//! restarted empty, never trusted into returning wrong artifacts (entry
+//! loads still verify their embedded keys as always). Writes go through
+//! the same temp-file + rename protocol as entries; cross-*process*
+//! coordination of the index (advisory locks) remains future work, so
+//! concurrent writers may momentarily overshoot the bound — never corrupt
+//! it.
 
 use crate::compiler::tiling::VectorTiling;
 use crate::compiler::{
@@ -52,15 +73,29 @@ use std::sync::Arc;
 
 const SCHEMA: &str = "avsm-compile-cache-v1";
 const NEG_SCHEMA: &str = "avsm-compile-cache-neg-v1";
+const INDEX_SCHEMA: &str = "avsm-compile-cache-index-v1";
 
 /// File that stores the artifact for `key` under `dir`.
 pub fn entry_path(dir: &Path, key: &CompileKey) -> PathBuf {
-    dir.join(format!("{:016x}.compiled.json", key.fingerprint()))
+    entry_path_fp(dir, key.fingerprint())
 }
 
 /// Sidecar file recording that `key` is structurally infeasible.
 pub fn negative_path(dir: &Path, key: &CompileKey) -> PathBuf {
-    dir.join(format!("{:016x}.infeasible.json", key.fingerprint()))
+    negative_path_fp(dir, key.fingerprint())
+}
+
+/// LRU index sidecar (only written by size-bounded caches).
+pub fn index_path(dir: &Path) -> PathBuf {
+    dir.join("index.json")
+}
+
+fn entry_path_fp(dir: &Path, fp: u64) -> PathBuf {
+    dir.join(format!("{fp:016x}.compiled.json"))
+}
+
+fn negative_path_fp(dir: &Path, fp: u64) -> PathBuf {
+    dir.join(format!("{fp:016x}.infeasible.json"))
 }
 
 /// Serialize one compiled artifact (plus its full key, for verification on
@@ -204,20 +239,24 @@ pub fn entry_from_json(text: &str, expect_key: &CompileKey) -> Result<CompiledNe
 /// instance, so two caches sharing a directory in one process must not
 /// collide on the temp inode either.
 pub fn write_entry(dir: &Path, key: &CompileKey, compiled: &CompiledNet) -> Result<()> {
-    write_atomic(dir, key, &entry_path(dir, key), entry_to_json(key, compiled))
+    write_atomic(dir, key.fingerprint(), &entry_path(dir, key), entry_to_json(key, compiled))
 }
 
 /// Persist a negative record atomically (same temp-file + rename protocol
 /// as [`write_entry`]).
 pub fn write_negative(dir: &Path, key: &CompileKey, diagnostic: &str) -> Result<()> {
-    write_atomic(dir, key, &negative_path(dir, key), negative_to_json(key, diagnostic))
+    write_atomic(
+        dir,
+        key.fingerprint(),
+        &negative_path(dir, key),
+        negative_to_json(key, diagnostic),
+    )
 }
 
-fn write_atomic(dir: &Path, key: &CompileKey, path: &Path, content: String) -> Result<()> {
+fn write_atomic(dir: &Path, tag: u64, path: &Path, content: String) -> Result<()> {
     static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
     let tmp = dir.join(format!(
-        "{:016x}.tmp.{}.{}",
-        key.fingerprint(),
+        "{tag:016x}.tmp.{}.{}",
         std::process::id(),
         WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
     ));
@@ -228,6 +267,74 @@ fn write_atomic(dir: &Path, key: &CompileKey, path: &Path, content: String) -> R
     Ok(())
 }
 
+/// In-memory image of the LRU index sidecar: fingerprint → logical
+/// last-used stamp, plus the clock the stamps are drawn from.
+#[derive(Debug, Default)]
+struct CacheIndex {
+    clock: u64,
+    entries: std::collections::BTreeMap<u64, u64>,
+}
+
+impl CacheIndex {
+    /// Load the index from `dir`. Missing or corrupted files restart the
+    /// index empty — it is advisory metadata; artifact loads verify their
+    /// own embedded keys regardless.
+    fn load(dir: &Path) -> CacheIndex {
+        let Ok(text) = std::fs::read_to_string(index_path(dir)) else {
+            return CacheIndex::default();
+        };
+        CacheIndex::from_json(&text).unwrap_or_default()
+    }
+
+    fn from_json(text: &str) -> Result<CacheIndex> {
+        let v = json::parse(text).context("cache index parse")?;
+        if v.get("schema").as_str() != Some(INDEX_SCHEMA) {
+            bail!("unsupported cache index schema");
+        }
+        let mut entries = std::collections::BTreeMap::new();
+        let raw = v.get("entries").as_object().context("missing entries object")?;
+        for (fp_hex, stamp) in raw {
+            let fp = u64::from_str_radix(fp_hex, 16)
+                .with_context(|| format!("bad fingerprint {fp_hex:?}"))?;
+            entries.insert(fp, stamp.as_u64().context("bad stamp")?);
+        }
+        Ok(CacheIndex { clock: v.req_u64("clock")?, entries })
+    }
+
+    fn to_json(&self) -> String {
+        obj(vec![
+            ("schema", INDEX_SCHEMA.into()),
+            ("clock", self.clock.into()),
+            (
+                "entries",
+                Value::Object(
+                    self.entries
+                        .iter()
+                        .map(|(fp, stamp)| (format!("{fp:016x}"), Value::from(*stamp)))
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string_compact()
+    }
+
+    /// Mark `fp` as just used.
+    fn touch(&mut self, fp: u64) {
+        self.clock += 1;
+        self.entries.insert(fp, self.clock);
+    }
+
+    /// Least-recently-used fingerprint other than `exclude` (the key being
+    /// touched right now must never evict itself).
+    fn lru_victim(&self, exclude: u64) -> Option<u64> {
+        self.entries
+            .iter()
+            .filter(|&(&fp, _)| fp != exclude)
+            .min_by_key(|&(&fp, &stamp)| (stamp, fp))
+            .map(|(&fp, _)| fp)
+    }
+}
+
 /// Two-tier compile cache: the in-process [`CompileCache`] backed by an
 /// optional on-disk directory. Lookup order per structural key: memory →
 /// disk → compile (writing the artifact back to disk on success).
@@ -235,31 +342,61 @@ fn write_atomic(dir: &Path, key: &CompileKey, path: &Path, content: String) -> R
 pub struct PersistentCache {
     mem: CompileCache,
     dir: Option<PathBuf>,
+    /// LRU bookkeeping, present only on size-bounded caches:
+    /// `(index, max_entries)`.
+    lru: Option<std::sync::Mutex<CacheIndex>>,
+    max_entries: usize,
     disk_hits: AtomicU64,
     neg_hits: AtomicU64,
     compiles: AtomicU64,
     rejected: AtomicU64,
     write_errors: AtomicU64,
     read_errors: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl PersistentCache {
     /// Create a cache backed by `dir` (created if absent). `None` disables
     /// the disk tier — behaviourally identical to a plain [`CompileCache`].
+    /// The disk tier is unbounded; see
+    /// [`PersistentCache::with_max_entries`].
     pub fn new(opts: CompileOptions, dir: Option<PathBuf>) -> Result<Self> {
+        Self::with_max_entries(opts, dir, None)
+    }
+
+    /// Like [`PersistentCache::new`], with an optional bound on the number
+    /// of structural keys retained on disk. With `Some(n)`, every disk
+    /// access is recorded in the `index.json` sidecar and the
+    /// least-recently-used keys are evicted (artifact + negative sidecar
+    /// both removed) whenever the index exceeds `n`.
+    pub fn with_max_entries(
+        opts: CompileOptions,
+        dir: Option<PathBuf>,
+        max_entries: Option<usize>,
+    ) -> Result<Self> {
+        if max_entries == Some(0) {
+            bail!("cache max_entries must be positive (omit the bound for unlimited)");
+        }
         if let Some(d) = &dir {
             std::fs::create_dir_all(d)
                 .with_context(|| format!("creating compile cache dir {d:?}"))?;
         }
+        let lru = match (&dir, max_entries) {
+            (Some(d), Some(_)) => Some(std::sync::Mutex::new(CacheIndex::load(d))),
+            _ => None,
+        };
         Ok(Self {
             mem: CompileCache::new(opts),
             dir,
+            lru,
+            max_entries: max_entries.unwrap_or(usize::MAX),
             disk_hits: AtomicU64::new(0),
             neg_hits: AtomicU64::new(0),
             compiles: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             write_errors: AtomicU64::new(0),
             read_errors: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         })
     }
 
@@ -286,6 +423,7 @@ impl PersistentCache {
             if let Some(dir) = &self.dir {
                 if let Some(compiled) = self.try_load(dir, key) {
                     self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    self.touch_index(dir, key.fingerprint());
                     return Ok(Arc::new(compiled));
                 }
                 // No artifact: a persisted negative record replays the
@@ -293,6 +431,7 @@ impl PersistentCache {
                 // attempts (the whole point of persisting them).
                 if let Some(diag) = self.try_load_negative(dir, key) {
                     self.neg_hits.fetch_add(1, Ordering::Relaxed);
+                    self.touch_index(dir, key.fingerprint());
                     return Err(diag);
                 }
             }
@@ -304,6 +443,8 @@ impl PersistentCache {
                         // fail the evaluation, only the warm-start.
                         if write_entry(dir, key, &compiled).is_err() {
                             self.write_errors.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            self.touch_index(dir, key.fingerprint());
                         }
                     }
                     Ok(Arc::new(compiled))
@@ -316,12 +457,51 @@ impl PersistentCache {
                     if let Some(dir) = &self.dir {
                         if write_negative(dir, key, &diag).is_err() {
                             self.write_errors.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            self.touch_index(dir, key.fingerprint());
                         }
                     }
                     Err(diag)
                 }
             }
         })
+    }
+
+    /// Record a disk-tier use of `fp` in the LRU index: touch it, evict
+    /// least-recently-used keys past the bound (artifact and negative
+    /// sidecar both removed), and persist the index. No-op on unbounded
+    /// caches.
+    fn touch_index(&self, dir: &Path, fp: u64) {
+        let Some(lru) = &self.lru else { return };
+        // Mutate the in-memory index under the lock, but do all filesystem
+        // work (unlinking victims, persisting the snapshot) outside it —
+        // parallel resolve workers must never queue on a mutex that is
+        // doing disk I/O. Concurrent touches may then persist snapshots
+        // out of order (last writer wins), which the index's advisory
+        // semantics already tolerate: a stale entry for an evicted key
+        // just reads as a miss and is re-adopted on the next touch.
+        let (snapshot, victims) = {
+            let mut index = lru.lock().unwrap();
+            index.touch(fp);
+            let mut victims = Vec::new();
+            while index.entries.len() > self.max_entries {
+                // The key being touched is never its own victim, so a
+                // bound of n always retains the n most recent keys,
+                // current included.
+                let Some(victim) = index.lru_victim(fp) else { break };
+                index.entries.remove(&victim);
+                victims.push(victim);
+            }
+            (index.to_json(), victims)
+        };
+        for victim in victims {
+            let _ = std::fs::remove_file(entry_path_fp(dir, victim));
+            let _ = std::fs::remove_file(negative_path_fp(dir, victim));
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        if write_atomic(dir, fp, &index_path(dir), snapshot).is_err() {
+            self.write_errors.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     fn try_load(&self, dir: &Path, key: &CompileKey) -> Option<CompiledNet> {
@@ -388,6 +568,12 @@ impl PersistentCache {
     /// Failed best-effort entry writes.
     pub fn write_errors(&self) -> u64 {
         self.write_errors.load(Ordering::Relaxed)
+    }
+
+    /// Keys evicted from the disk tier by the LRU bound (0 on unbounded
+    /// caches).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Disk-tier read failures other than "entry absent" — I/O errors that
@@ -608,6 +794,131 @@ mod tests {
         assert!(again.get_or_compile(&net, &tiny).is_err());
         assert_eq!((again.compiles(), again.neg_hits()), (0, 1));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Three structurally distinct configs around the base point.
+    fn structural_variants() -> Vec<SystemConfig> {
+        let base = SystemConfig::base_paper();
+        let mut wide = base.clone();
+        wide.nce.array_cols *= 2;
+        let mut tall = base.clone();
+        tall.nce.array_rows *= 2;
+        vec![base, wide, tall]
+    }
+
+    #[test]
+    fn index_round_trips_and_restarts_on_corruption() {
+        let mut index = CacheIndex::default();
+        index.touch(0xdead_beef);
+        index.touch(42);
+        index.touch(0xdead_beef); // refresh
+        let text = index.to_json();
+        let back = CacheIndex::from_json(&text).unwrap();
+        assert_eq!(back.clock, 3);
+        assert_eq!(back.entries, index.entries);
+        assert_eq!(back.lru_victim(u64::MAX), Some(42), "42 is the LRU key");
+        assert_eq!(back.lru_victim(42), Some(0xdead_beef), "self-exclusion");
+        assert!(CacheIndex::from_json("{ nope").is_err());
+        assert!(CacheIndex::from_json("{\"schema\":\"other\"}").is_err());
+    }
+
+    #[test]
+    fn bounded_cache_evicts_least_recently_used_entries() {
+        let dir = tmp_dir("lru");
+        let net = models::lenet(28);
+        let sys = structural_variants();
+        let cache =
+            PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(2)).unwrap();
+        let keys: Vec<CompileKey> =
+            sys.iter().map(|s| CompileKey::new(&net, s, opts())).collect();
+
+        cache.get_or_compile(&net, &sys[0]).unwrap();
+        cache.get_or_compile(&net, &sys[1]).unwrap();
+        assert_eq!(cache.evictions(), 0);
+        assert!(entry_path(&dir, &keys[0]).exists());
+        assert!(index_path(&dir).exists());
+
+        // Touch key 0 so key 1 becomes the LRU victim of the third write.
+        let warm = PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(2)).unwrap();
+        warm.get_or_compile(&net, &sys[0]).unwrap();
+        assert_eq!(warm.disk_hits(), 1);
+        warm.get_or_compile(&net, &sys[2]).unwrap();
+        assert_eq!(warm.evictions(), 1);
+        assert!(entry_path(&dir, &keys[0]).exists(), "recently used survives");
+        assert!(!entry_path(&dir, &keys[1]).exists(), "LRU key evicted");
+        assert!(entry_path(&dir, &keys[2]).exists());
+
+        // The evicted key reads as a plain miss and recompiles (healing
+        // itself back in, evicting the now-oldest key 0).
+        let again =
+            PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(2)).unwrap();
+        again.get_or_compile(&net, &sys[1]).unwrap();
+        assert_eq!((again.compiles(), again.disk_hits()), (1, 0));
+        assert!(!entry_path(&dir, &keys[0]).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_removes_negative_sidecars_too() {
+        let dir = tmp_dir("lru_neg");
+        let (bad_net, tiny) = infeasible_pair();
+        let net = models::lenet(28);
+        let sys = structural_variants();
+
+        // Seed one negative record, then push two artifacts through a
+        // 2-entry cache: the negative key is the LRU victim and its
+        // sidecar must disappear with it.
+        let cache =
+            PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(2)).unwrap();
+        assert!(cache.get_or_compile(&bad_net, &tiny).is_err());
+        let neg_key = CompileKey::new(&bad_net, &tiny, opts());
+        assert!(negative_path(&dir, &neg_key).exists());
+        cache.get_or_compile(&net, &sys[0]).unwrap();
+        cache.get_or_compile(&net, &sys[1]).unwrap();
+        assert_eq!(cache.evictions(), 1);
+        assert!(!negative_path(&dir, &neg_key).exists(), "negative sidecar evicted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unbounded_cache_writes_no_index() {
+        let dir = tmp_dir("no_index");
+        let net = models::lenet(28);
+        let cache = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        cache.get_or_compile(&net, &SystemConfig::base_paper()).unwrap();
+        assert!(!index_path(&dir).exists(), "unbounded caches keep today's layout");
+        assert_eq!(cache.evictions(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_index_restarts_empty_and_entries_are_adopted() {
+        let dir = tmp_dir("bad_index");
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        let seed =
+            PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(4)).unwrap();
+        seed.get_or_compile(&net, &sys).unwrap();
+        std::fs::write(index_path(&dir), "{ not an index").unwrap();
+
+        // The entry itself is intact: it loads (key-verified) and gets
+        // re-adopted into a fresh index.
+        let healed =
+            PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(4)).unwrap();
+        healed.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((healed.compiles(), healed.disk_hits()), (0, 1));
+        let text = std::fs::read_to_string(index_path(&dir)).unwrap();
+        let index = CacheIndex::from_json(&text).unwrap();
+        assert_eq!(index.entries.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_bound_is_rejected() {
+        assert!(
+            PersistentCache::with_max_entries(opts(), None, Some(0)).is_err(),
+            "max_entries == 0 must be a loud configuration error"
+        );
     }
 
     #[test]

@@ -1,0 +1,643 @@
+//! First-class sweep axes — the design space as a *value*, not a struct
+//! layout.
+//!
+//! Every sweepable knob of a [`SystemConfig`] is one [`Axis`] variant. An
+//! axis knows three things about itself:
+//!
+//! 1. **How to read and apply its value** ([`Axis::read`] /
+//!    [`Axis::apply`]) — so sweep expansion, the requirement solver and the
+//!    CLI all manipulate configs through one vocabulary instead of
+//!    hand-rolled per-field loops.
+//! 2. **Whether changing it is *structural* or *retime-only***
+//!    ([`Axis::is_structural`]): structural axes (array geometry, buffer
+//!    capacities, datapath widths) are part of
+//!    [`crate::compiler::CompileKey`] — changing them forces a re-tile;
+//!    retime-only axes (clock frequencies) are deliberately absent from the
+//!    key, so every value of such an axis shares **one** cached
+//!    [`crate::compiler::CompiledNet`] and costs only a re-simulation. This
+//!    split is what makes frequency sweeps and `topdown` binary searches
+//!    compile-once, and the solver/campaign exploit it through the axis
+//!    rather than through special-cased field knowledge.
+//! 3. **How to serialize itself** ([`AxisValues::to_json`] /
+//!    [`AxisValues::from_json`]): the CLI accepts whole design spaces as
+//!    JSON axis specs (`[{"axis": "nce_freq_mhz", "values": [125, 250]},
+//!    ...]`), so a new study needs no new code, only a new spec.
+//!
+//! [`SweepAxes`] is an ordered list of `(axis, values)` pairs whose
+//! cartesian expansion (first axis outermost) *is* the sweep grid — the
+//! named-field struct it replaces survives as thin builder shims
+//! ([`SweepAxes::array_geometries`] etc.) so existing call sites read the
+//! same and produce byte-identical grids, names included.
+
+use crate::config::SystemConfig;
+use crate::json::{self, obj, Value};
+use anyhow::{bail, Context, Result};
+
+/// One sweepable knob of a [`SystemConfig`] — the closed set of design-space
+/// dimensions the DSE layers understand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Axis {
+    /// NCE MAC-array geometry `(rows, cols)` — the only pair-valued axis.
+    ArrayGeometry,
+    /// NCE clock in MHz (retime-only).
+    NceFreqMhz,
+    /// Bus clock in MHz (retime-only).
+    BusFreqMhz,
+    /// Bus payload width in bytes per beat.
+    BusBytesPerCycle,
+    /// IFM on-chip buffer capacity in KiB.
+    IfmBufferKib,
+    /// Weight on-chip buffer capacity in KiB.
+    WeightBufferKib,
+    /// OFM on-chip buffer capacity in KiB.
+    OfmBufferKib,
+}
+
+/// A value on one axis: a scalar for every axis except the pair-valued
+/// array geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AxisValue {
+    Scalar(u64),
+    Pair(u32, u32),
+}
+
+impl AxisValue {
+    /// The scalar payload, if this is a scalar value.
+    pub fn scalar(self) -> Option<u64> {
+        match self {
+            AxisValue::Scalar(v) => Some(v),
+            AxisValue::Pair(..) => None,
+        }
+    }
+
+    fn to_json(self) -> Value {
+        match self {
+            AxisValue::Scalar(v) => v.into(),
+            AxisValue::Pair(r, c) => Value::Array(vec![r.into(), c.into()]),
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<AxisValue> {
+        if let Some(n) = v.as_u64() {
+            return Ok(AxisValue::Scalar(n));
+        }
+        if let Some(a) = v.as_array() {
+            if a.len() == 2 {
+                let r = a[0].as_u64().context("pair value must be unsigned")?;
+                let c = a[1].as_u64().context("pair value must be unsigned")?;
+                let r = u32::try_from(r).context("pair value exceeds u32")?;
+                let c = u32::try_from(c).context("pair value exceeds u32")?;
+                return Ok(AxisValue::Pair(r, c));
+            }
+        }
+        bail!("axis value must be an unsigned integer or a [rows, cols] pair, got {v:?}");
+    }
+}
+
+impl Axis {
+    /// Every axis, in the canonical enumeration order.
+    pub const ALL: [Axis; 7] = [
+        Axis::ArrayGeometry,
+        Axis::NceFreqMhz,
+        Axis::BusFreqMhz,
+        Axis::BusBytesPerCycle,
+        Axis::IfmBufferKib,
+        Axis::WeightBufferKib,
+        Axis::OfmBufferKib,
+    ];
+
+    /// Stable JSON/CLI identifier.
+    pub fn key(self) -> &'static str {
+        match self {
+            Axis::ArrayGeometry => "array_geometry",
+            Axis::NceFreqMhz => "nce_freq_mhz",
+            Axis::BusFreqMhz => "bus_freq_mhz",
+            Axis::BusBytesPerCycle => "bus_bytes_per_cycle",
+            Axis::IfmBufferKib => "ifm_buffer_kib",
+            Axis::WeightBufferKib => "weight_buffer_kib",
+            Axis::OfmBufferKib => "ofm_buffer_kib",
+        }
+    }
+
+    /// Human-readable axis name for reports and CLI output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Axis::ArrayGeometry => "NCE array geometry",
+            Axis::NceFreqMhz => "NCE frequency",
+            Axis::BusFreqMhz => "bus frequency",
+            Axis::BusBytesPerCycle => "bus width",
+            Axis::IfmBufferKib => "IFM buffer",
+            Axis::WeightBufferKib => "weight buffer",
+            Axis::OfmBufferKib => "OFM buffer",
+        }
+    }
+
+    /// Unit suffix for scalar values of this axis.
+    pub fn unit(self) -> &'static str {
+        match self {
+            Axis::ArrayGeometry => "",
+            Axis::NceFreqMhz | Axis::BusFreqMhz => "MHz",
+            Axis::BusBytesPerCycle => "B/cycle",
+            Axis::IfmBufferKib | Axis::WeightBufferKib | Axis::OfmBufferKib => "KiB",
+        }
+    }
+
+    /// Resolve a JSON/CLI identifier.
+    pub fn from_key(key: &str) -> Result<Axis> {
+        Axis::ALL
+            .into_iter()
+            .find(|a| a.key() == key)
+            .with_context(|| {
+                let known: Vec<&str> = Axis::ALL.iter().map(|a| a.key()).collect();
+                format!("unknown axis {key:?} (known axes: {})", known.join(", "))
+            })
+    }
+
+    /// Whether changing this axis changes the structural compile key —
+    /// forcing a re-tile — or is a pure retime of the cached compilation.
+    /// Must agree with the field set of [`crate::compiler::CompileKey`];
+    /// the test suite cross-checks the two.
+    pub fn is_structural(self) -> bool {
+        !matches!(self, Axis::NceFreqMhz | Axis::BusFreqMhz)
+    }
+
+    /// Whether this axis carries scalar values (everything except the
+    /// pair-valued array geometry) — the precondition for the requirement
+    /// solver, which needs a totally ordered axis.
+    pub fn is_scalar(self) -> bool {
+        !matches!(self, Axis::ArrayGeometry)
+    }
+
+    /// Read this axis's current value from a config.
+    pub fn read(self, sys: &SystemConfig) -> AxisValue {
+        match self {
+            Axis::ArrayGeometry => AxisValue::Pair(sys.nce.array_rows, sys.nce.array_cols),
+            Axis::NceFreqMhz => AxisValue::Scalar(sys.nce.freq_mhz),
+            Axis::BusFreqMhz => AxisValue::Scalar(sys.bus.freq_mhz),
+            Axis::BusBytesPerCycle => AxisValue::Scalar(sys.bus.bytes_per_cycle),
+            Axis::IfmBufferKib => AxisValue::Scalar(sys.nce.ifm_buffer_kib as u64),
+            Axis::WeightBufferKib => AxisValue::Scalar(sys.nce.weight_buffer_kib as u64),
+            Axis::OfmBufferKib => AxisValue::Scalar(sys.nce.ofm_buffer_kib as u64),
+        }
+    }
+
+    /// Check that `v` is a legal value for this axis (kind match, and u32
+    /// range for the u32-backed buffer fields). [`AxisValues::new`] runs
+    /// this on every value, which is what lets grid expansion apply values
+    /// infallibly.
+    pub fn check(self, v: AxisValue) -> Result<()> {
+        match (self, v) {
+            (Axis::ArrayGeometry, AxisValue::Pair(..)) => Ok(()),
+            (Axis::ArrayGeometry, AxisValue::Scalar(s)) => {
+                bail!("axis array_geometry takes [rows, cols] pairs, got scalar {s}")
+            }
+            (axis, AxisValue::Pair(r, c)) => {
+                bail!("axis {} takes scalar values, got pair [{r}, {c}]", axis.key())
+            }
+            (
+                Axis::IfmBufferKib | Axis::WeightBufferKib | Axis::OfmBufferKib,
+                AxisValue::Scalar(s),
+            ) => {
+                u32::try_from(s)
+                    .map(|_| ())
+                    .map_err(|_| anyhow::anyhow!("axis {}: value {s} exceeds u32", self.key()))
+            }
+            (_, AxisValue::Scalar(_)) => Ok(()),
+        }
+    }
+
+    /// Write `v` into `sys`. Fails exactly when [`Axis::check`] would.
+    pub fn apply(self, sys: &mut SystemConfig, v: AxisValue) -> Result<()> {
+        self.check(v)?;
+        match (self, v) {
+            (Axis::ArrayGeometry, AxisValue::Pair(r, c)) => {
+                sys.nce.array_rows = r;
+                sys.nce.array_cols = c;
+            }
+            (Axis::NceFreqMhz, AxisValue::Scalar(s)) => sys.nce.freq_mhz = s,
+            (Axis::BusFreqMhz, AxisValue::Scalar(s)) => sys.bus.freq_mhz = s,
+            (Axis::BusBytesPerCycle, AxisValue::Scalar(s)) => sys.bus.bytes_per_cycle = s,
+            (Axis::IfmBufferKib, AxisValue::Scalar(s)) => sys.nce.ifm_buffer_kib = s as u32,
+            (Axis::WeightBufferKib, AxisValue::Scalar(s)) => sys.nce.weight_buffer_kib = s as u32,
+            (Axis::OfmBufferKib, AxisValue::Scalar(s)) => sys.nce.ofm_buffer_kib = s as u32,
+            _ => unreachable!("check() rejected the kind mismatch"),
+        }
+        Ok(())
+    }
+
+    /// Point-name fragment for axes *not* covered by the canonical
+    /// `nce{r}x{c}_f{f}_bus{w}_ifm{k}` prefix (which is always derived from
+    /// the expanded config, keeping classic sweep names byte-identical).
+    /// Returns `None` for the canonical four.
+    fn extra_fragment(self, v: AxisValue) -> Option<String> {
+        let s = v.scalar();
+        match self {
+            Axis::BusFreqMhz => Some(format!("busf{}", s?)),
+            Axis::WeightBufferKib => Some(format!("wbuf{}", s?)),
+            Axis::OfmBufferKib => Some(format!("obuf{}", s?)),
+            _ => None,
+        }
+    }
+}
+
+/// One axis with the values it sweeps. Values are validated against the
+/// axis at construction, so downstream grid expansion cannot fail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxisValues {
+    axis: Axis,
+    values: Vec<AxisValue>,
+}
+
+impl AxisValues {
+    pub fn new(axis: Axis, values: Vec<AxisValue>) -> Result<Self> {
+        for v in &values {
+            axis.check(*v)?;
+        }
+        Ok(Self { axis, values })
+    }
+
+    pub fn axis(&self) -> Axis {
+        self.axis
+    }
+
+    pub fn values(&self) -> &[AxisValue] {
+        &self.values
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// `{"axis": "<key>", "values": [...]}` — scalars as integers, the
+    /// geometry axis as `[rows, cols]` pairs.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("axis", self.axis.key().into()),
+            (
+                "values",
+                Value::Array(self.values.iter().map(|v| v.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let axis = Axis::from_key(v.req_str("axis")?)?;
+        let mut values = Vec::new();
+        for raw in v.req_array("values")? {
+            values.push(AxisValue::from_json(raw)?);
+        }
+        AxisValues::new(axis, values)
+            .with_context(|| format!("axis spec for {:?}", axis.key()))
+    }
+}
+
+/// The design space of a sweep: an ordered list of axes (first axis
+/// outermost in the cartesian expansion). An axis absent from the list —
+/// or present with no values — keeps the base config's value, exactly like
+/// the empty named fields of the struct this replaces.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SweepAxes {
+    axes: Vec<AxisValues>,
+}
+
+impl SweepAxes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The active axes, in sweep order.
+    pub fn axes(&self) -> &[AxisValues] {
+        &self.axes
+    }
+
+    /// No axes — the grid is just the base config.
+    pub fn is_empty(&self) -> bool {
+        self.axes.is_empty()
+    }
+
+    /// Number of grid points the cartesian expansion will produce.
+    pub fn grid_size(&self) -> usize {
+        self.axes.iter().map(|a| a.len()).product()
+    }
+
+    /// Append (or replace) one axis. Validates every value against the
+    /// axis; an empty value list removes the axis (keep the base value).
+    pub fn with_axis(self, axis: Axis, values: Vec<AxisValue>) -> Result<Self> {
+        Ok(self.set(AxisValues::new(axis, values)?))
+    }
+
+    /// Append a pre-validated axis, replacing any previous entry for the
+    /// same axis (in place, preserving its sweep position).
+    pub fn set(mut self, av: AxisValues) -> Self {
+        if av.is_empty() {
+            self.axes.retain(|a| a.axis != av.axis);
+            return self;
+        }
+        match self.axes.iter_mut().find(|a| a.axis == av.axis) {
+            Some(slot) => *slot = av,
+            None => self.axes.push(av),
+        }
+        self
+    }
+
+    // --- compat shims: the old named-field constructors -----------------
+    // Typed, hence infallible; call order = axis order = expansion order
+    // (geometry outermost, then frequency, bus width, IFM buffer — the
+    // order the old hand-rolled loops nested in).
+
+    pub fn array_geometries(self, geoms: Vec<(u32, u32)>) -> Self {
+        self.set(AxisValues {
+            axis: Axis::ArrayGeometry,
+            values: geoms.into_iter().map(|(r, c)| AxisValue::Pair(r, c)).collect(),
+        })
+    }
+
+    pub fn nce_freqs_mhz(self, freqs: Vec<u64>) -> Self {
+        self.set(AxisValues {
+            axis: Axis::NceFreqMhz,
+            values: freqs.into_iter().map(AxisValue::Scalar).collect(),
+        })
+    }
+
+    pub fn bus_bytes_per_cycle(self, widths: Vec<u64>) -> Self {
+        self.set(AxisValues {
+            axis: Axis::BusBytesPerCycle,
+            values: widths.into_iter().map(AxisValue::Scalar).collect(),
+        })
+    }
+
+    pub fn ifm_buffer_kib(self, sizes: Vec<u32>) -> Self {
+        self.set(AxisValues {
+            axis: Axis::IfmBufferKib,
+            values: sizes.into_iter().map(|k| AxisValue::Scalar(k as u64)).collect(),
+        })
+    }
+
+    // --- JSON ------------------------------------------------------------
+
+    /// JSON axis spec: an array of [`AxisValues::to_json`] objects.
+    pub fn to_json(&self) -> Value {
+        Value::Array(self.axes.iter().map(|a| a.to_json()).collect())
+    }
+
+    /// Parse a JSON axis-spec value (duplicate axes are rejected — a spec
+    /// listing one axis twice is ambiguous, not a silent override).
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let raw = v
+            .as_array()
+            .context("axis spec must be a JSON array of {axis, values} objects")?;
+        let mut axes = SweepAxes::new();
+        for entry in raw {
+            let av = AxisValues::from_json(entry)?;
+            if axes.axes.iter().any(|a| a.axis == av.axis) {
+                bail!("axis {:?} listed twice in axis spec", av.axis.key());
+            }
+            axes = axes.set(av);
+        }
+        Ok(axes)
+    }
+
+    /// Parse a JSON axis-spec document.
+    pub fn from_json(text: &str) -> Result<Self> {
+        Self::from_value(&json::parse(text).context("axis spec parse")?)
+    }
+}
+
+/// Enumerate the cartesian grid of configs for `axes` around `base`, in
+/// deterministic axis order (first axis outermost). Every point's name is
+/// the canonical `nce{r}x{c}_f{f}_bus{w}_ifm{k}` prefix (read from the
+/// expanded config, so classic sweeps keep their exact historical names)
+/// plus a fragment per additionally swept axis — unique within any one
+/// grid, since points only differ along swept axes.
+pub fn expand_configs(base: &SystemConfig, axes: &SweepAxes) -> Vec<SystemConfig> {
+    let active = axes.axes();
+    let mut configs = Vec::with_capacity(axes.grid_size());
+    let mut idx = vec![0usize; active.len()];
+    loop {
+        let mut sys = base.clone();
+        for (ai, av) in active.iter().enumerate() {
+            av.axis()
+                .apply(&mut sys, av.values()[idx[ai]])
+                .expect("axis values are validated at construction");
+        }
+        sys.name = point_name(&sys, active, &idx);
+        configs.push(sys);
+        // Odometer increment, last axis innermost.
+        let mut ai = active.len();
+        loop {
+            if ai == 0 {
+                return configs;
+            }
+            ai -= 1;
+            idx[ai] += 1;
+            if idx[ai] < active[ai].len() {
+                break;
+            }
+            idx[ai] = 0;
+        }
+    }
+}
+
+fn point_name(sys: &SystemConfig, active: &[AxisValues], idx: &[usize]) -> String {
+    let mut name = format!(
+        "nce{}x{}_f{}_bus{}_ifm{}",
+        sys.nce.array_rows,
+        sys.nce.array_cols,
+        sys.nce.freq_mhz,
+        sys.bus.bytes_per_cycle,
+        sys.nce.ifm_buffer_kib
+    );
+    for (ai, av) in active.iter().enumerate() {
+        if let Some(frag) = av.axis().extra_fragment(av.values()[idx[ai]]) {
+            name.push('_');
+            name.push_str(&frag);
+        }
+    }
+    name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::CompileKey;
+    use crate::dse::DSE_COMPILE_OPTS;
+    use crate::graph::models;
+
+    fn base() -> SystemConfig {
+        SystemConfig::base_paper()
+    }
+
+    #[test]
+    fn every_axis_round_trips_through_read_apply() {
+        let b = base();
+        for axis in Axis::ALL {
+            let v = axis.read(&b);
+            let mut sys = b.clone();
+            axis.apply(&mut sys, v).unwrap();
+            assert_eq!(sys, b, "{}: applying the read value must be identity", axis.key());
+        }
+    }
+
+    #[test]
+    fn axis_keys_round_trip() {
+        for axis in Axis::ALL {
+            assert_eq!(Axis::from_key(axis.key()).unwrap(), axis);
+        }
+        let err = Axis::from_key("nope").unwrap_err();
+        assert!(format!("{err:#}").contains("known axes"), "{err:#}");
+    }
+
+    #[test]
+    fn kind_mismatches_are_rejected() {
+        assert!(Axis::ArrayGeometry.check(AxisValue::Scalar(32)).is_err());
+        assert!(Axis::NceFreqMhz.check(AxisValue::Pair(16, 32)).is_err());
+        // u32-backed buffer axes reject oversized scalars instead of
+        // wrapping.
+        let err = Axis::IfmBufferKib.check(AxisValue::Scalar(1 << 40)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds u32"), "{err:#}");
+        // ...while genuinely u64-backed axes take them.
+        Axis::BusBytesPerCycle.check(AxisValue::Scalar(1 << 40)).unwrap();
+    }
+
+    #[test]
+    fn structural_classification_matches_compile_key() {
+        // The axis's own claim about structurality must agree with the
+        // compile cache's key: applying a *changed* value to the base
+        // config changes the CompileKey iff the axis says structural.
+        let net = models::lenet(28);
+        let b = base();
+        let key_base = CompileKey::new(&net, &b, DSE_COMPILE_OPTS);
+        for axis in Axis::ALL {
+            let changed = match axis.read(&b) {
+                AxisValue::Scalar(s) => AxisValue::Scalar(s * 2),
+                AxisValue::Pair(r, c) => AxisValue::Pair(r * 2, c * 2),
+            };
+            let mut sys = b.clone();
+            axis.apply(&mut sys, changed).unwrap();
+            let key = CompileKey::new(&net, &sys, DSE_COMPILE_OPTS);
+            assert_eq!(
+                key != key_base,
+                axis.is_structural(),
+                "{}: is_structural() disagrees with CompileKey",
+                axis.key()
+            );
+        }
+    }
+
+    #[test]
+    fn axis_spec_json_round_trips() {
+        let axes = SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500])
+            .bus_bytes_per_cycle(vec![16, 32])
+            .ifm_buffer_kib(vec![512, 1536]);
+        let text = axes.to_json().to_string_pretty();
+        let back = SweepAxes::from_json(&text).unwrap();
+        assert_eq!(back, axes);
+        // Order is part of the spec (it fixes the grid enumeration).
+        assert_eq!(back.axes()[0].axis(), Axis::ArrayGeometry);
+        assert_eq!(back.axes()[1].axis(), Axis::NceFreqMhz);
+        assert_eq!(back.grid_size(), 2 * 3 * 2 * 2);
+    }
+
+    #[test]
+    fn axis_spec_rejects_duplicates_and_bad_values() {
+        let dup = r#"[{"axis":"nce_freq_mhz","values":[125]},
+                      {"axis":"nce_freq_mhz","values":[250]}]"#;
+        let err = SweepAxes::from_json(dup).unwrap_err();
+        assert!(format!("{err:#}").contains("twice"), "{err:#}");
+
+        let bad = r#"[{"axis":"array_geometry","values":[125]}]"#;
+        assert!(SweepAxes::from_json(bad).is_err());
+
+        let unknown = r#"[{"axis":"warp_factor","values":[9]}]"#;
+        let err = SweepAxes::from_json(unknown).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown axis"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_axis_keeps_base_value_and_replacement_is_in_place() {
+        let axes = SweepAxes::new()
+            .nce_freqs_mhz(vec![125, 250])
+            .array_geometries(vec![(16, 32)])
+            .nce_freqs_mhz(vec![500]); // replaces, stays first
+        assert_eq!(axes.axes()[0].axis(), Axis::NceFreqMhz);
+        assert_eq!(axes.axes()[0].len(), 1);
+        assert_eq!(axes.grid_size(), 1);
+        // Emptying an axis removes it entirely.
+        let axes = axes.nce_freqs_mhz(vec![]);
+        assert_eq!(axes.axes().len(), 1);
+        assert_eq!(axes.axes()[0].axis(), Axis::ArrayGeometry);
+    }
+
+    #[test]
+    fn expansion_matches_historical_grid_order_and_names() {
+        // The exact grid the old named-field expansion produced: geometry
+        // outermost, then frequency, bus width, IFM buffer; canonical
+        // names.
+        let axes = SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![125, 250])
+            .bus_bytes_per_cycle(vec![32])
+            .ifm_buffer_kib(vec![512]);
+        let configs = expand_configs(&base(), &axes);
+        let names: Vec<&str> = configs.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "nce16x32_f125_bus32_ifm512",
+                "nce16x32_f250_bus32_ifm512",
+                "nce32x64_f125_bus32_ifm512",
+                "nce32x64_f250_bus32_ifm512",
+            ]
+        );
+        assert_eq!(configs[2].nce.array_rows, 32);
+        assert_eq!(configs[2].nce.freq_mhz, 125);
+    }
+
+    #[test]
+    fn expansion_of_empty_axes_is_the_base_point() {
+        let configs = expand_configs(&base(), &SweepAxes::default());
+        assert_eq!(configs.len(), 1);
+        assert_eq!(configs[0].name, "nce32x64_f250_bus32_ifm1536");
+        assert_eq!(configs[0].nce.freq_mhz, base().nce.freq_mhz);
+    }
+
+    #[test]
+    fn non_canonical_axes_get_name_fragments() {
+        let axes = SweepAxes::new()
+            .with_axis(
+                Axis::BusFreqMhz,
+                vec![AxisValue::Scalar(125), AxisValue::Scalar(250)],
+            )
+            .unwrap()
+            .with_axis(
+                Axis::WeightBufferKib,
+                vec![AxisValue::Scalar(128), AxisValue::Scalar(256)],
+            )
+            .unwrap();
+        let configs = expand_configs(&base(), &axes);
+        assert_eq!(configs.len(), 4);
+        let names: Vec<&str> = configs.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "nce32x64_f250_bus32_ifm1536_busf125_wbuf128",
+                "nce32x64_f250_bus32_ifm1536_busf125_wbuf256",
+                "nce32x64_f250_bus32_ifm1536_busf250_wbuf128",
+                "nce32x64_f250_bus32_ifm1536_busf250_wbuf256",
+            ]
+        );
+        assert_eq!(configs[0].bus.freq_mhz, 125);
+        assert_eq!(configs[3].nce.weight_buffer_kib, 256);
+        // Names stay unique even though the canonical prefix is constant.
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 4);
+    }
+}

@@ -2,47 +2,64 @@
 //! many hardware/software design points "by a click of a button" instead of
 //! one physical prototype per point.
 //!
-//! * [`sweep`] — cartesian sweeps over NCE geometry, frequencies, bus
-//!   widths and buffer sizes, simulating each point (traces disabled,
-//!   labels off: the fast path).
-//! * [`topdown_min_nce_freq`] — the paper's §2 "top-down" mode: given a
-//!   target performance, derive the physical requirement (e.g. minimum NCE
-//!   frequency); [`bottomup`] is the ordinary estimate for annotated
-//!   components.
+//! # The design space is a value: [`Axis`]
+//!
+//! Every sweepable knob of a [`SystemConfig`] is one variant of the closed
+//! [`Axis`] enum ([`axis`] module): array geometry, NCE/bus clocks, bus
+//! width, and the three on-chip buffer capacities. An axis knows how to
+//! read/apply its value, whether it is **structural** or **retime-only**,
+//! and how to serialize itself — so sweeps ([`SweepAxes`] is an ordered
+//! list of `(axis, values)` pairs), the requirement solver and the CLI's
+//! JSON axis specs all share one vocabulary, and adding a knob means adding
+//! one variant, not editing every layer.
+//!
+//! # Compile-reuse rules
+//!
+//! Evaluating a design point is `compile` (tiling + lowering) followed by
+//! `simulate`. The compiler's output depends only on the *structural*
+//! subset of the config — the fields of [`crate::compiler::CompileKey`] —
+//! never on clock frequencies: the tiler's objective runs at pinned
+//! reference clocks (see `compiler::tiling`) and the emitted task graph
+//! carries frequency-free NCE cycle counts and DMA byte counts. The rules,
+//! as the axis abstraction states them:
+//!
+//! * Moving along a **retime-only** axis ([`Axis::is_structural`] =
+//!   `false`: the clock axes) keeps the [`CompileKey`] fixed — every value
+//!   shares one cached [`CompiledNet`] and costs one re-simulation.
+//! * Moving along a **structural** axis (geometry, widths, buffers)
+//!   changes the key — one compilation per distinct value, memoized in a
+//!   [`CompileCache`] shared by reference across sweep workers.
+//!
+//! A grid over G structural values x F frequencies therefore costs G
+//! compilations, not G x F, and every probe of a requirement solve after
+//! the first structural value is compile-free.
+//!
+//! # Entry points
+//!
+//! * [`sweep`] — cartesian sweep of [`SweepAxes`] around a base config,
+//!   parallel across points on the shared worker pool
+//!   (`crate::campaign::pool`), byte-identical to the sequential
+//!   [`sweep_seq`] (enforced by tests). [`sweep_outcomes`] is the
+//!   classified form (feasible / infeasible / error per grid point).
+//! * [`solve_requirement`] — the paper's §2 "top-down" mode, generalized:
+//!   given a target latency, binary-search *any monotone scalar axis* for
+//!   the minimum value that meets it, with a monotonicity pre-check and a
+//!   per-solution compile/probe accounting ([`RequirementSolution`]).
+//!   [`topdown_min_nce_freq`] is the NCE-frequency instance, kept as a
+//!   compatibility wrapper; [`bottomup`] is the ordinary estimate for
+//!   annotated components.
 //! * [`pareto`] — extract the latency/cost frontier (sort-based,
 //!   O(n log n)).
 //!
-//! # Evaluation pipeline: compile cache + parallel execution
+//! Sweeping a whole *portfolio* of nets — each optionally against its own
+//! base config and axes — with streaming Pareto frontiers and a
+//! disk-persistent compile cache is `crate::campaign::run`.
 //!
-//! Evaluating a design point is `compile` (tiling + lowering) followed by
-//! `simulate`. Two structural facts make sweeps much cheaper than
-//! points x (compile + simulate):
-//!
-//! 1. **Compilation is memoized across points.** The compiler's output
-//!    depends only on the *structural* subset of the config — array
-//!    geometry, per-task setup cycles, buffer capacities, datapath widths
-//!    and the effective-bandwidth annotation (the fields of
-//!    [`crate::compiler::CompileKey`]) — never on clock frequencies: the
-//!    tiler's objective runs at pinned reference clocks (see
-//!    `compiler::tiling`), and the emitted task graph carries
-//!    frequency-free NCE cycle counts and DMA byte counts. All frequency
-//!    points of a sweep and every binary-search probe of
-//!    [`topdown_min_nce_freq`] therefore share one [`CompiledNet`] held in
-//!    a [`CompileCache`], and a "recompile" for a new frequency is a pure
-//!    retime: re-simulate the cached graph under the new annotations.
-//!
-//! 2. **Points simulate in parallel.** [`sweep`] fans the enumerated
-//!    design points out over the shared worker pool
-//!    (`crate::campaign::pool`; worker `w` takes points
-//!    `w, w + T, w + 2T, ...`), all sharing the compile cache by
-//!    reference; results are scattered back by point index, so the
-//!    returned vector is byte-identical — same order, same `latency_ps` —
-//!    to the sequential sweep ([`sweep_seq`]), which the test suite
-//!    enforces. Simulation of one point is single-threaded and
-//!    deterministic; parallelism is purely across points. Sweeping a whole
-//!    *portfolio* of nets against one grid — with streaming Pareto
-//!    frontiers and a disk-persistent compile cache — is
-//!    `crate::campaign::run`.
+//! [`CompileKey`]: crate::compiler::CompileKey
+
+pub mod axis;
+
+pub use axis::{expand_configs, Axis, AxisValue, AxisValues, SweepAxes};
 
 use crate::compiler::{CompileCache, CompileOptions, CompiledNet};
 use crate::config::SystemConfig;
@@ -70,25 +87,6 @@ pub struct DesignPoint {
     pub cost: f64,
     /// Simulated inferences per second.
     pub throughput: f64,
-}
-
-/// Parameter axes for a sweep. Empty axes keep the base value.
-#[derive(Debug, Clone, Default)]
-pub struct SweepAxes {
-    pub array_geometries: Vec<(u32, u32)>,
-    pub nce_freqs_mhz: Vec<u64>,
-    pub bus_bytes_per_cycle: Vec<u64>,
-    pub ifm_buffer_kib: Vec<u32>,
-}
-
-impl SweepAxes {
-    fn or_base<'a, T: Clone>(axis: &'a [T], base: &'a T) -> Vec<T> {
-        if axis.is_empty() {
-            vec![base.clone()]
-        } else {
-            axis.to_vec()
-        }
-    }
 }
 
 /// Execution policy for [`sweep_with`].
@@ -239,38 +237,6 @@ pub fn evaluate_outcome(
     }
 }
 
-/// Enumerate the cartesian grid of configs in deterministic axis order
-/// (geometry, frequency, bus width, IFM buffer — outermost to innermost).
-/// Public so the campaign engine expands the same grid once and shares it
-/// across every workload of a portfolio.
-pub fn expand_configs(base: &SystemConfig, axes: &SweepAxes) -> Vec<SystemConfig> {
-    let geoms = SweepAxes::or_base(
-        &axes.array_geometries,
-        &(base.nce.array_rows, base.nce.array_cols),
-    );
-    let freqs = SweepAxes::or_base(&axes.nce_freqs_mhz, &base.nce.freq_mhz);
-    let widths = SweepAxes::or_base(&axes.bus_bytes_per_cycle, &base.bus.bytes_per_cycle);
-    let ifms = SweepAxes::or_base(&axes.ifm_buffer_kib, &base.nce.ifm_buffer_kib);
-    let mut configs = Vec::with_capacity(geoms.len() * freqs.len() * widths.len() * ifms.len());
-    for &(rows, cols) in &geoms {
-        for &f in &freqs {
-            for &w in &widths {
-                for &ifm in &ifms {
-                    let mut sys = base.clone();
-                    sys.nce.array_rows = rows;
-                    sys.nce.array_cols = cols;
-                    sys.nce.freq_mhz = f;
-                    sys.bus.bytes_per_cycle = w;
-                    sys.nce.ifm_buffer_kib = ifm;
-                    sys.name = format!("nce{rows}x{cols}_f{f}_bus{w}_ifm{ifm}");
-                    configs.push(sys);
-                }
-            }
-        }
-    }
-    configs
-}
-
 /// Cartesian sweep around a base system, parallel across design points with
 /// one shared compile cache. Infeasible points (tiling fails) are skipped.
 /// Result order is deterministic and identical to [`sweep_seq`]. Callers
@@ -373,36 +339,90 @@ pub fn bottomup(net: &DnnGraph, sys: &SystemConfig) -> Result<DesignPoint> {
     evaluate(net, sys, format!("{}_bottomup", sys.name))
 }
 
-/// Top-down assessment (paper §2): given a target end-to-end latency,
-/// derive the minimum NCE frequency that meets it (binary search over the
-/// simulated system; other annotations fixed). Every probe after the first
-/// is compile-free: frequency is not part of the compile key, so the
-/// binary search retimes one cached compilation.
-pub fn topdown_min_nce_freq(
+/// Result of one [`solve_requirement`] call: the answer plus the work it
+/// took, so callers (benches, the CLI) can assert the compile-reuse
+/// contract — exactly one compilation on a retime-only axis.
+#[derive(Debug, Clone)]
+pub struct RequirementSolution {
+    pub axis: Axis,
+    /// Minimum axis value meeting the target, `None` if the target is
+    /// unreachable even at the top of the range.
+    pub value: Option<u64>,
+    /// Latency probes performed (simulations).
+    pub probes: usize,
+    /// Compiler invocations across all probes: 1 for a retime-only axis,
+    /// one per distinct probed value for a structural axis.
+    pub compiles: u64,
+}
+
+/// Top-down assessment (paper §2), generalized over any scalar axis: given
+/// a target end-to-end latency, derive the minimum axis value in
+/// `range = (lo, hi)` that meets it, by binary search over the simulated
+/// system (all other annotations fixed).
+///
+/// The search assumes latency is **non-increasing** in the axis value
+/// (more frequency / bus width / buffer never hurts); a pre-check probes
+/// both endpoints and returns a descriptive error if the range is visibly
+/// non-monotone (latency strictly better at `lo` than at `hi`), instead of
+/// silently bisecting garbage.
+///
+/// Probes share one [`CompileCache`], so the structural/retime split of
+/// the axis decides the cost: a retime-only axis ([`Axis::NceFreqMhz`],
+/// [`Axis::BusFreqMhz`]) compiles **once** and every probe is a pure
+/// re-simulation; a structural axis compiles once per distinct probed
+/// value. [`RequirementSolution::compiles`] reports the actual count.
+pub fn solve_requirement(
     net: &DnnGraph,
     base: &SystemConfig,
+    axis: Axis,
     target_latency_ps: u64,
-    freq_range_mhz: (u64, u64),
-) -> Result<Option<u64>> {
-    let (mut lo, mut hi) = freq_range_mhz;
+    range: (u64, u64),
+) -> Result<RequirementSolution> {
+    if !axis.is_scalar() {
+        bail!(
+            "axis {} is not scalar-valued; the requirement solver needs a \
+             totally ordered axis",
+            axis.key()
+        );
+    }
+    let (mut lo, mut hi) = range;
     // An inverted or zero range would not fail loudly: the two boundary
-    // probes alone would "answer" with a frequency that means nothing.
+    // probes alone would "answer" with a value that means nothing.
     if lo == 0 || lo > hi {
         bail!(
-            "topdown frequency range must satisfy 0 < lo <= hi, got ({lo}, {hi}) MHz"
+            "{} range must satisfy 0 < lo <= hi, got ({lo}, {hi})",
+            axis.key()
         );
     }
     let cache = CompileCache::new(DSE_COMPILE_OPTS);
-    let latency_at = |mhz: u64| -> Result<u64> {
+    let probes = std::cell::Cell::new(0usize);
+    let latency_at = |v: u64| -> Result<u64> {
         let mut sys = base.clone();
-        sys.nce.freq_mhz = mhz;
+        axis.apply(&mut sys, AxisValue::Scalar(v))?;
+        probes.set(probes.get() + 1);
         Ok(evaluate_cached(net, &sys, "probe", &cache)?.latency_ps)
     };
-    if latency_at(hi)? > target_latency_ps {
-        return Ok(None); // unreachable even at the top of the range
+    let solution = |value: Option<u64>| RequirementSolution {
+        axis,
+        value,
+        probes: probes.get(),
+        compiles: cache.misses(),
+    };
+    let lat_hi = latency_at(hi)?;
+    let lat_lo = if lo == hi { lat_hi } else { latency_at(lo)? };
+    if lat_lo < lat_hi {
+        bail!(
+            "axis {} is not monotone over ({lo}, {hi}): latency {lat_lo} ps \
+             at {lo} is below {lat_hi} ps at {hi}; the requirement solver \
+             needs latency non-increasing in the axis value",
+            axis.key()
+        );
     }
-    if latency_at(lo)? <= target_latency_ps {
-        return Ok(Some(lo));
+    if lat_hi > target_latency_ps {
+        return Ok(solution(None)); // unreachable even at the top of the range
+    }
+    if lat_lo <= target_latency_ps {
+        return Ok(solution(Some(lo)));
     }
     while lo + 1 < hi {
         let mid = (lo + hi) / 2;
@@ -412,7 +432,20 @@ pub fn topdown_min_nce_freq(
             lo = mid;
         }
     }
-    Ok(Some(hi))
+    Ok(solution(Some(hi)))
+}
+
+/// The NCE-frequency instance of [`solve_requirement`], kept as a
+/// compatibility wrapper: byte-identical answers to the historical
+/// hand-rolled binary search (property-tested against it), one compilation
+/// total.
+pub fn topdown_min_nce_freq(
+    net: &DnnGraph,
+    base: &SystemConfig,
+    target_latency_ps: u64,
+    freq_range_mhz: (u64, u64),
+) -> Result<Option<u64>> {
+    Ok(solve_requirement(net, base, Axis::NceFreqMhz, target_latency_ps, freq_range_mhz)?.value)
 }
 
 /// JSON export of a sweep (plot data).
@@ -444,11 +477,9 @@ mod tests {
     #[test]
     fn sweep_covers_grid_and_skips_infeasible() {
         let net = models::lenet(28);
-        let axes = SweepAxes {
-            array_geometries: vec![(16, 32), (32, 64)],
-            nce_freqs_mhz: vec![125, 250],
-            ..Default::default()
-        };
+        let axes = SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![125, 250]);
         let pts = sweep(&net, &base(), &axes);
         assert_eq!(pts.len(), 4);
         // All feasible here; distinct names.
@@ -460,10 +491,7 @@ mod tests {
     #[test]
     fn bigger_array_is_not_slower() {
         let net = models::dilated_vgg_tiny();
-        let axes = SweepAxes {
-            array_geometries: vec![(16, 32), (32, 64), (64, 64)],
-            ..Default::default()
-        };
+        let axes = SweepAxes::new().array_geometries(vec![(16, 32), (32, 64), (64, 64)]);
         let pts = sweep(&net, &base(), &axes);
         assert_eq!(pts.len(), 3);
         assert!(pts[0].latency_ps >= pts[1].latency_ps);
@@ -473,7 +501,7 @@ mod tests {
     #[test]
     fn faster_clock_reduces_latency_until_memory_bound() {
         let net = models::dilated_vgg_tiny();
-        let axes = SweepAxes { nce_freqs_mhz: vec![125, 250, 500], ..Default::default() };
+        let axes = SweepAxes::new().nce_freqs_mhz(vec![125, 250, 500]);
         let pts = sweep(&net, &base(), &axes);
         assert!(pts[0].latency_ps > pts[1].latency_ps);
         assert!(pts[1].latency_ps >= pts[2].latency_ps);
@@ -482,12 +510,10 @@ mod tests {
     #[test]
     fn parallel_sweep_is_byte_identical_to_sequential() {
         let net = models::lenet(28);
-        let axes = SweepAxes {
-            array_geometries: vec![(16, 32), (32, 64)],
-            nce_freqs_mhz: vec![125, 250, 500],
-            ifm_buffer_kib: vec![512, 1536],
-            ..Default::default()
-        };
+        let axes = SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500])
+            .ifm_buffer_kib(vec![512, 1536]);
         let b = base();
         let par = sweep_with(&net, &b, &axes, &SweepOptions { threads: 4 });
         let seq = sweep_seq(&net, &b, &axes);
@@ -529,10 +555,7 @@ mod tests {
     #[test]
     fn frequency_only_sweep_compiles_once() {
         let net = models::lenet(28);
-        let axes = SweepAxes {
-            nce_freqs_mhz: vec![125, 250, 500, 1000],
-            ..Default::default()
-        };
+        let axes = SweepAxes::new().nce_freqs_mhz(vec![125, 250, 500, 1000]);
         // The public sweep shares one cache internally; verify the same
         // sharing property directly through the cache it is built on.
         let cache = CompileCache::new(DSE_COMPILE_OPTS);
@@ -546,11 +569,9 @@ mod tests {
     #[test]
     fn pareto_front_is_monotone() {
         let net = models::lenet(28);
-        let axes = SweepAxes {
-            array_geometries: vec![(8, 16), (16, 32), (32, 64)],
-            nce_freqs_mhz: vec![125, 250],
-            ..Default::default()
-        };
+        let axes = SweepAxes::new()
+            .array_geometries(vec![(8, 16), (16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![125, 250]);
         let pts = sweep(&net, &base(), &axes);
         let front = pareto(&pts);
         assert!(!front.is_empty());
@@ -662,7 +683,7 @@ mod tests {
     fn sweep_outcomes_tell_errors_apart_from_infeasible() {
         let net = models::lenet(28);
         // One valid frequency, one invalid (0 MHz fails validation).
-        let axes = SweepAxes { nce_freqs_mhz: vec![250, 0], ..Default::default() };
+        let axes = SweepAxes::new().nce_freqs_mhz(vec![250, 0]);
         let outs = sweep_outcomes(&net, &base(), &axes, &SweepOptions { threads: 1 });
         assert_eq!(outs.len(), 2);
         assert!(matches!(outs[0], EvalOutcome::Feasible(_)), "{:?}", outs[0]);
@@ -693,6 +714,61 @@ mod tests {
             "tiny buffers must classify as Infeasible, got {:?}",
             outs[0]
         );
+    }
+
+    #[test]
+    fn solver_compiles_once_on_retime_only_axes() {
+        // The compile-reuse contract the axis abstraction exists to
+        // state: every binary-search probe of a retime-only axis shares
+        // one compilation.
+        let net = models::lenet(28);
+        let b = base();
+        let baseline = evaluate(&net, &b, "b").unwrap().latency_ps;
+        for axis in [Axis::NceFreqMhz, Axis::BusFreqMhz] {
+            let sol =
+                solve_requirement(&net, &b, axis, baseline * 2, (50, 1000)).unwrap();
+            assert_eq!(sol.compiles, 1, "{}: retime-only axis must compile once", axis.key());
+            assert!(sol.probes >= 2, "{}", axis.key());
+            assert!(sol.value.is_some(), "{}: 2x baseline must be reachable", axis.key());
+        }
+    }
+
+    #[test]
+    fn solver_answers_match_direct_evaluation_on_structural_axis() {
+        // Bus width is structural: each probed value re-tiles. The answer
+        // must still be the minimal width meeting the target, and the
+        // compile count must equal the distinct probed values.
+        let net = models::dilated_vgg_tiny();
+        let b = base();
+        let baseline = evaluate(&net, &b, "b").unwrap().latency_ps;
+        let sol = solve_requirement(
+            &net,
+            &b,
+            Axis::BusBytesPerCycle,
+            baseline * 11 / 10,
+            (4, 64),
+        )
+        .unwrap();
+        let w = sol.value.expect("10% above baseline reachable at base width or below");
+        assert!(w <= 32, "base width already meets an easier target, got {w}");
+        assert_eq!(sol.compiles as usize, sol.probes, "structural axis: compile per probe");
+        // The answer actually meets the target...
+        let mut sys = b.clone();
+        sys.bus.bytes_per_cycle = w;
+        assert!(evaluate(&net, &sys, "v").unwrap().latency_ps <= baseline * 11 / 10);
+        // ...and one step below does not (minimality).
+        if w > 4 {
+            let mut sys = b.clone();
+            sys.bus.bytes_per_cycle = w - 1;
+            assert!(evaluate(&net, &sys, "v").unwrap().latency_ps > baseline * 11 / 10);
+        }
+    }
+
+    #[test]
+    fn solver_rejects_pair_valued_axes() {
+        let net = models::lenet(28);
+        let err = solve_requirement(&net, &base(), Axis::ArrayGeometry, 1, (1, 2)).unwrap_err();
+        assert!(format!("{err:#}").contains("not scalar"), "{err:#}");
     }
 
     #[test]

@@ -35,10 +35,14 @@ COMMANDS:
   gantt      Fig 4: resource Gantt chart (--format ascii|csv|svg)
   flow       full flow with the Fig 3 runtime breakdown (--outdir DIR)
   sweep      design-space exploration over NCE/bus/buffer axes
-  campaign   multi-workload co-design sweep: one config grid vs a net
+             (--axes SPEC to sweep any axis combination)
+  campaign   multi-workload co-design sweep: per-net config grids vs a net
              portfolio, streaming per-net Pareto frontiers + cross-net
-             summary (--nets A,B,C --cache-dir DIR --threads N)
-  topdown    minimum NCE frequency for a latency target (--target-ms X)
+             summary (--nets A,B,C | --workloads FILE, --axes SPEC,
+             --cache-dir DIR --threads N --fail-fast)
+  topdown    minimum axis value for a latency target (--target-ms X
+             --axis NAME --lo N --hi N; default axis nce_freq_mhz —
+             the paper's §2 top-down mode, generalized)
   analytical static (Zhang'15-style) estimate — the no-causality baseline
   infer      functional inference of the AOT artifact over PJRT
   config     print the (validated) system description JSON
@@ -57,11 +61,37 @@ COMMON OPTIONS:
   --cache-dir DIR     persistent compile cache for `campaign`: a second
                       invocation against a warm directory compiles nothing
                       (feasible *and* infeasible keys are both persisted)
+  --cache-max-entries N  bound the disk cache to N structural keys with
+                      LRU eviction (index sidecar avsm-compile-cache-index-v1;
+                      default: unbounded)
   --threads N         worker threads for `campaign` (default: all CPUs)
   --no-prune          disable the campaign's lower-bound early termination
                       and simulate every grid point (pruning is lossless —
                       frontiers are identical either way — so this is a
                       diagnostic/benchmark escape hatch)
+  --no-order          evaluate grid units in plain grid order instead of
+                      ascending lower-bound order (ordering is a lossless
+                      scheduling heuristic that maximizes bound-skips)
+  --fail-fast         abort `campaign` on the first error-classified unit
+                      (invalid swept config), reporting its diagnostic —
+                      the CI co-design-gate mode; infeasible tilings never
+                      trigger it
+
+AXIS SPECS (--axes, and \"axes\" inside --workloads entries):
+  JSON array of {\"axis\": NAME, \"values\": [..]} objects, swept first-
+  axis-outermost. Scalar axes take integers; array_geometry takes
+  [rows, cols] pairs. Prefix the argument with @ to read it from a file.
+    axes: array_geometry, nce_freq_mhz, bus_freq_mhz (retime-only),
+          bus_bytes_per_cycle, ifm_buffer_kib, weight_buffer_kib,
+          ofm_buffer_kib
+    example: --axes '[{\"axis\":\"array_geometry\",\"values\":[[16,32],[32,64]]},
+                      {\"axis\":\"nce_freq_mhz\",\"values\":[125,250,500]}]'
+
+WORKLOAD FILES (--workloads): JSON array of per-net entries, each
+  {\"net\": NAME|PATH, \"hw\": N?, \"base\": SYSTEM_JSON_PATH?, \"axes\": SPEC?}
+  — base/axes default to the campaign-wide --system/--axes, so one
+  campaign can sweep a heterogeneous portfolio (each DNN against its own
+  accelerator grid) while sharing the worker pool and caches.
 ";
 
 fn load_sys(args: &Args) -> Result<SystemConfig> {
@@ -92,6 +122,16 @@ fn named_net(name: &str, hw: u32) -> Result<DnnGraph> {
     };
     net.validate()?;
     Ok(net)
+}
+
+/// Parse an `--axes` argument: inline JSON, or `@path` to read a file.
+fn parse_axes(arg: &str) -> Result<dse::SweepAxes> {
+    let text = match arg.strip_prefix('@') {
+        Some(path) => std::fs::read_to_string(path)
+            .with_context(|| format!("reading axis spec {path:?}"))?,
+        None => arg.to_string(),
+    };
+    dse::SweepAxes::from_json(&text)
 }
 
 fn main() -> Result<()> {
@@ -244,12 +284,34 @@ fn cmd_flow(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let sys = load_sys(args)?;
     let net = load_net(args)?;
-    let axes = dse::SweepAxes {
-        array_geometries: vec![(16, 32), (32, 32), (32, 64), (64, 64), (128, 128)],
-        nce_freqs_mhz: vec![125, 250, 500],
-        ..Default::default()
+    let axes = match args.get("axes") {
+        Some(spec) => parse_axes(spec)?,
+        None => dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 32), (32, 64), (64, 64), (128, 128)])
+            .nce_freqs_mhz(vec![125, 250, 500]),
     };
-    let points = dse::sweep(&net, &sys, &axes);
+    // Classify every grid point: infeasible tilings are legitimate holes
+    // (reported, not fatal), but an error-classified point — an invalid
+    // value in a user-supplied --axes spec — must fail the command, not
+    // silently shrink the table.
+    let outcomes =
+        dse::sweep_outcomes(&net, &sys, &axes, &dse::SweepOptions::default());
+    let mut points = Vec::new();
+    let (mut infeasible, mut errors) = (0usize, 0usize);
+    let mut error_sample: Option<String> = None;
+    for outcome in outcomes {
+        match outcome {
+            dse::EvalOutcome::Feasible(p) => points.push(p),
+            dse::EvalOutcome::Infeasible { .. } => infeasible += 1,
+            dse::EvalOutcome::Error { name, reason } => {
+                errors += 1;
+                error_sample.get_or_insert(format!("{name}: {reason}"));
+            }
+        }
+    }
+    if infeasible > 0 {
+        println!("({infeasible} grid points structurally infeasible — skipped)");
+    }
     println!("{:<28} {:>14} {:>12} {:>10}", "design point", "latency", "infer/s", "cost");
     for p in &points {
         println!(
@@ -272,30 +334,84 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             dse::sweep_to_json(&points).to_string_pretty(),
         )?;
     }
+    if errors > 0 {
+        bail!(
+            "{errors} grid point(s) failed evaluation — first: {}",
+            error_sample.as_deref().unwrap_or("(no diagnostic)")
+        );
+    }
     Ok(())
+}
+
+/// Parse one `--workloads` file entry into a [`campaign::WorkloadSpec`].
+fn workload_from_value(v: &avsm::json::Value, default_hw: u32) -> Result<campaign::WorkloadSpec> {
+    let name = v.req_str("net")?;
+    let hw = match v.get("hw").as_u64() {
+        // Checked narrowing: a corrupt oversized value must read as
+        // rejection, never wrap into a plausible input size.
+        Some(h) => u32::try_from(h)
+            .map_err(|_| anyhow::anyhow!("workload {name:?}: hw {h} exceeds u32"))?,
+        None => default_hw,
+    };
+    let mut w = campaign::WorkloadSpec::new(named_net(name, hw)?);
+    if let Some(path) = v.get("base").as_str() {
+        w = w.with_base(
+            SystemConfig::from_file(path)
+                .with_context(|| format!("workload {name:?} base config"))?,
+        );
+    }
+    if !matches!(v.get("axes"), avsm::json::Value::Null) {
+        w = w.with_axes(
+            dse::SweepAxes::from_value(v.get("axes"))
+                .with_context(|| format!("workload {name:?} axis spec"))?,
+        );
+    }
+    Ok(w)
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
     let base = load_sys(args)?;
     let hw = args.get_u64("hw", 0)? as u32;
-    let nets: Vec<DnnGraph> = args
-        .get_or("nets", "lenet,dilated_vgg_tiny,tiny_resnet")
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(|name| named_net(name, hw))
-        .collect::<Result<_>>()?;
-    let axes = dse::SweepAxes {
-        array_geometries: vec![(16, 32), (32, 64), (64, 64)],
-        nce_freqs_mhz: vec![125, 250, 500],
-        ..Default::default()
+    let workloads: Vec<campaign::WorkloadSpec> = match args.get("workloads") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading workloads file {path:?}"))?;
+            let doc = avsm::json::parse(&text).context("workloads file parse")?;
+            let entries = doc
+                .as_array()
+                .context("workloads file must be a JSON array of {net, ...} entries")?;
+            entries
+                .iter()
+                .map(|v| workload_from_value(v, hw))
+                .collect::<Result<_>>()?
+        }
+        None => args
+            .get_or("nets", "lenet,dilated_vgg_tiny,tiny_resnet")
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|name| Ok(campaign::WorkloadSpec::new(named_net(name, hw)?)))
+            .collect::<Result<_>>()?,
     };
-    let spec = campaign::CampaignSpec { nets, base, axes };
+    let axes = match args.get("axes") {
+        Some(spec) => parse_axes(spec)?,
+        None => dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500]),
+    };
+    let spec = campaign::CampaignSpec { workloads, base, axes };
+    let cache_max_entries = match args.get_u64("cache-max-entries", 0)? {
+        0 => None,
+        n => Some(n as usize),
+    };
     let opts = campaign::CampaignOptions {
         threads: args.get_u64("threads", 0)? as usize,
         cache_dir: args.get("cache-dir").map(PathBuf::from),
+        cache_max_entries,
         keep_points: false,
         prune: !args.has("no-prune"),
+        order_by_bound: !args.has("no-order"),
+        fail_fast: args.has("fail-fast"),
     };
     let result = campaign::run(&spec, &opts)?;
     let report = CampaignReport::new(&result);
@@ -318,14 +434,28 @@ fn cmd_topdown(args: &Args) -> Result<()> {
         .parse()
         .context("--target-ms expects a number")?;
     let target_ps = (target_ms * 1e9) as u64;
-    match dse::topdown_min_nce_freq(&net, &sys, target_ps, (25, 2000))? {
-        Some(mhz) => println!(
-            "target {target_ms} ms/inference on {}: minimum NCE frequency {} MHz",
-            net.name, mhz
+    let axis = dse::Axis::from_key(args.get_or("axis", "nce_freq_mhz"))?;
+    let range = (args.get_u64("lo", 25)?, args.get_u64("hi", 2000)?);
+    let sol = dse::solve_requirement(&net, &sys, axis, target_ps, range)?;
+    match sol.value {
+        Some(v) => println!(
+            "target {target_ms} ms/inference on {}: minimum {} {} {} \
+             ({} probes, {} compilation{})",
+            net.name,
+            axis.label(),
+            v,
+            axis.unit(),
+            sol.probes,
+            sol.compiles,
+            if sol.compiles == 1 { "" } else { "s" }
         ),
         None => println!(
-            "target {target_ms} ms/inference is not reachable by scaling the NCE clock alone \
-             (communication-bound); widen the bus or buffers instead"
+            "target {target_ms} ms/inference is not reachable by scaling {} alone \
+             within ({}, {}) {}; widen another axis instead",
+            axis.label(),
+            range.0,
+            range.1,
+            axis.unit()
         ),
     }
     Ok(())

@@ -46,7 +46,7 @@ impl<'a> CampaignReport<'a> {
         let r = self.result;
         let mut out = String::new();
         out.push_str(&format!(
-            "campaign: {} workloads x {} design points ({} workers)\n",
+            "campaign: {} workloads, {} grid units ({} workers)\n",
             r.nets.len(),
             r.grid_points,
             r.threads
@@ -62,6 +62,19 @@ impl<'a> CampaignReport<'a> {
                 net.skipped_by_bound,
                 net.infeasible,
                 net.errors
+            ));
+            // Axis provenance: whose design space this net actually swept
+            // (heterogeneous portfolios differ per net).
+            let axes: Vec<String> = net
+                .axes
+                .axes()
+                .iter()
+                .map(|a| format!("{}[{}]", a.axis().key(), a.len()))
+                .collect();
+            out.push_str(&format!(
+                "base {}; axes {}\n",
+                net.base,
+                if axes.is_empty() { "(base point only)".to_string() } else { axes.join(" x ") }
             ));
             if let Some(sample) = &net.error_sample {
                 out.push_str(&format!("!! first error: {sample}\n"));
@@ -154,6 +167,12 @@ impl<'a> CampaignReport<'a> {
 fn net_to_value(net: &NetOutcome) -> Value {
     obj(vec![
         ("name", net.net.as_str().into()),
+        // Per-net provenance: the base config and axis spec this net's
+        // grid was expanded from (heterogeneous campaigns differ per net;
+        // the axes value is a machine-readable axis spec, reusable as CLI
+        // input).
+        ("base", net.base.as_str().into()),
+        ("axes", net.axes.to_json()),
         ("evaluated", net.evaluated.into()),
         ("feasible", net.feasible.into()),
         ("infeasible", net.infeasible.into()),
@@ -192,6 +211,8 @@ mod tests {
     fn net(name: &str, frontier: Vec<DesignPoint>) -> NetOutcome {
         NetOutcome {
             net: name.into(),
+            base: "base_paper_virtex7".into(),
+            axes: crate::dse::SweepAxes::new().nce_freqs_mhz(vec![125, 250]),
             feasible: frontier.len() + 1,
             evaluated: frontier.len() + 4,
             infeasible: 1,
@@ -243,7 +264,8 @@ mod tests {
     fn text_report_names_everything() {
         let r = result();
         let text = CampaignReport::new(&r).render_text();
-        assert!(text.contains("2 workloads x 6 design points"));
+        assert!(text.contains("2 workloads, 6 grid units"));
+        assert!(text.contains("base base_paper_virtex7; axes nce_freq_mhz[2]"), "{text}");
         assert!(text.contains("== lenet"));
         assert!(text.contains("== vgg"));
         assert!(text.contains("designs on every frontier: a"));
@@ -266,6 +288,10 @@ mod tests {
         assert_eq!(j.get("errors").as_u64(), Some(2));
         assert_eq!(j.get("nets").as_array().unwrap().len(), 2);
         let n0 = j.get("nets").at(0);
+        assert_eq!(n0.get("base").as_str(), Some("base_paper_virtex7"));
+        // The per-net axis provenance is a machine-readable axis spec.
+        let axes = crate::dse::SweepAxes::from_value(n0.get("axes")).unwrap();
+        assert_eq!(axes, crate::dse::SweepAxes::new().nce_freqs_mhz(vec![125, 250]));
         assert_eq!(n0.get("skipped_by_bound").as_u64(), Some(1));
         assert_eq!(n0.get("infeasible").as_u64(), Some(1));
         assert_eq!(n0.get("errors").as_u64(), Some(1));

@@ -127,3 +127,94 @@ fn topdown_answers() {
     let text = run_ok(&["topdown", "--net", "lenet", "--target-ms", "1"]);
     assert!(text.contains("minimum NCE frequency") || text.contains("not reachable"));
 }
+
+#[test]
+fn topdown_solves_any_scalar_axis() {
+    let text = run_ok(&[
+        "topdown", "--net", "lenet", "--target-ms", "1",
+        "--axis", "bus_bytes_per_cycle", "--lo", "4", "--hi", "64",
+    ]);
+    assert!(
+        text.contains("minimum bus width") || text.contains("not reachable"),
+        "{text}"
+    );
+    // An unknown axis is a loud error listing the known ones.
+    let out = avsm()
+        .args(["topdown", "--net", "lenet", "--target-ms", "1", "--axis", "warp"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("known axes"));
+}
+
+#[test]
+fn sweep_accepts_json_axis_specs() {
+    let text = run_ok(&[
+        "sweep",
+        "--net",
+        "lenet",
+        "--axes",
+        r#"[{"axis":"nce_freq_mhz","values":[125,250]},
+            {"axis":"weight_buffer_kib","values":[128,256]}]"#,
+    ]);
+    // 2x2 grid; the non-canonical weight axis shows up in point names.
+    assert!(text.contains("wbuf128"), "{text}");
+    assert!(text.contains("wbuf256"), "{text}");
+    assert!(text.contains("pareto frontier"), "{text}");
+
+    // A spec containing an invalid point (0 MHz) must fail the command
+    // with a diagnostic — never silently shrink the table.
+    let out = avsm()
+        .args([
+            "sweep",
+            "--net",
+            "lenet",
+            "--axes",
+            r#"[{"axis":"nce_freq_mhz","values":[250,0]}]"#,
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "broken axis spec must exit non-zero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("failed evaluation"), "{err}");
+}
+
+#[test]
+fn campaign_runs_heterogeneous_workloads_file_and_fail_fast_gates() {
+    let dir = std::env::temp_dir().join(format!("avsm_cli_hetero_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let wl = dir.join("workloads.json");
+    std::fs::write(
+        &wl,
+        r#"[
+          {"net": "lenet",
+           "axes": [{"axis": "nce_freq_mhz", "values": [125, 250]}]},
+          {"net": "dilated_vgg_tiny",
+           "axes": [{"axis": "array_geometry", "values": [[16, 32], [32, 64]]}]}
+        ]"#,
+    )
+    .unwrap();
+    let text = run_ok(&[
+        "campaign", "--workloads", wl.to_str().unwrap(), "--fail-fast",
+    ]);
+    assert!(text.contains("2 workloads, 4 grid units"), "{text}");
+    assert!(text.contains("axes nce_freq_mhz[2]"), "{text}");
+    assert!(text.contains("axes array_geometry[2]"), "{text}");
+
+    // A broken axis spec (0 MHz point) under --fail-fast aborts loudly.
+    std::fs::write(
+        &wl,
+        r#"[{"net": "lenet", "axes": [{"axis": "nce_freq_mhz", "values": [250, 0]}]}]"#,
+    )
+    .unwrap();
+    let out = avsm()
+        .args(["campaign", "--workloads", wl.to_str().unwrap(), "--fail-fast"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "fail-fast campaign must exit non-zero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fail_fast"), "{err}");
+    assert!(err.contains("invalid configuration"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -2,7 +2,7 @@
 //! multiple system design points — compile -> task graph -> both simulators
 //! -> reports, plus the shipped system description files.
 
-use avsm::campaign::{self, CampaignOptions, CampaignSpec};
+use avsm::campaign::{self, CampaignOptions, CampaignSpec, WorkloadSpec};
 use avsm::compiler::{compile, CompileOptions};
 use avsm::config::SystemConfig;
 use avsm::coordinator::{run_flow, FlowOptions};
@@ -174,19 +174,17 @@ fn campaign_matches_per_net_sweeps_and_warm_cache_compiles_nothing() {
     // The campaign acceptance contract: >= 3 nets x a >= 9-point grid,
     // per-net frontiers byte-identical to per-net sweep + pareto, and a
     // second run against the warm disk cache performing zero compilations.
-    let spec = CampaignSpec {
-        nets: vec![
+    let spec = CampaignSpec::homogeneous(
+        vec![
             models::lenet(28),
             models::dilated_vgg_tiny(),
             models::tiny_resnet(32, 16, 2),
         ],
-        base: SystemConfig::base_paper(),
-        axes: dse::SweepAxes {
-            array_geometries: vec![(16, 32), (32, 64), (64, 64)],
-            nce_freqs_mhz: vec![125, 250, 500],
-            ..Default::default()
-        },
-    };
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500]),
+    );
     let dir = std::env::temp_dir().join(format!("avsm_campaign_it_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let opts = CampaignOptions {
@@ -196,8 +194,10 @@ fn campaign_matches_per_net_sweeps_and_warm_cache_compiles_nothing() {
     };
 
     let assert_identical = |result: &campaign::CampaignResult, tag: &str| {
-        assert_eq!(result.grid_points, 9, "{tag}");
-        for (ni, net) in spec.nets.iter().enumerate() {
+        assert_eq!(result.grid_points, 27, "{tag}: 3 nets x 9 grid points");
+        for (ni, w) in spec.workloads.iter().enumerate() {
+            let net = &w.net;
+            assert_eq!(result.nets[ni].evaluated, 9, "{tag}");
             let sweep = dse::sweep(net, &spec.base, &spec.axes);
             let batch = dse::pareto(&sweep);
             let got = &result.nets[ni];
@@ -264,15 +264,13 @@ fn warm_campaign_skips_tiling_of_persisted_infeasible_keys() {
     base.nce.ifm_buffer_kib = 1;
     base.nce.weight_buffer_kib = 1;
     base.nce.ofm_buffer_kib = 1;
-    let spec = CampaignSpec {
-        nets: vec![models::dilated_vgg(512, 4, 16)],
+    let spec = CampaignSpec::homogeneous(
+        vec![models::dilated_vgg(512, 4, 16)],
         base,
-        axes: dse::SweepAxes {
-            array_geometries: vec![(16, 32), (32, 64)],
-            nce_freqs_mhz: vec![125, 250],
-            ..Default::default()
-        },
-    };
+        dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![125, 250]),
+    );
     let dir = std::env::temp_dir().join(format!("avsm_neg_it_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let opts = CampaignOptions { cache_dir: Some(dir.clone()), ..Default::default() };
@@ -293,6 +291,81 @@ fn warm_campaign_skips_tiling_of_persisted_infeasible_keys() {
     assert_eq!(warm.neg_hits, 2);
     assert_eq!(warm.read_errors, 0);
 
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn heterogeneous_campaign_matches_independent_per_net_sweeps() {
+    // The heterogeneous acceptance contract: two workloads with *distinct*
+    // bases and axes in one campaign must produce frontiers byte-identical
+    // to running each net's own sweep + pareto independently — while the
+    // campaign still shares one persistent cache directory, and a warm
+    // rerun compiles nothing.
+    let mut small = SystemConfig::base_paper();
+    small.name = "small_buffers".into();
+    small.nce.ifm_buffer_kib = 512;
+    small.nce.weight_buffer_kib = 128;
+    let spec = CampaignSpec {
+        workloads: vec![
+            WorkloadSpec::new(models::lenet(28)).with_axes(
+                dse::SweepAxes::new()
+                    .array_geometries(vec![(16, 32), (32, 64)])
+                    .nce_freqs_mhz(vec![125, 500]),
+            ),
+            WorkloadSpec::new(models::dilated_vgg_tiny())
+                .with_base(small.clone())
+                .with_axes(
+                    dse::SweepAxes::new()
+                        .nce_freqs_mhz(vec![250, 500])
+                        .ifm_buffer_kib(vec![256, 512]),
+                ),
+        ],
+        base: SystemConfig::base_paper(),
+        axes: dse::SweepAxes::new().nce_freqs_mhz(vec![125]),
+    };
+    let dir = std::env::temp_dir().join(format!("avsm_hetero_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = CampaignOptions { cache_dir: Some(dir.clone()), ..Default::default() };
+
+    let cold = campaign::run(&spec, &opts).unwrap();
+    assert_eq!(cold.grid_points, 4 + 4);
+    for (ni, w) in spec.workloads.iter().enumerate() {
+        let sweep = dse::sweep(&w.net, spec.base_of(ni), spec.axes_of(ni));
+        let batch = dse::pareto(&sweep);
+        let got = &cold.nets[ni];
+        assert_eq!(got.evaluated, 4, "{}", w.net.name);
+        assert_eq!(got.base, spec.base_of(ni).name, "{}", w.net.name);
+        assert_eq!(got.axes, *spec.axes_of(ni), "{}", w.net.name);
+        assert_eq!(got.frontier.len(), batch.len(), "{}", w.net.name);
+        for (a, b) in got.frontier.iter().zip(&batch) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.latency_ps, b.latency_ps, "{}", a.name);
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.sys, b.sys);
+        }
+        assert_eq!(
+            got.evaluated,
+            got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+            "{}",
+            w.net.name
+        );
+    }
+    // Distinct structural keys: lenet has 2 geometries (freq axis shares),
+    // dilated_vgg_tiny has 2 IFM sizes on the small-buffer base.
+    assert_eq!(cold.compiles, 4, "2 + 2 structural keys");
+
+    // Warm rerun against the shared directory: compile-free, identical
+    // frontiers.
+    let warm = campaign::run(&spec, &opts).unwrap();
+    assert_eq!(warm.compiles, 0, "warm heterogeneous campaign must be compile-free");
+    assert_eq!(warm.disk_hits, 4);
+    for (c, w) in cold.nets.iter().zip(&warm.nets) {
+        assert_eq!(c.frontier.len(), w.frontier.len());
+        for (a, b) in c.frontier.iter().zip(&w.frontier) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.latency_ps, b.latency_ps);
+        }
+    }
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -353,6 +353,106 @@ fn streaming_frontier_equals_batch_pareto_on_random_point_sets() {
     }
 }
 
+/// The historical `topdown_min_nce_freq` implementation, preserved
+/// verbatim as the oracle: hand-rolled over the NCE-frequency field, one
+/// shared compile cache, probe `hi`, probe `lo`, bisect.
+fn topdown_oracle(
+    net: &DnnGraph,
+    base: &SystemConfig,
+    target_latency_ps: u64,
+    freq_range_mhz: (u64, u64),
+) -> anyhow::Result<Option<u64>> {
+    let (mut lo, mut hi) = freq_range_mhz;
+    if lo == 0 || lo > hi {
+        anyhow::bail!("topdown frequency range must satisfy 0 < lo <= hi");
+    }
+    let cache = avsm::compiler::CompileCache::new(dse::DSE_COMPILE_OPTS);
+    let latency_at = |mhz: u64| -> anyhow::Result<u64> {
+        let mut sys = base.clone();
+        sys.nce.freq_mhz = mhz;
+        Ok(dse::evaluate_cached(net, &sys, "probe", &cache)?.latency_ps)
+    };
+    if latency_at(hi)? > target_latency_ps {
+        return Ok(None);
+    }
+    if latency_at(lo)? <= target_latency_ps {
+        return Ok(Some(lo));
+    }
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if latency_at(mid)? <= target_latency_ps {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Ok(Some(hi))
+}
+
+#[test]
+fn solve_requirement_reproduces_historical_topdown_exactly() {
+    // The generic solver on the NCE-frequency axis must be byte-identical
+    // to the old hand-rolled binary search across random nets, configs,
+    // targets and ranges — answers, unreachability, and the rejection of
+    // degenerate ranges alike — while compiling exactly once (the axis is
+    // retime-only).
+    let mut rng = Rng::new(0x70BD0);
+    let mut compared = 0;
+    for case in 0..12 {
+        let net = random_net(&mut rng);
+        let base = random_sys(&mut rng);
+        let Ok(baseline) =
+            dse::evaluate(&net, &base, "b").map(|p| p.latency_ps)
+        else {
+            continue; // infeasible tiling for this random pair: fine
+        };
+        let targets = [1, baseline, baseline + baseline / 2];
+        let ranges = [
+            (rng.range(1, 400), rng.range(401, 2000)),
+            (rng.range(50, 250), rng.range(250, 600)),
+            (250, 250),            // degenerate single-point range
+            (0, 1000),             // rejected: zero lo
+            (rng.range(500, 900), rng.range(1, 400)), // rejected: inverted
+        ];
+        for &target in &targets {
+            for &range in &ranges {
+                let oracle = topdown_oracle(&net, &base, target, range);
+                let solver =
+                    dse::solve_requirement(&net, &base, dse::Axis::NceFreqMhz, target, range);
+                match (&oracle, &solver) {
+                    (Err(_), Err(_)) => {} // both reject the degenerate range
+                    (Ok(expect), Ok(sol)) => {
+                        assert_eq!(
+                            sol.value, *expect,
+                            "case {case} {} target {target} range {range:?}",
+                            net.name
+                        );
+                        assert_eq!(
+                            sol.compiles, 1,
+                            "case {case}: NCE frequency is retime-only"
+                        );
+                        compared += 1;
+                    }
+                    (o, s) => panic!(
+                        "case {case} {} target {target} range {range:?}: \
+                         oracle {o:?} vs solver {s:?} disagree on rejection",
+                        net.name
+                    ),
+                }
+            }
+        }
+        // The public wrapper is the same code path: spot-check it once per
+        // case against the oracle.
+        let range = (50, 1000);
+        assert_eq!(
+            dse::topdown_min_nce_freq(&net, &base, baseline, range).unwrap(),
+            topdown_oracle(&net, &base, baseline, range).unwrap(),
+            "case {case} wrapper"
+        );
+    }
+    assert!(compared >= 40, "too few comparable random cases ({compared})");
+}
+
 #[test]
 fn json_roundtrips_for_random_graphs() {
     let mut rng = Rng::new(0xFACADE);

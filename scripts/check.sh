@@ -22,8 +22,33 @@ AVSM_BENCH_FAST=1 cargo bench --bench dse_sweep
 # The campaign bench also smokes the bound-and-prune path: it runs the
 # frontier-sparse grid pruned and unpruned, asserts the frontiers are
 # byte-identical (lossless pruning) and that the bound actually skipped
-# simulations, and reports points/sec for both regimes.
-echo "== campaign bench (smoke mode, incl. pruned vs unpruned)"
+# simulations, and reports points/sec for both regimes — plus the skip
+# rate with and without bound-guided unit ordering.
+echo "== campaign bench (smoke mode, incl. pruned vs unpruned + ordering)"
 AVSM_BENCH_FAST=1 cargo bench --bench campaign
+
+# CLI smoke: the paper's §2 top-down mode through the generic requirement
+# solver — once on the default retime-only NCE-frequency axis, once on a
+# structural axis via --axis.
+echo "== avsm topdown (generic requirement solver)"
+cargo run --release -q -p avsm -- topdown --net lenet --target-ms 1
+cargo run --release -q -p avsm -- topdown --net lenet --target-ms 1 \
+  --axis bus_bytes_per_cycle --lo 4 --hi 64
+
+# CLI smoke: a heterogeneous campaign — per-net axis specs from a
+# workloads file, fail-fast error policy on.
+echo "== avsm campaign (heterogeneous workloads + fail-fast)"
+WORKLOADS=$(mktemp /tmp/avsm_workloads.XXXXXX.json)
+cat > "$WORKLOADS" <<'EOF'
+[
+  {"net": "lenet",
+   "axes": [{"axis": "nce_freq_mhz", "values": [125, 250, 500]}]},
+  {"net": "dilated_vgg_tiny",
+   "axes": [{"axis": "array_geometry", "values": [[16, 32], [32, 64]]},
+            {"axis": "nce_freq_mhz", "values": [250, 500]}]}
+]
+EOF
+cargo run --release -q -p avsm -- campaign --workloads "$WORKLOADS" --fail-fast
+rm -f "$WORKLOADS"
 
 echo "== OK"
