@@ -3,12 +3,15 @@
 //! cache (deserialize only — zero compilations), and lower-bound pruning
 //! vs full evaluation on a frontier-sparse frequency grid (most points are
 //! provably dominated, so the bound skips their simulations outright —
-//! losslessly, which the bench asserts). Emits the machine-readable
-//! `BENCH_campaign.json` snapshot at the repo root with points/sec for
-//! every regime.
+//! losslessly, which the bench asserts), plus the occupancy-vs-critical-path
+//! bound comparison on an adversarial deep-chain net (the critical-path
+//! bound must skip strictly more, with identical frontiers). Emits the
+//! machine-readable `BENCH_campaign.json` snapshot at the repo root with
+//! points/sec and skip rates for every regime.
 
 use avsm::benchkit::Bench;
 use avsm::campaign::{self, CampaignOptions, CampaignSpec};
+use avsm::compiler::BoundKind;
 use avsm::config::SystemConfig;
 use avsm::dse;
 use avsm::graph::models;
@@ -49,6 +52,20 @@ fn ascending_spec() -> CampaignSpec {
         vec![models::lenet(28), models::dilated_vgg_tiny()],
         SystemConfig::base_paper(),
         dse::SweepAxes::new().nce_freqs_mhz(vec![50, 64, 80, 100, 125, 250, 500, 1000]),
+    )
+}
+
+/// The adversarial *shape* for the occupancy bound: a deep, low-parallelism
+/// chain whose makespan is its dependency chain, not either resource total.
+/// The occupancy bound (max of two totals, both far below the makespan)
+/// admits most dominated frequency points; the critical-path bound refuses
+/// them — the tentpole comparison `--bound occupancy` vs `--bound max`
+/// exists to measure.
+fn deep_chain_spec() -> CampaignSpec {
+    CampaignSpec::homogeneous(
+        vec![avsm::testkit::deep_chain("deep_chain", 12, 16, 8)],
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new().nce_freqs_mhz(vec![1000, 800, 600, 500, 400, 300, 250, 200]),
     )
 }
 
@@ -154,6 +171,58 @@ fn main() {
         "skip_rate_unordered",
         100.0 * unordered.skipped_by_bound as f64 / asc_units,
         "% of units",
+    );
+
+    // Occupancy vs critical-path(max) bound on the deep-chain net: the
+    // chain's makespan is its dependency chain, so the occupancy bound
+    // admits dominated points the critical-path bound skips. Single worker
+    // for deterministic skip sets; the bench asserts the tentpole
+    // acceptance property (strictly more skips, identical frontiers).
+    let chain = deep_chain_spec();
+    let chain_units = dse::expand_configs(&chain.base, &chain.axes).len() as f64;
+    let occ_opts =
+        CampaignOptions { threads: 1, bound: BoundKind::Occupancy, ..Default::default() };
+    let max_opts = CampaignOptions { threads: 1, bound: BoundKind::Max, ..Default::default() };
+    let med_chain_occ = bench
+        .case("campaign_deepchain_occupancy_bound", || {
+            campaign::run(&chain, &occ_opts).unwrap()
+        })
+        .median;
+    let med_chain_max = bench
+        .case("campaign_deepchain_max_bound", || campaign::run(&chain, &max_opts).unwrap())
+        .median;
+    let chain_occ = campaign::run(&chain, &occ_opts).unwrap();
+    let chain_max = campaign::run(&chain, &max_opts).unwrap();
+    assert!(
+        chain_max.skipped_by_bound > chain_occ.skipped_by_bound,
+        "critical-path bound must skip strictly more deep-chain points \
+         (occupancy {} vs max {})",
+        chain_occ.skipped_by_bound,
+        chain_max.skipped_by_bound
+    );
+    assert!(chain_max.nets[0].skipped_by_critical_path > 0);
+    for (a, b) in chain_occ.nets.iter().zip(&chain_max.nets) {
+        assert_eq!(a.frontier.len(), b.frontier.len(), "{}: bound changed the frontier", a.net);
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.latency_ps, y.latency_ps);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+        }
+    }
+    bench.metric(
+        "deepchain_skip_rate_occupancy",
+        100.0 * chain_occ.skipped_by_bound as f64 / chain_units,
+        "% of units",
+    );
+    bench.metric(
+        "deepchain_skip_rate_max",
+        100.0 * chain_max.skipped_by_bound as f64 / chain_units,
+        "% of units",
+    );
+    bench.metric(
+        "deepchain_bound_speedup",
+        med_chain_occ.as_secs_f64() / med_chain_max.as_secs_f64(),
+        "x",
     );
 
     let pps_cold = units / med_cold.as_secs_f64();

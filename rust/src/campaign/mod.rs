@@ -40,12 +40,18 @@
 //! # Bound-and-prune
 //!
 //! Before simulating a compiled unit, the worker takes the point's
-//! **admissible latency lower bound**
-//! ([`crate::compiler::latency_lower_bound`]: max of NCE and bus occupancy
-//! at the candidate's actual clocks, one O(tasks) pass over the cached
-//! graph, no simulation) and asks that net's frontier
-//! [`StreamingFrontier::admits`] whether a point at `(bound, cost)` could
-//! still join. A refusal means an existing member *strictly dominates*
+//! **admissible latency lower bound** — by default
+//! [`crate::compiler::latency_lower_bound`], the max of the exclusive-
+//! resource *occupancy* bound and the *critical-path* (longest dependency
+//! chain) bound at the candidate's actual clocks, both O(task graph), no
+//! simulation; [`CampaignOptions::bound`] (CLI `--bound`) restricts the
+//! run to either component for A/B comparisons — and asks that net's
+//! frontier [`StreamingFrontier::admits`] whether a point at
+//! `(bound, cost)` could still join. Each skip is attributed in
+//! [`NetOutcome`]: would the occupancy bound alone have refused it
+//! ([`NetOutcome::skipped_by_occupancy`]), or did it need the
+//! critical-path half ([`NetOutcome::skipped_by_critical_path`] — the
+//! deep-chain, latency-dominated regions occupancy admits)? A refusal means an existing member *strictly dominates*
 //! every latency the candidate could realize, and strict dominance
 //! survives later evictions — so skipping the simulation is **lossless**:
 //! pruned frontiers are byte-identical to unpruned ones (property-tested),
@@ -97,6 +103,7 @@ pub mod store;
 pub use frontier::StreamingFrontier;
 pub use store::PersistentCache;
 
+use crate::compiler::BoundKind;
 use crate::config::SystemConfig;
 use crate::dse::{self, DesignPoint, SweepAxes};
 use crate::graph::DnnGraph;
@@ -191,6 +198,11 @@ pub struct CampaignOptions {
     /// the frontier. Lossless — frontiers are byte-identical either way;
     /// `false` (CLI `--no-prune`) forces every point to simulate.
     pub prune: bool,
+    /// Which admissible lower bound gates the pruning (CLI `--bound`).
+    /// Default [`BoundKind::Max`] — the tightest of the family; the
+    /// occupancy / critical-path restrictions exist as A/B escape hatches
+    /// (every kind is lossless, they differ only in skip rate).
+    pub bound: BoundKind,
     /// Simulate each net's compiled units in ascending lower-bound order
     /// (on by default): likely dominators enter the frontier first, which
     /// maximizes [`NetOutcome::skipped_by_bound`] under pruning. Purely a
@@ -213,6 +225,7 @@ impl Default for CampaignOptions {
             cache_max_entries: None,
             keep_points: false,
             prune: true,
+            bound: BoundKind::Max,
             order_by_bound: true,
             fail_fast: false,
         }
@@ -246,9 +259,21 @@ pub struct NetOutcome {
     pub errors: usize,
     /// First error diagnostic, for the report.
     pub error_sample: Option<String>,
+    /// The bound kind this net was pruned with ([`CampaignOptions::bound`]
+    /// — identical across nets of one run; carried per net so a serialized
+    /// outcome stays self-describing).
+    pub bound: BoundKind,
     /// Grid points whose latency lower bound proved they could not join
     /// the frontier — compiled (or cache-resolved) but never simulated.
+    /// Always `skipped_by_occupancy + skipped_by_critical_path`.
     pub skipped_by_bound: usize,
+    /// Skips the occupancy bound alone would have produced: at skip time
+    /// the frontier already refused the candidate at its occupancy bound.
+    pub skipped_by_occupancy: usize,
+    /// Skips that *needed* the critical-path bound: the occupancy bound
+    /// was still admissible when the tighter bound refused the candidate.
+    /// Zero when running with [`BoundKind::Occupancy`].
+    pub skipped_by_critical_path: usize,
     /// Feasible points dominated on arrival at the frontier.
     pub dominated: usize,
     /// Former frontier members evicted by later points.
@@ -285,6 +310,8 @@ pub struct CampaignResult {
     pub mem_hits: u64,
     pub rejected_entries: u64,
     pub read_errors: u64,
+    /// The bound kind the run pruned with ([`CampaignOptions::bound`]).
+    pub bound: BoundKind,
     /// Units skipped by lower-bound pruning across all nets.
     pub skipped_by_bound: usize,
     /// Non-structural evaluation failures across all nets.
@@ -308,7 +335,12 @@ impl CampaignResult {
 enum Resolved {
     Compiled {
         compiled: std::sync::Arc<crate::compiler::CompiledNet>,
+        /// The configured-kind bound the pruning gate queries.
         bound: u64,
+        /// The occupancy component, kept separately for skip provenance:
+        /// a skip the frontier would also refuse at `occ_bound` is an
+        /// occupancy skip; one it would admit needed the critical path.
+        occ_bound: u64,
         cost: f64,
     },
     Infeasible,
@@ -323,7 +355,9 @@ enum Resolved {
 /// Classified phase-2 result of one compiled unit.
 enum UnitOutcome {
     Feasible(DesignPoint),
-    SkippedByBound,
+    /// Skipped; `by_occupancy` records whether the occupancy bound alone
+    /// would have refused the candidate at that moment.
+    SkippedByBound { by_occupancy: bool },
 }
 
 /// Run a campaign: every workload x its grid in one two-phase fan-out
@@ -392,15 +426,26 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             caches[ni].get_or_compile(net, sys)
         }) {
             Ok(compiled) => {
-                let (bound, cost) = if prune {
-                    (
-                        crate::compiler::latency_lower_bound(&compiled, sys),
-                        dse::cost_proxy(sys),
-                    )
+                // The occupancy component is computed even when the run
+                // prunes on another kind — it is what attributes each
+                // skip to "occupancy would have sufficed" vs "needed the
+                // critical path" in the report.
+                let (bound, occ_bound, cost) = if prune {
+                    let occ = crate::compiler::occupancy_lower_bound(&compiled, sys);
+                    let bound = match opts.bound {
+                        BoundKind::Occupancy => occ,
+                        BoundKind::CriticalPath => {
+                            crate::compiler::critical_path_lower_bound(&compiled, sys)
+                        }
+                        BoundKind::Max => {
+                            occ.max(crate::compiler::critical_path_lower_bound(&compiled, sys))
+                        }
+                    };
+                    (bound, occ, dse::cost_proxy(sys))
                 } else {
-                    (0, 0.0)
+                    (0, 0, 0.0)
                 };
-                Resolved::Compiled { compiled, bound, cost }
+                Resolved::Compiled { compiled, bound, occ_bound, cost }
             }
             Err(dse::EvalOutcome::Error { name, reason }) => {
                 if opts.fail_fast {
@@ -473,7 +518,8 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         .map(|ni| if opts.keep_points { vec![None; grids[ni].len()] } else { Vec::new() })
         .collect();
     let mut feasible = vec![0usize; n_nets];
-    let mut skipped = vec![0usize; n_nets];
+    let mut skipped_occ = vec![0usize; n_nets];
+    let mut skipped_cp = vec![0usize; n_nets];
 
     // Phase 2 — simulate the admitted units, streaming arrivals into the
     // per-net frontiers on the coordinating thread.
@@ -484,11 +530,19 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             let u = eval_units[j];
             let (ni, ci) = locate(u);
             let sys = &grids[ni][ci];
-            let Resolved::Compiled { compiled, bound, cost } = &resolved[u] else {
+            let Resolved::Compiled { compiled, bound, occ_bound, cost } = &resolved[u] else {
                 unreachable!("eval schedule only lists compiled units");
             };
-            if prune && !frontiers[ni].lock().unwrap().admits(*bound, *cost) {
-                return UnitOutcome::SkippedByBound;
+            if prune {
+                let frontier = frontiers[ni].lock().unwrap();
+                if !frontier.admits(*bound, *cost) {
+                    // Provenance, under the same lock (same frontier
+                    // state): would the occupancy bound alone have
+                    // refused this candidate too?
+                    return UnitOutcome::SkippedByBound {
+                        by_occupancy: !frontier.admits(*occ_bound, *cost),
+                    };
+                }
             }
             UnitOutcome::Feasible(dse::evaluate_compiled(compiled, sys, sys.name.clone()))
         },
@@ -502,7 +556,8 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
                     }
                     frontiers[ni].lock().unwrap().insert_with_seq(p, ci);
                 }
-                UnitOutcome::SkippedByBound => skipped[ni] += 1,
+                UnitOutcome::SkippedByBound { by_occupancy: true } => skipped_occ[ni] += 1,
+                UnitOutcome::SkippedByBound { by_occupancy: false } => skipped_cp[ni] += 1,
             }
         },
     );
@@ -530,7 +585,10 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             infeasible: infeasible[ni],
             errors: errors[ni],
             error_sample: error_sample[ni].take(),
-            skipped_by_bound: skipped[ni],
+            bound: opts.bound,
+            skipped_by_bound: skipped_occ[ni] + skipped_cp[ni],
+            skipped_by_occupancy: skipped_occ[ni],
+            skipped_by_critical_path: skipped_cp[ni],
             dominated,
             pruned,
             compiles: cache.compiles(),
@@ -543,6 +601,7 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             frontier: frontier.into_points(),
         });
     }
+    let skipped_total = nets.iter().map(|n| n.skipped_by_bound).sum();
     Ok(CampaignResult {
         nets,
         grid_points: jobs,
@@ -553,7 +612,8 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         mem_hits,
         rejected_entries: rejected,
         read_errors,
-        skipped_by_bound: skipped.iter().sum(),
+        bound: opts.bound,
+        skipped_by_bound: skipped_total,
         errors: errors.iter().sum(),
     })
 }
@@ -689,6 +749,101 @@ mod tests {
             seq.skipped_by_bound > 0,
             "expected lower-bound pruning on a frequency-sparse grid"
         );
+    }
+
+    #[test]
+    fn every_bound_kind_is_lossless_and_skip_split_adds_up() {
+        // The A/B escape hatch: every BoundKind must produce frontiers
+        // byte-identical to the unpruned batch sweep; only the skip
+        // accounting may differ, and its occupancy/critical-path split
+        // must always sum to the total.
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28), models::dilated_vgg_tiny()],
+            SystemConfig::base_paper(),
+            SweepAxes::new()
+                .array_geometries(vec![(16, 32), (32, 64)])
+                .nce_freqs_mhz(vec![500, 250, 125, 50]),
+        );
+        for kind in BoundKind::ALL {
+            for threads in [1usize, 0] {
+                let result = run(
+                    &spec,
+                    &CampaignOptions { threads, bound: kind, ..Default::default() },
+                )
+                .unwrap();
+                assert_eq!(result.bound, kind);
+                for (ni, w) in spec.workloads.iter().enumerate() {
+                    let batch = dse::pareto(&dse::sweep(&w.net, &spec.base, &spec.axes));
+                    let got = &result.nets[ni];
+                    assert_eq!(got.bound, kind);
+                    assert_eq!(
+                        got.skipped_by_bound,
+                        got.skipped_by_occupancy + got.skipped_by_critical_path,
+                        "{kind}/{threads}t: skip split must cover every skip"
+                    );
+                    if kind == BoundKind::Occupancy {
+                        assert_eq!(
+                            got.skipped_by_critical_path, 0,
+                            "occupancy-only runs cannot attribute skips to the critical path"
+                        );
+                    }
+                    assert_eq!(got.frontier.len(), batch.len(), "{kind}/{threads}t");
+                    for (a, b) in got.frontier.iter().zip(&batch) {
+                        assert_eq!(a.name, b.name, "{kind}/{threads}t");
+                        assert_eq!(a.latency_ps, b.latency_ps, "{kind}/{threads}t");
+                        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{kind}/{threads}t");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn critical_path_bound_skips_deep_chain_points_occupancy_admits() {
+        // The tentpole's acceptance shape: on a deep, low-parallelism
+        // chain swept along a dense frequency axis, the occupancy bound
+        // (max of two resource totals, both far below the chain's
+        // makespan) admits points the critical-path bound proves
+        // dominated. Single worker + bound ordering makes the skip sets
+        // deterministic.
+        let spec = CampaignSpec::homogeneous(
+            vec![crate::testkit::deep_chain("deep_chain", 12, 16, 8)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().nce_freqs_mhz(vec![1000, 800, 600, 500, 400, 300, 250, 200]),
+        );
+        let run_with = |kind: BoundKind| {
+            run(
+                &spec,
+                &CampaignOptions { threads: 1, bound: kind, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let occ = run_with(BoundKind::Occupancy);
+        let max = run_with(BoundKind::Max);
+        assert!(
+            max.skipped_by_bound > occ.skipped_by_bound,
+            "critical path must skip strictly more on the deep chain: occ {} vs max {}",
+            occ.skipped_by_bound,
+            max.skipped_by_bound
+        );
+        assert!(
+            max.nets[0].skipped_by_critical_path > 0,
+            "some skips must be attributed to the critical-path bound"
+        );
+        // Lossless either way: identical frontiers, identical to batch.
+        let batch = dse::pareto(&dse::sweep(&spec.workloads[0].net, &spec.base, &spec.axes));
+        for result in [&occ, &max] {
+            let got = &result.nets[0];
+            assert_eq!(got.frontier.len(), batch.len());
+            for (a, b) in got.frontier.iter().zip(&batch) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.latency_ps, b.latency_ps);
+            }
+            assert_eq!(
+                got.evaluated,
+                got.feasible + got.infeasible + got.errors + got.skipped_by_bound
+            );
+        }
     }
 
     #[test]

@@ -268,9 +268,11 @@ fn write_atomic(dir: &Path, tag: u64, path: &Path, content: String) -> Result<()
 }
 
 /// In-memory image of the LRU index sidecar: fingerprint → logical
-/// last-used stamp, plus the clock the stamps are drawn from.
+/// last-used stamp, plus the clock the stamps are drawn from. Public so
+/// external tooling (and the golden-file schema tests) can inspect and
+/// round-trip `index.json` files; the bookkeeping fields stay private.
 #[derive(Debug, Default)]
-struct CacheIndex {
+pub struct CacheIndex {
     clock: u64,
     entries: std::collections::BTreeMap<u64, u64>,
 }
@@ -286,7 +288,8 @@ impl CacheIndex {
         CacheIndex::from_json(&text).unwrap_or_default()
     }
 
-    fn from_json(text: &str) -> Result<CacheIndex> {
+    /// Parse an `avsm-compile-cache-index-v1` document.
+    pub fn from_json(text: &str) -> Result<CacheIndex> {
         let v = json::parse(text).context("cache index parse")?;
         if v.get("schema").as_str() != Some(INDEX_SCHEMA) {
             bail!("unsupported cache index schema");
@@ -301,7 +304,8 @@ impl CacheIndex {
         Ok(CacheIndex { clock: v.req_u64("clock")?, entries })
     }
 
-    fn to_json(&self) -> String {
+    /// Serialize back to the compact on-disk form.
+    pub fn to_json(&self) -> String {
         obj(vec![
             ("schema", INDEX_SCHEMA.into()),
             ("clock", self.clock.into()),
@@ -318,8 +322,18 @@ impl CacheIndex {
         .to_string_compact()
     }
 
+    /// Fingerprint → last-used stamp, in fingerprint order.
+    pub fn entries(&self) -> &std::collections::BTreeMap<u64, u64> {
+        &self.entries
+    }
+
+    /// The logical clock the stamps are drawn from.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
     /// Mark `fp` as just used.
-    fn touch(&mut self, fp: u64) {
+    pub fn touch(&mut self, fp: u64) {
         self.clock += 1;
         self.entries.insert(fp, self.clock);
     }

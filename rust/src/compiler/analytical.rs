@@ -9,6 +9,55 @@
 //! no arbitration, no latency, no dependency stalls, no setup overheads.
 //! The comparison bench (`dse_sweep`/EXPERIMENTS.md) shows where this
 //! under-predicts: latency-dominated and blocking-prone layers.
+//!
+//! # Admissible lower bounds on the AVSM-simulated latency
+//!
+//! Besides the estimators, this module is home to the campaign engine's
+//! **bound-and-prune primitives**: cheap O(task-graph) lower bounds on the
+//! latency `hw::simulate_avsm` would report for a compiled net under a
+//! given (validated) config. Two bounds exist, each admissible on its own:
+//!
+//! * [`occupancy_lower_bound`] — the makespan can never be below the total
+//!   occupancy of either **exclusive resource**: the single NCE serializes
+//!   all compute tasks (charged exactly [`AvsmTiming::compute_ps`] each)
+//!   and the single shared bus serializes all DMA data phases (charged
+//!   exactly [`AvsmTiming::dma_bus_ps`] per chunk, with the executor's
+//!   deterministic `max_transaction_bytes` chunking). Hence
+//!   `max(Σ compute_ps, Σ_chunks dma_bus_ps) <= makespan`. Tight on
+//!   throughput-saturated (wide, resource-bound) graphs; loose on deep
+//!   chains that leave both resources mostly idle.
+//!
+//! * [`critical_path_lower_bound`] — the makespan can never be below the
+//!   longest **dependency chain**: along any path of the task graph each
+//!   task finishes no earlier than its latest dependency *plus its own
+//!   minimum sequential time*, whatever the resource schedule. Per task
+//!   that minimum replicates the executor arithmetic-exactly: a compute
+//!   task costs one HKP dispatch ([`TimingModel::dispatch_ps`]) plus
+//!   [`AvsmTiming::compute_ps`]; a DMA task costs one dispatch, its
+//!   channel-held pre-phase ([`AvsmTiming::dma_pre_ps`]) and the sum of
+//!   its per-chunk bus data phases (same `max_transaction_bytes`
+//!   chunking; chunks of one task never overlap each other); a barrier is
+//!   free (the executor issues released barriers with zero dispatch).
+//!   Queueing, arbitration and bus contention only ever *add* time, so
+//!   the topological longest path under these durations
+//!   ([`TaskGraph::critical_path`]) is `<= makespan`. Tight on
+//!   latency-dominated (deep-chain, low-parallelism) regions that the
+//!   occupancy bound admits; loose on wide graphs.
+//!
+//! Since both are lower bounds of the same quantity, their maximum is too:
+//! [`latency_lower_bound`] returns `max(occupancy, critical_path)`
+//! ([`BoundKind::Max`]) — still admissible, and strictly tighter than
+//! either alone wherever they disagree. `LB <= simulate` is
+//! property-tested across hundreds of randomized nets, configs and
+//! retimes (`tests/property.rs`); admissibility is what makes campaign
+//! pruning *lossless* (a refused design point provably cannot join the
+//! Pareto frontier).
+//!
+//! [`AvsmTiming::compute_ps`]: crate::hw::AvsmTiming
+//! [`AvsmTiming::dma_bus_ps`]: crate::hw::AvsmTiming
+//! [`AvsmTiming::dma_pre_ps`]: crate::hw::AvsmTiming
+//! [`TimingModel::dispatch_ps`]: crate::hw::TimingModel::dispatch_ps
+//! [`TaskGraph::critical_path`]: crate::taskgraph::TaskGraph::critical_path
 
 use super::cost::CostModel;
 use super::lower::CompiledNet;
@@ -87,37 +136,85 @@ pub fn analytical_estimate_compiled(
     est
 }
 
-/// **Admissible lower bound** on the AVSM-simulated end-to-end latency of a
-/// compiled net under `sys`'s clock/width annotations — the bound-and-prune
-/// primitive of the campaign engine (skip simulating design points that
-/// provably cannot join the Pareto frontier).
-///
-/// Derivation: the executor serializes all compute tasks on the single NCE
-/// and all DMA data phases on the single shared bus, charging exactly
-/// `AvsmTiming::compute_ps` per compute task and `AvsmTiming::dma_bus_ps`
-/// per bus chunk (chunking at `bus.max_transaction_bytes` is deterministic
-/// and schedule-independent). The makespan therefore can never be below the
-/// total occupancy of either exclusive resource, so
+/// Which admissible latency lower bound to compute — the campaign's
+/// `--bound` A/B escape hatch. All three are provable lower bounds on the
+/// AVSM-simulated makespan (see the module docs for the two derivations);
+/// they differ only in tightness, never in soundness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BoundKind {
+    /// Exclusive-resource occupancy: `max(Σ NCE compute, Σ bus chunks)`.
+    Occupancy,
+    /// Topological longest dependency chain under per-task minimum times.
+    CriticalPath,
+    /// `max(occupancy, critical_path)` — the tightest of the family, and
+    /// the default everywhere.
+    #[default]
+    Max,
+}
+
+impl BoundKind {
+    /// Every kind, in documentation order.
+    pub const ALL: [BoundKind; 3] = [BoundKind::Occupancy, BoundKind::CriticalPath, BoundKind::Max];
+
+    /// Stable CLI/JSON identifier.
+    pub fn key(self) -> &'static str {
+        match self {
+            BoundKind::Occupancy => "occupancy",
+            BoundKind::CriticalPath => "critical-path",
+            BoundKind::Max => "max",
+        }
+    }
+
+    /// Resolve a CLI/JSON identifier, with the known set in the error.
+    pub fn from_key(key: &str) -> anyhow::Result<BoundKind> {
+        BoundKind::ALL.into_iter().find(|k| k.key() == key).ok_or_else(|| {
+            let known: Vec<&str> = BoundKind::ALL.iter().map(|k| k.key()).collect();
+            anyhow::anyhow!("unknown bound {key:?} (known bounds: {})", known.join(", "))
+        })
+    }
+}
+
+impl std::fmt::Display for BoundKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// Sum of the per-chunk bus data phases of one DMA task — the executor
+/// splits transfers at the bus max-transaction size and charges each chunk
+/// independently; chunks of one task never overlap each other.
+fn dma_data_ps(
+    timing: &mut crate::hw::AvsmTiming,
+    kind: &TaskKind,
+    max_txn: u64,
+) -> SimTime {
+    use crate::hw::TimingModel;
+    let mut remaining = kind.bytes().max(1);
+    let mut data_ps: SimTime = 0;
+    while remaining > 0 {
+        let chunk = remaining.min(max_txn);
+        data_ps += timing.dma_bus_ps(kind, chunk, 0);
+        remaining -= chunk;
+    }
+    data_ps
+}
+
+/// **Occupancy lower bound**: the makespan can never be below the total
+/// occupancy of either exclusive resource,
 ///
 /// ```text
-/// LB = max(Σ compute_ps(task), Σ_chunks dma_bus_ps(chunk))
+/// LB_occ = max(Σ compute_ps(task), Σ_chunks dma_bus_ps(chunk))
 /// ```
 ///
-/// is a *provable* lower bound: the compute roof and the bandwidth slope
-/// (including the annotated effective-memory derating) at the candidate's
-/// actual clocks, replicated arithmetic-exact from the timing model rather
-/// than re-derived — no rounding slack, no simulation. `LB ≤ simulate`
-/// holds by construction and is property-tested over randomized nets and
-/// configs.
-///
-/// Cost: one O(tasks) pass over the cached task graph — orders of magnitude
-/// cheaper than the event-driven simulation it gates. Frequency-only config
-/// changes reuse one [`CompiledNet`], so a campaign computes this per grid
-/// point without ever re-tiling.
+/// — the compute roof and the bandwidth slope (including the annotated
+/// effective-memory derating) at the candidate's actual clocks, replicated
+/// arithmetic-exact from the timing model rather than re-derived. One
+/// O(tasks) pass; no simulation. Tight when the grid point saturates a
+/// resource, loose on deep chains (see the module docs).
 ///
 /// Precondition: `sys` must be validated (clock frequencies positive), as
 /// guaranteed on every path through the compile caches.
-pub fn latency_lower_bound(compiled: &CompiledNet, sys: &SystemConfig) -> SimTime {
+pub fn occupancy_lower_bound(compiled: &CompiledNet, sys: &SystemConfig) -> SimTime {
     use crate::hw::{AvsmTiming, TimingModel};
     let mut timing = AvsmTiming::new(sys);
     let max_txn = sys.bus.max_transaction_bytes.max(1);
@@ -127,20 +224,76 @@ pub fn latency_lower_bound(compiled: &CompiledNet, sys: &SystemConfig) -> SimTim
         match task.kind {
             TaskKind::Compute { .. } => nce_ps += timing.compute_ps(&task.kind),
             TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. } => {
-                // Replicate the executor's chunking exactly: transfers are
-                // split at the bus max-transaction size and each chunk is
-                // charged independently.
-                let mut remaining = task.kind.bytes().max(1);
-                while remaining > 0 {
-                    let chunk = remaining.min(max_txn);
-                    bus_ps += timing.dma_bus_ps(&task.kind, chunk, 0);
-                    remaining -= chunk;
-                }
+                bus_ps += dma_data_ps(&mut timing, &task.kind, max_txn);
             }
             TaskKind::Barrier => {}
         }
     }
     nce_ps.max(bus_ps)
+}
+
+/// **Critical-path lower bound**: the topological longest dependency chain
+/// through the cached task graph, each task charged its *minimum
+/// sequential time* under the executor's exact arithmetic —
+///
+/// * compute: one HKP dispatch + [`compute_ps`],
+/// * DMA: one HKP dispatch + the channel pre-phase ([`dma_pre_ps`]) + the
+///   sum of its per-chunk bus data phases (executor `max_transaction`
+///   chunking; chunks of one task are strictly sequential),
+/// * barrier: 0 (released barriers are issued with zero dispatch).
+///
+/// Every term is a floor of what the executor actually spends on that task
+/// after its dependencies complete (queueing and arbitration only add), so
+/// the longest path is `<= makespan` for *any* resource schedule. Tight on
+/// latency-dominated deep chains the occupancy bound admits.
+///
+/// Cost: one O(tasks + edges) topological pass over the cached graph.
+/// Precondition: `sys` validated, as for [`occupancy_lower_bound`].
+///
+/// [`compute_ps`]: crate::hw::AvsmTiming
+/// [`dma_pre_ps`]: crate::hw::AvsmTiming
+pub fn critical_path_lower_bound(compiled: &CompiledNet, sys: &SystemConfig) -> SimTime {
+    use crate::hw::{AvsmTiming, TimingModel};
+    let mut timing = AvsmTiming::new(sys);
+    let dispatch = timing.dispatch_ps();
+    let max_txn = sys.bus.max_transaction_bytes.max(1);
+    compiled.graph.critical_path(|task| match task.kind {
+        TaskKind::Compute { .. } => dispatch + timing.compute_ps(&task.kind),
+        TaskKind::DmaLoad { .. } | TaskKind::DmaStore { .. } => {
+            dispatch
+                + timing.dma_pre_ps(&task.kind)
+                + dma_data_ps(&mut timing, &task.kind, max_txn)
+        }
+        TaskKind::Barrier => 0,
+    })
+}
+
+/// The lower bound of the requested [`BoundKind`].
+pub fn lower_bound(compiled: &CompiledNet, sys: &SystemConfig, kind: BoundKind) -> SimTime {
+    match kind {
+        BoundKind::Occupancy => occupancy_lower_bound(compiled, sys),
+        BoundKind::CriticalPath => critical_path_lower_bound(compiled, sys),
+        BoundKind::Max => {
+            occupancy_lower_bound(compiled, sys).max(critical_path_lower_bound(compiled, sys))
+        }
+    }
+}
+
+/// **Admissible lower bound** on the AVSM-simulated end-to-end latency of a
+/// compiled net under `sys`'s clock/width annotations — the bound-and-prune
+/// primitive of the campaign engine (skip simulating design points that
+/// provably cannot join the Pareto frontier).
+///
+/// Returns `max(occupancy, critical_path)` ([`BoundKind::Max`]): both
+/// components are lower bounds of the same makespan (module docs carry the
+/// two derivations), so their maximum is still admissible and strictly
+/// tighter wherever they disagree — the occupancy half rules
+/// resource-saturated regions, the critical-path half rules deep-chain,
+/// latency-dominated regions. Frequency-only config changes reuse one
+/// [`CompiledNet`], so a campaign computes this per grid point without
+/// ever re-tiling.
+pub fn latency_lower_bound(compiled: &CompiledNet, sys: &SystemConfig) -> SimTime {
+    lower_bound(compiled, sys, BoundKind::Max)
 }
 
 #[cfg(test)]
@@ -207,6 +360,8 @@ mod tests {
 
     #[test]
     fn lower_bound_is_admissible_on_builtin_nets() {
+        // Every member of the bound family must stay below the simulated
+        // makespan, on every built-in net.
         let sys = SystemConfig::base_paper();
         for net in [
             models::lenet(28),
@@ -215,17 +370,65 @@ mod tests {
             models::tiny_resnet(32, 16, 3),
         ] {
             let c = compile(&net, &sys, CompileOptions::default()).unwrap();
-            let lb = latency_lower_bound(&c, &sys);
             let mut tr = TraceRecorder::disabled();
             let sim = simulate_avsm(&c, &sys, &mut tr);
-            assert!(lb > 0, "{}", net.name);
-            assert!(
-                lb <= sim.total_ps,
-                "{}: lower bound {lb} exceeds simulated {}",
-                net.name,
-                sim.total_ps
-            );
+            for kind in BoundKind::ALL {
+                let lb = lower_bound(&c, &sys, kind);
+                assert!(lb > 0, "{} ({kind})", net.name);
+                assert!(
+                    lb <= sim.total_ps,
+                    "{} ({kind}): lower bound {lb} exceeds simulated {}",
+                    net.name,
+                    sim.total_ps
+                );
+            }
         }
+    }
+
+    #[test]
+    fn max_bound_dominates_both_components_everywhere() {
+        let sys = SystemConfig::base_paper();
+        for net in [models::lenet(28), models::dilated_vgg_tiny()] {
+            let c = compile(&net, &sys, CompileOptions::default()).unwrap();
+            let occ = occupancy_lower_bound(&c, &sys);
+            let cp = critical_path_lower_bound(&c, &sys);
+            let max = latency_lower_bound(&c, &sys);
+            assert_eq!(max, occ.max(cp), "{}", net.name);
+            assert!(max >= occ && max >= cp, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn critical_path_bound_beats_occupancy_on_a_deep_chain() {
+        // The ROADMAP case the critical-path bound exists for: a deep,
+        // low-parallelism chain leaves both exclusive resources mostly
+        // idle (occupancy is loose) while the dependency chain itself is
+        // nearly the whole makespan.
+        let net = crate::testkit::deep_chain("deep_chain", 12, 16, 8);
+        let sys = SystemConfig::base_paper();
+        let c = compile(&net, &sys, CompileOptions::default()).unwrap();
+        let occ = occupancy_lower_bound(&c, &sys);
+        let cp = critical_path_lower_bound(&c, &sys);
+        assert!(
+            cp > occ,
+            "deep chain must be latency-dominated: critical path {cp} <= occupancy {occ}"
+        );
+        let mut tr = TraceRecorder::disabled();
+        let sim = simulate_avsm(&c, &sys, &mut tr);
+        assert!(cp <= sim.total_ps, "critical path {cp} > simulated {}", sim.total_ps);
+    }
+
+    #[test]
+    fn bound_kind_keys_round_trip_and_reject_unknowns() {
+        for kind in BoundKind::ALL {
+            assert_eq!(BoundKind::from_key(kind.key()).unwrap(), kind);
+            assert_eq!(format!("{kind}"), kind.key());
+        }
+        assert_eq!(BoundKind::default(), BoundKind::Max);
+        let err = BoundKind::from_key("tightest").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("known bounds"), "{msg}");
+        assert!(msg.contains("critical-path"), "{msg}");
     }
 
     #[test]
@@ -250,17 +453,19 @@ mod tests {
     }
 
     #[test]
-    fn lower_bound_hits_bus_floor_at_high_clocks() {
-        // At absurd NCE clocks the bound is paced by the bus occupancy,
-        // which is frequency-independent — the bandwidth-slope half of
-        // max(compute roof, bandwidth slope).
+    fn occupancy_bound_hits_bus_floor_at_high_clocks() {
+        // At absurd NCE clocks the occupancy bound is paced by the bus
+        // occupancy, which is frequency-independent — the bandwidth-slope
+        // half of max(compute roof, bandwidth slope). (The critical-path
+        // component keeps a microscopic NCE term, so this floor is a
+        // property of the occupancy bound specifically.)
         let net = models::dilated_vgg_tiny();
         let base = SystemConfig::base_paper();
         let c = compile(&net, &base, CompileOptions::default()).unwrap();
         let lb_at = |mhz: u64| {
             let mut sys = base.clone();
             sys.nce.freq_mhz = mhz;
-            latency_lower_bound(&c, &sys)
+            occupancy_lower_bound(&c, &sys)
         };
         assert_eq!(lb_at(100_000), lb_at(200_000), "bus floor must dominate");
         assert!(lb_at(100_000) > 0);

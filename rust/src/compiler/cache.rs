@@ -113,6 +113,37 @@ impl CompileKey {
         ])
     }
 
+    /// Inverse of [`CompileKey::to_json`]: reconstruct a key from its JSON
+    /// rendering. Every field is required and checked-narrowed, so a
+    /// reconstructed key is exactly the one that was stored — which is
+    /// what lets external tooling (and the golden-file schema tests)
+    /// verify persisted cache entries without recompiling their nets.
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        use anyhow::Context;
+        let fp_hex = v.req_str("net_fingerprint")?;
+        let net_fingerprint = u64::from_str_radix(fp_hex, 16)
+            .with_context(|| format!("bad net_fingerprint {fp_hex:?}"))?;
+        Ok(Self {
+            net_name: v.req_str("net_name")?.to_string(),
+            net_fingerprint,
+            dtype_bytes: v.req_u32("dtype_bytes")?,
+            array_rows: v.req_u32("array_rows")?,
+            array_cols: v.req_u32("array_cols")?,
+            task_setup_cycles: v.req_u64("task_setup_cycles")?,
+            ifm_buffer_kib: v.req_u32("ifm_buffer_kib")?,
+            weight_buffer_kib: v.req_u32("weight_buffer_kib")?,
+            ofm_buffer_kib: v.req_u32("ofm_buffer_kib")?,
+            bus_bytes_per_cycle: v.req_u64("bus_bytes_per_cycle")?,
+            mem_data_bytes_per_cycle: v.req_u64("mem_data_bytes_per_cycle")?,
+            avsm_eff_bw_pct: v.req_u64("avsm_eff_bw_pct")?,
+            double_buffer: v
+                .get("double_buffer")
+                .as_bool()
+                .context("missing/invalid double_buffer")?,
+            labels: v.get("labels").as_bool().context("missing/invalid labels")?,
+        })
+    }
+
     pub fn new(net: &DnnGraph, sys: &SystemConfig, opts: CompileOptions) -> Self {
         Self {
             net_name: net.name.clone(),
@@ -304,6 +335,30 @@ mod tests {
 
     fn opts() -> CompileOptions {
         CompileOptions { double_buffer: true, labels: false }
+    }
+
+    #[test]
+    fn compile_key_json_round_trips_exactly() {
+        let key = CompileKey::new(
+            &models::lenet(28),
+            &SystemConfig::base_paper(),
+            opts(),
+        );
+        let back = CompileKey::from_json(&key.to_json()).unwrap();
+        assert_eq!(back, key);
+        assert_eq!(back.fingerprint(), key.fingerprint());
+        // A missing field is a loud rejection, not a default.
+        let mut v = key.to_json();
+        if let crate::json::Value::Object(map) = &mut v {
+            map.remove("array_rows");
+        }
+        assert!(CompileKey::from_json(&v).is_err());
+        // A corrupt fingerprint string too.
+        let mut v = key.to_json();
+        if let crate::json::Value::Object(map) = &mut v {
+            map.insert("net_fingerprint".into(), "not-hex".into());
+        }
+        assert!(CompileKey::from_json(&v).is_err());
     }
 
     #[test]

@@ -22,7 +22,8 @@ pub mod lower;
 pub mod tiling;
 
 pub use analytical::{
-    analytical_estimate, analytical_estimate_compiled, latency_lower_bound, AnalyticalEstimate,
+    analytical_estimate, analytical_estimate_compiled, critical_path_lower_bound,
+    latency_lower_bound, lower_bound, occupancy_lower_bound, AnalyticalEstimate, BoundKind,
 };
 pub use cache::{CompileCache, CompileKey, POISONED_SOURCE_DIAG};
 pub use cost::CostModel;

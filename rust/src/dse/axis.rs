@@ -225,18 +225,41 @@ impl Axis {
         Ok(())
     }
 
+    /// The token this axis contributes to a design-point name — the key a
+    /// report legend decodes point names with. The canonical four axes use
+    /// the historical `nce{r}x{c}_f{f}_bus{w}_ifm{k}` prefix tokens; the
+    /// rest append `_<token><value>` fragments ([`Axis::extra_fragment`]).
+    pub fn name_key(self) -> &'static str {
+        match self {
+            Axis::ArrayGeometry => "nce",
+            Axis::NceFreqMhz => "f",
+            Axis::BusBytesPerCycle => "bus",
+            Axis::IfmBufferKib => "ifm",
+            Axis::BusFreqMhz => "busf",
+            Axis::WeightBufferKib => "wbuf",
+            Axis::OfmBufferKib => "obuf",
+        }
+    }
+
+    /// Whether [`Axis::name_key`] appears in the canonical
+    /// `nce{r}x{c}_f{f}_bus{w}_ifm{k}` name prefix (always emitted, from
+    /// the expanded config) rather than as an appended fragment.
+    pub fn is_canonical_name_axis(self) -> bool {
+        matches!(
+            self,
+            Axis::ArrayGeometry | Axis::NceFreqMhz | Axis::BusBytesPerCycle | Axis::IfmBufferKib
+        )
+    }
+
     /// Point-name fragment for axes *not* covered by the canonical
     /// `nce{r}x{c}_f{f}_bus{w}_ifm{k}` prefix (which is always derived from
     /// the expanded config, keeping classic sweep names byte-identical).
     /// Returns `None` for the canonical four.
     fn extra_fragment(self, v: AxisValue) -> Option<String> {
-        let s = v.scalar();
-        match self {
-            Axis::BusFreqMhz => Some(format!("busf{}", s?)),
-            Axis::WeightBufferKib => Some(format!("wbuf{}", s?)),
-            Axis::OfmBufferKib => Some(format!("obuf{}", s?)),
-            _ => None,
+        if self.is_canonical_name_axis() {
+            return None;
         }
+        Some(format!("{}{}", self.name_key(), v.scalar()?))
     }
 }
 
@@ -605,6 +628,32 @@ mod tests {
         assert_eq!(configs.len(), 1);
         assert_eq!(configs[0].name, "nce32x64_f250_bus32_ifm1536");
         assert_eq!(configs[0].nce.freq_mhz, base().nce.freq_mhz);
+    }
+
+    #[test]
+    fn name_keys_are_distinct_and_match_emitted_names() {
+        // Every axis's name token is unique (a legend keyed on them is
+        // unambiguous), and the token actually appears in the names of a
+        // grid swept along that axis.
+        let mut keys: Vec<&str> = Axis::ALL.iter().map(|a| a.name_key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), Axis::ALL.len(), "name keys must be distinct");
+        for axis in Axis::ALL {
+            let changed = match axis.read(&base()) {
+                AxisValue::Scalar(s) => AxisValue::Scalar(s * 2),
+                AxisValue::Pair(r, c) => AxisValue::Pair(r * 2, c * 2),
+            };
+            let axes = SweepAxes::new().with_axis(axis, vec![changed]).unwrap();
+            let configs = expand_configs(&base(), &axes);
+            assert!(
+                configs[0].name.contains(axis.name_key()),
+                "{}: name {:?} lacks token {:?}",
+                axis.key(),
+                configs[0].name,
+                axis.name_key()
+            );
+        }
     }
 
     #[test]

@@ -423,10 +423,15 @@ fn write_value(out: &mut String, v: &Value, indent: Option<usize>, depth: usize)
             let _ = write!(out, "{i}");
         }
         Value::Num(f) => {
-            if f.is_finite() {
-                let _ = write!(out, "{f}");
-            } else {
+            if !f.is_finite() {
                 out.push_str("null"); // JSON has no Inf/NaN
+            } else if f.fract() == 0.0 {
+                // Keep the decimal point (python-json style "2.0"): a bare
+                // "2" would re-parse as Int and break Value round-trips
+                // for integral floats (report throughputs, bench medians).
+                let _ = write!(out, "{f:.1}");
+            } else {
+                let _ = write!(out, "{f}");
             }
         }
         Value::Str(s) => write_string(out, s),
@@ -560,6 +565,22 @@ mod tests {
         for text in [doc.to_string_compact(), doc.to_string_pretty()] {
             assert_eq!(parse(&text).unwrap(), doc);
         }
+    }
+
+    #[test]
+    fn integral_floats_round_trip_as_floats() {
+        // Num(2.0) must not serialize as "2" — that re-parses as Int and
+        // silently changes the Value. The writer keeps the decimal point,
+        // exactly like python's json.dumps.
+        for f in [2.0f64, 1e11, -3.0, 0.0] {
+            let v = Value::Num(f);
+            let text = v.to_string_compact();
+            assert!(text.contains('.'), "{f}: serialized {text:?} lost the decimal point");
+            assert_eq!(parse(&text).unwrap(), v, "{f}");
+        }
+        // Non-integral floats keep the shortest form.
+        assert_eq!(Value::Num(0.25).to_string_compact(), "0.25");
+        assert_eq!(parse("0.25").unwrap(), Value::Num(0.25));
     }
 
     #[test]

@@ -69,6 +69,13 @@ COMMON OPTIONS:
                       and simulate every grid point (pruning is lossless —
                       frontiers are identical either way — so this is a
                       diagnostic/benchmark escape hatch)
+  --bound KIND        which admissible lower bound gates the pruning:
+                      occupancy (exclusive-resource totals), critical-path
+                      (longest dependency chain), or max (default: the
+                      tighter of the two). Every kind is lossless; this is
+                      the A/B escape hatch for comparing skip rates. The
+                      report records the chosen bound and attributes each
+                      skip to the half that produced it
   --no-order          evaluate grid units in plain grid order instead of
                       ascending lower-bound order (ordering is a lossless
                       scheduling heuristic that maximizes bound-skips)
@@ -404,12 +411,17 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         0 => None,
         n => Some(n as usize),
     };
+    let bound = match args.get("bound") {
+        Some(key) => avsm::compiler::BoundKind::from_key(key)?,
+        None => avsm::compiler::BoundKind::Max,
+    };
     let opts = campaign::CampaignOptions {
         threads: args.get_u64("threads", 0)? as usize,
         cache_dir: args.get("cache-dir").map(PathBuf::from),
         cache_max_entries,
         keep_points: false,
         prune: !args.has("no-prune"),
+        bound,
         order_by_bound: !args.has("no-order"),
         fail_fast: args.has("fail-fast"),
     };

@@ -4,10 +4,36 @@
 //! on the frontier for *every* workload.
 
 use crate::campaign::{CampaignResult, NetOutcome};
-use crate::dse;
+use crate::dse::{self, SweepAxes};
 use crate::json::{obj, Value};
 use crate::metrics::fmt_ps;
 use std::collections::BTreeMap;
+
+/// Legend for one net's design-point names: `(name token, description)`
+/// per swept axis, keyed on [`dse::Axis::name_key`] — so exotic-axis
+/// fragments (`busf`/`wbuf`/`obuf`) are decoded right in the report
+/// instead of leaving readers to reverse-engineer the naming scheme.
+/// Canonical-prefix axes are included too (their tokens are just as
+/// opaque to a first-time reader).
+pub fn axis_legend(axes: &SweepAxes) -> Vec<(&'static str, String)> {
+    axes.axes()
+        .iter()
+        .map(|av| {
+            let axis = av.axis();
+            let unit = axis.unit();
+            let desc = if unit.is_empty() {
+                format!(
+                    "{}{}",
+                    axis.label(),
+                    if axis == dse::Axis::ArrayGeometry { " (rows x cols)" } else { "" }
+                )
+            } else {
+                format!("{} ({unit})", axis.label())
+            };
+            (axis.name_key(), desc)
+        })
+        .collect()
+}
 
 /// Report over one [`CampaignResult`].
 pub struct CampaignReport<'a> {
@@ -46,20 +72,24 @@ impl<'a> CampaignReport<'a> {
         let r = self.result;
         let mut out = String::new();
         out.push_str(&format!(
-            "campaign: {} workloads, {} grid units ({} workers)\n",
+            "campaign: {} workloads, {} grid units ({} workers, bound {})\n",
             r.nets.len(),
             r.grid_points,
-            r.threads
+            r.threads,
+            r.bound
         ));
         for net in &r.nets {
             out.push_str(&format!(
                 "\n== {} — frontier ({} of {} feasible points, {} evaluated, \
-                 {} skipped by bound, {} infeasible, {} errors)\n",
+                 {} skipped by bound ({} occupancy, {} critical-path), \
+                 {} infeasible, {} errors)\n",
                 net.net,
                 net.frontier.len(),
                 net.feasible,
                 net.evaluated,
                 net.skipped_by_bound,
+                net.skipped_by_occupancy,
+                net.skipped_by_critical_path,
                 net.infeasible,
                 net.errors
             ));
@@ -76,6 +106,14 @@ impl<'a> CampaignReport<'a> {
                 net.base,
                 if axes.is_empty() { "(base point only)".to_string() } else { axes.join(" x ") }
             ));
+            // Name legend: decode every token a swept axis contributes to
+            // the point names below.
+            let legend = axis_legend(&net.axes);
+            if !legend.is_empty() {
+                let entries: Vec<String> =
+                    legend.iter().map(|(key, desc)| format!("{key} = {desc}")).collect();
+                out.push_str(&format!("name legend: {}\n", entries.join(", ")));
+            }
             if let Some(sample) = &net.error_sample {
                 out.push_str(&format!("!! first error: {sample}\n"));
             }
@@ -123,6 +161,7 @@ impl<'a> CampaignReport<'a> {
             ("workloads", r.nets.len().into()),
             ("grid_points", r.grid_points.into()),
             ("threads", r.threads.into()),
+            ("bound", r.bound.key().into()),
             ("skipped_by_bound", r.skipped_by_bound.into()),
             ("errors", r.errors.into()),
             (
@@ -173,6 +212,16 @@ fn net_to_value(net: &NetOutcome) -> Value {
         // input).
         ("base", net.base.as_str().into()),
         ("axes", net.axes.to_json()),
+        // Name legend keyed on the axes' name tokens (see [`axis_legend`]).
+        (
+            "legend",
+            Value::Object(
+                axis_legend(&net.axes)
+                    .into_iter()
+                    .map(|(key, desc)| (key.to_string(), Value::from(desc)))
+                    .collect(),
+            ),
+        ),
         ("evaluated", net.evaluated.into()),
         ("feasible", net.feasible.into()),
         ("infeasible", net.infeasible.into()),
@@ -181,7 +230,10 @@ fn net_to_value(net: &NetOutcome) -> Value {
             "error_sample",
             net.error_sample.as_deref().map_or(Value::Null, Value::from),
         ),
+        ("bound", net.bound.key().into()),
         ("skipped_by_bound", net.skipped_by_bound.into()),
+        ("skipped_by_occupancy", net.skipped_by_occupancy.into()),
+        ("skipped_by_critical_path", net.skipped_by_critical_path.into()),
         ("dominated", net.dominated.into()),
         ("pruned", net.pruned.into()),
         ("compilations", net.compiles.into()),
@@ -218,7 +270,10 @@ mod tests {
             infeasible: 1,
             errors: 1,
             error_sample: Some("nce0x0_f0: invalid configuration".into()),
+            bound: crate::compiler::BoundKind::Max,
             skipped_by_bound: 1,
+            skipped_by_occupancy: 0,
+            skipped_by_critical_path: 1,
             dominated: 1,
             pruned: 0,
             compiles: 2,
@@ -246,6 +301,7 @@ mod tests {
             mem_hits: 2,
             rejected_entries: 0,
             read_errors: 0,
+            bound: crate::compiler::BoundKind::Max,
             skipped_by_bound: 2,
             errors: 2,
         }
@@ -265,17 +321,54 @@ mod tests {
         let r = result();
         let text = CampaignReport::new(&r).render_text();
         assert!(text.contains("2 workloads, 6 grid units"));
+        assert!(text.contains("bound max"), "{text}");
         assert!(text.contains("base base_paper_virtex7; axes nce_freq_mhz[2]"), "{text}");
         assert!(text.contains("== lenet"));
         assert!(text.contains("== vgg"));
         assert!(text.contains("designs on every frontier: a"));
         assert!(text.contains("compilations: 4"));
         // The new accounting is visible, errors loudly so.
-        assert!(text.contains("1 skipped by bound"), "{text}");
+        assert!(
+            text.contains("1 skipped by bound (0 occupancy, 1 critical-path)"),
+            "{text}"
+        );
         assert!(text.contains("1 infeasible"));
         assert!(text.contains("1 errors"));
         assert!(text.contains("!! first error: nce0x0_f0"));
         assert!(text.contains("negative hits: 2"));
+        // The name legend decodes the swept axis's token.
+        assert!(text.contains("name legend: f = NCE frequency (MHz)"), "{text}");
+    }
+
+    #[test]
+    fn legend_covers_every_swept_axis_and_decodes_fragments() {
+        let axes = crate::dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32)])
+            .nce_freqs_mhz(vec![125, 250])
+            .with_axis(crate::dse::Axis::BusFreqMhz, vec![crate::dse::AxisValue::Scalar(125)])
+            .unwrap()
+            .with_axis(
+                crate::dse::Axis::WeightBufferKib,
+                vec![crate::dse::AxisValue::Scalar(128)],
+            )
+            .unwrap();
+        let legend = axis_legend(&axes);
+        assert_eq!(legend.len(), 4, "one entry per swept axis");
+        let get = |key: &str| {
+            legend
+                .iter()
+                .find(|(k, _)| *k == key)
+                .unwrap_or_else(|| panic!("no legend entry {key}"))
+                .1
+                .clone()
+        };
+        assert_eq!(get("nce"), "NCE array geometry (rows x cols)");
+        assert_eq!(get("f"), "NCE frequency (MHz)");
+        // The exotic fragments are the whole point of the legend.
+        assert_eq!(get("busf"), "bus frequency (MHz)");
+        assert_eq!(get("wbuf"), "weight buffer (KiB)");
+        // No axes — no legend (and no legend line in the text report).
+        assert!(axis_legend(&crate::dse::SweepAxes::default()).is_empty());
     }
 
     #[test]
@@ -284,11 +377,20 @@ mod tests {
         let j = CampaignReport::new(&r).to_json();
         assert_eq!(j.get("schema").as_str(), Some("avsm-campaign-v1"));
         assert_eq!(j.get("grid_points").as_u64(), Some(6));
+        assert_eq!(j.get("bound").as_str(), Some("max"));
         assert_eq!(j.get("skipped_by_bound").as_u64(), Some(2));
         assert_eq!(j.get("errors").as_u64(), Some(2));
         assert_eq!(j.get("nets").as_array().unwrap().len(), 2);
         let n0 = j.get("nets").at(0);
         assert_eq!(n0.get("base").as_str(), Some("base_paper_virtex7"));
+        assert_eq!(n0.get("bound").as_str(), Some("max"));
+        assert_eq!(n0.get("skipped_by_occupancy").as_u64(), Some(0));
+        assert_eq!(n0.get("skipped_by_critical_path").as_u64(), Some(1));
+        assert_eq!(
+            n0.get("legend").get("f").as_str(),
+            Some("NCE frequency (MHz)"),
+            "per-net JSON legend decodes axis name tokens"
+        );
         // The per-net axis provenance is a machine-readable axis spec.
         let axes = crate::dse::SweepAxes::from_value(n0.get("axes")).unwrap();
         assert_eq!(axes, crate::dse::SweepAxes::new().nce_freqs_mhz(vec![125, 250]));

@@ -129,6 +129,50 @@ fn topdown_answers() {
 }
 
 #[test]
+fn topdown_rejects_inverted_range_through_generic_solver() {
+    // Regression: an inverted --lo/--hi range must fail cleanly through
+    // the generic requirement solver's range check — descriptive error,
+    // nonzero exit — not bisect garbage or panic.
+    let out = avsm()
+        .args([
+            "topdown", "--net", "lenet", "--target-ms", "1", "--lo", "1000", "--hi", "50",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "inverted range must exit nonzero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("lo <= hi"), "{err}");
+    // A zero lower endpoint is rejected the same way.
+    let out = avsm()
+        .args(["topdown", "--net", "lenet", "--target-ms", "1", "--lo", "0", "--hi", "50"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("0 < lo"));
+}
+
+#[test]
+fn campaign_bound_flag_selects_and_reports_the_bound() {
+    // The report records the chosen bound...
+    let text = run_ok(&[
+        "campaign", "--nets", "lenet", "--bound", "occupancy", "--threads", "1",
+    ]);
+    assert!(text.contains("bound occupancy"), "{text}");
+    // ...including the default.
+    let text = run_ok(&["campaign", "--nets", "lenet", "--threads", "1"]);
+    assert!(text.contains("bound max"), "{text}");
+    // An invalid kind is a descriptive error and a nonzero exit.
+    let out = avsm()
+        .args(["campaign", "--nets", "lenet", "--bound", "tightest"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--bound tightest must exit nonzero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown bound"), "{err}");
+    assert!(err.contains("occupancy, critical-path, max"), "{err}");
+}
+
+#[test]
 fn topdown_solves_any_scalar_axis() {
     let text = run_ok(&[
         "topdown", "--net", "lenet", "--target-ms", "1",

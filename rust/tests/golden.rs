@@ -1,0 +1,157 @@
+//! Golden-file schema regression tests: the on-disk/report JSON schemas
+//! are pinned byte-for-byte by checked-in fixtures
+//! (`rust/tests/fixtures/*.json`, canonical compact form — sorted keys, no
+//! whitespace). Each test parses the fixture with the *real* parser and
+//! asserts the *real* serializer emits the fixture bytes back, so any
+//! accidental field rename, type change, or format drift in
+//! `avsm-campaign-v1`, `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`
+//! or `avsm-compile-cache-index-v1` fails loudly here instead of silently
+//! breaking warm caches and downstream report consumers.
+//!
+//! A *deliberate* schema change is made by bumping the schema and
+//! regenerating the fixtures (`scripts/gen_golden_fixtures.py`), with the
+//! fixture diff reviewed as a compatibility decision.
+
+use avsm::campaign::store::{
+    entry_from_json, entry_to_json, negative_from_json, negative_to_json, CacheIndex,
+};
+use avsm::campaign::{CampaignResult, NetOutcome};
+use avsm::compiler::{BoundKind, CompileKey};
+use avsm::config::SystemConfig;
+use avsm::dse::{DesignPoint, SweepAxes};
+use avsm::json;
+use avsm::report::CampaignReport;
+
+/// A fixture's canonical bytes (trailing newline stripped).
+fn fixture(text: &'static str) -> &'static str {
+    text.trim_end()
+}
+
+#[test]
+fn compile_cache_entry_schema_is_byte_stable() {
+    let text = fixture(include_str!("fixtures/compile_cache_v1.json"));
+    let doc = json::parse(text).expect("fixture must stay parseable");
+    assert_eq!(doc.get("schema").as_str(), Some("avsm-compile-cache-v1"));
+
+    // The embedded key reconstructs exactly (CompileKey::from_json is the
+    // inverse of to_json), and the entry loads under it.
+    let key = CompileKey::from_json(doc.get("key")).expect("fixture key must parse");
+    assert_eq!(&key.to_json(), doc.get("key"), "key JSON must round-trip");
+    let compiled = entry_from_json(text, &key).expect("fixture entry must load");
+    assert_eq!(compiled.layers.len(), 2);
+    assert_eq!(compiled.graph.len(), 5);
+    compiled.graph.validate().unwrap();
+
+    // Byte-compatibility: re-serializing the loaded artifact under the
+    // reconstructed key reproduces the checked-in bytes exactly.
+    assert_eq!(
+        entry_to_json(&key, &compiled),
+        text,
+        "avsm-compile-cache-v1 serializer drifted from the golden fixture"
+    );
+}
+
+#[test]
+fn negative_entry_schema_is_byte_stable() {
+    let text = fixture(include_str!("fixtures/compile_cache_neg_v1.json"));
+    let doc = json::parse(text).unwrap();
+    assert_eq!(doc.get("schema").as_str(), Some("avsm-compile-cache-neg-v1"));
+    let key = CompileKey::from_json(doc.get("key")).unwrap();
+    let diag = negative_from_json(text, &key).expect("fixture negative record must load");
+    assert_eq!(diag, "tiling infeasible: golden fixture");
+    assert_eq!(
+        negative_to_json(&key, &diag),
+        text,
+        "avsm-compile-cache-neg-v1 serializer drifted from the golden fixture"
+    );
+}
+
+#[test]
+fn cache_index_schema_is_byte_stable() {
+    let text = fixture(include_str!("fixtures/compile_cache_index_v1.json"));
+    let index = CacheIndex::from_json(text).expect("fixture index must parse");
+    assert_eq!(index.clock(), 3);
+    assert_eq!(index.entries().len(), 2);
+    assert_eq!(index.entries().get(&0xdead_beef), Some(&2));
+    assert_eq!(index.entries().get(&0x42), Some(&3));
+    assert_eq!(
+        index.to_json(),
+        text,
+        "avsm-compile-cache-index-v1 serializer drifted from the golden fixture"
+    );
+}
+
+fn golden_point(name: &str, latency_ps: u64, cost: f64) -> DesignPoint {
+    DesignPoint {
+        name: name.into(),
+        sys: SystemConfig::base_paper(),
+        latency_ps,
+        cost,
+        throughput: 1e12 / latency_ps as f64,
+    }
+}
+
+fn golden_net(name: &str, frontier: Vec<DesignPoint>) -> NetOutcome {
+    NetOutcome {
+        net: name.into(),
+        base: "base_paper_virtex7".into(),
+        axes: SweepAxes::new().nce_freqs_mhz(vec![125, 250]),
+        evaluated: frontier.len() + 4,
+        feasible: frontier.len() + 1,
+        infeasible: 1,
+        errors: 1,
+        error_sample: Some("nce0x0_f0: invalid configuration".into()),
+        bound: BoundKind::Max,
+        skipped_by_bound: 1,
+        skipped_by_occupancy: 0,
+        skipped_by_critical_path: 1,
+        dominated: 1,
+        pruned: 0,
+        compiles: 2,
+        disk_hits: 0,
+        neg_hits: 1,
+        mem_hits: 1,
+        rejected: 0,
+        read_errors: 0,
+        points: Vec::new(),
+        frontier,
+    }
+}
+
+#[test]
+fn campaign_report_schema_is_byte_stable() {
+    let result = CampaignResult {
+        nets: vec![
+            golden_net(
+                "lenet",
+                vec![golden_point("a", 2_000_000, 5.0), golden_point("b", 4_000_000, 3.0)],
+            ),
+            golden_net(
+                "vgg",
+                vec![golden_point("a", 5_000_000, 5.0), golden_point("c", 8_000_000, 3.0)],
+            ),
+        ],
+        grid_points: 6,
+        threads: 2,
+        compiles: 4,
+        disk_hits: 0,
+        neg_hits: 2,
+        mem_hits: 2,
+        rejected_entries: 0,
+        read_errors: 0,
+        bound: BoundKind::Max,
+        skipped_by_bound: 2,
+        errors: 2,
+    };
+    let text = fixture(include_str!("fixtures/campaign_v1.json"));
+    let doc = json::parse(text).unwrap();
+    assert_eq!(doc.get("schema").as_str(), Some("avsm-campaign-v1"));
+
+    let emitted = CampaignReport::new(&result).to_json();
+    assert_eq!(emitted, doc, "avsm-campaign-v1 fields drifted from the golden fixture");
+    assert_eq!(
+        emitted.to_string_compact(),
+        text,
+        "avsm-campaign-v1 serializer bytes drifted from the golden fixture"
+    );
+}

@@ -370,6 +370,90 @@ fn heterogeneous_campaign_matches_independent_per_net_sweeps() {
 }
 
 #[test]
+fn deep_chain_campaign_bounds_are_lossless_cold_and_warm() {
+    // End-to-end over the persistent cache: a deep-chain workload swept
+    // along a dense frequency axis, run under every bound kind plus
+    // unpruned — all four frontiers must be byte-identical to the batch
+    // sweep, the critical-path/max bounds must skip strictly more than
+    // occupancy (the latency-dominated region occupancy admits), and a
+    // warm rerun must be compile-free with the same skip behaviour
+    // (bounds are computed from the deserialized artifact).
+    use avsm::compiler::BoundKind;
+    let spec = CampaignSpec::homogeneous(
+        vec![avsm::testkit::deep_chain("deep_chain_it", 10, 16, 8)],
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new().nce_freqs_mhz(vec![1000, 800, 600, 500, 400, 300, 250, 200]),
+    );
+    let dir = std::env::temp_dir().join(format!("avsm_bound_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let batch = dse::pareto(&dse::sweep(&spec.workloads[0].net, &spec.base, &spec.axes));
+    let run_with = |bound: BoundKind, prune: bool| {
+        campaign::run(
+            &spec,
+            &CampaignOptions {
+                threads: 1,
+                prune,
+                bound,
+                cache_dir: Some(dir.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+
+    // Cold run populates the cache; the three pruned runs + the unpruned
+    // reference all resolve from it afterwards.
+    let unpruned = run_with(BoundKind::Max, false);
+    assert_eq!(unpruned.compiles, 1, "one structural key on a frequency axis");
+    assert_eq!(unpruned.skipped_by_bound, 0);
+    let occ = run_with(BoundKind::Occupancy, true);
+    let cp = run_with(BoundKind::CriticalPath, true);
+    let max = run_with(BoundKind::Max, true);
+    assert_eq!(occ.compiles + cp.compiles + max.compiles, 0, "warm runs are compile-free");
+    for (tag, result) in
+        [("unpruned", &unpruned), ("occupancy", &occ), ("critical-path", &cp), ("max", &max)]
+    {
+        let got = &result.nets[0];
+        assert_eq!(got.frontier.len(), batch.len(), "{tag}");
+        for (a, b) in got.frontier.iter().zip(&batch) {
+            assert_eq!(a.name, b.name, "{tag}");
+            assert_eq!(a.latency_ps, b.latency_ps, "{tag}: {}", a.name);
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{tag}");
+        }
+        assert_eq!(
+            got.evaluated,
+            got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+            "{tag}"
+        );
+        assert_eq!(
+            got.skipped_by_bound,
+            got.skipped_by_occupancy + got.skipped_by_critical_path,
+            "{tag}"
+        );
+    }
+    // The tentpole property: the tighter bounds prune the deep chain
+    // strictly harder than occupancy alone.
+    assert!(
+        max.skipped_by_bound > occ.skipped_by_bound,
+        "max must out-skip occupancy on the deep chain: {} vs {}",
+        max.skipped_by_bound,
+        occ.skipped_by_bound
+    );
+    assert!(cp.skipped_by_bound >= max.nets[0].skipped_by_critical_path);
+    assert!(max.nets[0].skipped_by_critical_path > 0);
+    assert_eq!(occ.nets[0].skipped_by_critical_path, 0);
+    // Provenance fields survive the report serialization.
+    let report = avsm::report::CampaignReport::new(&max);
+    let j = report.to_json();
+    assert_eq!(j.get("bound").as_str(), Some("max"));
+    assert_eq!(
+        j.get("nets").at(0).get("skipped_by_critical_path").as_u64(),
+        Some(max.nets[0].skipped_by_critical_path as u64)
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn single_channel_and_rr_arbitration_variants_work() {
     let net = models::dilated_vgg_tiny();
     for (channels, policy) in [

@@ -1,6 +1,10 @@
 //! Property-based tests over randomly generated networks and system
-//! configurations (DESIGN.md §10), using the in-tree SplitMix64 generator
-//! in place of proptest.
+//! configurations (DESIGN.md §10), drawn from the shared seeded generator
+//! [`avsm::testkit::NetGen`] in place of the unavailable proptest crate.
+//! Every test that needs random nets/configs/retimes pulls them from one
+//! `NetGen` — the distribution is defined once, a failing seed reproduces
+//! everywhere, and `AVSM_TEST_SEED` pins the whole file for deterministic
+//! CI smoke runs (`scripts/check.sh`).
 //!
 //! Invariants checked per random case:
 //! * the compiler's MAC/byte accounting is exact vs the graph IR;
@@ -8,82 +12,29 @@
 //! * the task graph is a DAG whose simulation completes all tasks;
 //! * makespan lies between the critical-path lower bound and the serial
 //!   upper bound (+ HKP dispatch overhead);
+//! * every member of the latency lower-bound family (occupancy,
+//!   critical-path, max) is admissible — `LB <= simulated` — across
+//!   hundreds of seeded cases and clock retimes, with
+//!   `LB_max >= LB_occupancy` everywhere;
+//! * campaign pruning under the max bound is lossless: pruned frontiers
+//!   are byte-identical to unpruned `dse::pareto(dse::sweep(..))` at 1
+//!   and N worker threads;
 //! * layer windows partition the run; busy time never exceeds the window;
 //! * simulation is deterministic;
 //! * task-graph and DNN-graph JSON round-trip losslessly.
 
-use avsm::campaign::StreamingFrontier;
-use avsm::compiler::{compile, latency_lower_bound, CompileOptions};
+use avsm::campaign::{self, CampaignOptions, CampaignSpec, StreamingFrontier};
+use avsm::compiler::{
+    compile, critical_path_lower_bound, latency_lower_bound, occupancy_lower_bound,
+    BoundKind, CompileOptions,
+};
 use avsm::config::SystemConfig;
 use avsm::dse::{self, DesignPoint};
-use avsm::graph::{graph_from_json, graph_to_json, Activation, DnnGraph, Layer, Op, Padding, TensorShape};
+use avsm::graph::{graph_from_json, graph_to_json, DnnGraph};
 use avsm::hw::{simulate_avsm, AvsmTiming, TimingModel};
 use avsm::sim::{ClockDomain, TraceRecorder};
 use avsm::taskgraph::{serialize, TaskKind};
-use avsm::testkit::Rng;
-
-/// Random small CNN: 1–6 layers of conv/pool/upsample with consistent
-/// channel chains.
-fn random_net(rng: &mut Rng) -> DnnGraph {
-    let hw = *rng.pick(&[8u32, 12, 16, 24, 32]);
-    let cin = *rng.pick(&[1u32, 3, 4, 8]);
-    let mut g = DnnGraph::new(
-        format!("rand{}", rng.next_u64() % 1000),
-        TensorShape::new(1, cin, hw, hw),
-        *rng.pick(&[1u32, 2, 4]),
-    );
-    let n_layers = rng.range(1, 6) as usize;
-    let mut c = cin;
-    let mut h = hw;
-    for i in 0..n_layers {
-        // Keep pooling legal (h must stay >= 4). Rng::range is inclusive.
-        let can_pool = h >= 8;
-        let kind = rng.range(0, if can_pool { 2 } else { 1 });
-        match kind {
-            0 | 1 => {
-                let cout = *rng.pick(&[2u32, 4, 8, 16, 24]);
-                let k = *rng.pick(&[1u32, 3, 5]);
-                let dilation = if k > 1 { *rng.pick(&[1u32, 2]) } else { 1 };
-                g.push(Layer::new(
-                    format!("conv{i}"),
-                    Op::Conv2d {
-                        cin: c,
-                        cout,
-                        kh: k,
-                        kw: k,
-                        stride: 1,
-                        dilation,
-                        padding: Padding::Same,
-                        activation: if rng.bool() { Activation::Relu } else { Activation::None },
-                    },
-                ));
-                c = cout;
-            }
-            2 => {
-                g.push(Layer::new(format!("pool{i}"), Op::MaxPool { window: 2, stride: 2 }));
-                h /= 2;
-            }
-            _ => unreachable!(),
-        }
-    }
-    g.validate().expect("generator produced an invalid net");
-    g
-}
-
-/// Random feasible system config around the base point.
-fn random_sys(rng: &mut Rng) -> SystemConfig {
-    let mut sys = SystemConfig::base_paper();
-    sys.nce.array_rows = *rng.pick(&[8u32, 16, 32, 64]);
-    sys.nce.array_cols = *rng.pick(&[16u32, 32, 64, 128]);
-    sys.nce.freq_mhz = *rng.pick(&[100u64, 250, 500]);
-    sys.nce.ifm_buffer_kib = *rng.pick(&[64u32, 256, 1536]);
-    sys.nce.weight_buffer_kib = *rng.pick(&[64u32, 128, 256]);
-    sys.nce.ofm_buffer_kib = *rng.pick(&[64u32, 128, 256]);
-    sys.bus.bytes_per_cycle = *rng.pick(&[8u64, 16, 32, 64]);
-    sys.dma.channels = rng.range_u32(1, 3);
-    sys.validate().unwrap();
-    sys
-}
+use avsm::testkit::{NetGen, Rng};
 
 fn duration_model(sys: &SystemConfig) -> impl FnMut(&avsm::taskgraph::Task) -> u64 {
     let mut t = AvsmTiming::new(sys);
@@ -98,10 +49,10 @@ fn duration_model(sys: &SystemConfig) -> impl FnMut(&avsm::taskgraph::Task) -> u
 
 #[test]
 fn compiled_accounting_matches_graph_ir() {
-    let mut rng = Rng::new(0xA11CE);
+    let mut gen = NetGen::from_env(0xA11CE);
     for case in 0..40 {
-        let net = random_net(&mut rng);
-        let sys = random_sys(&mut rng);
+        let net = gen.net();
+        let sys = gen.sys();
         let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
             continue; // tiny buffers can be infeasible for a random net: fine
         };
@@ -134,11 +85,11 @@ fn compiled_accounting_matches_graph_ir() {
 
 #[test]
 fn makespan_bounds_hold_for_random_cases() {
-    let mut rng = Rng::new(0xBEEF);
+    let mut gen = NetGen::from_env(0xBEEF);
     let mut checked = 0;
     for _ in 0..30 {
-        let net = random_net(&mut rng);
-        let sys = random_sys(&mut rng);
+        let net = gen.net();
+        let sys = gen.sys();
         let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
             continue;
         };
@@ -171,10 +122,10 @@ fn makespan_bounds_hold_for_random_cases() {
 
 #[test]
 fn layer_windows_partition_and_bound_busy_time() {
-    let mut rng = Rng::new(0xC0FFEE);
+    let mut gen = NetGen::from_env(0xC0FFEE);
     for _ in 0..25 {
-        let net = random_net(&mut rng);
-        let sys = random_sys(&mut rng);
+        let net = gen.net();
+        let sys = gen.sys();
         let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
             continue;
         };
@@ -194,10 +145,10 @@ fn layer_windows_partition_and_bound_busy_time() {
 
 #[test]
 fn simulation_is_deterministic_for_random_cases() {
-    let mut rng = Rng::new(0xD00D);
+    let mut gen = NetGen::from_env(0xD00D);
     for _ in 0..15 {
-        let net = random_net(&mut rng);
-        let sys = random_sys(&mut rng);
+        let net = gen.net();
+        let sys = gen.sys();
         let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
             continue;
         };
@@ -213,10 +164,10 @@ fn simulation_is_deterministic_for_random_cases() {
 
 #[test]
 fn double_buffering_never_hurts() {
-    let mut rng = Rng::new(0x5EED);
+    let mut gen = NetGen::from_env(0x5EED);
     for _ in 0..20 {
-        let net = random_net(&mut rng);
-        let sys = random_sys(&mut rng);
+        let net = gen.net();
+        let sys = gen.sys();
         let db = compile(&net, &sys, CompileOptions { double_buffer: true, labels: false });
         let sb = compile(&net, &sys, CompileOptions { double_buffer: false, labels: false });
         let (Ok(db), Ok(sb)) = (db, sb) else { continue };
@@ -233,38 +184,139 @@ fn double_buffering_never_hurts() {
 }
 
 #[test]
-fn latency_lower_bound_is_admissible_for_random_cases() {
-    // The bound-and-prune contract: for every (net, config) the analytical
-    // lower bound must never exceed the simulated latency — otherwise
-    // campaign pruning could drop genuine frontier members. Random nets x
-    // random structural configs x random clock retimes of one compilation.
-    let mut rng = Rng::new(0x10B0);
+fn lower_bound_family_is_admissible_across_hundreds_of_seeds() {
+    // The bound-and-prune soundness contract, differential form: for every
+    // (net, config, retime) the simulator is the reference and every
+    // member of the lower-bound family must stay at or below it —
+    // otherwise campaign pruning could drop genuine frontier members.
+    // Alongside admissibility: LB_max >= LB_occupancy everywhere (the max
+    // bound can only tighten), and LB_max == max(LB_occ, LB_cp).
+    //
+    // >= 200 generated cases (mixed general CNNs and adversarial deep
+    // chains), 3 clock annotations each — every retime legally reuses the
+    // one compiled artifact, exactly as a campaign does.
+    let mut gen = NetGen::from_env(0x10B0);
     let mut checked = 0;
-    for case in 0..30 {
-        let net = random_net(&mut rng);
-        let sys = random_sys(&mut rng);
+    let mut attempts = 0;
+    while checked < 200 {
+        attempts += 1;
+        assert!(
+            attempts <= 500,
+            "too few feasible random cases ({checked} after {attempts} attempts)"
+        );
+        // Every 4th case is a deep chain — the region where the
+        // critical-path half dominates and occupancy is loose.
+        let net = if attempts % 4 == 0 { gen.chain_net() } else { gen.net() };
+        let sys = gen.sys();
         let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) else {
             continue;
         };
-        // The compiled artifact is clock-free: probe several frequency
-        // annotations of the same compilation, as a campaign retime does.
-        for mhz in [50u64, sys.nce.freq_mhz, 4 * sys.nce.freq_mhz] {
-            let mut retimed = sys.clone();
-            retimed.nce.freq_mhz = mhz;
-            let lb = latency_lower_bound(&compiled, &retimed);
-            let mut tr = TraceRecorder::disabled();
-            let sim = simulate_avsm(&compiled, &retimed, &mut tr);
-            assert!(
-                lb <= sim.total_ps,
-                "case {case} ({} @ {mhz} MHz): lower bound {lb} > simulated {}",
-                net.name,
-                sim.total_ps
+        let retimes = [sys.clone(), gen.retime(&sys), gen.retime(&sys)];
+        for retimed in &retimes {
+            let occ = occupancy_lower_bound(&compiled, retimed);
+            let cp = critical_path_lower_bound(&compiled, retimed);
+            let max = latency_lower_bound(&compiled, retimed);
+            assert_eq!(
+                max,
+                occ.max(cp),
+                "case {checked} ({}): max bound must be the pointwise max",
+                net.name
             );
-            assert!(lb > 0, "case {case}: bound must be non-trivial");
+            assert!(max >= occ, "case {checked} ({}): LB_max < LB_occupancy", net.name);
+            let mut tr = TraceRecorder::disabled();
+            let sim = simulate_avsm(&compiled, retimed, &mut tr);
+            for (tag, lb) in [("occupancy", occ), ("critical-path", cp), ("max", max)] {
+                assert!(
+                    lb <= sim.total_ps,
+                    "case {checked} ({} @ {} MHz): {tag} bound {lb} > simulated {}",
+                    net.name,
+                    retimed.nce.freq_mhz,
+                    sim.total_ps
+                );
+            }
+            assert!(max > 0, "case {checked}: bound must be non-trivial");
         }
         checked += 1;
     }
-    assert!(checked >= 15, "too few feasible random cases ({checked})");
+}
+
+#[test]
+fn max_bound_pruned_campaigns_match_unpruned_batch_sweeps_at_1_and_n_threads() {
+    // Lossless-pruning, differential form: for random portfolios over
+    // random grids, a campaign pruned with the (tightest) max bound must
+    // produce per-net frontiers byte-identical to the unpruned batch
+    // reference `dse::pareto(dse::sweep(..))` — sequentially and under
+    // parallel workers, where skip sets may differ run to run but the
+    // frontier may not.
+    let mut gen = NetGen::from_env(0xF407);
+    for case in 0..5 {
+        // A general net plus, on odd cases, a deep chain — the shape the
+        // critical-path half of the bound actually prunes.
+        let nets = if case % 2 == 1 {
+            vec![gen.net(), gen.chain_net()]
+        } else {
+            vec![gen.net(), gen.net()]
+        };
+        let mut freqs = vec![1000u64, 500, 250, 125, 50];
+        // Random rotation varies which frequency is enumerated first (and
+        // thus the arrival order pruning races against).
+        let rot = gen.rng().range(0, freqs.len() as u64 - 1) as usize;
+        freqs.rotate_left(rot);
+        let axes = dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(freqs);
+        let spec = CampaignSpec::homogeneous(nets, SystemConfig::base_paper(), axes);
+        for threads in [1usize, 0] {
+            let pruned = campaign::run(
+                &spec,
+                &CampaignOptions { threads, bound: BoundKind::Max, ..Default::default() },
+            )
+            .unwrap();
+            let unpruned = campaign::run(
+                &spec,
+                &CampaignOptions { threads, prune: false, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(unpruned.skipped_by_bound, 0);
+            for (ni, w) in spec.workloads.iter().enumerate() {
+                let batch = dse::pareto(&dse::sweep(&w.net, &spec.base, &spec.axes));
+                for (tag, result) in [("pruned", &pruned), ("unpruned", &unpruned)] {
+                    let got = &result.nets[ni];
+                    assert_eq!(
+                        got.frontier.len(),
+                        batch.len(),
+                        "case {case} {tag}/{threads}t: {}",
+                        w.net.name
+                    );
+                    for (a, b) in got.frontier.iter().zip(&batch) {
+                        assert_eq!(a.name, b.name, "case {case} {tag}/{threads}t");
+                        assert_eq!(
+                            a.latency_ps, b.latency_ps,
+                            "case {case} {tag}/{threads}t: {}",
+                            a.name
+                        );
+                        assert_eq!(
+                            a.cost.to_bits(),
+                            b.cost.to_bits(),
+                            "case {case} {tag}/{threads}t"
+                        );
+                        assert_eq!(a.sys, b.sys, "case {case} {tag}/{threads}t");
+                    }
+                    assert_eq!(
+                        got.evaluated,
+                        got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+                        "case {case} {tag}/{threads}t: {}",
+                        w.net.name
+                    );
+                    assert_eq!(
+                        got.skipped_by_bound,
+                        got.skipped_by_occupancy + got.skipped_by_critical_path,
+                        "case {case} {tag}/{threads}t"
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]
@@ -396,16 +448,17 @@ fn solve_requirement_reproduces_historical_topdown_exactly() {
     // targets and ranges — answers, unreachability, and the rejection of
     // degenerate ranges alike — while compiling exactly once (the axis is
     // retime-only).
-    let mut rng = Rng::new(0x70BD0);
+    let mut gen = NetGen::from_env(0x70BD0);
     let mut compared = 0;
     for case in 0..12 {
-        let net = random_net(&mut rng);
-        let base = random_sys(&mut rng);
+        let net = gen.net();
+        let base = gen.sys();
         let Ok(baseline) =
             dse::evaluate(&net, &base, "b").map(|p| p.latency_ps)
         else {
             continue; // infeasible tiling for this random pair: fine
         };
+        let rng = gen.rng();
         let targets = [1, baseline, baseline + baseline / 2];
         let ranges = [
             (rng.range(1, 400), rng.range(401, 2000)),
@@ -455,13 +508,13 @@ fn solve_requirement_reproduces_historical_topdown_exactly() {
 
 #[test]
 fn json_roundtrips_for_random_graphs() {
-    let mut rng = Rng::new(0xFACADE);
+    let mut gen = NetGen::from_env(0xFACADE);
     for _ in 0..30 {
-        let net = random_net(&mut rng);
+        let net = gen.net();
         let back = graph_from_json(&graph_to_json(&net)).unwrap();
         assert_eq!(net, back);
 
-        let sys = random_sys(&mut rng);
+        let sys = gen.sys();
         if let Ok(compiled) = compile(&net, &sys, CompileOptions::default()) {
             let tg = serialize::from_json(&serialize::to_json(&compiled.graph)).unwrap();
             assert_eq!(compiled.graph, tg);
@@ -471,9 +524,9 @@ fn json_roundtrips_for_random_graphs() {
 
 #[test]
 fn system_config_json_roundtrips_for_random_configs() {
-    let mut rng = Rng::new(0xCAFE);
+    let mut gen = NetGen::from_env(0xCAFE);
     for _ in 0..30 {
-        let sys = random_sys(&mut rng);
+        let sys = gen.sys();
         let back = SystemConfig::from_json(&sys.to_json()).unwrap();
         assert_eq!(sys, back);
     }

@@ -19,12 +19,20 @@ cargo test -q
 echo "== dse_sweep bench (smoke mode)"
 AVSM_BENCH_FAST=1 cargo bench --bench dse_sweep
 
+# Deterministic-seed property smoke: re-run the randomized differential
+# suite (lower-bound admissibility, pruned-vs-unpruned frontier identity,
+# solver-vs-oracle, ...) under a pinned AVSM_TEST_SEED, so CI exercises a
+# reproducible seed in addition to the defaults baked into each test.
+echo "== property tests (pinned AVSM_TEST_SEED)"
+AVSM_TEST_SEED=20260801 cargo test -q --release --test property
+
 # The campaign bench also smokes the bound-and-prune path: it runs the
 # frontier-sparse grid pruned and unpruned, asserts the frontiers are
 # byte-identical (lossless pruning) and that the bound actually skipped
 # simulations, and reports points/sec for both regimes — plus the skip
-# rate with and without bound-guided unit ordering.
-echo "== campaign bench (smoke mode, incl. pruned vs unpruned + ordering)"
+# rate with and without bound-guided unit ordering, and the
+# occupancy-vs-critical-path skip comparison on the deep-chain net.
+echo "== campaign bench (smoke mode, incl. pruned vs unpruned + ordering + bounds)"
 AVSM_BENCH_FAST=1 cargo bench --bench campaign
 
 # CLI smoke: the paper's §2 top-down mode through the generic requirement
@@ -50,5 +58,29 @@ cat > "$WORKLOADS" <<'EOF'
 EOF
 cargo run --release -q -p avsm -- campaign --workloads "$WORKLOADS" --fail-fast
 rm -f "$WORKLOADS"
+
+# Campaign determinism gate: the per-net Pareto frontiers in the exported
+# avsm-campaign-v1 report must be byte-identical between a 1-thread and an
+# N-thread run, so order-dependent frontier bugs fail CI here. (Only the
+# frontiers are contractually order-independent — skip/dominated counters
+# race benignly under parallel workers, by design.)
+echo "== avsm campaign 1-thread vs N-thread frontier byte identity"
+OUT1=$(mktemp -d /tmp/avsm_campaign_t1.XXXXXX)
+OUTN=$(mktemp -d /tmp/avsm_campaign_tn.XXXXXX)
+cargo run --release -q -p avsm -- campaign --nets lenet,dilated_vgg_tiny \
+  --threads 1 --outdir "$OUT1" > /dev/null
+cargo run --release -q -p avsm -- campaign --nets lenet,dilated_vgg_tiny \
+  --outdir "$OUTN" > /dev/null
+python3 - "$OUT1/campaign.json" "$OUTN/campaign.json" <<'EOF'
+import json, sys
+a, b = (json.load(open(p)) for p in sys.argv[1:3])
+fa = [(n["name"], n["frontier"]) for n in a["nets"]]
+fb = [(n["name"], n["frontier"]) for n in b["nets"]]
+ja, jb = (json.dumps(f, sort_keys=True) for f in (fa, fb))
+assert a["grid_points"] == b["grid_points"], "grid size differs"
+assert ja == jb, f"frontiers differ between 1 and N threads:\n{ja}\nvs\n{jb}"
+print(f"frontiers byte-identical across 1 and N threads ({len(fa)} nets)")
+EOF
+rm -rf "$OUT1" "$OUTN"
 
 echo "== OK"

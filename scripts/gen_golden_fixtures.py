@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""Regenerate the golden-file schema fixtures under rust/tests/fixtures/.
+
+The fixtures pin the on-disk JSON schemas (`avsm-campaign-v1`,
+`avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`,
+`avsm-compile-cache-index-v1`) byte-for-byte: `rust/tests/golden.rs` parses
+each fixture with the real parsers and asserts the real serializers emit the
+fixture bytes back. This script exists only to produce those bytes in the
+writers' canonical form (sorted object keys, compact separators, floats with
+a decimal point) — the Rust serializers are the source of truth, and a
+legitimate schema change means re-running this script *and* reviewing the
+fixture diff as a schema-compatibility decision.
+"""
+
+import json
+import pathlib
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "rust" / "tests" / "fixtures"
+
+
+def check_floats(doc):
+    # Python renders floats outside roughly [1e-4, 1e16) in exponent
+    # notation, which the Rust writer never emits — a fixture float in
+    # that range would regenerate as bytes the serializer can't produce
+    # and fail the golden tests spuriously. Walk the doc and refuse them.
+    if isinstance(doc, float):
+        rendered = json.dumps(doc)
+        assert "e" not in rendered and "E" not in rendered, (
+            f"fixture float {doc!r} renders as {rendered!r} (exponent "
+            "notation) — keep fixture floats within [1e-4, 1e16)"
+        )
+    elif isinstance(doc, dict):
+        for v in doc.values():
+            check_floats(v)
+    elif isinstance(doc, list):
+        for v in doc:
+            check_floats(v)
+
+
+def dumps(doc):
+    # Canonical form of the in-tree Rust writer's `to_string_compact`:
+    # object keys sorted (BTreeMap), no whitespace, integral floats keep
+    # their decimal point (json.dumps already prints 5.0 as "5.0").
+    check_floats(doc)
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+KEY = {
+    "net_name": "golden_net",
+    "net_fingerprint": "00000000deadbeef",
+    "dtype_bytes": 1,
+    "array_rows": 16,
+    "array_cols": 32,
+    "task_setup_cycles": 10,
+    "ifm_buffer_kib": 512,
+    "weight_buffer_kib": 128,
+    "ofm_buffer_kib": 128,
+    "bus_bytes_per_cycle": 32,
+    "mem_data_bytes_per_cycle": 8,
+    "avsm_eff_bw_pct": 85,
+    "double_buffer": True,
+    "labels": False,
+}
+
+TASK_GRAPH = {
+    "schema": "avsm-task-graph-v1",
+    "name": "golden_net",
+    "tasks": [
+        {"id": 0, "layer": 0, "label": "t0/load_w", "deps": [],
+         "kind": "dma_load", "bytes": 128, "buffer": "weights"},
+        {"id": 1, "layer": 0, "label": "t0/load_ifm", "deps": [],
+         "kind": "dma_load", "bytes": 256, "buffer": "ifm"},
+        {"id": 2, "layer": 0, "label": "t0/mac", "deps": [0, 1],
+         "kind": "compute", "cycles": 64, "macs": 2048},
+        {"id": 3, "layer": 0, "label": "t0/store", "deps": [2],
+         "kind": "dma_store", "bytes": 96},
+        {"id": 4, "layer": 1, "label": "sync", "deps": [3], "kind": "barrier"},
+    ],
+}
+
+ENTRY = {
+    "schema": "avsm-compile-cache-v1",
+    "key": KEY,
+    "layers": [
+        {"index": 0, "name": "conv0",
+         "tiling": {"kind": "conv", "cin_t": 4, "cout_t": 8, "oh_t": 6,
+                    "n_cin": 1, "n_cout": 2, "n_oh": 3, "ifm_resident": True},
+         "compute_cycles": 64, "dma_bytes": 480, "macs": 2048, "barrier": 4},
+        {"index": 1, "name": "pool1",
+         "tiling": {"kind": "vector", "oh_t": 6, "n_oh": 2},
+         "compute_cycles": 8, "dma_bytes": 96, "macs": 0, "barrier": 4},
+    ],
+    # Embedded exactly as the flow-boundary serializer renders it (compact,
+    # sorted keys) — entry_to_json stores the string verbatim.
+    "task_graph": dumps(TASK_GRAPH),
+}
+
+NEGATIVE = {
+    "schema": "avsm-compile-cache-neg-v1",
+    "key": KEY,
+    "diagnostic": "tiling infeasible: golden fixture",
+}
+
+INDEX = {
+    "schema": "avsm-compile-cache-index-v1",
+    "clock": 3,
+    "entries": {"0000000000000042": 3, "00000000deadbeef": 2},
+}
+
+
+def frontier_point(name, latency_ps, cost):
+    return {
+        "name": name,
+        "latency_ps": latency_ps,
+        "cost": float(cost),
+        "throughput_per_sec": 1e12 / latency_ps,
+    }
+
+
+def net(name, frontier):
+    return {
+        "name": name,
+        "base": "base_paper_virtex7",
+        "axes": [{"axis": "nce_freq_mhz", "values": [125, 250]}],
+        "legend": {"f": "NCE frequency (MHz)"},
+        "evaluated": len(frontier) + 4,
+        "feasible": len(frontier) + 1,
+        "infeasible": 1,
+        "errors": 1,
+        "error_sample": "nce0x0_f0: invalid configuration",
+        "bound": "max",
+        "skipped_by_bound": 1,
+        "skipped_by_occupancy": 0,
+        "skipped_by_critical_path": 1,
+        "dominated": 1,
+        "pruned": 0,
+        "compilations": 2,
+        "disk_hits": 0,
+        "negative_hits": 1,
+        "memory_hits": 1,
+        "frontier": frontier,
+    }
+
+
+CAMPAIGN = {
+    "schema": "avsm-campaign-v1",
+    "workloads": 2,
+    "grid_points": 6,
+    "threads": 2,
+    "bound": "max",
+    "skipped_by_bound": 2,
+    "errors": 2,
+    "nets": [
+        net("lenet", [frontier_point("a", 2_000_000, 5.0),
+                      frontier_point("b", 4_000_000, 3.0)]),
+        net("vgg", [frontier_point("a", 5_000_000, 5.0),
+                    frontier_point("c", 8_000_000, 3.0)]),
+    ],
+    "cross_net": {
+        "common_frontier": ["a"],
+        "frontier_membership": {"a": 2, "b": 1, "c": 1},
+    },
+    "cache": {
+        "compilations": 4,
+        "memory_hits": 2,
+        "disk_hits": 0,
+        "negative_hits": 2,
+        "rejected_entries": 0,
+        "read_errors": 0,
+    },
+}
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    fixtures = {
+        "compile_cache_v1.json": ENTRY,
+        "compile_cache_neg_v1.json": NEGATIVE,
+        "compile_cache_index_v1.json": INDEX,
+        "campaign_v1.json": CAMPAIGN,
+    }
+    for name, doc in fixtures.items():
+        path = OUT / name
+        path.write_text(dumps(doc) + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()
