@@ -1,0 +1,437 @@
+//! Crash-safe campaign resume journal (`avsm-campaign-journal-v1`).
+//!
+//! A long campaign killed mid-run (SIGKILL, OOM, power cut) should resume
+//! to the *byte-identical* report without re-simulating the units it
+//! already finished. The journal is the persistence half of that contract:
+//! an **append-only, line-delimited** file the campaign writes as units
+//! complete, cheap enough to keep on for every journaled run.
+//!
+//! # Format
+//!
+//! One JSON document per line, in the crate writer's canonical form
+//! (sorted keys, compact). The first line is the header:
+//!
+//! ```json
+//! {"schema":"avsm-campaign-journal-v1","spec":"00f3a4b58e21c97d","units":12}
+//! ```
+//!
+//! `spec` is the campaign's fingerprint — a hash over every workload's
+//! serialized net, effective base config and axes, plus the
+//! result-relevant options (bound kind, pruning, evaluation order). Every
+//! following line records one completed unit's terminal outcome:
+//!
+//! ```json
+//! {"class":"feasible","latency_ps":2400000,"unit":5}
+//! {"class":"infeasible","unit":6}
+//! {"class":"error","diag":"nce0x0: invalid configuration","unit":7}
+//! {"class":"panicked","diag":"worker died","unit":8}
+//! {"by_occupancy":true,"class":"skipped","unit":9}
+//! ```
+//!
+//! # Crash model and recovery rules
+//!
+//! Appends are **line-atomic in effect**: one `write_all` per line,
+//! newline included, so a crash mid-append leaves at most one torn final
+//! line (a prefix with no terminating newline). [`Journal::resume`]:
+//!
+//! * drops a torn final line *and truncates the file back to the last
+//!   intact line*, so later appends can never concatenate onto the tear;
+//! * **refuses loudly** on a header/spec-fingerprint mismatch — replaying
+//!   a journal from a different campaign spec would silently fabricate
+//!   results (the fingerprint uses the std hasher, so a toolchain upgrade
+//!   may also invalidate old journals: the refusal names the cause and
+//!   the fix is to re-run without `--resume`);
+//! * rejects corruption *before* the final line (that is not a crash
+//!   artifact — something else rewrote the file);
+//! * treats an absent file as an empty journal (fresh start), so
+//!   `--resume` is safe to pass unconditionally.
+//!
+//! Replay feeds [`run`](super::run): replayed feasible units are
+//! reconstructed from their persisted latency (`dse::point_from_latency`
+//! rebuilds cost/throughput from the grid config deterministically) and
+//! folded into the streaming frontier in **append order** — the
+//! interrupted run's completion order, which the file preserves for free.
+//! Frontier *membership* is order-independent (the merge is associative
+//! and seq-keyed), but the streaming statistics (dominated-on-arrival,
+//! evicted members) are not; replaying in completion order makes even
+//! those byte-identical to the uninterrupted run, with only unfinished
+//! units re-simulating.
+
+use crate::json::{obj, parse, Value};
+use crate::testkit::faults;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Schema identifier of the journal header line.
+pub const SCHEMA: &str = "avsm-campaign-journal-v1";
+
+/// Terminal outcome of one campaign unit, as journaled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UnitRecord {
+    /// Simulated; the point is reconstructed from this latency on replay.
+    Feasible { latency_ps: u64 },
+    /// Structurally infeasible tiling.
+    Infeasible,
+    /// Non-structural evaluation failure (invalid swept config, poisoned
+    /// cache slot).
+    Error { diag: String },
+    /// The unit's worker panicked; contained and recorded.
+    Panicked { diag: String },
+    /// Lower-bound pruning skipped the simulation.
+    Skipped { by_occupancy: bool },
+}
+
+impl UnitRecord {
+    fn to_line(&self, unit: usize) -> String {
+        let mut pairs: Vec<(&str, Value)> = vec![("unit", Value::from(unit as u64))];
+        match self {
+            UnitRecord::Feasible { latency_ps } => {
+                pairs.push(("class", Value::from("feasible")));
+                pairs.push(("latency_ps", Value::from(*latency_ps)));
+            }
+            UnitRecord::Infeasible => pairs.push(("class", Value::from("infeasible"))),
+            UnitRecord::Error { diag } => {
+                pairs.push(("class", Value::from("error")));
+                pairs.push(("diag", Value::from(diag.as_str())));
+            }
+            UnitRecord::Panicked { diag } => {
+                pairs.push(("class", Value::from("panicked")));
+                pairs.push(("diag", Value::from(diag.as_str())));
+            }
+            UnitRecord::Skipped { by_occupancy } => {
+                pairs.push(("class", Value::from("skipped")));
+                pairs.push(("by_occupancy", Value::from(*by_occupancy)));
+            }
+        }
+        let mut line = obj(pairs).to_string_compact();
+        line.push('\n');
+        line
+    }
+
+    fn from_value(v: &Value) -> Result<(usize, UnitRecord)> {
+        let unit = v.req_u64("unit")? as usize;
+        let rec = match v.req_str("class")? {
+            "feasible" => UnitRecord::Feasible { latency_ps: v.req_u64("latency_ps")? },
+            "infeasible" => UnitRecord::Infeasible,
+            "error" => UnitRecord::Error { diag: v.req_str("diag")?.to_string() },
+            "panicked" => UnitRecord::Panicked { diag: v.req_str("diag")?.to_string() },
+            "skipped" => UnitRecord::Skipped {
+                by_occupancy: v
+                    .get("by_occupancy")
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("missing/invalid bool field \"by_occupancy\""))?,
+            },
+            other => bail!("unknown journal record class {other:?}"),
+        };
+        Ok((unit, rec))
+    }
+}
+
+fn header_line(spec_fingerprint: u64, units: usize) -> String {
+    let mut line = obj(vec![
+        ("schema", Value::from(SCHEMA)),
+        ("spec", Value::from(format!("{spec_fingerprint:016x}"))),
+        ("units", Value::from(units as u64)),
+    ])
+    .to_string_compact();
+    line.push('\n');
+    line
+}
+
+/// An open, append-mode campaign journal.
+#[derive(Debug)]
+pub struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Start a fresh journal at `path` (truncating any previous file) with
+    /// the header line already persisted.
+    pub fn create(path: &Path, spec_fingerprint: u64, units: usize) -> Result<Journal> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating journal directory {}", parent.display()))?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating campaign journal {}", path.display()))?;
+        let mut j = Journal { file, path: path.to_path_buf() };
+        j.write_line(&header_line(spec_fingerprint, units))?;
+        Ok(j)
+    }
+
+    /// Load the journal at `path` for resumption: verify the header against
+    /// this run's fingerprint and unit count, replay the intact records,
+    /// heal a torn final line by truncating it away, and reopen for
+    /// appending. An absent file is an empty journal. Returns the open
+    /// journal plus the replayed records in **append order** (the
+    /// interrupted run's completion order — replaying frontier insertions
+    /// in that order keeps even the order-sensitive streaming statistics
+    /// byte-identical); per unit the last record wins, keeping its first
+    /// position. Units absent from the list never completed.
+    pub fn resume(
+        path: &Path,
+        spec_fingerprint: u64,
+        units: usize,
+    ) -> Result<(Journal, Vec<(usize, UnitRecord)>)> {
+        let mut records: Vec<(usize, UnitRecord)> = Vec::new();
+        if !path.exists() {
+            return Ok((Journal::create(path, spec_fingerprint, units)?, records));
+        }
+        faults::before_read("journal.read", path)
+            .with_context(|| format!("reading campaign journal {}", path.display()))?;
+        let content = std::fs::read_to_string(path)
+            .with_context(|| format!("reading campaign journal {}", path.display()))?;
+
+        // Split keeping terminators: only a '\n'-terminated line was fully
+        // appended; an unterminated final segment is the crash tear.
+        let mut intact_bytes = 0usize;
+        let mut lines: Vec<&str> = Vec::new();
+        for seg in content.split_inclusive('\n') {
+            if let Some(line) = seg.strip_suffix('\n') {
+                intact_bytes += seg.len();
+                lines.push(line);
+            }
+            // else: torn tail — dropped, and truncated away below.
+        }
+
+        if lines.is_empty() {
+            // Even the header never finished: the previous run crashed
+            // before journaling anything. Start over.
+            return Ok((Journal::create(path, spec_fingerprint, units)?, records));
+        }
+
+        let header = parse(lines[0])
+            .with_context(|| format!("corrupt journal header in {}", path.display()))?;
+        let schema = header.req_str("schema")?;
+        if schema != SCHEMA {
+            bail!("journal {} has schema {schema:?}, expected {SCHEMA:?}", path.display());
+        }
+        let want = format!("{spec_fingerprint:016x}");
+        let got = header.req_str("spec")?;
+        if got != want {
+            bail!(
+                "journal {} was written for a different campaign spec \
+                 (fingerprint {got}, this run is {want}); refusing to replay it — \
+                 re-run without --resume (or delete the journal) to start fresh",
+                path.display()
+            );
+        }
+        let jr_units = header.req_u64("units")? as usize;
+        if jr_units != units {
+            bail!(
+                "journal {} records {jr_units} units, this campaign has {units}",
+                path.display()
+            );
+        }
+
+        let mut pos: Vec<Option<usize>> = vec![None; units];
+        for (lineno, line) in lines.iter().enumerate().skip(1) {
+            // Corruption before the final line is not a crash artifact —
+            // appends are sequential — so it is refused, never skipped.
+            let (unit, rec) = parse(line)
+                .and_then(|v| UnitRecord::from_value(&v))
+                .with_context(|| {
+                    format!("corrupt journal record at {}:{}", path.display(), lineno + 1)
+                })?;
+            if unit >= units {
+                bail!(
+                    "journal record at {}:{} names unit {unit} of {units}",
+                    path.display(),
+                    lineno + 1
+                );
+            }
+            match pos[unit] {
+                Some(i) => records[i].1 = rec,
+                None => {
+                    pos[unit] = Some(records.len());
+                    records.push((unit, rec));
+                }
+            }
+        }
+
+        let file = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopening campaign journal {}", path.display()))?;
+        if intact_bytes < content.len() {
+            // Heal the tear: without this, the next append would
+            // concatenate onto the torn prefix and corrupt a record.
+            file.set_len(intact_bytes as u64)
+                .with_context(|| format!("truncating torn journal tail in {}", path.display()))?;
+        }
+        let mut j = Journal { file, path: path.to_path_buf() };
+        use std::io::Seek;
+        j.file
+            .seek(std::io::SeekFrom::End(0))
+            .with_context(|| format!("seeking campaign journal {}", path.display()))?;
+        Ok((j, records))
+    }
+
+    /// Append one completed unit's record. One `write_all`, newline
+    /// included — a crash mid-call leaves at most a torn final line, which
+    /// [`Journal::resume`] drops.
+    pub fn append(&mut self, unit: usize, rec: &UnitRecord) -> Result<()> {
+        self.write_line(&rec.to_line(unit))
+    }
+
+    fn write_line(&mut self, line: &str) -> Result<()> {
+        let bytes = line.as_bytes();
+        let write = || -> std::io::Result<()> {
+            match faults::before_write("journal.append", &self.path, bytes.len())? {
+                None => self.file.write_all(bytes),
+                Some(torn) => {
+                    // Injected crash model: persist only a prefix, then
+                    // fail the campaign the way a dying process would stop
+                    // it — the torn tail stays on disk for resume to heal.
+                    let _ = self.file.write_all(&bytes[..torn]);
+                    let _ = self.file.flush();
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        "injected torn journal append",
+                    ))
+                }
+            }
+        };
+        write().with_context(|| format!("appending to campaign journal {}", self.path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("avsm_journal_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn write_all_records(path: &Path) -> Vec<(usize, UnitRecord)> {
+        let recs = vec![
+            (0, UnitRecord::Feasible { latency_ps: 2_400_000 }),
+            (3, UnitRecord::Infeasible),
+            (1, UnitRecord::Error { diag: "bad config".into() }),
+            (4, UnitRecord::Panicked { diag: "worker died".into() }),
+            (2, UnitRecord::Skipped { by_occupancy: true }),
+            (5, UnitRecord::Skipped { by_occupancy: false }),
+        ];
+        let mut j = Journal::create(path, 0xDEAD_BEEF, 6).unwrap();
+        for (u, r) in &recs {
+            j.append(*u, r).unwrap();
+        }
+        recs
+    }
+
+    #[test]
+    fn round_trips_every_record_class() {
+        let path = tmp("roundtrip");
+        let recs = write_all_records(&path);
+        let (_, replay) = Journal::resume(&path, 0xDEAD_BEEF, 6).unwrap();
+        // Every class round-trips, and the append order is preserved.
+        assert_eq!(replay, recs);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn absent_file_resumes_empty_and_creates_the_header() {
+        let path = tmp("absent");
+        let _ = std::fs::remove_file(&path);
+        let (_, replay) = Journal::resume(&path, 7, 3).unwrap();
+        assert!(replay.is_empty());
+        // The header exists and a second resume still agrees.
+        let (_, replay) = Journal::resume(&path, 7, 3).unwrap();
+        assert!(replay.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncation_at_every_byte_of_the_final_line_drops_only_the_tail() {
+        let path = tmp("tear");
+        write_all_records(&path);
+        let full = std::fs::read_to_string(&path).unwrap();
+        let last_line_start = full[..full.len() - 1].rfind('\n').unwrap() + 1;
+        for cut in last_line_start..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let (_, replay) = Journal::resume(&path, 0xDEAD_BEEF, 6).unwrap();
+            // Unit 5 lived on the torn line; every earlier record survives
+            // in append order.
+            assert!(replay.iter().all(|(u, _)| *u != 5), "cut at byte {cut}");
+            assert_eq!(replay.len(), 5, "cut at byte {cut}");
+            assert_eq!(replay[0], (0, UnitRecord::Feasible { latency_ps: 2_400_000 }));
+            assert_eq!(replay[3], (4, UnitRecord::Panicked { diag: "worker died".into() }));
+            // The tear was truncated away, so the file parses cleanly and
+            // appending after resume stays well-formed.
+            let healed = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(healed.as_str(), &full[..last_line_start], "cut at byte {cut}");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn append_after_healing_a_tear_is_well_formed() {
+        let path = tmp("heal_append");
+        write_all_records(&path);
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        let (mut j, _) = Journal::resume(&path, 0xDEAD_BEEF, 6).unwrap();
+        j.append(5, &UnitRecord::Skipped { by_occupancy: false }).unwrap();
+        let (_, replay) = Journal::resume(&path, 0xDEAD_BEEF, 6).unwrap();
+        assert_eq!(
+            replay.last(),
+            Some(&(5, UnitRecord::Skipped { by_occupancy: false }))
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_unit_count_and_schema_mismatches_refuse_loudly() {
+        let path = tmp("mismatch");
+        write_all_records(&path);
+        let err = Journal::resume(&path, 0xBAD, 6).unwrap_err();
+        assert!(format!("{err:#}").contains("different campaign spec"), "{err:#}");
+        let err = Journal::resume(&path, 0xDEAD_BEEF, 7).unwrap_err();
+        assert!(format!("{err:#}").contains("6 units"), "{err:#}");
+        std::fs::write(&path, "{\"schema\":\"other-v1\",\"spec\":\"00\",\"units\":6}\n").unwrap();
+        let err = Journal::resume(&path, 0xDEAD_BEEF, 6).unwrap_err();
+        assert!(format!("{err:#}").contains("schema"), "{err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mid_file_corruption_is_refused_not_skipped() {
+        let path = tmp("midfile");
+        write_all_records(&path);
+        let full = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<&str> = full.lines().collect();
+        lines[2] = "{\"class\":\"feasible\",\"latency\"";
+        let corrupted = lines.join("\n") + "\n";
+        std::fs::write(&path, corrupted).unwrap();
+        let err = Journal::resume(&path, 0xDEAD_BEEF, 6).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("corrupt journal record"), "{msg}");
+        assert!(msg.contains(":3"), "line number names the culprit: {msg}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn out_of_range_unit_is_refused() {
+        let path = tmp("range");
+        let mut j = Journal::create(&path, 1, 2).unwrap();
+        j.append(2, &UnitRecord::Infeasible).unwrap();
+        let err = Journal::resume(&path, 1, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("unit 2 of 2"), "{err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn last_record_for_a_unit_wins() {
+        let path = tmp("lastwins");
+        let mut j = Journal::create(&path, 1, 1).unwrap();
+        j.append(0, &UnitRecord::Infeasible).unwrap();
+        j.append(0, &UnitRecord::Feasible { latency_ps: 9 }).unwrap();
+        let (_, replay) = Journal::resume(&path, 1, 1).unwrap();
+        // Last record wins, keeping the unit's original position.
+        assert_eq!(replay, vec![(0, UnitRecord::Feasible { latency_ps: 9 })]);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

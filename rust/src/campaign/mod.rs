@@ -69,14 +69,33 @@
 //! Every unit resolves to exactly one of *feasible* (simulated),
 //! *infeasible* (the tiler proved no legal tiling exists — a real hole in
 //! the grid), *error* (invalid swept config — a defect in the sweep, never
-//! conflated with infeasibility) or *skipped by bound*. The per-net
-//! accounting satisfies `evaluated == feasible + infeasible + errors +
-//! skipped_by_bound` and errors are surfaced with a sample diagnostic
-//! instead of silently vanishing from the results.
-//! [`CampaignOptions::fail_fast`] (CLI `--fail-fast`) turns the first
-//! *error*-classified unit into a hard abort of the whole run with that
-//! unit's diagnostic — the CI-gate mode; infeasible tilings and
-//! bound-skips are legitimate outcomes and never trigger it.
+//! conflated with infeasibility), *panicked* (the unit's worker unwound —
+//! contained per unit, see the failure policy below) or *skipped by
+//! bound*. The per-net accounting satisfies `evaluated == feasible +
+//! infeasible + errors + panics + skipped_by_bound` and errors/panics are
+//! surfaced with sample diagnostics instead of silently vanishing from
+//! the results. [`CampaignOptions::fail_fast`] (CLI `--fail-fast`) turns
+//! the first *error*- or *panicked*-classified unit into a hard abort of
+//! the whole run with that unit's diagnostic — the CI-gate mode;
+//! infeasible tilings and bound-skips are legitimate outcomes and never
+//! trigger it.
+//!
+//! # Failure policy
+//!
+//! A multi-hour campaign must survive a bad unit, a torn cache write or a
+//! killed process without losing or corrupting results. Faults therefore
+//! *degrade* — to a recompile, an error row or a dropped torn tail —
+//! never into wrong numbers, and every degradation is attributed in the
+//! report. The contract is exercised by the seeded fault-injection
+//! harness ([`crate::testkit::faults`]):
+//!
+//! | fault | classified as | degradation |
+//! |-------|---------------|-------------|
+//! | unit worker panics (resolve or simulate) | [`NetOutcome::panics`] + [`NetOutcome::panic_sample`] | contained per job by the pool ([`pool::JobDied`]); every other unit completes; honors `fail_fast` |
+//! | cache read error / torn or stale entry | [`NetOutcome::read_errors`] / [`NetOutcome::rejected`] | recompiled and rewritten — frontiers byte-identical to a clean run |
+//! | frontier mutex poisoned by a panicking worker | — | lock recovered ([`std::sync::PoisonError::into_inner`]): frontier inserts are atomic-by-construction, so a poisoned frontier is still consistent |
+//! | journal torn final line (crash mid-append) | — | torn tail dropped and truncated away on resume ([`journal`]) |
+//! | cache lock held by a dead process | lock-steal counter ([`store`]) | stale lock stolen after a liveness check; lock timeout degrades to unlocked last-writer-wins, never a deadlock |
 //!
 //! # Persistence model
 //!
@@ -94,9 +113,20 @@
 //! campaign still shares compilations in memory, per net, across the
 //! whole grid.
 //!
+//! Bounded disk caches ([`CampaignOptions::cache_max_entries`]) serialize
+//! their LRU index read-modify-write and evictions across *processes* via
+//! an advisory lock file (see [`store`]), so concurrent campaigns sharing
+//! one cache directory lose neither touches nor evictions. With
+//! [`CampaignOptions::journal`] every completed unit is appended to a
+//! crash-safe resume journal ([`journal`]);
+//! [`CampaignOptions::resume`] replays it, so a killed campaign
+//! reproduces its report byte-identically while re-simulating only the
+//! unfinished units.
+//!
 //! [`CompileKey`]: crate::compiler::CompileKey
 
 pub mod frontier;
+pub mod journal;
 pub mod pool;
 pub mod store;
 
@@ -209,12 +239,22 @@ pub struct CampaignOptions {
     /// scheduling heuristic — frontiers are byte-identical in any order —
     /// and inert when `prune` is off.
     pub order_by_bound: bool,
-    /// Abort the whole run on the first *error*-classified unit (invalid
-    /// swept config, poisoned cache slot), returning that unit's
-    /// diagnostic as the campaign error — the CI co-design-gate mode.
-    /// Infeasible tilings and bound-skips never trigger it. Off by
-    /// default.
+    /// Abort the whole run on the first *error*- or *panicked*-classified
+    /// unit (invalid swept config, poisoned cache slot, dead worker),
+    /// returning that unit's diagnostic as the campaign error — the CI
+    /// co-design-gate mode. Infeasible tilings and bound-skips never
+    /// trigger it. Off by default.
     pub fail_fast: bool,
+    /// Append every completed unit's terminal outcome to this crash-safe
+    /// resume journal (CLI `--journal`; see [`journal`]). `None` (default)
+    /// journals nothing.
+    pub journal: Option<PathBuf>,
+    /// Replay an existing journal at [`CampaignOptions::journal`] before
+    /// running (CLI `--resume`): journaled units are folded into the
+    /// result without re-resolving or re-simulating, an absent journal is
+    /// a fresh start, and a spec-fingerprint mismatch refuses loudly.
+    /// Ignored without a journal path.
+    pub resume: bool,
 }
 
 impl Default for CampaignOptions {
@@ -228,6 +268,8 @@ impl Default for CampaignOptions {
             bound: BoundKind::Max,
             order_by_bound: true,
             fail_fast: false,
+            journal: None,
+            resume: false,
         }
     }
 }
@@ -248,7 +290,7 @@ pub struct NetOutcome {
     /// [`CampaignOptions::keep_points`]).
     pub points: Vec<DesignPoint>,
     /// Grid points evaluated (the full grid). Always equals
-    /// `feasible + infeasible + errors + skipped_by_bound`.
+    /// `feasible + infeasible + errors + panics + skipped_by_bound`.
     pub evaluated: usize,
     /// Points that compiled and simulated.
     pub feasible: usize,
@@ -259,6 +301,12 @@ pub struct NetOutcome {
     pub errors: usize,
     /// First error diagnostic, for the report.
     pub error_sample: Option<String>,
+    /// Units whose worker panicked (resolve or simulate). Contained per
+    /// unit by the pool — counted and sampled like errors, kept separate
+    /// because a panic is a harness defect, not a sweep defect.
+    pub panics: usize,
+    /// First panic diagnostic, for the report.
+    pub panic_sample: Option<String>,
     /// The bound kind this net was pruned with ([`CampaignOptions::bound`]
     /// — identical across nets of one run; carried per net so a serialized
     /// outcome stays self-describing).
@@ -316,6 +364,8 @@ pub struct CampaignResult {
     pub skipped_by_bound: usize,
     /// Non-structural evaluation failures across all nets.
     pub errors: usize,
+    /// Units whose worker panicked, across all nets (contained per unit).
+    pub panics: usize,
 }
 
 impl CampaignResult {
@@ -345,6 +395,16 @@ enum Resolved {
     },
     Infeasible,
     Error(String),
+    /// The unit's phase-1 worker panicked (contained by the pool), or the
+    /// journal replayed a panic recorded by the interrupted run.
+    Panicked(String),
+    /// Journal-replayed feasible unit (marker): the point itself is
+    /// reconstructed from the journal's persisted latency and folded into
+    /// the frontier in append order, without re-resolving or
+    /// re-simulating.
+    ReplayedFeasible,
+    /// Journal-replayed bound-skip: stays skipped on resume.
+    ReplayedSkipped { by_occupancy: bool },
     /// Fail-fast cancellation marker: the run is aborting, this unit was
     /// never classified. Only produced when `fail_fast` is set, and a run
     /// that produced any is guaranteed to abort (the flag is only raised
@@ -358,6 +418,37 @@ enum UnitOutcome {
     /// Skipped; `by_occupancy` records whether the occupancy bound alone
     /// would have refused the candidate at that moment.
     SkippedByBound { by_occupancy: bool },
+}
+
+/// Lock with poison recovery: a worker that panicked while *reading* a
+/// frontier (the only lock use off the coordinating thread) poisons the
+/// mutex without ever leaving the frontier half-mutated — every mutation
+/// happens in one `insert_with_seq` call on the coordinating thread — so
+/// the data is still consistent and the campaign keeps going instead of
+/// cascading one dead unit into a crashed run.
+fn lock_recovered<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Fingerprint of everything that determines a campaign's per-unit
+/// outcomes: each workload's serialized net, effective base config and
+/// axes, plus the result-relevant options (bound kind, effective pruning,
+/// evaluation order). Thread count and cache settings are deliberately
+/// excluded — they may legitimately differ between a run and its resume.
+/// Journals refuse to replay across differing fingerprints.
+fn spec_fingerprint(spec: &CampaignSpec, opts: &CampaignOptions, prune: bool) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    for ni in 0..spec.workloads.len() {
+        crate::graph::graph_to_json(&spec.workloads[ni].net).hash(&mut h);
+        spec.base_of(ni).to_json().to_string_compact().hash(&mut h);
+        spec.axes_of(ni).to_json().to_string_compact().hash(&mut h);
+    }
+    opts.bound.key().hash(&mut h);
+    prune.hash(&mut h);
+    opts.order_by_bound.hash(&mut h);
+    opts.keep_points.hash(&mut h);
+    h.finish()
 }
 
 /// Run a campaign: every workload x its grid in one two-phase fan-out
@@ -406,13 +497,36 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
 
     let prune = opts.prune && !opts.keep_points;
 
+    // Crash-safe resume journal: on resume, replay the interrupted run's
+    // completed units (refusing loudly on a spec mismatch); otherwise
+    // start a fresh journal. `replayed[u]` short-circuits unit `u` in
+    // both phases below.
+    let mut journal: Option<journal::Journal> = None;
+    let mut replay_order: Vec<(usize, journal::UnitRecord)> = Vec::new();
+    if let Some(path) = &opts.journal {
+        let fp = spec_fingerprint(spec, opts, prune);
+        if opts.resume {
+            let (j, recs) = journal::Journal::resume(path, fp, jobs)?;
+            journal = Some(j);
+            replay_order = recs;
+        } else {
+            journal = Some(journal::Journal::create(path, fp, jobs)?);
+        }
+    }
+    let mut replayed: Vec<Option<&journal::UnitRecord>> = vec![None; jobs];
+    for (u, rec) in &replay_order {
+        replayed[*u] = Some(rec);
+    }
+
     // Phase 1 — resolve every unit's compiled artifact (memory → disk →
     // compile) and its admissible lower bound. One classifier shared with
     // `dse::evaluate_outcome`: invalid swept configs and poisoned cache
     // slots are errors; a post-validation cache failure is structural
     // tiling infeasibility (possibly replayed from a persisted negative
-    // record). Under fail_fast the first error raises a flag that lets
-    // the remaining workers bail out cheaply — the run aborts either way.
+    // record). A worker that panics is contained by the pool and comes
+    // back as a structured `JobDied`, classified `Panicked` for its unit
+    // alone. Under fail_fast the first error raises a flag that lets the
+    // remaining workers bail out cheaply — the run aborts either way.
     let cancelled = std::sync::atomic::AtomicBool::new(false);
     let resolved: Vec<Resolved> = pool::parallel_map(jobs, opts.threads, |u| {
         use std::sync::atomic::Ordering;
@@ -421,6 +535,18 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         }
         let (ni, ci) = locate(u);
         let sys = &grids[ni][ci];
+        if let Some(rec) = replayed[u] {
+            use journal::UnitRecord as R;
+            return match rec {
+                R::Feasible { .. } => Resolved::ReplayedFeasible,
+                R::Infeasible => Resolved::Infeasible,
+                R::Error { diag } => Resolved::Error(diag.clone()),
+                R::Panicked { diag } => Resolved::Panicked(diag.clone()),
+                R::Skipped { by_occupancy } => {
+                    Resolved::ReplayedSkipped { by_occupancy: *by_occupancy }
+                }
+            };
+        }
         let net = &spec.workloads[ni].net;
         match dse::resolve_classified(net, sys, &sys.name, || {
             caches[ni].get_or_compile(net, sys)
@@ -455,13 +581,27 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             }
             Err(_) => Resolved::Infeasible,
         }
-    });
+    })
+    .into_iter()
+    .enumerate()
+    .map(|(u, r)| {
+        r.unwrap_or_else(|died| {
+            let (ni, ci) = locate(u);
+            Resolved::Panicked(format!("{}: {}", grids[ni][ci].name, died.message))
+        })
+    })
+    .collect();
 
-    // Fail-fast gate: abort on the first error in deterministic unit
-    // order, before any simulation runs.
+    // Fail-fast gate: abort on the first error or panic in deterministic
+    // unit order, before any simulation runs.
     if opts.fail_fast {
         for (u, r) in resolved.iter().enumerate() {
-            if let Resolved::Error(reason) = r {
+            let reason = match r {
+                Resolved::Error(reason) => Some(reason),
+                Resolved::Panicked(reason) => Some(reason),
+                _ => None,
+            };
+            if let Some(reason) = reason {
                 let (ni, _) = locate(u);
                 bail!(
                     "campaign aborted (fail_fast) on workload {:?}: {reason}",
@@ -471,9 +611,32 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         }
     }
 
+    // Journal every fresh phase-1 terminal (replayed units are already on
+    // disk; compiled units journal their phase-2 outcome as it arrives).
+    if let Some(j) = journal.as_mut() {
+        for (u, r) in resolved.iter().enumerate() {
+            if replayed[u].is_some() {
+                continue;
+            }
+            let rec = match r {
+                Resolved::Infeasible => Some(journal::UnitRecord::Infeasible),
+                Resolved::Error(d) => Some(journal::UnitRecord::Error { diag: d.clone() }),
+                Resolved::Panicked(d) => {
+                    Some(journal::UnitRecord::Panicked { diag: d.clone() })
+                }
+                _ => None,
+            };
+            if let Some(rec) = rec {
+                j.append(u, &rec)?;
+            }
+        }
+    }
+
     let mut infeasible = vec![0usize; n_nets];
     let mut errors = vec![0usize; n_nets];
     let mut error_sample: Vec<Option<String>> = vec![None; n_nets];
+    let mut panics = vec![0usize; n_nets];
+    let mut panic_sample: Vec<Option<String>> = vec![None; n_nets];
     for (u, r) in resolved.iter().enumerate() {
         let (ni, _) = locate(u);
         match r {
@@ -484,7 +647,15 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
                     error_sample[ni] = Some(reason.clone());
                 }
             }
-            Resolved::Compiled { .. } => {}
+            Resolved::Panicked(reason) => {
+                panics[ni] += 1;
+                if panic_sample[ni].is_none() {
+                    panic_sample[ni] = Some(reason.clone());
+                }
+            }
+            Resolved::Compiled { .. }
+            | Resolved::ReplayedFeasible
+            | Resolved::ReplayedSkipped { .. } => {}
             Resolved::Cancelled => unreachable!("cancellation implies a fail_fast abort"),
         }
     }
@@ -521,8 +692,40 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
     let mut skipped_occ = vec![0usize; n_nets];
     let mut skipped_cp = vec![0usize; n_nets];
 
+    // Fold the journal-replayed units in before phase 2 starts, in append
+    // order — the interrupted run's completion order, which the journal
+    // preserves for free. Frontier membership is order-independent, but
+    // the streaming statistics (dominated-on-arrival, evictions) are not;
+    // completion order replays them exactly, and pre-seeding the
+    // frontiers lets the bound gate prune fresh units against the
+    // replayed members exactly as the uninterrupted run would have.
+    for (u, rec) in &replay_order {
+        let (ni, ci) = locate(*u);
+        match rec {
+            journal::UnitRecord::Feasible { latency_ps } => {
+                feasible[ni] += 1;
+                let sys = &grids[ni][ci];
+                let p = dse::point_from_latency(sys, sys.name.clone(), *latency_ps);
+                if opts.keep_points {
+                    kept[ni][ci] = Some(p.clone());
+                }
+                lock_recovered(&frontiers[ni]).insert_with_seq(p, ci);
+            }
+            journal::UnitRecord::Skipped { by_occupancy: true } => skipped_occ[ni] += 1,
+            journal::UnitRecord::Skipped { by_occupancy: false } => skipped_cp[ni] += 1,
+            // Terminal classes (infeasible / error / panicked) were
+            // already counted from their `Resolved` markers above.
+            _ => {}
+        }
+    }
+
     // Phase 2 — simulate the admitted units, streaming arrivals into the
-    // per-net frontiers on the coordinating thread.
+    // per-net frontiers on the coordinating thread. A worker panic
+    // arrives as `Err(JobDied)` for that unit alone; the journal append
+    // happens here too (the collector is single-threaded, so appends
+    // never interleave).
+    let mut journal_error: Option<anyhow::Error> = None;
+    let mut first_panic: Option<(usize, String)> = None;
     pool::for_each_completed(
         eval_units.len(),
         opts.threads,
@@ -534,7 +737,7 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
                 unreachable!("eval schedule only lists compiled units");
             };
             if prune {
-                let frontier = frontiers[ni].lock().unwrap();
+                let frontier = lock_recovered(&frontiers[ni]);
                 if !frontier.admits(*bound, *cost) {
                     // Provenance, under the same lock (same frontier
                     // state): would the occupancy bound alone have
@@ -547,26 +750,64 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             UnitOutcome::Feasible(dse::evaluate_compiled(compiled, sys, sys.name.clone()))
         },
         |j, outcome| {
-            let (ni, ci) = locate(eval_units[j]);
-            match outcome {
-                UnitOutcome::Feasible(p) => {
+            let u = eval_units[j];
+            let (ni, ci) = locate(u);
+            let rec = match outcome {
+                Ok(UnitOutcome::Feasible(p)) => {
                     feasible[ni] += 1;
+                    let latency_ps = p.latency_ps;
                     if opts.keep_points {
                         kept[ni][ci] = Some(p.clone());
                     }
-                    frontiers[ni].lock().unwrap().insert_with_seq(p, ci);
+                    lock_recovered(&frontiers[ni]).insert_with_seq(p, ci);
+                    journal::UnitRecord::Feasible { latency_ps }
                 }
-                UnitOutcome::SkippedByBound { by_occupancy: true } => skipped_occ[ni] += 1,
-                UnitOutcome::SkippedByBound { by_occupancy: false } => skipped_cp[ni] += 1,
+                Ok(UnitOutcome::SkippedByBound { by_occupancy }) => {
+                    if by_occupancy {
+                        skipped_occ[ni] += 1;
+                    } else {
+                        skipped_cp[ni] += 1;
+                    }
+                    journal::UnitRecord::Skipped { by_occupancy }
+                }
+                Err(died) => {
+                    let diag = format!("{}: {}", grids[ni][ci].name, died.message);
+                    panics[ni] += 1;
+                    if panic_sample[ni].is_none() {
+                        panic_sample[ni] = Some(diag.clone());
+                    }
+                    if first_panic.is_none() {
+                        first_panic = Some((ni, diag.clone()));
+                    }
+                    journal::UnitRecord::Panicked { diag }
+                }
+            };
+            if journal_error.is_none() {
+                if let Some(j) = journal.as_mut() {
+                    if let Err(e) = j.append(u, &rec) {
+                        journal_error = Some(e);
+                    }
+                }
             }
         },
     );
+    if let Some(e) = journal_error {
+        return Err(e);
+    }
+    if opts.fail_fast {
+        if let Some((ni, diag)) = first_panic {
+            bail!(
+                "campaign aborted (fail_fast) on workload {:?}: {diag}",
+                spec.workloads[ni].net.name
+            );
+        }
+    }
 
     let mut nets = Vec::with_capacity(n_nets);
     let (mut compiles, mut disk_hits, mut neg_hits, mut mem_hits) = (0u64, 0u64, 0u64, 0u64);
     let (mut rejected, mut read_errors) = (0u64, 0u64);
     for (ni, frontier) in frontiers.into_iter().enumerate() {
-        let frontier = frontier.into_inner().unwrap();
+        let frontier = frontier.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
         let cache = &caches[ni];
         compiles += cache.compiles();
         disk_hits += cache.disk_hits();
@@ -585,6 +826,8 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             infeasible: infeasible[ni],
             errors: errors[ni],
             error_sample: error_sample[ni].take(),
+            panics: panics[ni],
+            panic_sample: panic_sample[ni].take(),
             bound: opts.bound,
             skipped_by_bound: skipped_occ[ni] + skipped_cp[ni],
             skipped_by_occupancy: skipped_occ[ni],
@@ -615,6 +858,7 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         bound: opts.bound,
         skipped_by_bound: skipped_total,
         errors: errors.iter().sum(),
+        panics: panics.iter().sum(),
     })
 }
 
@@ -1023,5 +1267,241 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("avsm_campaign_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn injected_panic_is_contained_and_surviving_units_match_exclusion() {
+        use crate::testkit::faults::{self, FaultKind};
+        // Geometry-only axes: every unit is its own structural key, so the
+        // dead unit's poisoned cache slot cannot leak into any other unit.
+        let dir = test_dir("panic");
+        let geoms = vec![(8u32, 16u32), (16, 32), (32, 64)];
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().array_geometries(geoms.clone()),
+        );
+        let result = {
+            // threads: 1 makes unit 0 the first (and only) store read the
+            // armed failpoint sees, so exactly that unit dies.
+            let _g = faults::arm("store.read", &dir, FaultKind::Panic, 1);
+            run(
+                &spec,
+                &CampaignOptions {
+                    threads: 1,
+                    cache_dir: Some(dir.clone()),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let got = &result.nets[0];
+        assert_eq!(got.panics, 1, "exactly the faulted unit died");
+        let sample = got.panic_sample.as_deref().expect("panic diagnostic retained");
+        assert!(sample.contains("injected panic"), "{sample}");
+        assert_eq!(
+            got.evaluated,
+            got.feasible + got.infeasible + got.errors + got.panics + got.skipped_by_bound,
+            "the panicked unit stays classified exactly once"
+        );
+        assert_eq!(result.panics, 1);
+
+        // The surviving units' frontier is byte-identical to a clean
+        // campaign over the same grid with the dead unit's geometry
+        // excluded — one panic subtracts one unit, nothing else.
+        let excluded = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().array_geometries(geoms[1..].to_vec()),
+        );
+        let clean =
+            run(&excluded, &CampaignOptions { threads: 1, ..Default::default() }).unwrap();
+        let want = &clean.nets[0];
+        assert_eq!(got.frontier.len(), want.frontier.len());
+        for (a, b) in got.frontier.iter().zip(&want.frontier) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.latency_ps, b.latency_ps);
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            assert_eq!(a.sys, b.sys);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fail_fast_aborts_on_injected_panic() {
+        use crate::testkit::faults::{self, FaultKind};
+        let dir = test_dir("ff_panic");
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().array_geometries(vec![(16, 32), (32, 64)]),
+        );
+        let _g = faults::arm("store.read", &dir, FaultKind::Panic, 1);
+        let err = run(
+            &spec,
+            &CampaignOptions {
+                threads: 1,
+                cache_dir: Some(dir.clone()),
+                fail_fast: true,
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fail_fast"), "{msg}");
+        assert!(msg.contains("injected panic"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn poisoned_frontier_lock_is_recovered() {
+        let m = std::sync::Mutex::new(StreamingFrontier::new());
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("worker died while holding the frontier");
+        }));
+        assert!(m.is_poisoned(), "the panic above must poison the mutex");
+        // The campaign keeps going: reads and inserts still work.
+        lock_recovered(&m).insert_with_seq(
+            dse::point_from_latency(&SystemConfig::base_paper(), "p".into(), 100),
+            0,
+        );
+        assert_eq!(lock_recovered(&m).len(), 1);
+    }
+
+    /// Everything two campaign results must agree on for the resume
+    /// contract — all report-visible fields except the cache statistics,
+    /// which legitimately differ (a resumed run compiles less).
+    fn assert_same_outcomes(a: &CampaignResult, b: &CampaignResult, tag: &str) {
+        assert_eq!(a.grid_points, b.grid_points, "{tag}");
+        assert_eq!(a.skipped_by_bound, b.skipped_by_bound, "{tag}");
+        assert_eq!(a.errors, b.errors, "{tag}");
+        assert_eq!(a.panics, b.panics, "{tag}");
+        assert_eq!(a.nets.len(), b.nets.len(), "{tag}");
+        for (x, y) in a.nets.iter().zip(&b.nets) {
+            assert_eq!(x.net, y.net, "{tag}");
+            assert_eq!(
+                (x.evaluated, x.feasible, x.infeasible, x.errors, x.panics),
+                (y.evaluated, y.feasible, y.infeasible, y.errors, y.panics),
+                "{tag}: {}",
+                x.net
+            );
+            assert_eq!(
+                (x.skipped_by_bound, x.skipped_by_occupancy, x.skipped_by_critical_path),
+                (y.skipped_by_bound, y.skipped_by_occupancy, y.skipped_by_critical_path),
+                "{tag}: {}",
+                x.net
+            );
+            assert_eq!((x.dominated, x.pruned), (y.dominated, y.pruned), "{tag}: {}", x.net);
+            assert_eq!(x.error_sample, y.error_sample, "{tag}");
+            assert_eq!(x.panic_sample, y.panic_sample, "{tag}");
+            assert_eq!(x.frontier.len(), y.frontier.len(), "{tag}: {}", x.net);
+            for (p, q) in x.frontier.iter().zip(&y.frontier) {
+                assert_eq!(p.name, q.name, "{tag}");
+                assert_eq!(p.latency_ps, q.latency_ps, "{tag}: {}", p.name);
+                assert_eq!(p.cost.to_bits(), q.cost.to_bits(), "{tag}: {}", p.name);
+                assert_eq!(
+                    p.throughput.to_bits(),
+                    q.throughput.to_bits(),
+                    "{tag}: {}",
+                    p.name
+                );
+                assert_eq!(p.sys, q.sys, "{tag}: {}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn resumed_campaign_reproduces_the_uninterrupted_result() {
+        // Interrupt a journaled run after every possible number of
+        // completed units — with and without a torn final line — and
+        // resume: every report-visible field must match the uninterrupted
+        // run, including the order-sensitive dominated/pruned statistics
+        // and the skip attribution on this pruning-heavy grid.
+        let dir = test_dir("resume");
+        let journal_path = dir.join("run.jsonl");
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new()
+                .array_geometries(vec![(16, 32), (32, 64)])
+                .nce_freqs_mhz(vec![500, 250, 125, 50]),
+        );
+        let opts = CampaignOptions {
+            threads: 1,
+            journal: Some(journal_path.clone()),
+            ..Default::default()
+        };
+        let full = run(&spec, &opts).unwrap();
+        let journal_text = std::fs::read_to_string(&journal_path).unwrap();
+        let lines: Vec<&str> = journal_text.split_inclusive('\n').collect();
+        assert_eq!(lines.len(), 1 + 8, "header + one record per unit");
+        assert!(full.skipped_by_bound > 0, "the grid must exercise skip replay");
+
+        let resume_opts = CampaignOptions { resume: true, ..opts.clone() };
+        for keep in 0..lines.len() {
+            for tear in [false, true] {
+                let mut partial: String = lines[..=keep].concat();
+                if tear {
+                    // A crash mid-append: half of the next record, no
+                    // terminating newline. Resume must drop and heal it.
+                    let Some(next) = lines.get(keep + 1) else { continue };
+                    partial.push_str(&next[..next.len() / 2]);
+                }
+                std::fs::write(&journal_path, &partial).unwrap();
+                let resumed = run(&spec, &resume_opts).unwrap();
+                assert_same_outcomes(&full, &resumed, &format!("keep {keep} tear {tear}"));
+            }
+        }
+
+        // A fully-journaled resume replays everything: zero compilations.
+        std::fs::write(&journal_path, &journal_text).unwrap();
+        let resumed = run(&spec, &resume_opts).unwrap();
+        assert_eq!(resumed.compiles, 0, "nothing left to re-resolve");
+        assert_same_outcomes(&full, &resumed, "full journal");
+
+        // --resume with no journal on disk is a fresh start, not an error.
+        std::fs::remove_file(&journal_path).unwrap();
+        let fresh = run(&spec, &resume_opts).unwrap();
+        assert_same_outcomes(&full, &fresh, "absent journal");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_refuses_a_journal_from_a_different_spec() {
+        let dir = test_dir("resume_mismatch");
+        let journal_path = dir.join("run.jsonl");
+        let spec = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().nce_freqs_mhz(vec![250, 125]),
+        );
+        let opts = CampaignOptions {
+            threads: 1,
+            journal: Some(journal_path.clone()),
+            ..Default::default()
+        };
+        run(&spec, &opts).unwrap();
+
+        // Same unit count, different grid: replaying would fabricate
+        // results, so the fingerprint must refuse.
+        let other = CampaignSpec::homogeneous(
+            vec![models::lenet(28)],
+            SystemConfig::base_paper(),
+            SweepAxes::new().nce_freqs_mhz(vec![500, 50]),
+        );
+        let err = run(&other, &CampaignOptions { resume: true, ..opts }).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("different campaign spec"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -18,11 +18,56 @@
 //!   order is timing-dependent; with one worker (or `jobs <= 1`) the
 //!   collector runs inline in job order.
 //!
-//! A panic in a job propagates: the channel drains, the scope joins every
-//! worker, and the panic resumes on the caller. A panic in the collector
-//! closes the receiver, which workers observe as a send error and exit.
+//! A panic in a job is *contained*: the worker catches the unwind and that
+//! job's slot carries a structured [`JobDied`] error (job index + rendered
+//! panic message) instead of tearing down the pool — every other job still
+//! runs and delivers its result, so one bad unit cannot kill a campaign.
+//! A panic in the collector closes the receiver, which workers observe as
+//! a send error and exit.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
+
+/// A job whose closure panicked: the pool caught the unwind and reports
+/// the job index plus a best-effort rendering of the panic payload, so
+/// callers see a structured per-job error instead of a process abort.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobDied {
+    /// Index of the job whose closure panicked.
+    pub job: usize,
+    /// Rendered panic payload (see [`panic_message`]).
+    pub message: String,
+}
+
+impl std::fmt::Display for JobDied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pool job {} died: {}", self.job, self.message)
+    }
+}
+
+impl std::error::Error for JobDied {}
+
+/// Best-effort rendering of a panic payload (the `Box<dyn Any>` from
+/// `catch_unwind`): `&str` and `String` payloads — everything `panic!`
+/// and `assert!` produce — come back verbatim; any other payload type
+/// gets a fixed placeholder.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn run_job<T, F>(f: &F, i: usize) -> Result<T, JobDied>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    catch_unwind(AssertUnwindSafe(|| f(i)))
+        .map_err(|p| JobDied { job: i, message: panic_message(p.as_ref()) })
+}
 
 /// Number of workers for `requested` threads (0 = one per available CPU),
 /// capped by the job count, floored at one.
@@ -36,30 +81,40 @@ pub fn resolve_threads(requested: usize, jobs: usize) -> usize {
 }
 
 /// Run `jobs` invocations of `f` on up to `threads` workers (0 = all CPUs)
-/// and return the results in job order.
-pub fn parallel_map<T, F>(jobs: usize, threads: usize, f: F) -> Vec<T>
+/// and return the per-job results in job order. A job whose closure
+/// panicked occupies its slot as `Err(JobDied)`; all other jobs still run.
+pub fn parallel_map<T, F>(jobs: usize, threads: usize, f: F) -> Vec<Result<T, JobDied>>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut slots: Vec<Option<T>> = Vec::with_capacity(jobs);
+    let mut slots: Vec<Option<Result<T, JobDied>>> = Vec::with_capacity(jobs);
     slots.resize_with(jobs, || None);
     for_each_completed(jobs, threads, f, |i, v| slots[i] = Some(v));
     slots
         .into_iter()
-        .map(|s| s.expect("pool: job produced no result"))
+        .enumerate()
+        .map(|(i, s)| {
+            // Unreachable in practice (workers catch unwinds and the inline
+            // collector cannot drop a send), but an empty slot degrades to
+            // a structured error rather than killing the caller.
+            s.unwrap_or_else(|| {
+                Err(JobDied { job: i, message: "job produced no result".into() })
+            })
+        })
         .collect()
 }
 
 /// Run `jobs` invocations of `f` on up to `threads` workers (0 = all CPUs),
 /// delivering each `(job index, result)` to `collect` on the calling thread
 /// as soon as it is available — the streaming primitive behind the
-/// campaign's online Pareto frontier.
+/// campaign's online Pareto frontier. A panicking job delivers
+/// `Err(JobDied)` for its index; the remaining jobs are unaffected.
 pub fn for_each_completed<T, F, C>(jobs: usize, threads: usize, f: F, mut collect: C)
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
-    C: FnMut(usize, T),
+    C: FnMut(usize, Result<T, JobDied>),
 {
     if jobs == 0 {
         return;
@@ -67,13 +122,13 @@ where
     let threads = resolve_threads(threads, jobs);
     if threads == 1 {
         for i in 0..jobs {
-            let v = f(i);
+            let v = run_job(&f, i);
             collect(i, v);
         }
         return;
     }
     std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, JobDied>)>();
         let f = &f;
         for w in 0..threads {
             let tx = tx.clone();
@@ -82,7 +137,7 @@ where
                 while i < jobs {
                     // A send error means the receiver is gone (collector
                     // panicked): stop producing.
-                    if tx.send((i, f(i))).is_err() {
+                    if tx.send((i, run_job(f, i))).is_err() {
                         return;
                     }
                     i += threads;
@@ -104,7 +159,10 @@ mod tests {
     #[test]
     fn map_preserves_job_order_regardless_of_workers() {
         for threads in [0usize, 1, 2, 7] {
-            let out = parallel_map(23, threads, |i| i * i);
+            let out: Vec<usize> = parallel_map(23, threads, |i| i * i)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
             assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
         }
     }
@@ -113,7 +171,7 @@ mod tests {
     fn streaming_delivers_every_job_exactly_once() {
         let mut seen = vec![0u32; 50];
         for_each_completed(50, 4, |i| i, |i, v| {
-            assert_eq!(i, v);
+            assert_eq!(i, v.unwrap());
             seen[i] += 1;
         });
         assert!(seen.iter().all(|&c| c == 1));
@@ -129,7 +187,7 @@ mod tests {
     #[test]
     fn zero_jobs_is_a_no_op() {
         let calls = AtomicUsize::new(0);
-        let out: Vec<u32> = parallel_map(0, 4, |_| {
+        let out: Vec<Result<u32, JobDied>> = parallel_map(0, 4, |_| {
             calls.fetch_add(1, Ordering::Relaxed);
             0
         });
@@ -143,5 +201,66 @@ mod tests {
         assert_eq!(resolve_threads(2, 100), 2);
         assert!(resolve_threads(0, 100) >= 1);
         assert_eq!(resolve_threads(5, 0), 1);
+    }
+
+    #[test]
+    fn panicking_job_degrades_to_job_died_and_spares_the_rest() {
+        for threads in [1usize, 4] {
+            let out = parallel_map(9, threads, |i| {
+                if i == 4 {
+                    panic!("unit 4 exploded");
+                }
+                i * 10
+            });
+            for (i, r) in out.iter().enumerate() {
+                if i == 4 {
+                    let died = r.as_ref().unwrap_err();
+                    assert_eq!(died.job, 4, "threads={threads}");
+                    assert_eq!(died.message, "unit 4 exploded", "threads={threads}");
+                    assert!(died.to_string().contains("pool job 4 died"));
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i * 10, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_reports_panics_per_job() {
+        let mut died = Vec::new();
+        let mut ok = Vec::new();
+        for_each_completed(
+            12,
+            3,
+            |i| {
+                if i % 5 == 0 {
+                    panic!("boom {i}");
+                }
+                i
+            },
+            |i, v| match v {
+                Ok(v) => ok.push(v),
+                Err(d) => {
+                    assert_eq!(d.job, i);
+                    died.push((i, d.message));
+                }
+            },
+        );
+        died.sort();
+        ok.sort();
+        assert_eq!(
+            died,
+            vec![(0, "boom 0".into()), (5, "boom 5".into()), (10, "boom 10".into())]
+        );
+        assert_eq!(ok, vec![1, 2, 3, 4, 6, 7, 8, 9, 11]);
+    }
+
+    #[test]
+    fn non_string_panic_payload_gets_a_placeholder() {
+        let out = parallel_map(1, 1, |_| -> u32 { std::panic::panic_any(42u32) });
+        assert_eq!(
+            out[0].as_ref().unwrap_err().message,
+            "non-string panic payload"
+        );
     }
 }

@@ -52,10 +52,28 @@
 //! The index is advisory and crash-tolerant — corrupted or missing, it is
 //! restarted empty, never trusted into returning wrong artifacts (entry
 //! loads still verify their embedded keys as always). Writes go through
-//! the same temp-file + rename protocol as entries; cross-*process*
-//! coordination of the index (advisory locks) remains future work, so
-//! concurrent writers may momentarily overshoot the bound — never corrupt
-//! it.
+//! the same temp-file + rename protocol as entries.
+//!
+//! # Cross-process coordination
+//!
+//! The index read-modify-write (touch → evict → persist) is serialized
+//! across *processes* by a pure-std advisory lock: a `index.lock` file
+//! created with `create_new` (atomic on every platform) holding the
+//! owner's PID. Concurrent campaigns sharing one cache directory
+//! therefore lose neither touches nor evictions — each touch reloads the
+//! on-disk index under the lock, so another process's updates are merged,
+//! not overwritten. Liveness over strictness, in line with the advisory
+//! index: a lock whose recorded holder is provably dead (the PID no
+//! longer exists) is **stolen** after a liveness check (counted in
+//! [`PersistentCache::lock_steals`]), and an acquisition that times out
+//! (~500 ms) degrades to the old unlocked last-writer-wins behaviour
+//! rather than deadlocking — the bound may momentarily overshoot, the
+//! cache is never corrupted. Unbounded caches write no index and take no
+//! lock.
+//!
+//! Every disk touch of this module runs through the named failpoints of
+//! [`crate::testkit::faults`] (`store.read`, `store.write`), which the
+//! fault-injection suite arms to prove the degradation story above.
 
 use crate::compiler::tiling::VectorTiling;
 use crate::compiler::{
@@ -88,6 +106,12 @@ pub fn negative_path(dir: &Path, key: &CompileKey) -> PathBuf {
 /// LRU index sidecar (only written by size-bounded caches).
 pub fn index_path(dir: &Path) -> PathBuf {
     dir.join("index.json")
+}
+
+/// Advisory cross-process lock file guarding the index read-modify-write
+/// (only taken by size-bounded caches).
+pub fn lock_path(dir: &Path) -> PathBuf {
+    dir.join("index.lock")
 }
 
 fn entry_path_fp(dir: &Path, fp: u64) -> PathBuf {
@@ -254,6 +278,19 @@ pub fn write_negative(dir: &Path, key: &CompileKey, diagnostic: &str) -> Result<
 }
 
 fn write_atomic(dir: &Path, tag: u64, path: &Path, content: String) -> Result<()> {
+    match crate::testkit::faults::before_write("store.write", path, content.len()) {
+        Ok(None) => {}
+        Ok(Some(n)) => {
+            // Injected torn write: bypass the temp-file protocol and leave
+            // a half-written file at the *final* path, claiming success —
+            // the crash the rename protocol exists to prevent. Readers
+            // must reject the corpse and heal it.
+            std::fs::write(path, &content[..n.min(content.len())])
+                .with_context(|| format!("writing cache entry {path:?}"))?;
+            return Ok(());
+        }
+        Err(e) => return Err(e).with_context(|| format!("writing cache entry {path:?}")),
+    }
     static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
     let tmp = dir.join(format!(
         "{tag:016x}.tmp.{}.{}",
@@ -265,6 +302,78 @@ fn write_atomic(dir: &Path, tag: u64, path: &Path, content: String) -> Result<()
     std::fs::rename(&tmp, path)
         .with_context(|| format!("publishing cache entry {path:?}"))?;
     Ok(())
+}
+
+/// Held advisory lock on a cache directory's index (see the module docs'
+/// "Cross-process coordination"). RAII: dropping releases by unlinking
+/// the lock file.
+struct CacheLock {
+    path: PathBuf,
+}
+
+impl Drop for CacheLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Is `pid` a live process? Only answerable portably-enough on /proc
+/// platforms; elsewhere assume live (the acquisition timeout still
+/// guarantees progress).
+fn pid_alive(pid: u32) -> bool {
+    if cfg!(target_os = "linux") {
+        Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        true
+    }
+}
+
+impl CacheLock {
+    /// Try to take the lock: `create_new` (atomic everywhere) plus our PID
+    /// as the payload. A holder that is provably dead is stolen (counted
+    /// in `steals`); ~500 ms without progress returns `None`, degrading
+    /// the caller to unlocked last-writer-wins — an availability choice:
+    /// the index is advisory, a deadlocked campaign is not.
+    fn acquire(dir: &Path, steals: &AtomicU64) -> Option<CacheLock> {
+        let path = lock_path(dir);
+        // Unparseable lock payloads are almost always debris from a holder
+        // killed between `create_new` and its PID write; give a genuinely
+        // racing creator a few polls to finish writing before stealing.
+        let mut unreadable_polls = 0u32;
+        for _ in 0..50 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    use std::io::Write;
+                    let _ = write!(f, "{}", std::process::id());
+                    return Some(CacheLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let holder: Option<u32> = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| s.trim().parse().ok());
+                    let stale = match holder {
+                        Some(pid) => !pid_alive(pid),
+                        None => {
+                            unreadable_polls += 1;
+                            unreadable_polls > 10
+                        }
+                    };
+                    if stale {
+                        // Steal: unlink and retry the atomic create. Two
+                        // stealers may race on the unlink; only one wins
+                        // the subsequent create_new, so the lock stays
+                        // single-holder.
+                        let _ = std::fs::remove_file(&path);
+                        steals.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(_) => return None,
+            }
+        }
+        None
+    }
 }
 
 /// In-memory image of the LRU index sidecar: fingerprint → logical
@@ -356,9 +465,11 @@ impl CacheIndex {
 pub struct PersistentCache {
     mem: CompileCache,
     dir: Option<PathBuf>,
-    /// LRU bookkeeping, present only on size-bounded caches:
-    /// `(index, max_entries)`.
-    lru: Option<std::sync::Mutex<CacheIndex>>,
+    /// Present only on size-bounded caches: serializes this process's
+    /// index read-modify-writes. The index itself lives on disk (the
+    /// source of truth for cross-process merging); nothing is cached in
+    /// memory between touches.
+    lru: Option<std::sync::Mutex<()>>,
     max_entries: usize,
     disk_hits: AtomicU64,
     neg_hits: AtomicU64,
@@ -367,6 +478,7 @@ pub struct PersistentCache {
     write_errors: AtomicU64,
     read_errors: AtomicU64,
     evictions: AtomicU64,
+    lock_steals: AtomicU64,
 }
 
 impl PersistentCache {
@@ -396,7 +508,7 @@ impl PersistentCache {
                 .with_context(|| format!("creating compile cache dir {d:?}"))?;
         }
         let lru = match (&dir, max_entries) {
-            (Some(d), Some(_)) => Some(std::sync::Mutex::new(CacheIndex::load(d))),
+            (Some(_), Some(_)) => Some(std::sync::Mutex::new(())),
             _ => None,
         };
         Ok(Self {
@@ -411,6 +523,7 @@ impl PersistentCache {
             write_errors: AtomicU64::new(0),
             read_errors: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            lock_steals: AtomicU64::new(0),
         })
     }
 
@@ -487,33 +600,35 @@ impl PersistentCache {
     /// caches.
     fn touch_index(&self, dir: &Path, fp: u64) {
         let Some(lru) = &self.lru else { return };
-        // Mutate the in-memory index under the lock, but do all filesystem
-        // work (unlinking victims, persisting the snapshot) outside it —
-        // parallel resolve workers must never queue on a mutex that is
-        // doing disk I/O. Concurrent touches may then persist snapshots
-        // out of order (last writer wins), which the index's advisory
-        // semantics already tolerate: a stale entry for an evicted key
-        // just reads as a miss and is re-adopted on the next touch.
-        let (snapshot, victims) = {
-            let mut index = lru.lock().unwrap();
-            index.touch(fp);
-            let mut victims = Vec::new();
-            while index.entries.len() > self.max_entries {
-                // The key being touched is never its own victim, so a
-                // bound of n always retains the n most recent keys,
-                // current included.
-                let Some(victim) = index.lru_victim(fp) else { break };
-                index.entries.remove(&victim);
-                victims.push(victim);
-            }
-            (index.to_json(), victims)
-        };
-        for victim in victims {
+        // The disk index is the source of truth: every touch is a full
+        // load → touch → evict → persist read-modify-write, serialized by
+        // the in-process mutex (this cache's threads) *and* the advisory
+        // `index.lock` (other processes sharing the directory). Reloading
+        // under the lock is what *merges* — rather than overwrites — a
+        // concurrent process's touches and evictions. The I/O therefore
+        // deliberately happens inside the critical section; an RMW split
+        // across lock boundaries would reintroduce the lost-update race
+        // the lock exists to close. If acquisition times out the same RMW
+        // runs unlocked (last writer wins): the bound may momentarily
+        // overshoot, nothing corrupts, nothing deadlocks. Poisoning is
+        // recovered — the guarded state lives on disk, and an unwinding
+        // toucher (e.g. an injected fault) leaves it consistent.
+        let _thread_guard =
+            lru.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let _process_guard = CacheLock::acquire(dir, &self.lock_steals);
+        let mut index = CacheIndex::load(dir);
+        index.touch(fp);
+        while index.entries.len() > self.max_entries {
+            // The key being touched is never its own victim, so a bound
+            // of n always retains the n most recent keys, current
+            // included.
+            let Some(victim) = index.lru_victim(fp) else { break };
+            index.entries.remove(&victim);
             let _ = std::fs::remove_file(entry_path_fp(dir, victim));
             let _ = std::fs::remove_file(negative_path_fp(dir, victim));
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
-        if write_atomic(dir, fp, &index_path(dir), snapshot).is_err() {
+        if write_atomic(dir, fp, &index_path(dir), index.to_json()).is_err() {
             self.write_errors.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -547,6 +662,10 @@ impl PersistentCache {
     /// from a genuine I/O failure, which is *counted* instead of silently
     /// degrading into an eternal miss.
     fn read_cache_file(&self, path: &Path) -> Option<String> {
+        if crate::testkit::faults::before_read("store.read", path).is_err() {
+            self.read_errors.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         match std::fs::read_to_string(path) {
             Ok(text) => Some(text),
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
@@ -594,6 +713,12 @@ impl PersistentCache {
     /// would previously have been indistinguishable from cold misses.
     pub fn read_errors(&self) -> u64 {
         self.read_errors.load(Ordering::Relaxed)
+    }
+
+    /// Stale `index.lock` files stolen after their recorded holder proved
+    /// dead (0 on unbounded caches, which never take the lock).
+    pub fn lock_steals(&self) -> u64 {
+        self.lock_steals.load(Ordering::Relaxed)
     }
 
     /// In-memory tier hits (probes that skipped both disk and compiler).
@@ -924,6 +1049,99 @@ mod tests {
         let text = std::fs::read_to_string(index_path(&dir)).unwrap();
         let index = CacheIndex::from_json(&text).unwrap();
         assert_eq!(index.entries.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interleaved_cache_instances_merge_index_updates() {
+        let dir = tmp_dir("interleave");
+        let net = models::lenet(28);
+        let sys = structural_variants();
+        let a = PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(2)).unwrap();
+        let b = PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(2)).unwrap();
+        a.get_or_compile(&net, &sys[0]).unwrap();
+        b.get_or_compile(&net, &sys[1]).unwrap();
+        // Every touch reloads the on-disk index under the lock, so b's
+        // write merged a's touch instead of overwriting it (the lost
+        // update the old construction-time snapshot suffered).
+        let index =
+            CacheIndex::from_json(&std::fs::read_to_string(index_path(&dir)).unwrap()).unwrap();
+        assert_eq!(index.entries.len(), 2, "no lost touches across instances");
+        // A third key through instance `a` evicts exactly the merged-LRU
+        // key — eviction decisions see the other instance's history too.
+        a.get_or_compile(&net, &sys[2]).unwrap();
+        assert_eq!(a.evictions(), 1);
+        let keys: Vec<CompileKey> =
+            sys.iter().map(|s| CompileKey::new(&net, s, opts())).collect();
+        assert!(!entry_path(&dir, &keys[0]).exists(), "merged-LRU victim evicted");
+        assert!(entry_path(&dir, &keys[1]).exists());
+        assert!(entry_path(&dir, &keys[2]).exists());
+        assert!(!lock_path(&dir).exists(), "lock released after every touch");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn stale_lock_from_a_dead_holder_is_stolen() {
+        let dir = tmp_dir("stale_lock");
+        // A PID far above any real pid_max: provably dead, so acquisition
+        // must steal instead of waiting out the full timeout.
+        std::fs::write(lock_path(&dir), "999999999").unwrap();
+        let cache =
+            PersistentCache::with_max_entries(opts(), Some(dir.clone()), Some(2)).unwrap();
+        cache.get_or_compile(&models::lenet(28), &SystemConfig::base_paper()).unwrap();
+        assert_eq!(cache.lock_steals(), 1, "dead holder's lock stolen once");
+        assert!(!lock_path(&dir).exists(), "stolen lock released on drop");
+        let index =
+            CacheIndex::from_json(&std::fs::read_to_string(index_path(&dir)).unwrap()).unwrap();
+        assert_eq!(index.entries.len(), 1, "the touch went through");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_read_fault_counts_and_degrades_to_recompilation() {
+        use crate::testkit::faults::{self, FaultKind};
+        let dir = tmp_dir("fault_read");
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        let seed = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let a = seed.get_or_compile(&net, &sys).unwrap();
+
+        let _g = faults::arm("store.read", &dir, FaultKind::IoError, 1);
+        let cache = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        let b = cache.get_or_compile(&net, &sys).unwrap();
+        assert_eq!(
+            (cache.compiles(), cache.read_errors(), cache.disk_hits()),
+            (1, 1, 0),
+            "read fault counted, evaluation degraded to a recompile"
+        );
+        assert_eq!(*a, *b, "the artifact itself is unaffected");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_torn_entry_write_is_rejected_then_healed() {
+        use crate::testkit::faults::{self, FaultKind};
+        let dir = tmp_dir("fault_torn");
+        let net = models::lenet(28);
+        let sys = SystemConfig::base_paper();
+        {
+            let _g = faults::arm("store.write", &dir, FaultKind::Torn, 1);
+            let cache = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+            // The evaluation itself succeeds — persistence is best-effort.
+            cache.get_or_compile(&net, &sys).unwrap();
+        }
+        // The tear bypassed the rename protocol: a half-written file sits
+        // at the final path claiming success. Readers must reject it and
+        // heal it, never load it.
+        let key = CompileKey::new(&net, &sys, opts());
+        assert!(entry_path(&dir, &key).exists(), "torn corpse is present");
+        let healed = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        healed.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((healed.compiles(), healed.rejected()), (1, 1));
+        let again = PersistentCache::new(opts(), Some(dir.clone())).unwrap();
+        again.get_or_compile(&net, &sys).unwrap();
+        assert_eq!((again.compiles(), again.disk_hits()), (0, 1), "healed on disk");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -108,7 +108,12 @@ pub fn cost_proxy(sys: &SystemConfig) -> f64 {
     mults + 2.0 * ram_kib
 }
 
-fn point_from_sim(sys: &SystemConfig, name: String, total_ps: u64) -> DesignPoint {
+/// Tabulate a design point from its simulated end-to-end latency — cost
+/// and throughput are pure functions of `(sys, total_ps)`. Public because
+/// campaign journal replay (`campaign::journal`) reconstructs finished
+/// feasible points from their persisted latencies without re-simulating,
+/// and the reconstruction must be byte-identical to the original.
+pub fn point_from_latency(sys: &SystemConfig, name: String, total_ps: u64) -> DesignPoint {
     DesignPoint {
         name,
         sys: sys.clone(),
@@ -138,7 +143,7 @@ pub fn evaluate_compiled(
 ) -> DesignPoint {
     let mut trace = TraceRecorder::disabled();
     let sim = simulate_avsm(compiled, sys, &mut trace);
-    point_from_sim(sys, name.into(), sim.total_ps)
+    point_from_latency(sys, name.into(), sim.total_ps)
 }
 
 /// Evaluate one design point through a [`CompileCache`]: points that differ
@@ -290,6 +295,17 @@ pub fn sweep_outcomes(
         let sys = &configs[i];
         evaluate_outcome(net, sys, sys.name.clone(), &cache)
     })
+    .into_iter()
+    .enumerate()
+    .map(|(i, r)| {
+        // A worker that panicked mid-evaluation degrades to an error row
+        // for that point — the rest of the grid is unaffected.
+        r.unwrap_or_else(|died| EvalOutcome::Error {
+            name: configs[i].name.clone(),
+            reason: format!("evaluation worker panicked: {}", died.message),
+        })
+    })
+    .collect()
 }
 
 /// Pareto frontier: points not dominated in (latency, cost), sorted by

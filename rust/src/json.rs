@@ -199,13 +199,18 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
 // ---------------------------------------------------------------------------
 
 /// Parse a JSON document. Trailing non-whitespace is an error.
+///
+/// Every parse error carries the byte offset it was detected at plus a
+/// short snippet of the surrounding input, so a corrupted cache artifact
+/// or a torn journal line is diagnosable straight from a report's error
+/// sample instead of a bare "unexpected character".
 pub fn parse(text: &str) -> Result<Value> {
     let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
-        bail!("trailing characters at byte {}", p.pos);
+        return Err(p.err_at(p.pos, "trailing characters"));
     }
     Ok(v)
 }
@@ -220,8 +225,28 @@ impl<'a> Parser<'a> {
         self.bytes.get(self.pos).copied()
     }
 
+    /// Diagnostic anchored at `pos`: the message, the byte offset, and a
+    /// short window of the raw input around it (lossy-decoded, so binary
+    /// garbage still renders).
+    fn err_at(&self, pos: usize, msg: impl std::fmt::Display) -> anyhow::Error {
+        const WINDOW: usize = 12;
+        let start = pos.saturating_sub(WINDOW);
+        let end = (pos + WINDOW).min(self.bytes.len());
+        let mut near = String::new();
+        if start > 0 {
+            near.push_str("...");
+        }
+        near.push_str(&String::from_utf8_lossy(&self.bytes[start..end]));
+        if end < self.bytes.len() {
+            near.push_str("...");
+        }
+        anyhow!("{msg} at byte {pos} (near {near:?})")
+    }
+
     fn bump(&mut self) -> Result<u8> {
-        let b = self.peek().ok_or_else(|| anyhow!("unexpected end of input"))?;
+        let b = self
+            .peek()
+            .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?;
         self.pos += 1;
         Ok(b)
     }
@@ -233,15 +258,22 @@ impl<'a> Parser<'a> {
     }
 
     fn expect(&mut self, b: u8) -> Result<()> {
+        let at = self.pos;
         let got = self.bump()?;
         if got != b {
-            bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos - 1, got as char);
+            return Err(self.err_at(
+                at,
+                format!("expected {:?}, got {:?}", b as char, got as char),
+            ));
         }
         Ok(())
     }
 
     fn value(&mut self) -> Result<Value> {
-        match self.peek().ok_or_else(|| anyhow!("unexpected end of input"))? {
+        match self
+            .peek()
+            .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?
+        {
             b'{' => self.object(),
             b'[' => self.array(),
             b'"' => Ok(Value::Str(self.string()?)),
@@ -249,7 +281,9 @@ impl<'a> Parser<'a> {
             b'f' => self.literal("false", Value::Bool(false)),
             b'n' => self.literal("null", Value::Null),
             b'-' | b'0'..=b'9' => self.number(),
-            other => bail!("unexpected character {:?} at byte {}", other as char, self.pos),
+            other => {
+                Err(self.err_at(self.pos, format!("unexpected character {:?}", other as char)))
+            }
         }
     }
 
@@ -258,7 +292,7 @@ impl<'a> Parser<'a> {
             self.pos += lit.len();
             Ok(v)
         } else {
-            bail!("invalid literal at byte {}", self.pos)
+            Err(self.err_at(self.pos, format!("invalid literal (expected {lit:?})")))
         }
     }
 
@@ -279,10 +313,15 @@ impl<'a> Parser<'a> {
             let val = self.value()?;
             map.insert(key, val);
             self.skip_ws();
+            let at = self.pos;
             match self.bump()? {
                 b',' => continue,
                 b'}' => return Ok(Value::Object(map)),
-                other => bail!("expected ',' or '}}', got {:?}", other as char),
+                other => {
+                    return Err(
+                        self.err_at(at, format!("expected ',' or '}}', got {:?}", other as char))
+                    )
+                }
             }
         }
     }
@@ -299,10 +338,15 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             items.push(self.value()?);
             self.skip_ws();
+            let at = self.pos;
             match self.bump()? {
                 b',' => continue,
                 b']' => return Ok(Value::Array(items)),
-                other => bail!("expected ',' or ']', got {:?}", other as char),
+                other => {
+                    return Err(
+                        self.err_at(at, format!("expected ',' or ']', got {:?}", other as char))
+                    )
+                }
             }
         }
     }
@@ -311,6 +355,7 @@ impl<'a> Parser<'a> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
+            let at = self.pos;
             match self.bump()? {
                 b'"' => return Ok(s),
                 b'\\' => match self.bump()? {
@@ -330,33 +375,41 @@ impl<'a> Parser<'a> {
                             self.expect(b'u')?;
                             let lo = self.hex4()?;
                             if !(0xDC00..0xE000).contains(&lo) {
-                                bail!("invalid low surrogate");
+                                return Err(self.err_at(at, "invalid low surrogate"));
                             }
                             let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
                             s.push(
-                                char::from_u32(c).ok_or_else(|| anyhow!("bad surrogate pair"))?,
+                                char::from_u32(c)
+                                    .ok_or_else(|| self.err_at(at, "bad surrogate pair"))?,
                             );
                         } else {
                             s.push(
                                 char::from_u32(cp)
-                                    .ok_or_else(|| anyhow!("bad unicode escape"))?,
+                                    .ok_or_else(|| self.err_at(at, "bad unicode escape"))?,
                             );
                         }
                     }
-                    other => bail!("bad escape \\{:?}", other as char),
+                    other => {
+                        return Err(
+                            self.err_at(at, format!("bad escape \\{:?}", other as char))
+                        )
+                    }
                 },
-                b if b < 0x20 => bail!("raw control character in string"),
+                b if b < 0x20 => {
+                    return Err(self.err_at(at, "raw control character in string"))
+                }
                 b if b < 0x80 => s.push(b as char),
                 b => {
                     // Multi-byte UTF-8: re-decode from the source slice.
                     let start = self.pos - 1;
-                    let len = utf8_len(b)?;
+                    let len = utf8_len(b)
+                        .map_err(|e| self.err_at(start, e))?;
                     let end = start + len;
                     if end > self.bytes.len() {
-                        bail!("truncated UTF-8 sequence");
+                        return Err(self.err_at(start, "truncated UTF-8 sequence"));
                     }
                     let chunk = std::str::from_utf8(&self.bytes[start..end])
-                        .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
+                        .map_err(|_| self.err_at(start, "invalid UTF-8 in string"))?;
                     s.push_str(chunk);
                     self.pos = end;
                 }
@@ -367,8 +420,11 @@ impl<'a> Parser<'a> {
     fn hex4(&mut self) -> Result<u32> {
         let mut v = 0u32;
         for _ in 0..4 {
+            let at = self.pos;
             let b = self.bump()?;
-            let d = (b as char).to_digit(16).ok_or_else(|| anyhow!("bad hex digit"))?;
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err_at(at, "bad hex digit"))?;
             v = v * 16 + d;
         }
         Ok(v)
@@ -398,7 +454,7 @@ impl<'a> Parser<'a> {
         }
         text.parse::<f64>()
             .map(Value::Num)
-            .map_err(|_| anyhow!("invalid number {text:?} at byte {start}"))
+            .map_err(|_| self.err_at(start, format!("invalid number {text:?}")))
     }
 }
 
@@ -606,6 +662,28 @@ mod tests {
         assert!(format!("{err:#}").contains("exceeds u32"));
         assert!(v.req_u32("neg").is_err());
         assert!(v.req_u32("missing").is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_byte_offset_and_context_snippet() {
+        // Mid-document defect: the diagnostic names the byte offset and
+        // shows a window of the surrounding input.
+        let err = parse(r#"{"a": 1, "b": ?}"#).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("at byte 14"), "{msg}");
+        assert!(msg.contains("near"), "{msg}");
+        assert!(msg.contains("?}"), "{msg}");
+        // A truncated document — the torn-journal-line shape — says so,
+        // with the tail of what *was* there.
+        let err = parse(r#"{"unit":3,"class":"feas"#).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unexpected end of input"), "{msg}");
+        assert!(msg.contains("at byte 23"), "{msg}");
+        // Bad separators point at the offending byte, not just "malformed".
+        let err = parse(r#"[1; 2]"#).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("expected ',' or ']'"), "{msg}");
+        assert!(msg.contains("at byte 2"), "{msg}");
     }
 
     #[test]

@@ -39,7 +39,8 @@ COMMANDS:
   campaign   multi-workload co-design sweep: per-net config grids vs a net
              portfolio, streaming per-net Pareto frontiers + cross-net
              summary (--nets A,B,C | --workloads FILE, --axes SPEC,
-             --cache-dir DIR --threads N --fail-fast)
+             --cache-dir DIR --threads N --fail-fast
+             --journal FILE --resume)
   topdown    minimum axis value for a latency target (--target-ms X
              --axis NAME --lo N --hi N; default axis nce_freq_mhz —
              the paper's §2 top-down mode, generalized)
@@ -79,10 +80,18 @@ COMMON OPTIONS:
   --no-order          evaluate grid units in plain grid order instead of
                       ascending lower-bound order (ordering is a lossless
                       scheduling heuristic that maximizes bound-skips)
-  --fail-fast         abort `campaign` on the first error-classified unit
-                      (invalid swept config), reporting its diagnostic —
-                      the CI co-design-gate mode; infeasible tilings never
-                      trigger it
+  --fail-fast         abort `campaign` on the first error- or panic-
+                      classified unit (invalid swept config, dead worker),
+                      reporting its diagnostic — the CI co-design-gate
+                      mode; infeasible tilings never trigger it
+  --journal FILE      append every completed `campaign` unit to a crash-
+                      safe resume journal (avsm-campaign-journal-v1): a
+                      killed run loses at most the unit mid-append
+  --resume            replay the --journal file before running: completed
+                      units are folded in without re-simulation and the
+                      report comes out byte-identical to the uninterrupted
+                      run; an absent journal is a fresh start, a journal
+                      from a different spec refuses loudly
 
 AXIS SPECS (--axes, and \"axes\" inside --workloads entries):
   JSON array of {\"axis\": NAME, \"values\": [..]} objects, swept first-
@@ -415,6 +424,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         Some(key) => avsm::compiler::BoundKind::from_key(key)?,
         None => avsm::compiler::BoundKind::Max,
     };
+    let journal = args.get("journal").map(PathBuf::from);
+    if args.has("resume") && journal.is_none() {
+        bail!("--resume requires --journal FILE (there is nothing to replay)");
+    }
     let opts = campaign::CampaignOptions {
         threads: args.get_u64("threads", 0)? as usize,
         cache_dir: args.get("cache-dir").map(PathBuf::from),
@@ -424,6 +437,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         bound,
         order_by_bound: !args.has("no-order"),
         fail_fast: args.has("fail-fast"),
+        journal,
+        resume: args.has("resume"),
     };
     let result = campaign::run(&spec, &opts)?;
     let report = CampaignReport::new(&result);

@@ -82,7 +82,7 @@ impl<'a> CampaignReport<'a> {
             out.push_str(&format!(
                 "\n== {} — frontier ({} of {} feasible points, {} evaluated, \
                  {} skipped by bound ({} occupancy, {} critical-path), \
-                 {} infeasible, {} errors)\n",
+                 {} infeasible, {} errors, {} panics)\n",
                 net.net,
                 net.frontier.len(),
                 net.feasible,
@@ -91,7 +91,8 @@ impl<'a> CampaignReport<'a> {
                 net.skipped_by_occupancy,
                 net.skipped_by_critical_path,
                 net.infeasible,
-                net.errors
+                net.errors,
+                net.panics
             ));
             // Axis provenance: whose design space this net actually swept
             // (heterogeneous portfolios differ per net).
@@ -116,6 +117,9 @@ impl<'a> CampaignReport<'a> {
             }
             if let Some(sample) = &net.error_sample {
                 out.push_str(&format!("!! first error: {sample}\n"));
+            }
+            if let Some(sample) = &net.panic_sample {
+                out.push_str(&format!("!! first panic: {sample}\n"));
             }
             out.push_str(&format!(
                 "{:<28} {:>14} {:>12} {:>10}\n",
@@ -164,6 +168,7 @@ impl<'a> CampaignReport<'a> {
             ("bound", r.bound.key().into()),
             ("skipped_by_bound", r.skipped_by_bound.into()),
             ("errors", r.errors.into()),
+            ("panics", r.panics.into()),
             (
                 "nets",
                 Value::Array(r.nets.iter().map(net_to_value).collect()),
@@ -230,6 +235,11 @@ fn net_to_value(net: &NetOutcome) -> Value {
             "error_sample",
             net.error_sample.as_deref().map_or(Value::Null, Value::from),
         ),
+        ("panics", net.panics.into()),
+        (
+            "panic_sample",
+            net.panic_sample.as_deref().map_or(Value::Null, Value::from),
+        ),
         ("bound", net.bound.key().into()),
         ("skipped_by_bound", net.skipped_by_bound.into()),
         ("skipped_by_occupancy", net.skipped_by_occupancy.into()),
@@ -266,10 +276,12 @@ mod tests {
             base: "base_paper_virtex7".into(),
             axes: crate::dse::SweepAxes::new().nce_freqs_mhz(vec![125, 250]),
             feasible: frontier.len() + 1,
-            evaluated: frontier.len() + 4,
+            evaluated: frontier.len() + 5,
             infeasible: 1,
             errors: 1,
             error_sample: Some("nce0x0_f0: invalid configuration".into()),
+            panics: 1,
+            panic_sample: Some("nce0x0_f1: evaluation worker panicked".into()),
             bound: crate::compiler::BoundKind::Max,
             skipped_by_bound: 1,
             skipped_by_occupancy: 0,
@@ -304,6 +316,7 @@ mod tests {
             bound: crate::compiler::BoundKind::Max,
             skipped_by_bound: 2,
             errors: 2,
+            panics: 2,
         }
     }
 
@@ -334,7 +347,9 @@ mod tests {
         );
         assert!(text.contains("1 infeasible"));
         assert!(text.contains("1 errors"));
+        assert!(text.contains("1 panics"), "{text}");
         assert!(text.contains("!! first error: nce0x0_f0"));
+        assert!(text.contains("!! first panic: nce0x0_f1"), "{text}");
         assert!(text.contains("negative hits: 2"));
         // The name legend decodes the swept axis's token.
         assert!(text.contains("name legend: f = NCE frequency (MHz)"), "{text}");
@@ -380,6 +395,7 @@ mod tests {
         assert_eq!(j.get("bound").as_str(), Some("max"));
         assert_eq!(j.get("skipped_by_bound").as_u64(), Some(2));
         assert_eq!(j.get("errors").as_u64(), Some(2));
+        assert_eq!(j.get("panics").as_u64(), Some(2));
         assert_eq!(j.get("nets").as_array().unwrap().len(), 2);
         let n0 = j.get("nets").at(0);
         assert_eq!(n0.get("base").as_str(), Some("base_paper_virtex7"));
@@ -398,6 +414,8 @@ mod tests {
         assert_eq!(n0.get("infeasible").as_u64(), Some(1));
         assert_eq!(n0.get("errors").as_u64(), Some(1));
         assert!(n0.get("error_sample").as_str().unwrap().contains("invalid"));
+        assert_eq!(n0.get("panics").as_u64(), Some(1));
+        assert!(n0.get("panic_sample").as_str().unwrap().contains("panicked"));
         assert_eq!(n0.get("negative_hits").as_u64(), Some(1));
         assert_eq!(
             j.get("cross_net").get("common_frontier").at(0).as_str(),

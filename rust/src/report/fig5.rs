@@ -58,8 +58,11 @@ impl Fig5Report {
         points
             .iter()
             .map(|_| {
-                let avsm = it.next().expect("missing AVSM run");
-                let hw = it.next().expect("missing prototype run");
+                // Fig 5 inputs are pre-compiled and pre-validated, so a dead
+                // simulation job is a bug; re-raise it with the structured
+                // per-job message rather than hiding which run died.
+                let avsm = it.next().expect("missing AVSM run").unwrap_or_else(|d| panic!("{d}"));
+                let hw = it.next().expect("missing prototype run").unwrap_or_else(|d| panic!("{d}"));
                 Self::tabulate(&avsm, &hw)
             })
             .collect()

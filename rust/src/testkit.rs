@@ -10,6 +10,13 @@
 //! a failing case is already near-minimal), and the starting seed can be
 //! pinned from the environment via [`NetGen::from_env`] /
 //! [`seed_from_env`] (`AVSM_TEST_SEED`) so CI can replay a specific run.
+//!
+//! The [`faults`] submodule is the fault-injection switchboard: named
+//! failpoints the persistence layer (`campaign::store`,
+//! `campaign::journal`) consults on every disk touch, which robustness
+//! tests arm to inject I/O errors, torn writes and panics.
+
+pub mod faults;
 
 use crate::config::SystemConfig;
 use crate::graph::{Activation, DnnGraph, Layer, Op, Padding, TensorShape};

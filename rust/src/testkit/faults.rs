@@ -1,0 +1,253 @@
+//! Named failpoints for fault-injection testing of the persistence layer.
+//!
+//! The campaign's robustness contract — cache faults degrade to
+//! recompiles/error rows, journal tears drop the torn tail, a panicking
+//! unit becomes a `panics` row — is only trustworthy if tests can *make*
+//! those faults happen on demand. This module is the switchboard: the
+//! production I/O sites in [`crate::campaign::store`] and
+//! [`crate::campaign::journal`] consult [`before_read`] / [`before_write`]
+//! at every disk touch, and tests arm a failpoint with [`arm`] to inject
+//! an [`io::Error`], a torn (prefix-only) write that still claims success
+//! at the site, or a panic.
+//!
+//! Design constraints:
+//!
+//! * **Inert in production.** Nothing ever arms a failpoint outside tests;
+//!   the per-I/O cost of an unarmed registry is a single relaxed atomic
+//!   load ([`ARMED`]).
+//! * **Test isolation.** Failpoints are scoped to a *path prefix* (the
+//!   test's unique temp directory) in addition to the site name, so
+//!   concurrently running tests never trip each other's faults. Arming
+//!   returns an RAII [`FaultGuard`] that disarms on drop, panicking
+//!   included.
+//! * **Deterministic.** A failpoint fires on its first `hits` matching
+//!   I/O operations and then exhausts. Which operation that is, is a pure
+//!   function of the (seeded) campaign schedule — property tests draw the
+//!   armed site/kind from the shared [`crate::testkit::NetGen`] RNG, so a
+//!   failing `AVSM_TEST_SEED` replays the exact fault.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What an armed failpoint injects at its I/O site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The operation fails with an injected [`io::Error`]
+    /// (`ErrorKind::Other`, message tagged `injected fault`).
+    IoError,
+    /// A write persists only a prefix of its bytes yet reports success at
+    /// the write syscall — the power-cut / torn-page model. Read sites
+    /// treat it like [`FaultKind::IoError`].
+    Torn,
+    /// The operation panics mid-I/O — the model for a worker dying inside
+    /// the persistence layer.
+    Panic,
+}
+
+struct Failpoint {
+    id: u64,
+    site: &'static str,
+    prefix: PathBuf,
+    kind: FaultKind,
+    skip: usize,
+    remaining: usize,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+static REGISTRY: Mutex<Vec<Failpoint>> = Mutex::new(Vec::new());
+
+fn registry() -> std::sync::MutexGuard<'static, Vec<Failpoint>> {
+    // A panic fault unwinding through a caller that held the lock cannot
+    // happen (the lock is released before injecting), but recover anyway:
+    // the registry's state is a plain Vec, always consistent.
+    REGISTRY.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// RAII handle for an armed failpoint: dropping it (normally or during a
+/// panic) removes the failpoint and lowers the fast-path flag when the
+/// registry empties.
+pub struct FaultGuard {
+    id: u64,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        let mut reg = registry();
+        reg.retain(|fp| fp.id != self.id);
+        if reg.is_empty() {
+            ARMED.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Arm `site` to inject `kind` on its next `hits` I/O operations whose
+/// target path lives under `prefix`. Returns the RAII disarm guard.
+pub fn arm(site: &'static str, prefix: &Path, kind: FaultKind, hits: usize) -> FaultGuard {
+    arm_after(site, prefix, kind, 0, hits)
+}
+
+/// Like [`arm`], but let the first `skip` matching operations pass through
+/// untouched before injecting — the tool for killing a run *partway*
+/// through a deterministic sequence of I/O operations (e.g. tear the
+/// journal on its Nth append, after the header and N-1 records landed).
+pub fn arm_after(
+    site: &'static str,
+    prefix: &Path,
+    kind: FaultKind,
+    skip: usize,
+    hits: usize,
+) -> FaultGuard {
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    registry().push(Failpoint {
+        id,
+        site,
+        prefix: prefix.to_path_buf(),
+        kind,
+        skip,
+        remaining: hits,
+    });
+    ARMED.store(true, Ordering::Relaxed);
+    FaultGuard { id }
+}
+
+/// Consume one hit of the first armed failpoint matching `(site, path)`.
+fn take(site: &str, path: &Path) -> Option<FaultKind> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut reg = registry();
+    let fp = reg.iter_mut().find(|fp| {
+        fp.site == site && (fp.skip > 0 || fp.remaining > 0) && path.starts_with(&fp.prefix)
+    })?;
+    if fp.skip > 0 {
+        fp.skip -= 1;
+        return None;
+    }
+    fp.remaining -= 1;
+    Some(fp.kind)
+}
+
+fn injected_error(site: &str, path: &Path) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::Other,
+        format!("injected fault at {site} ({})", path.display()),
+    )
+}
+
+/// Failpoint check for a read-side I/O site. [`FaultKind::IoError`] and
+/// [`FaultKind::Torn`] both surface as an injected error;
+/// [`FaultKind::Panic`] unwinds from here.
+pub fn before_read(site: &str, path: &Path) -> io::Result<()> {
+    match take(site, path) {
+        None => Ok(()),
+        Some(FaultKind::Panic) => panic!("injected panic at {site} ({})", path.display()),
+        Some(FaultKind::IoError) | Some(FaultKind::Torn) => Err(injected_error(site, path)),
+    }
+}
+
+/// Failpoint check for a write-side I/O site about to persist `len` bytes.
+///
+/// * `Ok(None)` — no fault: perform the real write.
+/// * `Ok(Some(n))` — torn write: persist only the first `n < len` bytes
+///   and report success to the caller, as a crashed machine would.
+/// * `Err(_)` — injected I/O error; write nothing.
+///
+/// [`FaultKind::Panic`] unwinds from here.
+pub fn before_write(site: &str, path: &Path, len: usize) -> io::Result<Option<usize>> {
+    match take(site, path) {
+        None => Ok(None),
+        Some(FaultKind::Panic) => panic!("injected panic at {site} ({})", path.display()),
+        Some(FaultKind::IoError) => Err(injected_error(site, path)),
+        Some(FaultKind::Torn) => Ok(Some(len / 2)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("avsm_faults_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn unarmed_sites_pass_through() {
+        let dir = tmp("unarmed");
+        assert!(before_read("store.read", &dir.join("x")).is_ok());
+        assert_eq!(before_write("store.write", &dir.join("x"), 100).unwrap(), None);
+    }
+
+    #[test]
+    fn armed_fault_fires_hit_count_times_then_exhausts() {
+        let dir = tmp("hits");
+        let guard = arm("faults.test.read", &dir, FaultKind::IoError, 2);
+        let p = dir.join("entry.json");
+        assert!(before_read("faults.test.read", &p).is_err());
+        assert!(before_read("faults.test.read", &p).is_err());
+        assert!(before_read("faults.test.read", &p).is_ok(), "exhausted after 2 hits");
+        drop(guard);
+    }
+
+    #[test]
+    fn arm_after_passes_through_the_skip_window_then_fires() {
+        let dir = tmp("skip");
+        let guard = arm_after("faults.test.skip", &dir, FaultKind::IoError, 2, 1);
+        let p = dir.join("entry.json");
+        assert!(before_read("faults.test.skip", &p).is_ok(), "skip 1");
+        assert!(before_read("faults.test.skip", &p).is_ok(), "skip 2");
+        assert!(before_read("faults.test.skip", &p).is_err(), "fires on the 3rd");
+        assert!(before_read("faults.test.skip", &p).is_ok(), "exhausted");
+        drop(guard);
+    }
+
+    #[test]
+    fn faults_are_scoped_to_site_and_path_prefix() {
+        let dir = tmp("scope");
+        let other = tmp("scope_other");
+        let guard = arm("faults.test.scoped", &dir, FaultKind::IoError, 1);
+        // Wrong site: passes.
+        assert!(before_read("faults.test.unrelated", &dir.join("x")).is_ok());
+        // Wrong directory: passes.
+        assert!(before_read("faults.test.scoped", &other.join("x")).is_ok());
+        // Matching both: fires.
+        let err = before_read("faults.test.scoped", &dir.join("x")).unwrap_err();
+        assert!(err.to_string().contains("injected fault at faults.test.scoped"), "{err}");
+        drop(guard);
+    }
+
+    #[test]
+    fn guard_disarms_on_drop() {
+        let dir = tmp("disarm");
+        {
+            let _guard = arm("faults.test.disarm", &dir, FaultKind::IoError, 100);
+            assert!(before_read("faults.test.disarm", &dir.join("x")).is_err());
+        }
+        assert!(before_read("faults.test.disarm", &dir.join("x")).is_ok());
+    }
+
+    #[test]
+    fn torn_write_reports_a_prefix_length() {
+        let dir = tmp("torn");
+        let guard = arm("faults.test.torn", &dir, FaultKind::Torn, 1);
+        let n = before_write("faults.test.torn", &dir.join("x"), 101).unwrap();
+        assert_eq!(n, Some(50));
+        drop(guard);
+    }
+
+    #[test]
+    fn injected_panic_unwinds_with_a_recognizable_message() {
+        let dir = tmp("panic");
+        let guard = arm("faults.test.panic", &dir, FaultKind::Panic, 1);
+        let p = dir.join("x");
+        let payload = std::panic::catch_unwind(|| {
+            let _ = before_read("faults.test.panic", &p);
+        })
+        .unwrap_err();
+        let msg = crate::campaign::pool::panic_message(payload.as_ref());
+        assert!(msg.contains("injected panic at faults.test.panic"), "{msg}");
+        drop(guard);
+    }
+}

@@ -123,6 +123,54 @@ fn campaign_sweeps_portfolio_and_warm_cache_is_compile_free() {
 }
 
 #[test]
+fn campaign_journal_and_resume_flags_round_trip() {
+    let dir = std::env::temp_dir().join(format!("avsm_cli_journal_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("campaign.jsonl");
+    let journal_s = journal.to_str().unwrap().to_owned();
+    let args =
+        ["campaign", "--nets", "lenet", "--threads", "1", "--journal", journal_s.as_str()];
+    let first = run_ok(&args);
+    let text = std::fs::read_to_string(&journal).unwrap();
+    assert!(
+        text.starts_with("{\"schema\":\"avsm-campaign-journal-v1\""),
+        "journal header missing:\n{text}"
+    );
+    assert!(text.lines().count() > 1, "completed units must be journaled");
+
+    // A full journal resumes to the identical report without simulating
+    // anything: every line except the cache statistics matches.
+    let mut resume_args = args.to_vec();
+    resume_args.push("--resume");
+    let resumed = run_ok(&resume_args);
+    assert!(resumed.contains("compilations: 0"), "full replay must be compile-free:\n{resumed}");
+    let strip = |s: &str| {
+        s.lines().filter(|l| !l.starts_with("compilations:")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(strip(&first), strip(&resumed), "resumed report drifted");
+
+    // --resume without --journal is a descriptive error.
+    let out = avsm().args(["campaign", "--nets", "lenet", "--resume"]).output().unwrap();
+    assert!(!out.status.success(), "--resume without --journal must exit nonzero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--resume requires --journal"), "{err}");
+
+    // A journal from a different campaign spec refuses loudly.
+    let out = avsm()
+        .args([
+            "campaign", "--nets", "dilated_vgg_tiny", "--threads", "1",
+            "--journal", journal_s.as_str(), "--resume",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "foreign journal must refuse");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("different campaign spec") || err.contains("units"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn topdown_answers() {
     let text = run_ok(&["topdown", "--net", "lenet", "--target-ms", "1"]);
     assert!(text.contains("minimum NCE frequency") || text.contains("not reachable"));

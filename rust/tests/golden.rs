@@ -4,9 +4,10 @@
 //! whitespace). Each test parses the fixture with the *real* parser and
 //! asserts the *real* serializer emits the fixture bytes back, so any
 //! accidental field rename, type change, or format drift in
-//! `avsm-campaign-v1`, `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`
-//! or `avsm-compile-cache-index-v1` fails loudly here instead of silently
-//! breaking warm caches and downstream report consumers.
+//! `avsm-campaign-v1`, `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`,
+//! `avsm-compile-cache-index-v1` or `avsm-campaign-journal-v1` fails loudly
+//! here instead of silently breaking warm caches, stale resume journals and
+//! downstream report consumers.
 //!
 //! A *deliberate* schema change is made by bumping the schema and
 //! regenerating the fixtures (`scripts/gen_golden_fixtures.py`), with the
@@ -96,11 +97,13 @@ fn golden_net(name: &str, frontier: Vec<DesignPoint>) -> NetOutcome {
         net: name.into(),
         base: "base_paper_virtex7".into(),
         axes: SweepAxes::new().nce_freqs_mhz(vec![125, 250]),
-        evaluated: frontier.len() + 4,
+        evaluated: frontier.len() + 5,
         feasible: frontier.len() + 1,
         infeasible: 1,
         errors: 1,
         error_sample: Some("nce0x0_f0: invalid configuration".into()),
+        panics: 1,
+        panic_sample: Some("nce0x0_f1: evaluation worker panicked".into()),
         bound: BoundKind::Max,
         skipped_by_bound: 1,
         skipped_by_occupancy: 0,
@@ -142,6 +145,7 @@ fn campaign_report_schema_is_byte_stable() {
         bound: BoundKind::Max,
         skipped_by_bound: 2,
         errors: 2,
+        panics: 2,
     };
     let text = fixture(include_str!("fixtures/campaign_v1.json"));
     let doc = json::parse(text).unwrap();
@@ -154,4 +158,47 @@ fn campaign_report_schema_is_byte_stable() {
         text,
         "avsm-campaign-v1 serializer bytes drifted from the golden fixture"
     );
+}
+
+#[test]
+fn campaign_journal_schema_is_byte_stable() {
+    use avsm::campaign::journal::{Journal, UnitRecord};
+
+    let text = include_str!("fixtures/campaign_journal_v1.jsonl");
+    let dir = std::env::temp_dir().join(format!("avsm_golden_journal_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("campaign_journal_v1.jsonl");
+    std::fs::write(&path, text).unwrap();
+
+    // The real reader replays the fixture: spec fingerprint and unit count
+    // come from the pinned header, every record class is represented, and
+    // the append order is preserved.
+    let (_, replay) = Journal::resume(&path, 0xdead_beef, 6).expect("fixture journal must replay");
+    assert_eq!(
+        replay,
+        vec![
+            (0, UnitRecord::Feasible { latency_ps: 2_400_000 }),
+            (3, UnitRecord::Infeasible),
+            (1, UnitRecord::Error { diag: "nce0x0: invalid configuration".into() }),
+            (4, UnitRecord::Panicked { diag: "worker died".into() }),
+            (2, UnitRecord::Skipped { by_occupancy: true }),
+            (5, UnitRecord::Skipped { by_occupancy: false }),
+        ],
+        "avsm-campaign-journal-v1 reader drifted from the golden fixture"
+    );
+
+    // Byte-compatibility: the real writer re-emits the fixture bytes from
+    // the replayed records.
+    let rewritten = dir.join("rewritten.jsonl");
+    let mut j = Journal::create(&rewritten, 0xdead_beef, 6).unwrap();
+    for (unit, rec) in &replay {
+        j.append(*unit, rec).unwrap();
+    }
+    drop(j);
+    assert_eq!(
+        std::fs::read_to_string(&rewritten).unwrap(),
+        text,
+        "avsm-campaign-journal-v1 writer drifted from the golden fixture"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
 }

@@ -345,7 +345,7 @@ fn heterogeneous_campaign_matches_independent_per_net_sweeps() {
         }
         assert_eq!(
             got.evaluated,
-            got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+            got.feasible + got.infeasible + got.errors + got.panics + got.skipped_by_bound,
             "{}",
             w.net.name
         );
@@ -422,7 +422,7 @@ fn deep_chain_campaign_bounds_are_lossless_cold_and_warm() {
         }
         assert_eq!(
             got.evaluated,
-            got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+            got.feasible + got.infeasible + got.errors + got.panics + got.skipped_by_bound,
             "{tag}"
         );
         assert_eq!(
@@ -450,6 +450,130 @@ fn deep_chain_campaign_bounds_are_lossless_cold_and_warm() {
         j.get("nets").at(0).get("skipped_by_critical_path").as_u64(),
         Some(max.nets[0].skipped_by_critical_path as u64)
     );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn concurrent_campaigns_share_a_bounded_cache_without_corruption() {
+    // Two whole campaigns racing on one LRU-bounded cache directory: the
+    // cross-process index lock must serialize the read-modify-write index
+    // updates so both runs complete, neither corrupts the index, the lock
+    // file is released, and a follow-up run still answers from a coherent
+    // cache with results identical to an uncontended run.
+    let spec = CampaignSpec::homogeneous(
+        vec![models::lenet(28)],
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+            .nce_freqs_mhz(vec![125, 500]),
+    );
+    let dir = std::env::temp_dir().join(format!("avsm_lock_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // Bound below the 3 structural keys so every run churns the eviction
+    // path — the contended critical section.
+    let opts = CampaignOptions {
+        threads: 1,
+        cache_dir: Some(dir.clone()),
+        cache_max_entries: Some(2),
+        ..Default::default()
+    };
+    let reference = campaign::run(&spec, &opts).unwrap();
+
+    let results: Vec<campaign::CampaignResult> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| s.spawn(|| campaign::run(&spec, &opts).unwrap()))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.grid_points, reference.grid_points, "racer {i}");
+        assert_eq!((r.errors, r.panics), (0, 0), "racer {i}");
+        let (a, b) = (&r.nets[0].frontier, &reference.nets[0].frontier);
+        assert_eq!(a.len(), b.len(), "racer {i}: frontier size");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.name, y.name, "racer {i}");
+            assert_eq!(x.latency_ps, y.latency_ps, "racer {i}: {}", x.name);
+        }
+    }
+    // The advisory lock is gone and the index survived the race intact:
+    // parseable, within bound, and serving a coherent warm run.
+    assert!(!avsm::campaign::store::lock_path(&dir).exists(), "lock file must be released");
+    let index_text = std::fs::read_to_string(dir.join("index.json")).unwrap();
+    let index = avsm::campaign::store::CacheIndex::from_json(&index_text).unwrap();
+    assert!(index.entries().len() <= 2, "LRU bound violated: {}", index.entries().len());
+    let warm = campaign::run(&spec, &opts).unwrap();
+    assert_eq!(warm.nets[0].frontier.len(), reference.nets[0].frontier.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn killed_journaled_campaign_resumes_to_the_byte_identical_report() {
+    // End-to-end crash drill: a journaled campaign is killed mid-run (a
+    // torn journal append fails the process partway through, exactly as a
+    // SIGKILL mid-write would), then resumed with `resume: true`. The
+    // resumed report must match the uninterrupted run on every
+    // result-visible field.
+    use avsm::testkit::faults::{self, FaultKind};
+    let spec = CampaignSpec::homogeneous(
+        vec![models::lenet(28)],
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![500, 250, 125]),
+    );
+    let dir = std::env::temp_dir().join(format!("avsm_kill_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = |journal: std::path::PathBuf, resume: bool| CampaignOptions {
+        threads: 1,
+        cache_dir: Some(dir.join("cache")),
+        journal: Some(journal),
+        resume,
+        ..Default::default()
+    };
+
+    let clean = campaign::run(&spec, &opts(dir.join("clean.jsonl"), false)).unwrap();
+    let appends =
+        std::fs::read_to_string(dir.join("clean.jsonl")).unwrap().matches('\n').count();
+    assert_eq!(appends, clean.grid_points + 1, "header + one line per unit");
+
+    // Kill the run halfway through its journal appends: the header and the
+    // first few records land, the next one tears mid-line.
+    let journal = dir.join("killed.jsonl");
+    let survive = appends / 2;
+    let killed = {
+        let _g = faults::arm_after("journal.append", &dir, FaultKind::Torn, survive, 1);
+        campaign::run(&spec, &opts(journal.clone(), false))
+    };
+    let err = killed.expect_err("the torn append must kill the campaign");
+    assert!(format!("{err:#}").contains("injected torn journal append"), "{err:#}");
+    let left = std::fs::read_to_string(&journal).unwrap();
+    assert!(!left.ends_with('\n'), "the kill must leave a torn tail");
+    assert_eq!(left.matches('\n').count(), survive, "intact lines before the tear");
+
+    // Resume: the journaled units replay, the rest re-simulate, and every
+    // result-visible field matches the uninterrupted run (cache statistics
+    // may differ — replayed units never touch the cache).
+    let resumed = campaign::run(&spec, &opts(journal, true)).unwrap();
+    assert_eq!(resumed.grid_points, clean.grid_points);
+    assert_eq!(resumed.skipped_by_bound, clean.skipped_by_bound);
+    assert_eq!((resumed.errors, resumed.panics), (clean.errors, clean.panics));
+    let (a, b) = (&resumed.nets[0], &clean.nets[0]);
+    assert_eq!(a.evaluated, b.evaluated);
+    assert_eq!(a.feasible, b.feasible);
+    assert_eq!(a.infeasible, b.infeasible);
+    assert_eq!(a.dominated, b.dominated);
+    assert_eq!(a.pruned, b.pruned);
+    assert_eq!(a.skipped_by_occupancy, b.skipped_by_occupancy);
+    assert_eq!(a.skipped_by_critical_path, b.skipped_by_critical_path);
+    assert_eq!(a.frontier.len(), b.frontier.len());
+    for (x, y) in a.frontier.iter().zip(&b.frontier) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.latency_ps, y.latency_ps, "{}", x.name);
+        assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "{}", x.name);
+        assert_eq!(x.throughput.to_bits(), y.throughput.to_bits(), "{}", x.name);
+        assert_eq!(x.sys, y.sys, "{}", x.name);
+    }
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -21,7 +21,11 @@
 //!   and N worker threads;
 //! * layer windows partition the run; busy time never exceeds the window;
 //! * simulation is deterministic;
-//! * task-graph and DNN-graph JSON round-trip losslessly.
+//! * task-graph and DNN-graph JSON round-trip losslessly;
+//! * injected cache I/O faults (error/torn reads and writes) cost at most
+//!   recompiles — campaign results are byte-identical to the clean run;
+//! * a journaled campaign crash-truncated at ANY byte boundary resumes to
+//!   the byte-identical report (cache statistics excluded).
 
 use avsm::campaign::{self, CampaignOptions, CampaignSpec, StreamingFrontier};
 use avsm::compiler::{
@@ -304,7 +308,11 @@ fn max_bound_pruned_campaigns_match_unpruned_batch_sweeps_at_1_and_n_threads() {
                     }
                     assert_eq!(
                         got.evaluated,
-                        got.feasible + got.infeasible + got.errors + got.skipped_by_bound,
+                        got.feasible
+                            + got.infeasible
+                            + got.errors
+                            + got.panics
+                            + got.skipped_by_bound,
                         "case {case} {tag}/{threads}t: {}",
                         w.net.name
                     );
@@ -504,6 +512,153 @@ fn solve_requirement_reproduces_historical_topdown_exactly() {
         );
     }
     assert!(compared >= 40, "too few comparable random cases ({compared})");
+}
+
+/// Two campaign results must agree on every report-visible field; cache
+/// statistics (compiles / hit counters) are excluded — they legitimately
+/// differ when a fault forces a recompile or a resume skips one.
+fn assert_same_outcomes(a: &campaign::CampaignResult, b: &campaign::CampaignResult, tag: &str) {
+    assert_eq!(a.grid_points, b.grid_points, "{tag}: grid_points");
+    assert_eq!(a.skipped_by_bound, b.skipped_by_bound, "{tag}: skipped_by_bound");
+    assert_eq!(a.errors, b.errors, "{tag}: errors");
+    assert_eq!(a.panics, b.panics, "{tag}: panics");
+    assert_eq!(a.nets.len(), b.nets.len(), "{tag}: net count");
+    for (x, y) in a.nets.iter().zip(&b.nets) {
+        let net = &x.net;
+        assert_eq!(x.evaluated, y.evaluated, "{tag} {net}: evaluated");
+        assert_eq!(x.feasible, y.feasible, "{tag} {net}: feasible");
+        assert_eq!(x.infeasible, y.infeasible, "{tag} {net}: infeasible");
+        assert_eq!(x.errors, y.errors, "{tag} {net}: errors");
+        assert_eq!(x.error_sample, y.error_sample, "{tag} {net}: error_sample");
+        assert_eq!(x.panics, y.panics, "{tag} {net}: panics");
+        assert_eq!(x.panic_sample, y.panic_sample, "{tag} {net}: panic_sample");
+        assert_eq!(x.skipped_by_bound, y.skipped_by_bound, "{tag} {net}: skipped");
+        assert_eq!(x.skipped_by_occupancy, y.skipped_by_occupancy, "{tag} {net}: skip/occ");
+        assert_eq!(
+            x.skipped_by_critical_path, y.skipped_by_critical_path,
+            "{tag} {net}: skip/cp"
+        );
+        assert_eq!(x.dominated, y.dominated, "{tag} {net}: dominated");
+        assert_eq!(x.pruned, y.pruned, "{tag} {net}: pruned");
+        assert_eq!(x.frontier.len(), y.frontier.len(), "{tag} {net}: frontier size");
+        for (p, q) in x.frontier.iter().zip(&y.frontier) {
+            assert_eq!(p.name, q.name, "{tag} {net}: frontier member");
+            assert_eq!(p.latency_ps, q.latency_ps, "{tag} {net} {}: latency", p.name);
+            assert_eq!(p.cost.to_bits(), q.cost.to_bits(), "{tag} {net} {}: cost", p.name);
+            assert_eq!(
+                p.throughput.to_bits(),
+                q.throughput.to_bits(),
+                "{tag} {net} {}: throughput",
+                p.name
+            );
+            assert_eq!(p.sys, q.sys, "{tag} {net} {}: sys", p.name);
+        }
+    }
+}
+
+#[test]
+fn injected_cache_faults_never_change_campaign_results() {
+    // Fault-injection property: persistent-cache I/O faults — failed
+    // reads, failed writes, torn writes on either side — may cost
+    // recompiles (counted in the cache statistics) but must NEVER change
+    // what a campaign reports. Differential form across seeded random
+    // portfolios × fault site × fault kind × arrival count.
+    use avsm::testkit::faults::{self, FaultKind};
+    let mut gen = NetGen::from_env(0xFA017);
+    let root = std::env::temp_dir().join(format!("avsm_prop_faults_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for case in 0..3 {
+        let nets = vec![gen.net()];
+        let axes = dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![500, 125]);
+        let spec = CampaignSpec::homogeneous(nets, SystemConfig::base_paper(), axes);
+        let opts = |dir: std::path::PathBuf| CampaignOptions {
+            threads: 1,
+            bound: BoundKind::Max,
+            cache_dir: Some(dir),
+            ..Default::default()
+        };
+        let clean = campaign::run(&spec, &opts(root.join(format!("clean{case}")))).unwrap();
+        for (site, kind, label) in [
+            ("store.read", FaultKind::IoError, "read-err"),
+            ("store.read", FaultKind::Torn, "read-torn"),
+            ("store.write", FaultKind::IoError, "write-err"),
+            ("store.write", FaultKind::Torn, "write-torn"),
+        ] {
+            for hits in [1usize, 2, usize::MAX] {
+                let dir = root.join(format!("{label}_{case}_{hits}"));
+                if site == "store.read" {
+                    // Warm the cache first so read-side faults have files
+                    // to fail on, then re-run the same campaign under
+                    // fault: every failed read degrades to a recompile.
+                    campaign::run(&spec, &opts(dir.clone())).unwrap();
+                }
+                // Write-side faults fire on the cold first run instead,
+                // while entries are being persisted.
+                let tag = format!("case {case} {label} hits {hits}");
+                let faulted = {
+                    let _g = faults::arm(site, &dir, kind, hits);
+                    campaign::run(&spec, &opts(dir.clone())).unwrap()
+                };
+                assert_same_outcomes(&clean, &faulted, &tag);
+                // A fault-free run over whatever the faulted run left on
+                // disk (missing entries, torn corpses) must reject/heal
+                // and still agree.
+                let after = campaign::run(&spec, &opts(dir)).unwrap();
+                assert_same_outcomes(&clean, &after, &format!("{tag} (after)"));
+            }
+        }
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn resume_from_any_crash_point_reproduces_the_uninterrupted_campaign() {
+    // Crash-model property: a journaled campaign killed at ANY byte of the
+    // journal — every prefix length is some SIGKILL instant — must resume
+    // to the byte-identical report: same frontier bits, same counts, same
+    // skip attribution, with cache statistics the only fields allowed to
+    // differ. >= 100 crash points per random net.
+    let mut gen = NetGen::from_env(0x10AD);
+    let root = std::env::temp_dir().join(format!("avsm_prop_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let mut crash_points = 0usize;
+    for case in 0..2 {
+        let nets = vec![gen.net()];
+        let axes = dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![500, 250, 125, 50]);
+        let spec = CampaignSpec::homogeneous(nets, SystemConfig::base_paper(), axes);
+        let journal = root.join(format!("case{case}.jsonl"));
+        let opts = |resume: bool| CampaignOptions {
+            threads: 1,
+            bound: BoundKind::Max,
+            cache_dir: Some(root.join("cache")),
+            journal: Some(journal.clone()),
+            resume,
+            ..Default::default()
+        };
+        let clean = campaign::run(&spec, &opts(false)).unwrap();
+        let full = std::fs::read(&journal).unwrap();
+        let lines = full.iter().filter(|&&b| b == b'\n').count();
+        assert_eq!(lines, clean.grid_points + 1, "case {case}: header + one line per unit");
+        for cut in 0..=full.len() {
+            std::fs::write(&journal, &full[..cut]).unwrap();
+            let resumed = campaign::run(&spec, &opts(true)).unwrap();
+            assert_same_outcomes(&clean, &resumed, &format!("case {case} cut {cut}"));
+            crash_points += 1;
+        }
+        // After a full-journal resume the file replays every unit again:
+        // nothing re-simulates, nothing re-compiles.
+        std::fs::write(&journal, &full).unwrap();
+        let resumed = campaign::run(&spec, &opts(true)).unwrap();
+        assert_eq!(resumed.compiles, 0, "case {case}: full journal must replay everything");
+        assert_same_outcomes(&clean, &resumed, &format!("case {case} full"));
+    }
+    assert!(crash_points >= 100, "crash grid too small ({crash_points} points)");
+    std::fs::remove_dir_all(&root).unwrap();
 }
 
 #[test]

@@ -21,9 +21,12 @@ AVSM_BENCH_FAST=1 cargo bench --bench dse_sweep
 
 # Deterministic-seed property smoke: re-run the randomized differential
 # suite (lower-bound admissibility, pruned-vs-unpruned frontier identity,
-# solver-vs-oracle, ...) under a pinned AVSM_TEST_SEED, so CI exercises a
-# reproducible seed in addition to the defaults baked into each test.
-echo "== property tests (pinned AVSM_TEST_SEED)"
+# solver-vs-oracle, injected cache-fault degradation, resume-from-any-
+# crash-point report identity, ...) under a pinned AVSM_TEST_SEED, so CI
+# exercises a reproducible seed in addition to the defaults baked into
+# each test — including the fault-injection harness, whose failpoint
+# schedule is a pure function of the seed.
+echo "== property tests (pinned AVSM_TEST_SEED, incl. fault injection)"
 AVSM_TEST_SEED=20260801 cargo test -q --release --test property
 
 # The campaign bench also smokes the bound-and-prune path: it runs the
@@ -82,5 +85,38 @@ assert ja == jb, f"frontiers differ between 1 and N threads:\n{ja}\nvs\n{jb}"
 print(f"frontiers byte-identical across 1 and N threads ({len(fa)} nets)")
 EOF
 rm -rf "$OUT1" "$OUTN"
+
+# Crash-safety gate: a journaled campaign "killed" partway through (the
+# journal cut mid-line, exactly what a SIGKILL mid-append leaves behind)
+# must resume to a report byte-identical to the uninterrupted run — cache
+# statistics excluded, since replayed units never touch the cache.
+echo "== avsm campaign kill-and-resume (crash-safe journal)"
+JDIR=$(mktemp -d /tmp/avsm_campaign_journal.XXXXXX)
+cargo run --release -q -p avsm -- campaign --nets lenet --threads 1 \
+  --journal "$JDIR/full.jsonl" --outdir "$JDIR/clean" > /dev/null
+python3 - "$JDIR/full.jsonl" "$JDIR/torn.jsonl" <<'EOF'
+import sys
+lines = open(sys.argv[1], "rb").read().split(b"\n")[:-1]
+keep = 1 + (len(lines) - 1) // 2  # header + half the unit records
+torn = b"\n".join(lines[:keep]) + b"\n" + lines[keep][: max(1, len(lines[keep]) // 2)]
+open(sys.argv[2], "wb").write(torn)
+print(f"kept {keep}/{len(lines)} journal lines + a torn tail")
+EOF
+cargo run --release -q -p avsm -- campaign --nets lenet --threads 1 \
+  --journal "$JDIR/torn.jsonl" --resume --outdir "$JDIR/resumed" > /dev/null
+python3 - "$JDIR/clean/campaign.json" "$JDIR/resumed/campaign.json" <<'EOF'
+import json, sys
+def normalize(path):
+    d = json.load(open(path))
+    d.pop("cache", None)
+    for n in d["nets"]:
+        for k in ("compilations", "disk_hits", "negative_hits", "memory_hits"):
+            n.pop(k, None)
+    return json.dumps(d, sort_keys=True)
+a, b = (normalize(p) for p in sys.argv[1:3])
+assert a == b, "resumed campaign report differs from the uninterrupted run"
+print("kill-and-resume report identical (cache statistics excluded)")
+EOF
+rm -rf "$JDIR"
 
 echo "== OK"

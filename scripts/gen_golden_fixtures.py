@@ -3,7 +3,8 @@
 
 The fixtures pin the on-disk JSON schemas (`avsm-campaign-v1`,
 `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`,
-`avsm-compile-cache-index-v1`) byte-for-byte: `rust/tests/golden.rs` parses
+`avsm-compile-cache-index-v1`, `avsm-campaign-journal-v1`)
+byte-for-byte: `rust/tests/golden.rs` parses
 each fixture with the real parsers and asserts the real serializers emit the
 fixture bytes back. This script exists only to produce those bytes in the
 writers' canonical form (sorted object keys, compact separators, floats with
@@ -123,11 +124,13 @@ def net(name, frontier):
         "base": "base_paper_virtex7",
         "axes": [{"axis": "nce_freq_mhz", "values": [125, 250]}],
         "legend": {"f": "NCE frequency (MHz)"},
-        "evaluated": len(frontier) + 4,
+        "evaluated": len(frontier) + 5,
         "feasible": len(frontier) + 1,
         "infeasible": 1,
         "errors": 1,
         "error_sample": "nce0x0_f0: invalid configuration",
+        "panics": 1,
+        "panic_sample": "nce0x0_f1: evaluation worker panicked",
         "bound": "max",
         "skipped_by_bound": 1,
         "skipped_by_occupancy": 0,
@@ -150,6 +153,7 @@ CAMPAIGN = {
     "bound": "max",
     "skipped_by_bound": 2,
     "errors": 2,
+    "panics": 2,
     "nets": [
         net("lenet", [frontier_point("a", 2_000_000, 5.0),
                       frontier_point("b", 4_000_000, 3.0)]),
@@ -171,6 +175,22 @@ CAMPAIGN = {
 }
 
 
+# One header plus one record per terminal unit class, in the writer's
+# canonical line form. The golden test replays this file with the real
+# `Journal::resume` and re-appends the records with the real writer,
+# asserting the bytes come back identical.
+JOURNAL = [
+    {"schema": "avsm-campaign-journal-v1",
+     "spec": "00000000deadbeef", "units": 6},
+    {"class": "feasible", "latency_ps": 2400000, "unit": 0},
+    {"class": "infeasible", "unit": 3},
+    {"class": "error", "diag": "nce0x0: invalid configuration", "unit": 1},
+    {"class": "panicked", "diag": "worker died", "unit": 4},
+    {"by_occupancy": True, "class": "skipped", "unit": 2},
+    {"by_occupancy": False, "class": "skipped", "unit": 5},
+]
+
+
 def main():
     OUT.mkdir(parents=True, exist_ok=True)
     fixtures = {
@@ -183,6 +203,9 @@ def main():
         path = OUT / name
         path.write_text(dumps(doc) + "\n")
         print(f"wrote {path}")
+    path = OUT / "campaign_journal_v1.jsonl"
+    path.write_text("".join(dumps(line) + "\n" for line in JOURNAL))
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":
