@@ -22,6 +22,11 @@ pub struct BenchResult {
     pub mean: Duration,
     pub min: Duration,
     pub max: Duration,
+    /// Nearest-rank latency percentiles (see [`crate::metrics::Summary`]);
+    /// with few iters these collapse toward `max`, by construction.
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
 }
 
 impl BenchResult {
@@ -91,6 +96,8 @@ impl Bench {
         samples.sort();
         let median = samples[samples.len() / 2];
         let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let ns: Vec<f64> = samples.iter().map(|d| d.as_nanos() as f64).collect();
+        let stats = crate::metrics::summarize(&ns);
         let res = BenchResult {
             name: format!("{}/{}", self.group, name),
             iters: self.iters,
@@ -98,6 +105,9 @@ impl Bench {
             mean,
             min: samples[0],
             max: *samples.last().unwrap(),
+            p50: Duration::from_nanos(stats.p50 as u64),
+            p90: Duration::from_nanos(stats.p90 as u64),
+            p99: Duration::from_nanos(stats.p99 as u64),
         };
         println!("{}", res.per_iter_line());
         self.results.push(res);
@@ -130,6 +140,9 @@ impl Bench {
                         ("mean_ns", (r.mean.as_nanos() as u64).into()),
                         ("min_ns", (r.min.as_nanos() as u64).into()),
                         ("max_ns", (r.max.as_nanos() as u64).into()),
+                        ("p50_ns", (r.p50.as_nanos() as u64).into()),
+                        ("p90_ns", (r.p90.as_nanos() as u64).into()),
+                        ("p99_ns", (r.p99.as_nanos() as u64).into()),
                         ("iters", r.iters.into()),
                     ])
                 })
@@ -190,6 +203,12 @@ mod tests {
         assert_eq!(cases.len(), 1);
         assert_eq!(cases[0].get("name").as_str(), Some("dse_sweep/sweep_9_points"));
         assert!(cases[0].get("median_ns").as_u64().is_some());
+        let (p50, p99) = (
+            cases[0].get("p50_ns").as_u64().unwrap(),
+            cases[0].get("p99_ns").as_u64().unwrap(),
+        );
+        assert!(p50 <= p99, "percentiles must be monotone");
+        assert!(p99 <= cases[0].get("max_ns").as_u64().unwrap());
         // Round-trips through the writer.
         let text = j.to_string_pretty();
         let back = crate::json::parse(&text).unwrap();

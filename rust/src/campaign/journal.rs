@@ -277,6 +277,7 @@ impl Journal {
     }
 
     fn write_line(&mut self, line: &str) -> Result<()> {
+        let mut span = crate::obs::span("journal.append");
         let bytes = line.as_bytes();
         let write = || -> std::io::Result<()> {
             match faults::before_write("journal.append", &self.path, bytes.len())? {
@@ -294,7 +295,11 @@ impl Journal {
                 }
             }
         };
-        write().with_context(|| format!("appending to campaign journal {}", self.path.display()))
+        let result = write();
+        if result.is_err() {
+            span.set_outcome("error");
+        }
+        result.with_context(|| format!("appending to campaign journal {}", self.path.display()))
     }
 }
 

@@ -123,6 +123,18 @@
 //! reproduces its report byte-identically while re-simulating only the
 //! unfinished units.
 //!
+//! # Telemetry
+//!
+//! With [`crate::obs`] recording on (CLI `--telemetry` / `--trace-out`),
+//! every unit's lifecycle lands as spans — `resolve` and `bound` in
+//! phase 1, `simulate` or `skipped` in phase 2, plus `compile`,
+//! `cache.read`, `cache.write`, `lock.wait`, `lock.steal` and
+//! `journal.append` at the persistence sites — tagged with worker id,
+//! net, unit and outcome class, and the cache tier totals are pushed as
+//! counters. [`run`] dispatches to a monomorphized `OBS` instantiation
+//! (the simulator's `TRACED` idiom), so the disabled engine carries no
+//! telemetry code, and recording never changes what a campaign computes.
+//!
 //! [`CompileKey`]: crate::compiler::CompileKey
 
 pub mod frontier;
@@ -453,7 +465,37 @@ fn spec_fingerprint(spec: &CampaignSpec, opts: &CampaignOptions, prune: bool) ->
 
 /// Run a campaign: every workload x its grid in one two-phase fan-out
 /// (resolve + bound, then simulate in bound order).
+///
+/// Dispatches to a monomorphized instantiation on whether telemetry
+/// recording ([`crate::obs`]) is on — the simulator's `TRACED` idiom —
+/// so the disabled engine contains no per-unit telemetry code at all.
+/// Recording never changes results: frontiers are byte-identical with
+/// telemetry on vs. off at any thread count, and the full report
+/// byte-identical single-threaded (property-tested; under parallel
+/// workers the skip counters race benignly either way).
 pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult> {
+    if crate::obs::enabled() {
+        run_campaign::<true>(spec, opts)
+    } else {
+        run_campaign::<false>(spec, opts)
+    }
+}
+
+/// One per-unit telemetry site: a tagged span in the recording
+/// instantiation, an inert guard (no clock read, no lock) otherwise.
+#[inline]
+fn unit_span<const OBS: bool>(kind: &'static str, net: &str, unit: usize) -> crate::obs::SpanGuard {
+    if OBS {
+        crate::obs::span_tagged(kind, net, unit as u64)
+    } else {
+        crate::obs::SpanGuard::inactive()
+    }
+}
+
+fn run_campaign<const OBS: bool>(
+    spec: &CampaignSpec,
+    opts: &CampaignOptions,
+) -> Result<CampaignResult> {
     if spec.workloads.is_empty() {
         bail!("campaign needs at least one workload");
     }
@@ -535,8 +577,10 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
         }
         let (ni, ci) = locate(u);
         let sys = &grids[ni][ci];
+        let mut span = unit_span::<OBS>("resolve", &spec.workloads[ni].net.name, u);
         if let Some(rec) = replayed[u] {
             use journal::UnitRecord as R;
+            span.set_outcome("replayed");
             return match rec {
                 R::Feasible { .. } => Resolved::ReplayedFeasible,
                 R::Infeasible => Resolved::Infeasible,
@@ -557,6 +601,7 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
                 // skip to "occupancy would have sufficed" vs "needed the
                 // critical path" in the report.
                 let (bound, occ_bound, cost) = if prune {
+                    let _bound_span = unit_span::<OBS>("bound", &spec.workloads[ni].net.name, u);
                     let occ = crate::compiler::occupancy_lower_bound(&compiled, sys);
                     let bound = match opts.bound {
                         BoundKind::Occupancy => occ,
@@ -571,15 +616,20 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
                 } else {
                     (0, 0, 0.0)
                 };
+                span.set_outcome("compiled");
                 Resolved::Compiled { compiled, bound, occ_bound, cost }
             }
             Err(dse::EvalOutcome::Error { name, reason }) => {
                 if opts.fail_fast {
                     cancelled.store(true, Ordering::Relaxed);
                 }
+                span.set_outcome("error");
                 Resolved::Error(format!("{name}: {reason}"))
             }
-            Err(_) => Resolved::Infeasible,
+            Err(_) => {
+                span.set_outcome("infeasible");
+                Resolved::Infeasible
+            }
         }
     })
     .into_iter()
@@ -742,12 +792,22 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
                     // Provenance, under the same lock (same frontier
                     // state): would the occupancy bound alone have
                     // refused this candidate too?
-                    return UnitOutcome::SkippedByBound {
-                        by_occupancy: !frontier.admits(*occ_bound, *cost),
-                    };
+                    let by_occupancy = !frontier.admits(*occ_bound, *cost);
+                    if OBS {
+                        // A skip is a decision, not work: record it as a
+                        // zero-ish-duration span so accounting still sees
+                        // every compiled unit (simulate + skipped).
+                        let mut s =
+                            unit_span::<OBS>("skipped", &spec.workloads[ni].net.name, u);
+                        s.set_outcome(if by_occupancy { "occupancy" } else { "critical_path" });
+                    }
+                    return UnitOutcome::SkippedByBound { by_occupancy };
                 }
             }
-            UnitOutcome::Feasible(dse::evaluate_compiled(compiled, sys, sys.name.clone()))
+            let mut span = unit_span::<OBS>("simulate", &spec.workloads[ni].net.name, u);
+            let point = dse::evaluate_compiled(compiled, sys, sys.name.clone());
+            span.set_outcome("feasible");
+            UnitOutcome::Feasible(point)
         },
         |j, outcome| {
             let u = eval_units[j];
@@ -843,6 +903,20 @@ pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult
             points: kept[ni].drain(..).flatten().collect(),
             frontier: frontier.into_points(),
         });
+    }
+    if OBS {
+        // Cache-tier totals as telemetry counters, so one snapshot carries
+        // both the latency histograms and the hit/miss composition.
+        crate::obs::count("cache.compiles", compiles);
+        crate::obs::count("cache.disk_hits", disk_hits);
+        crate::obs::count("cache.neg_hits", neg_hits);
+        crate::obs::count("cache.mem_hits", mem_hits);
+        crate::obs::count("cache.rejected", rejected);
+        crate::obs::count("cache.read_errors", read_errors);
+        crate::obs::count(
+            "cache.lock_steals",
+            caches.iter().map(|c| c.lock_steals()).sum::<u64>(),
+        );
     }
     let skipped_total = nets.iter().map(|n| n.skipped_by_bound).sum();
     Ok(CampaignResult {

@@ -133,6 +133,11 @@ where
         for w in 0..threads {
             let tx = tx.clone();
             scope.spawn(move || {
+                // Telemetry identity: workers are 1..=threads, leaving 0
+                // for the coordinating thread (which also runs the whole
+                // inline single-worker path above). One thread-local write
+                // per spawned thread, not per job.
+                crate::obs::set_worker(w as u32 + 1);
                 let mut i = w;
                 while i < jobs {
                     // A send error means the receiver is gone (collector
@@ -253,6 +258,25 @@ mod tests {
             vec![(0, "boom 0".into()), (5, "boom 5".into()), (10, "boom 10".into())]
         );
         assert_eq!(ok, vec![1, 2, 3, 4, 6, 7, 8, 9, 11]);
+    }
+
+    #[test]
+    fn workers_claim_dense_telemetry_ids() {
+        // Strided scheduling gives every worker jobs, so ids 1..=3 must
+        // all appear; the inline single-worker path stays on the calling
+        // thread, which keeps the coordinator id 0.
+        let mut ids: Vec<u32> = parallel_map(9, 3, |_| crate::obs::worker())
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids, vec![1, 2, 3]);
+        let inline: Vec<u32> = parallel_map(2, 1, |_| crate::obs::worker())
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(inline, vec![0, 0]);
     }
 
     #[test]

@@ -278,6 +278,15 @@ pub fn write_negative(dir: &Path, key: &CompileKey, diagnostic: &str) -> Result<
 }
 
 fn write_atomic(dir: &Path, tag: u64, path: &Path, content: String) -> Result<()> {
+    let mut span = crate::obs::span("cache.write");
+    let result = write_atomic_inner(dir, tag, path, content);
+    if result.is_err() {
+        span.set_outcome("error");
+    }
+    result
+}
+
+fn write_atomic_inner(dir: &Path, tag: u64, path: &Path, content: String) -> Result<()> {
     match crate::testkit::faults::before_write("store.write", path, content.len()) {
         Ok(None) => {}
         Ok(Some(n)) => {
@@ -336,6 +345,11 @@ impl CacheLock {
     /// the index is advisory, a deadlocked campaign is not.
     fn acquire(dir: &Path, steals: &AtomicU64) -> Option<CacheLock> {
         let path = lock_path(dir);
+        // The whole acquisition (polls, sleeps, steals included) is one
+        // `lock.wait` span — its duration is exactly the time this worker
+        // spent not compiling because of index contention.
+        let mut span = crate::obs::span("lock.wait");
+        span.set_outcome("timeout");
         // Unparseable lock payloads are almost always debris from a holder
         // killed between `create_new` and its PID write; give a genuinely
         // racing creator a few polls to finish writing before stealing.
@@ -345,6 +359,7 @@ impl CacheLock {
                 Ok(mut f) => {
                     use std::io::Write;
                     let _ = write!(f, "{}", std::process::id());
+                    span.set_outcome("acquired");
                     return Some(CacheLock { path });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
@@ -365,11 +380,15 @@ impl CacheLock {
                         // single-holder.
                         let _ = std::fs::remove_file(&path);
                         steals.fetch_add(1, Ordering::Relaxed);
+                        crate::obs::instant("lock.steal");
                         continue;
                     }
                     std::thread::sleep(std::time::Duration::from_millis(10));
                 }
-                Err(_) => return None,
+                Err(_) => {
+                    span.set_outcome("error");
+                    return None;
+                }
             }
         }
         None
@@ -563,7 +582,17 @@ impl PersistentCache {
                 }
             }
             self.compiles.fetch_add(1, Ordering::Relaxed);
-            match compile(net, sys, self.mem.options()) {
+            // The `compile` span covers only the source compiler run —
+            // persisting the result is its own `cache.write` span.
+            let compiled_or_err = {
+                let mut span = crate::obs::span("compile");
+                let r = compile(net, sys, self.mem.options());
+                if r.is_err() {
+                    span.set_outcome("infeasible");
+                }
+                r
+            };
+            match compiled_or_err {
                 Ok(compiled) => {
                     if let Some(dir) = &self.dir {
                         // Best-effort persistence: a full disk must not
@@ -662,15 +691,21 @@ impl PersistentCache {
     /// from a genuine I/O failure, which is *counted* instead of silently
     /// degrading into an eternal miss.
     fn read_cache_file(&self, path: &Path) -> Option<String> {
+        let mut span = crate::obs::span("cache.read");
         if crate::testkit::faults::before_read("store.read", path).is_err() {
             self.read_errors.fetch_add(1, Ordering::Relaxed);
+            span.set_outcome("error");
             return None;
         }
         match std::fs::read_to_string(path) {
             Ok(text) => Some(text),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                span.set_outcome("absent");
+                None
+            }
             Err(_) => {
                 self.read_errors.fetch_add(1, Ordering::Relaxed);
+                span.set_outcome("error");
                 None
             }
         }

@@ -141,9 +141,17 @@ pub fn evaluate_compiled(
     sys: &SystemConfig,
     name: impl Into<String>,
 ) -> DesignPoint {
+    let name = name.into();
+    // `sim.evaluate` failpoint: lets tests kill a worker mid-simulation,
+    // scoped by the `<net>/<point>` pseudo-path so only the arming test's
+    // uniquely named net trips it.
+    crate::testkit::faults::before_op(
+        "sim.evaluate",
+        &std::path::Path::new(&compiled.graph.name).join(&name),
+    );
     let mut trace = TraceRecorder::disabled();
     let sim = simulate_avsm(compiled, sys, &mut trace);
-    point_from_latency(sys, name.into(), sim.total_ps)
+    point_from_latency(sys, name, sim.total_ps)
 }
 
 /// Evaluate one design point through a [`CompileCache`]: points that differ

@@ -20,6 +20,9 @@
 //! * [`dse`] — design-space exploration sweeps.
 //! * [`campaign`] — multi-workload co-design sweeps: shared worker pool,
 //!   streaming Pareto frontiers, disk-persistent compile cache.
+//! * [`obs`] — span/counter telemetry for the exploration engine itself
+//!   (per-worker timelines, latency histograms, the
+//!   `avsm-campaign-telemetry-v1` report).
 //! * [`runtime`] — PJRT loader executing the AOT JAX/Pallas artifacts.
 //! * [`coordinator`] — the end-to-end flow of Fig 1 with phase timing (Fig 3).
 
@@ -36,6 +39,7 @@ pub mod graph;
 pub mod hw;
 pub mod json;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod roofline;
 pub mod runtime;

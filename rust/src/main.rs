@@ -15,7 +15,7 @@ use avsm::dse;
 use avsm::graph::{graph_from_json, models, DnnGraph};
 use avsm::hw::simulate_avsm;
 use avsm::metrics::{fmt_bytes, fmt_ps};
-use avsm::report::{CampaignReport, Fig5Report};
+use avsm::report::{axis_legend, CampaignReport, Fig5Report, TelemetryReport};
 use avsm::roofline::RooflineModel;
 use avsm::runtime::{self, Manifest, Runtime};
 use avsm::sim::TraceRecorder;
@@ -40,7 +40,8 @@ COMMANDS:
              portfolio, streaming per-net Pareto frontiers + cross-net
              summary (--nets A,B,C | --workloads FILE, --axes SPEC,
              --cache-dir DIR --threads N --fail-fast
-             --journal FILE --resume)
+             --journal FILE --resume
+             --telemetry FILE --trace-out FILE)
   topdown    minimum axis value for a latency target (--target-ms X
              --axis NAME --lo N --hi N; default axis nce_freq_mhz —
              the paper's §2 top-down mode, generalized)
@@ -92,11 +93,23 @@ COMMON OPTIONS:
                       report comes out byte-identical to the uninterrupted
                       run; an absent journal is a fresh start, a journal
                       from a different spec refuses loudly
+  --telemetry FILE    record engine telemetry during `campaign` and write
+                      the avsm-campaign-telemetry-v1 report (per-span-kind
+                      counts, p50/p90/p99 latencies, cache-tier counters)
+                      there; a text summary table prints either way.
+                      Recording never changes the campaign's results
+  --trace-out FILE    write the engine's own per-worker timeline as a
+                      Chrome trace-event JSON (one thread per pool worker;
+                      load in chrome://tracing or ui.perfetto.dev) —
+                      the exploration engine's Gantt, sibling to
+                      `gantt --format chrome`'s simulated-schedule view
 
 AXIS SPECS (--axes, and \"axes\" inside --workloads entries):
   JSON array of {\"axis\": NAME, \"values\": [..]} objects, swept first-
   axis-outermost. Scalar axes take integers; array_geometry takes
   [rows, cols] pairs. Prefix the argument with @ to read it from a file.
+  `roofline` and `gantt --format svg` accept --axes purely to caption the
+  SVG with the axis name legend decoding swept-point name tokens.
     axes: array_geometry, nce_freq_mhz, bus_freq_mhz (retime-only),
           bus_bytes_per_cycle, ifm_buffer_kib, weight_buffer_kib,
           ofm_buffer_kib
@@ -226,6 +239,15 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Optional `--axes` legend for SVG captions: decodes the swept-axis name
+/// tokens (`f250`, `g32x64`, ...) that campaign design-point names carry.
+fn svg_legend(args: &Args) -> Result<Vec<(&'static str, String)>> {
+    Ok(match args.get("axes") {
+        Some(spec) => axis_legend(&parse_axes(spec)?),
+        None => Vec::new(),
+    })
+}
+
 fn cmd_roofline(args: &Args) -> Result<()> {
     let sys = load_sys(args)?;
     let net = load_net(args)?;
@@ -235,13 +257,17 @@ fn cmd_roofline(args: &Args) -> Result<()> {
     let ops: Vec<u64> = net.layer_costs().iter().map(|c| c.arith_ops).collect();
     let model = RooflineModel::from_sim(&sys, &sim, &ops);
     let zoom = if args.has("zoom") { Some(model.ridge * 0.8) } else { None };
+    let legend = svg_legend(args)?;
     print!("{}", model.render_text(zoom));
     if let Some(dir) = args.get("outdir") {
         std::fs::create_dir_all(dir)?;
         let dir = PathBuf::from(dir);
         let tag = if zoom.is_some() { "fig7" } else { "fig6" };
         std::fs::write(dir.join(format!("{tag}.json")), model.to_json().to_string_pretty())?;
-        std::fs::write(dir.join(format!("{tag}.svg")), model.render_svg(zoom))?;
+        std::fs::write(
+            dir.join(format!("{tag}.svg")),
+            model.render_svg_with_legend(zoom, &legend),
+        )?;
         println!("wrote {}/{tag}.{{json,svg}}", dir.display());
     }
     Ok(())
@@ -270,7 +296,7 @@ fn cmd_gantt(args: &Args) -> Result<()> {
     match args.get_or("format", "ascii") {
         "ascii" => print!("{}", g.render_ascii()),
         "csv" => print!("{}", g.render_csv()),
-        "svg" => println!("{}", g.render_svg()),
+        "svg" => println!("{}", g.render_svg_with_legend(&svg_legend(args)?)),
         // chrome://tracing / ui.perfetto.dev interactive view.
         "chrome" => println!("{}", avsm::trace::to_chrome_trace(&trace)),
         other => bail!("unknown gantt format {other:?}"),
@@ -440,6 +466,15 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         journal,
         resume: args.has("resume"),
     };
+    // Telemetry is opt-in: either artifact flag turns the recorder on for
+    // the whole run. Recording never changes the campaign's results (the
+    // property suite pins frontiers byte-identical on vs. off).
+    let telemetry = args.get("telemetry").map(PathBuf::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let observe = telemetry.is_some() || trace_out.is_some();
+    if observe {
+        avsm::obs::enable();
+    }
     let result = campaign::run(&spec, &opts)?;
     let report = CampaignReport::new(&result);
     print!("{}", report.render_text());
@@ -448,6 +483,19 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         let path = PathBuf::from(dir).join("campaign.json");
         std::fs::write(&path, report.to_json().to_string_pretty())?;
         println!("wrote {}", path.display());
+    }
+    if observe {
+        let t = avsm::obs::snapshot();
+        let tel = TelemetryReport::new(&t);
+        print!("\n{}", tel.render_text());
+        if let Some(path) = &telemetry {
+            std::fs::write(path, tel.to_json().to_string_pretty())?;
+            println!("wrote {}", path.display());
+        }
+        if let Some(path) = &trace_out {
+            std::fs::write(path, avsm::trace::spans_to_chrome_trace(&t.spans))?;
+            println!("wrote {} (load in chrome://tracing or ui.perfetto.dev)", path.display());
+        }
     }
     Ok(())
 }

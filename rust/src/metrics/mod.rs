@@ -23,6 +23,11 @@ pub fn accuracy_pct(estimate: f64, reference: f64) -> f64 {
 }
 
 /// Summary statistics of a sample.
+///
+/// `median` is the interpolating median (mean of the middle two on even
+/// `n`); the `p50/p90/p99` fields are nearest-rank percentiles (always a
+/// sample member), the convention latency histograms use — on even `n`
+/// the two can differ.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
     pub n: usize,
@@ -31,6 +36,17 @@ pub struct Summary {
     pub max: f64,
     pub std: f64,
     pub median: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted non-empty sample:
+/// rank `ceil(p/100 * n)`, 1-based.
+fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 pub fn summarize(xs: &[f64]) -> Summary {
@@ -52,6 +68,9 @@ pub fn summarize(xs: &[f64]) -> Summary {
         max: sorted[n - 1],
         std: var.sqrt(),
         median,
+        p50: nearest_rank(&sorted, 50.0),
+        p90: nearest_rank(&sorted, 90.0),
+        p99: nearest_rank(&sorted, 99.0),
     }
 }
 
@@ -124,8 +143,33 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
         assert!((s.median - 2.5).abs() < 1e-12);
+        // Nearest-rank never interpolates: p50 of an even sample is the
+        // lower middle element, not the interpolated median.
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p90, 4.0);
+        assert_eq!(s.p99, 4.0);
         let odd = summarize(&[3.0, 1.0, 2.0]);
         assert_eq!(odd.median, 2.0);
+        assert_eq!(odd.p50, 2.0);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_on_known_samples() {
+        // 1..=100: rank(p) = p exactly, the textbook nearest-rank case.
+        let xs: Vec<f64> = (1..=100).map(f64::from).collect();
+        let s = summarize(&xs);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p99, 99.0);
+        // Singleton: every percentile is the sample.
+        let one = summarize(&[42.0]);
+        assert_eq!((one.p50, one.p90, one.p99), (42.0, 42.0, 42.0));
+        // n=10 of 10..=100 by tens: p99 → rank ceil(9.9)=10 → max.
+        let tens: Vec<f64> = (1..=10).map(|i| (i * 10) as f64).collect();
+        let t = summarize(&tens);
+        assert_eq!(t.p50, 50.0);
+        assert_eq!(t.p90, 90.0);
+        assert_eq!(t.p99, 100.0);
     }
 
     #[test]

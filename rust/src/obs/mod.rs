@@ -1,0 +1,352 @@
+//! obs — lightweight span/counter telemetry for the exploration engine.
+//!
+//! The simulator can already render a *workload's* schedule as a Chrome
+//! trace; this module gives the campaign engine the same treatment for
+//! its *own* execution. Every unit's lifecycle is recorded as spans
+//! (`resolve`, `compile`, `cache.read`, `cache.write`, `lock.wait`,
+//! `lock.steal`, `bound`, `simulate`, `skipped`, `journal.append`) tagged
+//! with the recording worker, the net, the unit sequence number, and an
+//! outcome class. A process-global recorder aggregates them; snapshots
+//! feed the `avsm-campaign-telemetry-v1` report
+//! ([`crate::report::TelemetryReport`]) and the per-worker engine
+//! timeline ([`crate::trace::spans_to_chrome_trace`]).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero-cost when disabled.** The hot campaign loops are
+//!    monomorphized over an `OBS` const (the same idiom as the
+//!    simulator's `TRACED` fast path), so the disabled build of the
+//!    per-unit path contains no telemetry code at all. The deeper,
+//!    colder sites (cache I/O, lock acquisition, journal appends) guard
+//!    on one relaxed atomic load — the same fast path as
+//!    [`crate::testkit::faults`].
+//! 2. **Zero interference when enabled.** Recording never changes what a
+//!    campaign computes: spans are observations only, and the property
+//!    suite pins frontiers byte-identical with telemetry on vs. off at
+//!    1 and N threads (and the full report single-threaded, where it is
+//!    run-to-run deterministic to begin with).
+//! 3. **No seeded clock.** Timestamps are nanoseconds since a
+//!    process-wide [`Instant`] epoch captured at first enable —
+//!    monotonic, comparable across threads, and never consulted unless
+//!    recording is on (determinism elsewhere stays clock-free).
+//!
+//! Enabling is refcounted ([`recording`] returns an RAII guard) so
+//! concurrently running tests can each record without clobbering one
+//! another; they isolate by filtering snapshots on their own net names.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// One recorded interval (or instant, when `start_ns == end_ns`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Span kind from the fixed vocabulary (`resolve`, `simulate`, ...).
+    pub kind: &'static str,
+    /// Recording thread: 0 is the coordinating thread (also the inline
+    /// single-thread path), pool workers are 1..=threads.
+    pub worker: u32,
+    /// Net name, for per-unit spans.
+    pub net: Option<String>,
+    /// Campaign unit sequence number, for per-unit spans.
+    pub unit: Option<u64>,
+    /// Outcome class (`ok`, `compiled`, `feasible`, `panicked`, ...).
+    /// Spans dropped during a panic unwind are marked `panicked`
+    /// regardless of what the site set.
+    pub outcome: &'static str,
+    /// Nanoseconds since the recorder epoch.
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// A snapshot of everything recorded so far: raw spans plus named
+/// monotonic counters (cache tier totals, pushed by the campaign).
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    pub spans: Vec<Span>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+#[derive(Default)]
+struct State {
+    spans: Vec<Span>,
+    counters: BTreeMap<String, u64>,
+}
+
+/// Fast-path gate: one relaxed load on every guarded site.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Refcount behind [`ENABLED`], so overlapping recordings compose.
+static REFS: AtomicU64 = AtomicU64::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static STATE: Mutex<State> = Mutex::new(State {
+    spans: Vec::new(),
+    counters: BTreeMap::new(),
+});
+
+thread_local! {
+    /// Worker id of the current thread; 0 (the coordinator) unless the
+    /// campaign pool claimed this thread via [`set_worker`].
+    static WORKER: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Is recording currently on? One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on (refcounted, never turned off by this call — the
+/// CLI enables once for the process). Prefer [`recording`] in tests.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    REFS.fetch_add(1, Ordering::SeqCst);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+fn disable() {
+    if REFS.fetch_sub(1, Ordering::SeqCst) == 1 {
+        ENABLED.store(false, Ordering::SeqCst);
+    }
+}
+
+/// RAII recording scope: recording stays on until every outstanding
+/// guard has dropped.
+#[must_use = "recording stops when the guard drops"]
+pub struct RecordingGuard(());
+
+impl Drop for RecordingGuard {
+    fn drop(&mut self) {
+        disable();
+    }
+}
+
+pub fn recording() -> RecordingGuard {
+    enable();
+    RecordingGuard(())
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn state() -> std::sync::MutexGuard<'static, State> {
+    // A panicking span drop poisons the state mutex by design of std;
+    // telemetry must keep working after a contained worker panic.
+    STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Claim a worker id for the current thread (campaign pool workers call
+/// this once at spawn; ids are 1..=threads, 0 stays the coordinator).
+pub fn set_worker(w: u32) {
+    WORKER.with(|c| c.set(w));
+}
+
+pub fn worker() -> u32 {
+    WORKER.with(|c| c.get())
+}
+
+/// An open span, recorded when dropped. Inactive guards (recording off
+/// at open) are inert: no clock read, no lock, a single branch on drop.
+pub struct SpanGuard {
+    active: bool,
+    kind: &'static str,
+    net: Option<String>,
+    unit: Option<u64>,
+    outcome: &'static str,
+    start_ns: u64,
+}
+
+impl SpanGuard {
+    /// A guard that records nothing — the disabled arm of monomorphized
+    /// call sites.
+    pub fn inactive() -> Self {
+        SpanGuard { active: false, kind: "", net: None, unit: None, outcome: "ok", start_ns: 0 }
+    }
+
+    /// Set the outcome class recorded at drop. No-op on inactive guards;
+    /// overridden by `panicked` if the guard drops during an unwind.
+    pub fn set_outcome(&mut self, outcome: &'static str) {
+        self.outcome = outcome;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let outcome = if std::thread::panicking() { "panicked" } else { self.outcome };
+        let span = Span {
+            kind: self.kind,
+            worker: worker(),
+            net: self.net.take(),
+            unit: self.unit,
+            outcome,
+            start_ns: self.start_ns,
+            end_ns: now_ns(),
+        };
+        state().spans.push(span);
+    }
+}
+
+/// Open a span with outcome `ok`; returns an inactive guard when
+/// recording is off.
+pub fn span(kind: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inactive();
+    }
+    SpanGuard { active: true, kind, net: None, unit: None, outcome: "ok", start_ns: now_ns() }
+}
+
+/// Open a span tagged with the unit it belongs to.
+pub fn span_tagged(kind: &'static str, net: &str, unit: u64) -> SpanGuard {
+    let mut g = span(kind);
+    if g.active {
+        g.net = Some(net.to_string());
+        g.unit = Some(unit);
+    }
+    g
+}
+
+/// Record a zero-duration marker (e.g. `lock.steal`).
+pub fn instant(kind: &'static str) {
+    if !enabled() {
+        return;
+    }
+    let t = now_ns();
+    state().spans.push(Span {
+        kind,
+        worker: worker(),
+        net: None,
+        unit: None,
+        outcome: "ok",
+        start_ns: t,
+        end_ns: t,
+    });
+}
+
+/// Add `delta` to a named counter (no-op while recording is off).
+pub fn count(name: &str, delta: u64) {
+    if !enabled() || delta == 0 {
+        return;
+    }
+    *state().counters.entry(name.to_string()).or_insert(0) += delta;
+}
+
+/// Copy out everything recorded so far. Concurrent recordings interleave;
+/// consumers isolate by filtering on their own net names.
+pub fn snapshot() -> Telemetry {
+    let st = state();
+    Telemetry { spans: st.spans.clone(), counters: st.counters.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The recorder is process-global, so these tests serialize among
+    /// themselves (other lib tests never enable recording) and filter
+    /// snapshots by test-unique span kinds.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn spans_of(kind: &str) -> Vec<Span> {
+        snapshot().spans.into_iter().filter(|s| s.kind == kind).collect()
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let _l = lock();
+        assert!(!enabled());
+        {
+            let mut g = span("obs.test.inert");
+            g.set_outcome("whatever");
+        }
+        instant("obs.test.inert");
+        count("obs.test.inert", 3);
+        assert!(spans_of("obs.test.inert").is_empty());
+        assert!(!snapshot().counters.contains_key("obs.test.inert"));
+    }
+
+    #[test]
+    fn span_records_kind_tags_and_outcome() {
+        let _l = lock();
+        let _r = recording();
+        {
+            let mut g = span_tagged("obs.test.tagged", "netx", 7);
+            g.set_outcome("compiled");
+        }
+        let got = spans_of("obs.test.tagged");
+        assert_eq!(got.len(), 1);
+        let s = &got[0];
+        assert_eq!(s.net.as_deref(), Some("netx"));
+        assert_eq!(s.unit, Some(7));
+        assert_eq!(s.outcome, "compiled");
+        assert!(s.end_ns >= s.start_ns);
+        assert_eq!(s.worker, 0, "coordinator thread records as worker 0");
+    }
+
+    #[test]
+    fn panicking_drop_marks_span_panicked_and_recorder_survives() {
+        let _l = lock();
+        let _r = recording();
+        let err = std::panic::catch_unwind(|| {
+            let mut g = span("obs.test.panic");
+            g.set_outcome("feasible"); // overridden by the unwind
+            panic!("boom");
+        });
+        assert!(err.is_err());
+        let got = spans_of("obs.test.panic");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].outcome, "panicked");
+        // The recorder still works after a panic poisoned nothing.
+        instant("obs.test.panic.after");
+        assert_eq!(spans_of("obs.test.panic.after").len(), 1);
+    }
+
+    #[test]
+    fn refcounted_recording_and_counters() {
+        let _l = lock();
+        let g1 = recording();
+        let g2 = recording();
+        drop(g1);
+        assert!(enabled(), "still on while one guard lives");
+        count("obs.test.ctr", 2);
+        count("obs.test.ctr", 3);
+        assert_eq!(snapshot().counters.get("obs.test.ctr"), Some(&5));
+        drop(g2);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn worker_id_is_per_thread() {
+        let _l = lock();
+        let _r = recording();
+        set_worker(0); // in case a previous test on this thread set it
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                set_worker(3);
+                instant("obs.test.worker");
+            });
+        });
+        let got = spans_of("obs.test.worker");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].worker, 3);
+        assert_eq!(worker(), 0, "spawned thread's id never leaks to the coordinator");
+    }
+
+    #[test]
+    fn instant_spans_have_zero_duration() {
+        let _l = lock();
+        let _r = recording();
+        instant("obs.test.instant");
+        let got = spans_of("obs.test.instant");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].start_ns, got[0].end_ns);
+    }
+}

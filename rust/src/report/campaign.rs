@@ -1,12 +1,15 @@
 //! Campaign report: per-workload Pareto frontiers plus the cross-net
 //! summary (JSON schema `avsm-campaign-v1`) — the co-design deliverable a
 //! portfolio sweep exists to produce: which hardware configurations stay
-//! on the frontier for *every* workload.
+//! on the frontier for *every* workload. Also home of the engine's own
+//! telemetry deliverable ([`TelemetryReport`], schema
+//! `avsm-campaign-telemetry-v1`): where a campaign's wall clock went.
 
 use crate::campaign::{CampaignResult, NetOutcome};
 use crate::dse::{self, SweepAxes};
 use crate::json::{obj, Value};
-use crate::metrics::fmt_ps;
+use crate::metrics::{fmt_ps, summarize};
+use crate::obs;
 use std::collections::BTreeMap;
 
 /// Legend for one net's design-point names: `(name token, description)`
@@ -254,6 +257,165 @@ fn net_to_value(net: &NetOutcome) -> Value {
     ])
 }
 
+/// Latency histogram of one span kind: count, outcome composition, and
+/// nearest-rank percentiles over the span durations (all nanoseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindStats {
+    pub count: usize,
+    pub total_ns: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    /// Outcome class → span count (`compiled`, `feasible`, `panicked`, ...).
+    pub outcomes: BTreeMap<&'static str, usize>,
+}
+
+/// Aggregated engine telemetry (JSON schema `avsm-campaign-telemetry-v1`):
+/// per-span-kind latency histograms (p50/p90/p99 via
+/// [`crate::metrics::Summary`]) with outcome composition, the recorder's
+/// counters (cache tier totals), worker count and telemetry wall clock.
+/// Built from an [`obs::Telemetry`] snapshot; the companion per-worker
+/// timeline export is [`crate::trace::spans_to_chrome_trace`].
+pub struct TelemetryReport {
+    workers: usize,
+    spans_total: usize,
+    wall_ns: u64,
+    counters: BTreeMap<String, u64>,
+    kinds: BTreeMap<&'static str, KindStats>,
+}
+
+impl TelemetryReport {
+    pub fn new(t: &obs::Telemetry) -> Self {
+        let mut durations: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+        let mut outcomes: BTreeMap<&'static str, BTreeMap<&'static str, usize>> = BTreeMap::new();
+        let mut workers: Vec<u32> = Vec::new();
+        let mut wall_ns = 0u64;
+        for s in &t.spans {
+            durations.entry(s.kind).or_default().push((s.end_ns - s.start_ns) as f64);
+            *outcomes.entry(s.kind).or_default().entry(s.outcome).or_insert(0) += 1;
+            if !workers.contains(&s.worker) {
+                workers.push(s.worker);
+            }
+            wall_ns = wall_ns.max(s.end_ns);
+        }
+        let kinds = durations
+            .into_iter()
+            .map(|(kind, ds)| {
+                let s = summarize(&ds);
+                let stats = KindStats {
+                    count: s.n,
+                    total_ns: ds.iter().sum::<f64>() as u64,
+                    mean_ns: s.mean,
+                    p50_ns: s.p50 as u64,
+                    p90_ns: s.p90 as u64,
+                    p99_ns: s.p99 as u64,
+                    max_ns: s.max as u64,
+                    outcomes: outcomes.remove(kind).unwrap_or_default(),
+                };
+                (kind, stats)
+            })
+            .collect();
+        Self {
+            workers: workers.len(),
+            spans_total: t.spans.len(),
+            wall_ns,
+            counters: t.counters.clone(),
+            kinds,
+        }
+    }
+
+    /// Histogram of one span kind, if any such span was recorded.
+    pub fn kind(&self, kind: &str) -> Option<&KindStats> {
+        self.kinds.get(kind)
+    }
+
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    pub fn spans_total(&self) -> usize {
+        self.spans_total
+    }
+
+    /// Per-kind latency table plus the counter totals, `fmt_ps`-formatted
+    /// (durations are ns; the formatter takes ps).
+    pub fn render_text(&self) -> String {
+        let ns = |v: u64| fmt_ps(v.saturating_mul(1000));
+        let mut out = String::new();
+        out.push_str(&format!(
+            "campaign telemetry: {} workers, {} spans, wall {}\n",
+            self.workers,
+            self.spans_total,
+            ns(self.wall_ns)
+        ));
+        out.push_str(&format!(
+            "{:<16} {:>6} {:>12} {:>12} {:>12} {:>12} {:>12}  outcomes\n",
+            "span kind", "count", "total", "p50", "p90", "p99", "max"
+        ));
+        for (kind, st) in &self.kinds {
+            let outcomes: Vec<String> =
+                st.outcomes.iter().map(|(o, n)| format!("{o}:{n}")).collect();
+            out.push_str(&format!(
+                "{:<16} {:>6} {:>12} {:>12} {:>12} {:>12} {:>12}  {}\n",
+                kind,
+                st.count,
+                ns(st.total_ns),
+                ns(st.p50_ns),
+                ns(st.p90_ns),
+                ns(st.p99_ns),
+                ns(st.max_ns),
+                outcomes.join(" ")
+            ));
+        }
+        if !self.counters.is_empty() {
+            let entries: Vec<String> =
+                self.counters.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            out.push_str(&format!("counters: {}\n", entries.join(" ")));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let kinds = Value::Object(
+            self.kinds
+                .iter()
+                .map(|(kind, st)| {
+                    let outcomes = Value::Object(
+                        st.outcomes
+                            .iter()
+                            .map(|(o, n)| (o.to_string(), Value::from(*n)))
+                            .collect(),
+                    );
+                    let v = obj(vec![
+                        ("count", st.count.into()),
+                        ("total_ns", st.total_ns.into()),
+                        ("mean_ns", st.mean_ns.into()),
+                        ("p50_ns", st.p50_ns.into()),
+                        ("p90_ns", st.p90_ns.into()),
+                        ("p99_ns", st.p99_ns.into()),
+                        ("max_ns", st.max_ns.into()),
+                        ("outcomes", outcomes),
+                    ]);
+                    (kind.to_string(), v)
+                })
+                .collect(),
+        );
+        let counters = Value::Object(
+            self.counters.iter().map(|(k, v)| (k.clone(), Value::from(*v))).collect(),
+        );
+        obj(vec![
+            ("schema", "avsm-campaign-telemetry-v1".into()),
+            ("workers", self.workers.into()),
+            ("spans_total", self.spans_total.into()),
+            ("wall_ns", self.wall_ns.into()),
+            ("kinds", kinds),
+            ("counters", counters),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -427,5 +589,78 @@ mod tests {
         // Serializes and parses back.
         let back = crate::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(back, j);
+    }
+
+    fn span(
+        kind: &'static str,
+        worker: u32,
+        start_ns: u64,
+        end_ns: u64,
+        outcome: &'static str,
+    ) -> obs::Span {
+        obs::Span {
+            kind,
+            worker,
+            net: Some("lenet".to_string()),
+            unit: Some(0),
+            outcome,
+            start_ns,
+            end_ns,
+        }
+    }
+
+    #[test]
+    fn telemetry_report_aggregates_kinds_and_counters() {
+        let t = obs::Telemetry {
+            spans: vec![
+                span("simulate", 1, 1_000, 3_000, "feasible"),
+                span("simulate", 2, 1_000, 1_500, "panicked"),
+                span("resolve", 1, 0, 100, "compiled"),
+            ],
+            counters: [("cache.compiles".to_string(), 2u64)].into_iter().collect(),
+        };
+        let r = TelemetryReport::new(&t);
+        let sim = r.kind("simulate").unwrap();
+        assert_eq!(sim.count, 2);
+        assert_eq!(sim.total_ns, 2_500);
+        // Nearest-rank on [500, 2000]: p50 is the lower element, p90/p99
+        // and max the upper.
+        assert_eq!(sim.p50_ns, 500);
+        assert_eq!(sim.p90_ns, 2_000);
+        assert_eq!(sim.p99_ns, 2_000);
+        assert_eq!(sim.max_ns, 2_000);
+        assert_eq!(sim.mean_ns, 1_250.0);
+        assert_eq!(sim.outcomes.get("feasible"), Some(&1));
+        assert_eq!(sim.outcomes.get("panicked"), Some(&1));
+        assert!(r.kind("cache.read").is_none());
+
+        let text = r.render_text();
+        assert!(text.contains("campaign telemetry: 2 workers, 3 spans"), "{text}");
+        assert!(text.contains("counters: cache.compiles=2"), "{text}");
+        assert!(text.contains("feasible:1 panicked:1"), "{text}");
+
+        let j = r.to_json();
+        assert_eq!(j.get("schema").as_str(), Some("avsm-campaign-telemetry-v1"));
+        assert_eq!(j.get("workers").as_u64(), Some(2));
+        assert_eq!(j.get("spans_total").as_u64(), Some(3));
+        assert_eq!(j.get("wall_ns").as_u64(), Some(3_000));
+        assert_eq!(j.get("kinds").get("simulate").get("p99_ns").as_u64(), Some(2_000));
+        assert_eq!(
+            j.get("kinds").get("resolve").get("outcomes").get("compiled").as_u64(),
+            Some(1)
+        );
+        assert_eq!(j.get("counters").get("cache.compiles").as_u64(), Some(2));
+        // Serializes and parses back.
+        let back = crate::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn empty_telemetry_reports_cleanly() {
+        let r = TelemetryReport::new(&obs::Telemetry::default());
+        assert_eq!(r.spans_total(), 0);
+        let j = r.to_json();
+        assert_eq!(j.get("workers").as_u64(), Some(0));
+        assert!(r.render_text().contains("0 workers, 0 spans"));
     }
 }

@@ -5,13 +5,14 @@
 //! * [`fig3`] — flow runtime breakdown table (paper Fig 3), fed by the
 //!   coordinator's phase timers.
 //! * [`campaign`] — multi-workload campaign report: per-net frontiers plus
-//!   the cross-net summary (which configs survive every workload).
+//!   the cross-net summary (which configs survive every workload), and the
+//!   engine-telemetry report (`avsm-campaign-telemetry-v1`).
 //! * Fig 4 lives in [`crate::trace`], Fig 6/7 in [`crate::roofline`].
 
 pub mod campaign;
 pub mod fig3;
 pub mod fig5;
 
-pub use campaign::CampaignReport;
+pub use campaign::{axis_legend, CampaignReport, KindStats, TelemetryReport};
 pub use fig3::FlowBreakdown;
 pub use fig5::Fig5Report;

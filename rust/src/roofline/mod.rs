@@ -175,8 +175,21 @@ impl RooflineModel {
     /// SVG rendering of the roofline plot (log-log), dots sized by time
     /// share — the shape of the paper's Fig 6/7.
     pub fn render_svg(&self, zoom: Option<f64>) -> String {
+        self.render_svg_with_legend(zoom, &[])
+    }
+
+    /// [`render_svg`](Self::render_svg) plus a trailing axis-name legend
+    /// caption (see `report::campaign::axis_legend`) decoding swept-axis
+    /// name tokens for readers of campaign artifacts. An empty legend
+    /// renders byte-identically to the plain form.
+    pub fn render_svg_with_legend(
+        &self,
+        zoom: Option<f64>,
+        legend: &[(&'static str, String)],
+    ) -> String {
         let w = 720.0;
         let h = 480.0;
+        let hsvg = h + if legend.is_empty() { 0.0 } else { 16.0 };
         let ml = 70.0;
         let mb = 50.0;
         let pts: Vec<&RooflinePoint> = match zoom {
@@ -215,10 +228,10 @@ impl RooflineModel {
             h - mb - (v.ln() - ymin.ln()) / (ymax.ln() - ymin.ln()) * (h - mb - 20.0)
         };
         let mut s = format!(
-            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="monospace" font-size="11">"#
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{hsvg}" font-family="monospace" font-size="11">"#
         );
         s.push_str(&format!(
-            r#"<rect width="{w}" height="{h}" fill="white"/>"#
+            r#"<rect width="{w}" height="{hsvg}" fill="white"/>"#
         ));
         // Bandwidth slope from xmin to ridge, then flat peak roof.
         let ridge_x = x(self.ridge);
@@ -267,6 +280,15 @@ impl RooflineModel {
             h / 2.0 + 60.0,
             h / 2.0 + 60.0
         ));
+        if !legend.is_empty() {
+            let entries: Vec<String> =
+                legend.iter().map(|(key, desc)| format!("{key} = {desc}")).collect();
+            s.push_str(&format!(
+                r#"<text x="4" y="{:.0}">name legend: {}</text>"#,
+                hsvg - 6.0,
+                entries.join(", ")
+            ));
+        }
         s.push_str("</svg>");
         s
     }
@@ -376,5 +398,22 @@ mod tests {
         assert!(svg.contains("circle"));
         let json = m.to_json();
         assert!(json.get("points").as_array().unwrap().len() == m.points.len());
+    }
+
+    #[test]
+    fn svg_legend_caption_decodes_axis_tokens() {
+        let m = model_for(&models::dilated_vgg_tiny());
+        let legend = vec![
+            ("f", "NCE frequency (MHz)".to_string()),
+            ("g", "array geometry (rows x cols)".to_string()),
+        ];
+        let svg = m.render_svg_with_legend(None, &legend);
+        assert!(
+            svg.contains("name legend: f = NCE frequency (MHz), g = array geometry (rows x cols)"),
+            "{svg}"
+        );
+        // The legend-free form is byte-identical to plain render_svg.
+        assert_eq!(m.render_svg_with_legend(None, &[]), m.render_svg(None));
+        assert!(!m.render_svg(None).contains("name legend"));
     }
 }

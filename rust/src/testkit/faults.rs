@@ -148,6 +148,19 @@ pub fn before_read(site: &str, path: &Path) -> io::Result<()> {
     }
 }
 
+/// Failpoint check for a non-I/O operation site (e.g. `sim.evaluate`,
+/// consulted by [`crate::dse::evaluate_compiled`]), scoped by a
+/// *pseudo-path*: the campaign passes `<net name>/<point name>`, so a
+/// test arms against its own uniquely named net and never trips a
+/// concurrently running test. Only [`FaultKind::Panic`] is meaningful
+/// here — there is no I/O result to fail — so an armed `IoError`/`Torn`
+/// is consumed but passes through untouched.
+pub fn before_op(site: &str, scope: &Path) {
+    if take(site, scope) == Some(FaultKind::Panic) {
+        panic!("injected panic at {site} ({})", scope.display());
+    }
+}
+
 /// Failpoint check for a write-side I/O site about to persist `len` bytes.
 ///
 /// * `Ok(None)` — no fault: perform the real write.
@@ -235,6 +248,22 @@ mod tests {
         let n = before_write("faults.test.torn", &dir.join("x"), 101).unwrap();
         assert_eq!(n, Some(50));
         drop(guard);
+    }
+
+    #[test]
+    fn op_site_panics_on_panic_kind_and_ignores_io_kinds() {
+        let dir = tmp("op");
+        {
+            let _guard = arm("faults.test.op", &dir, FaultKind::IoError, 1);
+            // Consumed but inert: an op site has no I/O result to fail.
+            before_op("faults.test.op", &dir.join("x"));
+        }
+        let _guard = arm("faults.test.op", &dir, FaultKind::Panic, 1);
+        let payload =
+            std::panic::catch_unwind(|| before_op("faults.test.op", &dir.join("x"))).unwrap_err();
+        let msg = crate::campaign::pool::panic_message(payload.as_ref());
+        assert!(msg.contains("injected panic at faults.test.op"), "{msg}");
+        before_op("faults.test.op", &dir.join("x")); // exhausted
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! rendition of the paper's Fig 4 Gantt.
 
 use crate::json::{obj, Value};
+use crate::obs::Span;
 use crate::sim::{IntervalKind, TraceRecorder};
 
 /// Export the trace in the Chrome trace-event array format. Timestamps are
@@ -38,6 +39,49 @@ pub fn to_chrome_trace(trace: &TraceRecorder) -> String {
             ("ts", (iv.start as f64 / 1e6).into()),
             ("dur", (iv.duration() as f64 / 1e6).into()),
             ("args", obj(vec![("task", iv.task.into())])),
+        ]));
+    }
+    Value::Array(events).to_string_compact()
+}
+
+/// Export engine telemetry spans ([`crate::obs`]) in the same Chrome
+/// trace-event array format — the campaign engine's own Gantt, sibling to
+/// the simulator's: one "thread" per pool worker (tid 0 is the
+/// coordinating thread), `cat` is the span kind, and `args` carry the
+/// net / unit / outcome tags. Timestamps convert ns → µs.
+pub fn spans_to_chrome_trace(spans: &[Span]) -> String {
+    let mut workers: Vec<u32> = spans.iter().map(|s| s.worker).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    let mut events: Vec<Value> = Vec::with_capacity(spans.len() + workers.len());
+    for &w in &workers {
+        let name =
+            if w == 0 { "coordinator".to_string() } else { format!("worker {}", w - 1) };
+        events.push(obj(vec![
+            ("name", "thread_name".into()),
+            ("ph", "M".into()),
+            ("pid", 1u32.into()),
+            ("tid", w.into()),
+            ("args", obj(vec![("name", name.into())])),
+        ]));
+    }
+    for s in spans {
+        let mut args: Vec<(&str, Value)> = vec![("outcome", s.outcome.into())];
+        if let Some(net) = &s.net {
+            args.push(("net", net.as_str().into()));
+        }
+        if let Some(unit) = s.unit {
+            args.push(("unit", unit.into()));
+        }
+        events.push(obj(vec![
+            ("name", s.kind.into()),
+            ("cat", s.kind.into()),
+            ("ph", "X".into()),
+            ("pid", 1u32.into()),
+            ("tid", s.worker.into()),
+            ("ts", (s.start_ns as f64 / 1e3).into()),
+            ("dur", ((s.end_ns - s.start_ns) as f64 / 1e3).into()),
+            ("args", obj(args)),
         ]));
     }
     Value::Array(events).to_string_compact()
@@ -81,6 +125,61 @@ mod tests {
     fn empty_trace_exports_cleanly() {
         let tr = TraceRecorder::new();
         let v = json::parse(&to_chrome_trace(&tr)).unwrap();
+        assert_eq!(v.as_array().unwrap().len(), 0);
+    }
+
+    fn span(kind: &'static str, worker: u32, start_ns: u64, end_ns: u64) -> Span {
+        Span {
+            kind,
+            worker,
+            net: Some("lenet".into()),
+            unit: Some(3),
+            outcome: "feasible",
+            start_ns,
+            end_ns,
+        }
+    }
+
+    #[test]
+    fn engine_spans_export_one_thread_per_worker() {
+        let spans = vec![
+            span("simulate", 1, 1_000, 3_500),
+            span("simulate", 2, 1_000, 2_000),
+            Span {
+                kind: "journal.append",
+                worker: 0,
+                net: None,
+                unit: None,
+                outcome: "ok",
+                start_ns: 4_000,
+                end_ns: 4_100,
+            },
+        ];
+        let v = json::parse(&spans_to_chrome_trace(&spans)).unwrap();
+        let events = v.as_array().unwrap();
+        // One metadata row per distinct worker, coordinator included.
+        let meta: Vec<_> =
+            events.iter().filter(|e| e.get("ph").as_str() == Some("M")).collect();
+        assert_eq!(meta.len(), 3);
+        assert_eq!(meta[0].get("args").get("name").as_str(), Some("coordinator"));
+        assert_eq!(meta[1].get("args").get("name").as_str(), Some("worker 0"));
+        assert_eq!(meta[2].get("args").get("name").as_str(), Some("worker 1"));
+        let x: Vec<_> = events.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
+        assert_eq!(x.len(), 3);
+        // ns → µs conversion and the tag args.
+        assert_eq!(x[0].get("ts").as_f64(), Some(1.0));
+        assert_eq!(x[0].get("dur").as_f64(), Some(2.5));
+        assert_eq!(x[0].get("cat").as_str(), Some("simulate"));
+        assert_eq!(x[0].get("args").get("net").as_str(), Some("lenet"));
+        assert_eq!(x[0].get("args").get("unit").as_u64(), Some(3));
+        assert_eq!(x[0].get("args").get("outcome").as_str(), Some("feasible"));
+        // Untagged coordinator span carries only the outcome.
+        assert!(x[2].get("args").get("net").as_str().is_none());
+    }
+
+    #[test]
+    fn empty_span_set_exports_cleanly() {
+        let v = json::parse(&spans_to_chrome_trace(&[])).unwrap();
         assert_eq!(v.as_array().unwrap().len(), 0);
     }
 }

@@ -97,6 +97,14 @@ impl<'a> Gantt<'a> {
 
     /// SVG rendering with one lane per resource.
     pub fn render_svg(&self) -> String {
+        self.render_svg_with_legend(&[])
+    }
+
+    /// [`render_svg`](Self::render_svg) plus a trailing axis-name legend
+    /// caption (see `report::campaign::axis_legend`) decoding swept-axis
+    /// name tokens for readers of campaign artifacts. An empty legend
+    /// renders byte-identically to the plain form.
+    pub fn render_svg_with_legend(&self, legend: &[(&'static str, String)]) -> String {
         let (w0, w1) = self.window();
         let span = (w1 - w0).max(1) as f64;
         let resources = self.trace.resources();
@@ -104,11 +112,12 @@ impl<'a> Gantt<'a> {
         let ml = 64.0;
         let w = 900.0;
         let h = 30.0 + lane_h * resources.len() as f64 + 30.0;
+        let hsvg = h + if legend.is_empty() { 0.0 } else { 16.0 };
         let x = |t: SimTime| ml + (t.saturating_sub(w0)) as f64 / span * (w - ml - 10.0);
         let mut s = format!(
-            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="monospace" font-size="11">"#
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{hsvg}" font-family="monospace" font-size="11">"#
         );
-        s.push_str(&format!(r#"<rect width="{w}" height="{h}" fill="white"/>"#));
+        s.push_str(&format!(r#"<rect width="{w}" height="{hsvg}" fill="white"/>"#));
         for (li, (rid, name)) in resources.iter().enumerate() {
             let y0 = 20.0 + lane_h * li as f64;
             s.push_str(&format!(
@@ -143,6 +152,15 @@ impl<'a> Gantt<'a> {
             w0 as f64 / 1e9,
             w1 as f64 / 1e9
         ));
+        if !legend.is_empty() {
+            let entries: Vec<String> =
+                legend.iter().map(|(key, desc)| format!("{key} = {desc}")).collect();
+            s.push_str(&format!(
+                r#"<text x="4" y="{:.0}">name legend: {}</text>"#,
+                hsvg - 6.0,
+                entries.join(", ")
+            ));
+        }
         s.push_str("</svg>");
         s
     }
@@ -203,6 +221,18 @@ mod tests {
         let svg = Gantt::new(&tr, GanttOptions::default()).render_svg();
         assert!(svg.starts_with("<svg") && svg.ends_with("</svg>"));
         assert!(svg.matches("<rect").count() > 3);
+    }
+
+    #[test]
+    fn svg_legend_caption_decodes_axis_tokens() {
+        let (tr, _) = traced();
+        let g = Gantt::new(&tr, GanttOptions::default());
+        let legend = vec![("f", "NCE frequency (MHz)".to_string())];
+        let svg = g.render_svg_with_legend(&legend);
+        assert!(svg.contains("name legend: f = NCE frequency (MHz)"), "{svg}");
+        // The legend-free form is byte-identical to plain render_svg.
+        assert_eq!(g.render_svg_with_legend(&[]), g.render_svg());
+        assert!(!g.render_svg().contains("name legend"));
     }
 
     #[test]

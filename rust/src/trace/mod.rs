@@ -6,5 +6,5 @@
 pub mod chrome;
 pub mod gantt;
 
-pub use chrome::to_chrome_trace;
+pub use chrome::{spans_to_chrome_trace, to_chrome_trace};
 pub use gantt::{Gantt, GanttOptions};

@@ -310,3 +310,69 @@ fn campaign_runs_heterogeneous_workloads_file_and_fail_fast_gates() {
     assert!(err.contains("invalid configuration"), "{err}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
+
+#[test]
+fn campaign_telemetry_and_trace_artifacts() {
+    let dir = std::env::temp_dir().join(format!("avsm_cli_obs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let tel = dir.join("telemetry.json");
+    let trace = dir.join("engine.json");
+    let text = run_ok(&[
+        "campaign", "--nets", "lenet", "--threads", "2",
+        "--outdir", dir.to_str().unwrap(),
+        "--telemetry", tel.to_str().unwrap(),
+        "--trace-out", trace.to_str().unwrap(),
+    ]);
+    // The campaign report still leads; the telemetry table follows it.
+    assert!(text.contains("frontier"), "{text}");
+    assert!(text.contains("campaign telemetry:"), "{text}");
+    assert!(text.contains("ui.perfetto.dev"), "{text}");
+
+    // The machine-readable report parses and cross-checks the campaign's
+    // own accounting: one resolve span per evaluated unit, and every
+    // compiled unit either simulated or was pruned.
+    let doc = avsm::json::parse(&std::fs::read_to_string(&tel).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").as_str(), Some("avsm-campaign-telemetry-v1"));
+    let campaign =
+        avsm::json::parse(&std::fs::read_to_string(dir.join("campaign.json")).unwrap()).unwrap();
+    let evaluated: u64 = campaign
+        .get("nets")
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|n| n.get("evaluated").as_u64().unwrap())
+        .sum();
+    let kind_count = |kind: &str| doc.get("kinds").get(kind).get("count").as_u64().unwrap_or(0);
+    assert_eq!(kind_count("resolve"), evaluated, "one resolve span per unit");
+    assert_eq!(
+        kind_count("simulate") + kind_count("skipped"),
+        evaluated,
+        "lenet's default grid is all-feasible: every unit simulates or is pruned"
+    );
+    assert!(doc.get("counters").get("cache.compiles").as_u64().unwrap() > 0);
+
+    // The Chrome trace is a JSON array of thread metadata + X events.
+    let chrome = std::fs::read_to_string(&trace).unwrap();
+    assert!(chrome.trim_start().starts_with('['), "{chrome}");
+    assert!(chrome.contains("\"ph\":\"X\""), "{chrome}");
+    assert!(chrome.contains("thread_name"), "{chrome}");
+    // A journal-free run records nothing on the coordinator thread, so the
+    // named timeline rows are the pool workers.
+    assert!(chrome.contains("worker"), "{chrome}");
+
+    // Without the flags the telemetry table never prints.
+    let plain = run_ok(&["campaign", "--nets", "lenet", "--threads", "1"]);
+    assert!(!plain.contains("campaign telemetry:"), "{plain}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn gantt_svg_axes_flag_captions_the_name_legend() {
+    let axes = r#"[{"axis":"nce_freq_mhz","values":[125,250]}]"#;
+    let svg = run_ok(&["gantt", "--net", "lenet", "--format", "svg", "--axes", axes]);
+    assert!(svg.contains("name legend: f = NCE frequency (MHz)"), "{svg}");
+    // Without --axes the SVG stays caption-free (byte-compatible output).
+    let plain = run_ok(&["gantt", "--net", "lenet", "--format", "svg"]);
+    assert!(!plain.contains("name legend"), "{plain}");
+}

@@ -5,7 +5,8 @@
 //! asserts the *real* serializer emits the fixture bytes back, so any
 //! accidental field rename, type change, or format drift in
 //! `avsm-campaign-v1`, `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`,
-//! `avsm-compile-cache-index-v1` or `avsm-campaign-journal-v1` fails loudly
+//! `avsm-compile-cache-index-v1`, `avsm-campaign-journal-v1` or
+//! `avsm-campaign-telemetry-v1` fails loudly
 //! here instead of silently breaking warm caches, stale resume journals and
 //! downstream report consumers.
 //!
@@ -157,6 +158,83 @@ fn campaign_report_schema_is_byte_stable() {
         emitted.to_string_compact(),
         text,
         "avsm-campaign-v1 serializer bytes drifted from the golden fixture"
+    );
+}
+
+/// The synthetic 19-span engine run whose aggregates the telemetry fixture
+/// pins: every span kind in the obs vocabulary, every outcome class, three
+/// recording threads (coordinator + workers 1 and 2). Mirrored literally by
+/// `TELEMETRY` in `scripts/gen_golden_fixtures.py`.
+fn telemetry_fixture_spans() -> Vec<avsm::obs::Span> {
+    fn span(
+        kind: &'static str,
+        worker: u32,
+        unit: Option<u64>,
+        outcome: &'static str,
+        start_ns: u64,
+        end_ns: u64,
+    ) -> avsm::obs::Span {
+        avsm::obs::Span {
+            kind,
+            worker,
+            net: unit.map(|_| "lenet".to_string()),
+            unit,
+            outcome,
+            start_ns,
+            end_ns,
+        }
+    }
+    vec![
+        span("cache.read", 1, None, "absent", 20, 40),
+        span("compile", 1, None, "ok", 100, 700),
+        span("cache.write", 1, None, "ok", 700, 760),
+        span("lock.wait", 1, None, "acquired", 760, 780),
+        span("lock.steal", 2, None, "ok", 770, 770),
+        span("bound", 1, Some(0), "ok", 800, 900),
+        span("resolve", 1, Some(0), "compiled", 0, 1000),
+        span("resolve", 1, Some(2), "infeasible", 1_000, 1_500),
+        span("resolve", 1, Some(4), "panicked", 2_000, 2_600),
+        span("bound", 2, Some(1), "ok", 2_800, 2_900),
+        span("cache.read", 2, None, "ok", 3_000, 3_020),
+        span("resolve", 2, Some(1), "compiled", 0, 3_000),
+        span("compile", 2, None, "infeasible", 3_050, 3_150),
+        span("resolve", 2, Some(3), "error", 3_000, 3_200),
+        span("simulate", 1, Some(0), "feasible", 4_000, 6_000),
+        span("simulate", 2, Some(1), "panicked", 4_000, 4_500),
+        span("skipped", 1, Some(5), "occupancy", 6_000, 6_010),
+        span("journal.append", 0, None, "ok", 6_100, 6_150),
+        span("journal.append", 0, None, "error", 6_200, 6_260),
+    ]
+}
+
+#[test]
+fn telemetry_report_schema_is_byte_stable() {
+    use avsm::obs::Telemetry;
+    use avsm::report::TelemetryReport;
+
+    let t = Telemetry {
+        spans: telemetry_fixture_spans(),
+        counters: [
+            ("cache.compiles".to_string(), 2u64),
+            ("cache.mem_hits".to_string(), 3),
+            ("cache.neg_hits".to_string(), 1),
+        ]
+        .into_iter()
+        .collect(),
+    };
+    let text = fixture(include_str!("fixtures/campaign_telemetry_v1.json"));
+    let doc = json::parse(text).unwrap();
+    assert_eq!(doc.get("schema").as_str(), Some("avsm-campaign-telemetry-v1"));
+
+    let emitted = TelemetryReport::new(&t).to_json();
+    assert_eq!(
+        emitted, doc,
+        "avsm-campaign-telemetry-v1 fields drifted from the golden fixture"
+    );
+    assert_eq!(
+        emitted.to_string_compact(),
+        text,
+        "avsm-campaign-telemetry-v1 serializer bytes drifted from the golden fixture"
     );
 }
 

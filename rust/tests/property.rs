@@ -25,7 +25,16 @@
 //! * injected cache I/O faults (error/torn reads and writes) cost at most
 //!   recompiles — campaign results are byte-identical to the clean run;
 //! * a journaled campaign crash-truncated at ANY byte boundary resumes to
-//!   the byte-identical report (cache statistics excluded).
+//!   the byte-identical report (cache statistics excluded);
+//! * telemetry recording never changes campaign results — frontiers are
+//!   byte-identical with the obs recorder on vs. off at 1 and N threads,
+//!   and the full `avsm-campaign-v1` report JSON byte-identical
+//!   single-threaded — while the recorded spans account for every unit
+//!   (`resolve == evaluated`, `simulate + skipped == evaluated` on
+//!   all-feasible grids);
+//! * an injected `sim.evaluate` panic is contained to its unit, classified
+//!   with the failpoint diagnostic, and visible as a `simulate` span with
+//!   outcome `panicked`.
 
 use avsm::campaign::{self, CampaignOptions, CampaignSpec, StreamingFrontier};
 use avsm::compiler::{
@@ -684,5 +693,189 @@ fn system_config_json_roundtrips_for_random_configs() {
         let sys = gen.sys();
         let back = SystemConfig::from_json(&sys.to_json()).unwrap();
         assert_eq!(sys, back);
+    }
+}
+
+/// The obs recorder is process-global and tests in this binary run
+/// concurrently, so the telemetry tests serialize among themselves —
+/// otherwise one test's "telemetry-off" control run would execute under
+/// the other's recording guard and record spans after all. (They still
+/// filter snapshots by test-unique net names: spans accumulate across
+/// recordings within the process.)
+static OBS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn telemetry_recording_never_changes_campaign_results_and_accounts_every_unit() {
+    // Tentpole zero-interference property: with the recorder on, a
+    // campaign produces byte-identical outcomes AND byte-identical
+    // `avsm-campaign-v1` report JSON to the same campaign with it off,
+    // at 1 and N threads — while the spans account for every unit: one
+    // `resolve` per grid point and `simulate + skipped == evaluated`.
+    // The accounting identity needs an all-feasible grid, so the axes
+    // are retime-only (every point shares the base structural compile
+    // key and hence the base config's feasibility).
+    use avsm::report::CampaignReport;
+    let _obs = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut gen = NetGen::from_env(0x0B5E7);
+    for case in 0..3u32 {
+        let mut net = gen.net();
+        if compile(&net, &SystemConfig::base_paper(), CompileOptions::default()).is_err() {
+            continue; // base config can't tile this net: nothing to account
+        }
+        let axes = dse::SweepAxes::new().nce_freqs_mhz(vec![1000, 500, 250, 125, 50]);
+        for threads in [1usize, 4] {
+            // Unique name per iteration: the global snapshot may hold
+            // spans from earlier iterations and other telemetry tests.
+            net.name = format!("obsnet_{}_{case}_{threads}", std::process::id());
+            let spec = CampaignSpec::homogeneous(
+                vec![net.clone()],
+                SystemConfig::base_paper(),
+                axes.clone(),
+            );
+            let opts =
+                CampaignOptions { threads, bound: BoundKind::Max, ..Default::default() };
+            let off = campaign::run(&spec, &opts).unwrap();
+            let (on, snap) = {
+                let _rec = avsm::obs::recording();
+                let on = campaign::run(&spec, &opts).unwrap();
+                (on, avsm::obs::snapshot())
+            };
+            let tag = format!("case {case}, {threads} threads");
+            // The frontier is the engine's order-independent contract:
+            // byte-identical off vs. on at any thread count. The *full*
+            // report is only run-to-run stable single-threaded — under
+            // parallel workers the skip/dominated counters race benignly
+            // (by design, see scripts/check.sh) with or without
+            // telemetry — so the byte-for-byte report comparison pins
+            // the 1-thread runs.
+            let fr = |r: &campaign::CampaignResult| {
+                r.nets[0]
+                    .frontier
+                    .iter()
+                    .map(|p| (p.name.clone(), p.latency_ps, p.cost.to_bits()))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(fr(&off), fr(&on), "{tag}: recording changed the frontier");
+            if threads == 1 {
+                assert_same_outcomes(&off, &on, &tag);
+                assert_eq!(
+                    CampaignReport::new(&off).to_json().to_string_compact(),
+                    CampaignReport::new(&on).to_json().to_string_compact(),
+                    "{tag}: recording changed the avsm-campaign-v1 report bytes"
+                );
+            }
+
+            let spans: Vec<_> = snap
+                .spans
+                .iter()
+                .filter(|s| s.net.as_deref() == Some(net.name.as_str()))
+                .collect();
+            let count = |kind: &str| spans.iter().filter(|s| s.kind == kind).count();
+            let n = &on.nets[0];
+            assert_eq!(count("resolve"), n.evaluated, "{tag}: one resolve span per unit");
+            assert_eq!(
+                count("simulate") + count("skipped"),
+                n.evaluated,
+                "{tag}: on an all-feasible grid every unit simulates or is pruned"
+            );
+            assert_eq!(count("simulate"), n.feasible, "{tag}: simulate spans");
+            assert_eq!(count("skipped"), n.skipped_by_bound, "{tag}: skipped spans");
+            for s in &spans {
+                assert!(
+                    s.end_ns >= s.start_ns,
+                    "{tag}: span {} runs backwards ({} > {})",
+                    s.kind,
+                    s.start_ns,
+                    s.end_ns
+                );
+                assert!(
+                    (s.worker as usize) <= threads,
+                    "{tag}: worker id {} out of range for {threads} threads",
+                    s.worker
+                );
+                assert_ne!(s.outcome, "panicked", "{tag}: clean run recorded a panic");
+                assert!(s.unit.is_some(), "{tag}: unit-tagged span lost its sequence number");
+            }
+        }
+    }
+}
+
+#[test]
+fn injected_simulate_panic_is_contained_classified_and_visible_in_telemetry() {
+    // `sim.evaluate` failpoint: a worker panics *inside*
+    // `dse::evaluate_compiled`, past all the cache machinery. The engine
+    // must (a) contain the panic to that unit — every other unit
+    // completes, (b) classify it with the injected diagnostic, and
+    // (c) expose the dead unit as a `simulate` span with outcome
+    // `panicked` (the guard's unwind override, not a site annotation).
+    use avsm::report::CampaignReport;
+    use avsm::testkit::faults::{self, FaultKind};
+    let _obs = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut gen = NetGen::from_env(0x51AF0);
+    for (case, threads) in [(0u32, 1usize), (1, 4)] {
+        let mut net = gen.net();
+        if compile(&net, &SystemConfig::base_paper(), CompileOptions::default()).is_err() {
+            continue;
+        }
+        net.name = format!("obspanic_{}_{case}_{threads}", std::process::id());
+        let axes = dse::SweepAxes::new().nce_freqs_mhz(vec![1000, 500, 250]);
+        let spec = CampaignSpec::homogeneous(
+            vec![net.clone()],
+            SystemConfig::base_paper(),
+            axes,
+        );
+        // No pruning: every unit must reach the simulate path, so the
+        // single armed hit fires deterministically.
+        let opts = CampaignOptions { threads, prune: false, ..Default::default() };
+        let clean = campaign::run(&spec, &opts).unwrap();
+
+        let (faulted, snap) = {
+            let _rec = avsm::obs::recording();
+            let _g = faults::arm(
+                "sim.evaluate",
+                std::path::Path::new(&net.name),
+                FaultKind::Panic,
+                1,
+            );
+            let r = campaign::run(&spec, &opts).unwrap();
+            (r, avsm::obs::snapshot())
+        };
+        let tag = format!("case {case}, {threads} threads");
+        let n = &faulted.nets[0];
+        assert_eq!(faulted.panics, 1, "{tag}: exactly the faulted unit died");
+        assert_eq!(n.panics, 1, "{tag}: the panic is attributed to its net");
+        assert_eq!(
+            n.feasible,
+            clean.nets[0].feasible - 1,
+            "{tag}: every other unit completed normally"
+        );
+        assert_eq!(
+            n.evaluated,
+            n.feasible + n.infeasible + n.errors + n.panics + n.skipped_by_bound,
+            "{tag}: unit accounting still adds up"
+        );
+        let sample = n.panic_sample.as_deref().expect("panic diagnostic retained");
+        assert!(
+            sample.contains("injected panic at sim.evaluate"),
+            "{tag}: diagnostic should carry the failpoint site, got: {sample}"
+        );
+        // The report renders without tripping on the dead unit.
+        let _ = CampaignReport::new(&faulted).to_json().to_string_compact();
+
+        let sims: Vec<_> = snap
+            .spans
+            .iter()
+            .filter(|s| s.net.as_deref() == Some(net.name.as_str()) && s.kind == "simulate")
+            .collect();
+        assert_eq!(
+            sims.iter().filter(|s| s.outcome == "panicked").count(),
+            1,
+            "{tag}: the dead unit is visible as exactly one panicked simulate span"
+        );
+        assert_eq!(
+            sims.iter().filter(|s| s.outcome == "feasible").count(),
+            n.feasible,
+            "{tag}: surviving units record feasible simulate spans"
+        );
     }
 }

@@ -119,4 +119,50 @@ print("kill-and-resume report identical (cache statistics excluded)")
 EOF
 rm -rf "$JDIR"
 
+# Telemetry gate: a span-traced campaign must emit (a) a Chrome trace that
+# parses, has no negative durations, and claims a dense worker tid range,
+# and (b) an avsm-campaign-telemetry-v1 report whose span accounting
+# matches the campaign report's own unit accounting: one resolve span per
+# evaluated unit, simulate + skipped == evaluated on the all-feasible
+# default grid, and panicked simulate spans == reported panics (0 here).
+echo "== avsm campaign telemetry (span accounting vs campaign report)"
+TDIR=$(mktemp -d /tmp/avsm_campaign_obs.XXXXXX)
+cargo run --release -q -p avsm -- campaign --nets lenet,dilated_vgg_tiny \
+  --threads 2 --outdir "$TDIR" --telemetry "$TDIR/telemetry.json" \
+  --trace-out "$TDIR/engine.json" > /dev/null
+python3 - "$TDIR/engine.json" "$TDIR/telemetry.json" "$TDIR/campaign.json" <<'EOF'
+import json, sys
+trace, tel, campaign = (json.load(open(p)) for p in sys.argv[1:4])
+
+# Chrome trace: every duration event is non-negative, and the worker tids
+# (thread_name metadata rows) are a dense contiguous range within the
+# pool's id space 0..=threads (0 = coordinator; a journal-free run may
+# record nothing on the coordinator, so the range need not start at 0).
+xs = [e for e in trace if e.get("ph") == "X"]
+assert xs, "trace has no duration events"
+assert all(e["dur"] >= 0 for e in xs), "negative span duration in trace"
+tids = sorted({e["tid"] for e in trace if e.get("ph") == "M"})
+assert tids and tids == list(range(tids[0], tids[0] + len(tids))), \
+    f"worker tids not dense: {tids}"
+assert tids[-1] <= 2, f"worker tid beyond --threads 2: {tids}"
+
+kinds = tel["kinds"]
+count = lambda k: kinds.get(k, {}).get("count", 0)
+evaluated = sum(n["evaluated"] for n in campaign["nets"])
+skipped = sum(n["skipped_by_bound"] for n in campaign["nets"])
+panics = sum(n["panics"] for n in campaign["nets"])
+assert count("resolve") == evaluated, \
+    f'resolve spans {count("resolve")} != evaluated {evaluated}'
+assert count("simulate") + count("skipped") == evaluated, \
+    "simulate + skipped spans != evaluated on the all-feasible default grid"
+assert count("skipped") == skipped, \
+    f'skipped spans {count("skipped")} != skipped_by_bound {skipped}'
+panicked = kinds.get("simulate", {}).get("outcomes", {}).get("panicked", 0)
+assert panicked == panics == 0, f"unexpected panics: {panicked} vs {panics}"
+assert tel["spans_total"] == len(xs), "trace events != telemetry spans"
+print(f"telemetry consistent: {evaluated} units, {tel['spans_total']} spans, "
+      f"{len(tids)} trace threads")
+EOF
+rm -rf "$TDIR"
+
 echo "== OK"

@@ -3,7 +3,8 @@
 
 The fixtures pin the on-disk JSON schemas (`avsm-campaign-v1`,
 `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`,
-`avsm-compile-cache-index-v1`, `avsm-campaign-journal-v1`)
+`avsm-compile-cache-index-v1`, `avsm-campaign-journal-v1`,
+`avsm-campaign-telemetry-v1`)
 byte-for-byte: `rust/tests/golden.rs` parses
 each fixture with the real parsers and asserts the real serializers emit the
 fixture bytes back. This script exists only to produce those bytes in the
@@ -175,6 +176,51 @@ CAMPAIGN = {
 }
 
 
+def kind_stats(count, total, mean, p50, p90, p99, mx, outcomes):
+    return {
+        "count": count,
+        "total_ns": total,
+        "mean_ns": float(mean),
+        "p50_ns": p50,
+        "p90_ns": p90,
+        "p99_ns": p99,
+        "max_ns": mx,
+        "outcomes": outcomes,
+    }
+
+
+# Aggregates of the 19-span synthetic engine run built by
+# `telemetry_fixture_spans()` in rust/tests/golden.rs — every span kind in
+# the obs vocabulary, every outcome class, three workers (coordinator + 2),
+# nearest-rank percentiles over the hand-picked durations.
+TELEMETRY = {
+    "schema": "avsm-campaign-telemetry-v1",
+    "workers": 3,
+    "spans_total": 19,
+    "wall_ns": 6260,
+    "kinds": {
+        "bound": kind_stats(2, 200, 100.0, 100, 100, 100, 100, {"ok": 2}),
+        "cache.read": kind_stats(2, 40, 20.0, 20, 20, 20, 20,
+                                 {"absent": 1, "ok": 1}),
+        "cache.write": kind_stats(1, 60, 60.0, 60, 60, 60, 60, {"ok": 1}),
+        "compile": kind_stats(2, 700, 350.0, 100, 600, 600, 600,
+                              {"infeasible": 1, "ok": 1}),
+        "journal.append": kind_stats(2, 110, 55.0, 50, 60, 60, 60,
+                                     {"error": 1, "ok": 1}),
+        "lock.steal": kind_stats(1, 0, 0.0, 0, 0, 0, 0, {"ok": 1}),
+        "lock.wait": kind_stats(1, 20, 20.0, 20, 20, 20, 20, {"acquired": 1}),
+        "resolve": kind_stats(5, 5300, 1060.0, 600, 3000, 3000, 3000,
+                              {"compiled": 2, "error": 1, "infeasible": 1,
+                               "panicked": 1}),
+        "simulate": kind_stats(2, 2500, 1250.0, 500, 2000, 2000, 2000,
+                               {"feasible": 1, "panicked": 1}),
+        "skipped": kind_stats(1, 10, 10.0, 10, 10, 10, 10, {"occupancy": 1}),
+    },
+    "counters": {"cache.compiles": 2, "cache.mem_hits": 3,
+                 "cache.neg_hits": 1},
+}
+
+
 # One header plus one record per terminal unit class, in the writer's
 # canonical line form. The golden test replays this file with the real
 # `Journal::resume` and re-appends the records with the real writer,
@@ -198,6 +244,7 @@ def main():
         "compile_cache_neg_v1.json": NEGATIVE,
         "compile_cache_index_v1.json": INDEX,
         "campaign_v1.json": CAMPAIGN,
+        "campaign_telemetry_v1.json": TELEMETRY,
     }
     for name, doc in fixtures.items():
         path = OUT / name
