@@ -1,0 +1,597 @@
+//! Offline integrity checks: cache-directory fsck (`avsm lint
+//! --cache-dir`, codes `AVSM040`–`AVSM048`) and the resume-journal
+//! pre-check (`avsm lint --journal`, codes `AVSM050`–`AVSM056`).
+//!
+//! Both passes are strictly read-only — they parse the same on-disk
+//! formats the store and journal write, through the *same* parsers
+//! (`campaign::store::entry_from_json`, `campaign::journal::parse_header`,
+//! ...), so anything the runtime would reject, fsck reports ahead of
+//! time, and anything fsck accepts the runtime replays. The runtime is
+//! deliberately forgiving (a corrupt artifact reads as a miss and is
+//! healed on the next write; a corrupt index restarts empty); fsck's job
+//! is to make that silent degradation *visible* — every corruption the
+//! `testkit::faults` harness can inject surfaces here as a diagnostic
+//! with a distinct code, which the property tests pin.
+
+use super::Diagnostic;
+use crate::campaign::journal::{self, SpecParts};
+use crate::campaign::store::{self, CacheIndex};
+use crate::compiler::CompileKey;
+use crate::json;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Parse `"{fp:016x}{suffix}"` filenames; `None` for anything else.
+fn fingerprint_of(name: &str, suffix: &str) -> Option<u64> {
+    let hex = name.strip_suffix(suffix)?;
+    if hex.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+/// Fsck one compile-cache directory. `max_entries` is the LRU bound the
+/// campaign would run with, when known — the index is checked against it.
+pub fn lint_cache_dir(dir: &Path, max_entries: Option<usize>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let dir_site = format!("cache dir {}", dir.display());
+    if !dir.is_dir() {
+        out.push(Diagnostic::error(
+            "AVSM046",
+            dir_site,
+            "cache directory does not exist or is not a directory",
+        ));
+        return out;
+    }
+    let mut names: Vec<String> = Vec::new();
+    match std::fs::read_dir(dir) {
+        Err(e) => {
+            out.push(Diagnostic::error("AVSM046", dir_site, format!("unreadable directory: {e}")));
+            return out;
+        }
+        Ok(entries) => {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if entry.path().is_dir() {
+                    out.push(Diagnostic::info(
+                        "AVSM046",
+                        format!("cache dir {}", entry.path().display()),
+                        "unexpected subdirectory in cache directory",
+                    ));
+                } else {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    names.sort();
+
+    let mut artifacts: BTreeSet<u64> = BTreeSet::new();
+    let mut negatives: BTreeSet<u64> = BTreeSet::new();
+    for name in &names {
+        if name == "index.json" || name == "index.lock" {
+            continue;
+        }
+        let path = dir.join(name);
+        let site = format!("cache entry {}", path.display());
+        if let Some(fp) = fingerprint_of(name, ".compiled.json") {
+            artifacts.insert(fp);
+            check_artifact(&path, fp, &mut out);
+        } else if let Some(fp) = fingerprint_of(name, ".infeasible.json") {
+            negatives.insert(fp);
+            check_negative(&path, fp, &mut out);
+        } else if name.contains(".tmp.") {
+            out.push(
+                Diagnostic::warn(
+                    "AVSM046",
+                    site,
+                    "leftover temp file from an interrupted atomic write",
+                )
+                .with_help("safe to delete; the entry it was publishing recompiles on a miss"),
+            );
+        } else {
+            out.push(Diagnostic::info("AVSM046", site, "unexpected file in cache directory"));
+        }
+    }
+
+    // An artifact and an infeasibility sidecar for the same key cannot
+    // both be right: the key either tiles or it does not.
+    for fp in artifacts.intersection(&negatives) {
+        out.push(
+            Diagnostic::warn(
+                "AVSM044",
+                format!("cache key {fp:016x} in {}", dir.display()),
+                "a compiled artifact shadows a negative (infeasible) sidecar for the same key",
+            )
+            .with_help("one of the two is stale; delete both and let the next miss decide"),
+        );
+    }
+
+    let index_path = store::index_path(dir);
+    if index_path.is_file() {
+        let index_site = format!("cache index {}", index_path.display());
+        let loaded = std::fs::read_to_string(&index_path)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| CacheIndex::from_json(&text));
+        match loaded {
+            Err(e) => out.push(
+                Diagnostic::warn("AVSM047", index_site, format!("corrupt cache index: {e:#}"))
+                    .with_help(
+                        "the store restarts a corrupt index empty — LRU history is lost but \
+                         artifacts are unaffected",
+                    ),
+            ),
+            Ok(index) => {
+                for &fp in index.entries().keys() {
+                    if !artifacts.contains(&fp) && !negatives.contains(&fp) {
+                        out.push(Diagnostic::error(
+                            "AVSM042",
+                            index_site.clone(),
+                            format!(
+                                "index entry {fp:016x} refers to no artifact or negative on disk"
+                            ),
+                        ));
+                    }
+                }
+                if let Some(max) = max_entries {
+                    if index.entries().len() > max {
+                        out.push(Diagnostic::warn(
+                            "AVSM043",
+                            index_site,
+                            format!(
+                                "index holds {} entries, over the LRU bound of {max}",
+                                index.entries().len()
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    let lock_path = store::lock_path(dir);
+    if lock_path.is_file() {
+        let site = format!("lock {}", lock_path.display());
+        let holder: Option<u32> = std::fs::read_to_string(&lock_path)
+            .ok()
+            .and_then(|s| s.trim().parse().ok());
+        match holder {
+            Some(pid) if store::pid_alive(pid) => out.push(Diagnostic::info(
+                "AVSM045",
+                site,
+                format!("index.lock is held by live process {pid}"),
+            )),
+            Some(pid) => out.push(
+                Diagnostic::warn(
+                    "AVSM045",
+                    site,
+                    format!("stale index.lock: recorded holder {pid} is dead"),
+                )
+                .with_help("the store steals stale locks automatically; delete the file to clear"),
+            ),
+            None => out.push(Diagnostic::warn(
+                "AVSM045",
+                site,
+                "index.lock payload is not a PID (holder died mid-acquisition?)",
+            )),
+        }
+    }
+    out
+}
+
+fn check_artifact(path: &Path, fp: u64, out: &mut Vec<Diagnostic>) {
+    let site = format!("cache entry {}", path.display());
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            out.push(Diagnostic::error("AVSM040", site, format!("unreadable artifact: {e}")));
+            return;
+        }
+    };
+    let key = json::parse(&text).ok().and_then(|v| CompileKey::from_json(v.get("key")).ok());
+    let Some(key) = key else {
+        out.push(
+            Diagnostic::error(
+                "AVSM040",
+                site,
+                "corrupt cache artifact: no parseable embedded compile key",
+            )
+            .with_help("delete the file; the key reads as a miss and recompiles"),
+        );
+        return;
+    };
+    if let Err(e) = store::entry_from_json(&text, &key) {
+        out.push(Diagnostic::error("AVSM040", site, format!("corrupt cache artifact: {e:#}")));
+        return;
+    }
+    if key.fingerprint() != fp {
+        out.push(
+            Diagnostic::error(
+                "AVSM041",
+                site,
+                format!(
+                    "filename fingerprint {fp:016x} does not match the embedded key \
+                     ({:016x})",
+                    key.fingerprint()
+                ),
+            )
+            .with_help("the entry was renamed or the hasher changed; it reads as a miss"),
+        );
+    }
+}
+
+fn check_negative(path: &Path, fp: u64, out: &mut Vec<Diagnostic>) {
+    let site = format!("cache entry {}", path.display());
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            out.push(Diagnostic::error("AVSM048", site, format!("unreadable negative: {e}")));
+            return;
+        }
+    };
+    let key = json::parse(&text).ok().and_then(|v| CompileKey::from_json(v.get("key")).ok());
+    let Some(key) = key else {
+        out.push(
+            Diagnostic::error(
+                "AVSM048",
+                site,
+                "corrupt negative sidecar: no parseable embedded compile key",
+            )
+            .with_help("delete the file; infeasibility is re-derived on the next probe"),
+        );
+        return;
+    };
+    if let Err(e) = store::negative_from_json(&text, &key) {
+        out.push(Diagnostic::error("AVSM048", site, format!("corrupt negative sidecar: {e:#}")));
+        return;
+    }
+    if key.fingerprint() != fp {
+        out.push(
+            Diagnostic::error(
+                "AVSM041",
+                site,
+                format!(
+                    "filename fingerprint {fp:016x} does not match the embedded key \
+                     ({:016x})",
+                    key.fingerprint()
+                ),
+            )
+            .with_help("the entry was renamed or the hasher changed; it reads as a miss"),
+        );
+    }
+}
+
+/// What a journal is expected to agree with, when the campaign spec is in
+/// hand. Without it the journal is checked structurally only.
+#[derive(Debug, Clone)]
+pub struct JournalExpectation {
+    pub spec_fingerprint: u64,
+    pub parts: Option<SpecParts>,
+    pub units: usize,
+}
+
+/// Pre-check a resume journal without touching the campaign: header,
+/// schema, optional spec/unit agreement, torn tail, per-record integrity,
+/// and a replay summary.
+pub fn lint_journal(path: &Path, expect: Option<&JournalExpectation>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let site = format!("journal {}", path.display());
+    if !path.is_file() {
+        out.push(Diagnostic::info(
+            "AVSM056",
+            site,
+            "journal does not exist yet (a fresh campaign creates it)",
+        ));
+        return out;
+    }
+    let content = match std::fs::read_to_string(path) {
+        Ok(c) => c,
+        Err(e) => {
+            out.push(Diagnostic::error("AVSM050", site, format!("unreadable journal: {e}")));
+            return out;
+        }
+    };
+    let mut lines: Vec<&str> = Vec::new();
+    let mut torn = false;
+    for seg in content.split_inclusive('\n') {
+        match seg.strip_suffix('\n') {
+            Some(line) => lines.push(line),
+            None => torn = true,
+        }
+    }
+    if torn {
+        out.push(
+            Diagnostic::warn(
+                "AVSM052",
+                site.clone(),
+                "torn final line (crash artifact: an append died mid-write)",
+            )
+            .with_help("resume truncates the tear away and re-simulates that unit"),
+        );
+    }
+    let Some((&header_line, records)) = lines.split_first() else {
+        out.push(Diagnostic::info(
+            "AVSM056",
+            site,
+            "journal is empty (crashed before the header was persisted); resume starts fresh",
+        ));
+        return out;
+    };
+    let header = match journal::parse_header(header_line) {
+        Ok(h) => h,
+        Err(e) => {
+            out.push(Diagnostic::error(
+                "AVSM050",
+                site,
+                format!("corrupt journal header: {e:#}"),
+            ));
+            return out;
+        }
+    };
+    if header.schema != journal::SCHEMA {
+        out.push(Diagnostic::error(
+            "AVSM055",
+            site,
+            format!("journal has schema {:?}, expected {:?}", header.schema, journal::SCHEMA),
+        ));
+        return out;
+    }
+    if let Some(exp) = expect {
+        let want = format!("{:016x}", exp.spec_fingerprint);
+        if header.spec != want {
+            out.push(journal::spec_mismatch_diagnostic(
+                path,
+                &header.spec,
+                header.parts,
+                &want,
+                exp.parts.as_ref(),
+            ));
+        }
+        if header.units != exp.units {
+            out.push(Diagnostic::error(
+                "AVSM054",
+                site.clone(),
+                format!(
+                    "journal records {} units, this campaign has {}",
+                    header.units, exp.units
+                ),
+            ));
+        }
+    }
+    let mut completed: BTreeSet<usize> = BTreeSet::new();
+    for (i, line) in records.iter().enumerate() {
+        let record_site = format!("{}:{}", path.display(), i + 2);
+        match journal::parse_record(line) {
+            Err(e) => out.push(
+                Diagnostic::error(
+                    "AVSM053",
+                    record_site,
+                    format!("corrupt journal record: {e:#}"),
+                )
+                .with_help(
+                    "corruption before the final line is not a crash artifact — something \
+                     else rewrote the file; resume refuses it",
+                ),
+            ),
+            Ok((unit, _)) if unit >= header.units => out.push(Diagnostic::error(
+                "AVSM054",
+                record_site,
+                format!("record names unit {unit} of {}", header.units),
+            )),
+            Ok((unit, _)) => {
+                completed.insert(unit);
+            }
+        }
+    }
+    out.push(Diagnostic::info(
+        "AVSM056",
+        site,
+        format!(
+            "replays {} of {} units; {} re-simulate on resume",
+            completed.len(),
+            header.units,
+            header.units.saturating_sub(completed.len())
+        ),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Severity;
+    use crate::campaign::journal::{Journal, UnitRecord};
+    use crate::compiler::{compile, CompileOptions};
+    use crate::config::SystemConfig;
+    use crate::models;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("avsm_fsck_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    fn errors(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().filter(|d| d.severity == Severity::Error).map(|d| d.code).collect()
+    }
+
+    /// A real artifact + a real negative for two distinct keys.
+    fn seed_store(dir: &Path) -> (CompileKey, CompileKey) {
+        let sys = SystemConfig::base_paper();
+        let opts = CompileOptions { double_buffer: true, labels: false };
+        let net = models::lenet(28);
+        let key = CompileKey::new(&net, &sys, opts);
+        let compiled = compile(&net, &sys, opts).unwrap();
+        store::write_entry(dir, &key, &compiled).unwrap();
+        let other = models::dilated_vgg_tiny();
+        let neg_key = CompileKey::new(&other, &sys, opts);
+        store::write_negative(dir, &neg_key, "no feasible tiling").unwrap();
+        (key, neg_key)
+    }
+
+    #[test]
+    fn clean_store_lints_clean() {
+        let dir = tmpdir("clean");
+        seed_store(&dir);
+        let diags = lint_cache_dir(&dir, None);
+        assert!(errors(&diags).is_empty(), "{diags:?}");
+        assert!(diags.iter().all(|d| d.severity == Severity::Info), "{diags:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_artifact_and_negative_get_distinct_codes() {
+        let dir = tmpdir("corrupt");
+        let (key, neg_key) = seed_store(&dir);
+        // Truncate both files mid-document (the torn-write corpse shape).
+        let apath = store::entry_path(&dir, &key);
+        let text = std::fs::read_to_string(&apath).unwrap();
+        std::fs::write(&apath, &text[..text.len() / 2]).unwrap();
+        let npath = store::negative_path(&dir, &neg_key);
+        let text = std::fs::read_to_string(&npath).unwrap();
+        std::fs::write(&npath, &text[..text.len() / 2]).unwrap();
+        let diags = lint_cache_dir(&dir, None);
+        // Files are visited in filename (fingerprint) order, so sort the
+        // codes before comparing.
+        let mut codes = errors(&diags);
+        codes.sort_unstable();
+        assert_eq!(codes, vec!["AVSM040", "AVSM048"], "{diags:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn renamed_entry_is_a_fingerprint_mismatch() {
+        let dir = tmpdir("rename");
+        let (key, _) = seed_store(&dir);
+        let from = store::entry_path(&dir, &key);
+        std::fs::rename(&from, dir.join(format!("{:016x}.compiled.json", 0xBAD_u64))).unwrap();
+        let diags = lint_cache_dir(&dir, None);
+        assert_eq!(errors(&diags), vec!["AVSM041"], "{diags:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shadowed_negative_index_bound_and_missing_file_are_reported() {
+        let dir = tmpdir("index");
+        let (key, neg_key) = seed_store(&dir);
+        // Shadow: a negative for the same key as the artifact.
+        store::write_negative(&dir, &key, "stale").unwrap();
+        // Index: both real keys plus a dangling one, over a bound of 1.
+        let mut index = CacheIndex::default();
+        index.touch(key.fingerprint());
+        index.touch(neg_key.fingerprint());
+        index.touch(0xDEAD);
+        std::fs::write(store::index_path(&dir), index.to_json()).unwrap();
+        let diags = lint_cache_dir(&dir, Some(1));
+        assert_eq!(errors(&diags), vec!["AVSM042"], "{diags:?}");
+        let all = codes(&diags);
+        assert!(all.contains(&"AVSM044"), "{diags:?}");
+        assert!(all.contains(&"AVSM043"), "{diags:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_index_is_a_warning_not_an_error() {
+        let dir = tmpdir("badindex");
+        seed_store(&dir);
+        std::fs::write(store::index_path(&dir), "{not json").unwrap();
+        let diags = lint_cache_dir(&dir, Some(8));
+        assert!(errors(&diags).is_empty(), "{diags:?}");
+        assert!(codes(&diags).contains(&"AVSM047"), "{diags:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn locks_temp_litter_and_unknown_files_are_reported() {
+        let dir = tmpdir("lock");
+        // A provably dead holder: PIDs near u32::MAX exceed Linux's pid_max.
+        std::fs::write(store::lock_path(&dir), format!("{}", u32::MAX - 1)).unwrap();
+        std::fs::write(dir.join("0000000000000001.tmp.123.0"), "half").unwrap();
+        std::fs::write(dir.join("README"), "what is this").unwrap();
+        let diags = lint_cache_dir(&dir, None);
+        assert!(errors(&diags).is_empty(), "{diags:?}");
+        let all = codes(&diags);
+        assert!(all.contains(&"AVSM045"), "{diags:?}");
+        assert_eq!(all.iter().filter(|c| **c == "AVSM046").count(), 2, "{diags:?}");
+        // A live holder (this process) is informational.
+        std::fs::write(store::lock_path(&dir), format!("{}", std::process::id())).unwrap();
+        let diags = lint_cache_dir(&dir, None);
+        let lock = diags.iter().find(|d| d.code == "AVSM045").unwrap();
+        assert_eq!(lock.severity, Severity::Info, "{diags:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_cache_dir_is_an_error() {
+        let dir = std::env::temp_dir().join("avsm_fsck_no_such_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(errors(&lint_cache_dir(&dir, None)), vec!["AVSM046"]);
+    }
+
+    fn journal_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("avsm_fsck_j_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn clean_journal_reports_only_the_replay_summary() {
+        let path = journal_path("clean");
+        let mut j = Journal::create(&path, 0xFEED, 4).unwrap();
+        j.append(0, &UnitRecord::Feasible { latency_ps: 100 }).unwrap();
+        j.append(2, &UnitRecord::Infeasible).unwrap();
+        let diags = lint_journal(&path, None);
+        assert_eq!(codes(&diags), vec!["AVSM056"], "{diags:?}");
+        assert!(diags[0].message.contains("replays 2 of 4"), "{diags:?}");
+        // With a matching expectation, still clean.
+        let exp = JournalExpectation { spec_fingerprint: 0xFEED, parts: None, units: 4 };
+        assert_eq!(codes(&lint_journal(&path, Some(&exp))), vec!["AVSM056"]);
+        // Mismatched spec and unit count produce the two strict errors.
+        let exp = JournalExpectation { spec_fingerprint: 0xBEEF, parts: None, units: 5 };
+        let diags = lint_journal(&path, Some(&exp));
+        assert_eq!(errors(&diags), vec!["AVSM051", "AVSM054"], "{diags:?}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_a_warning_and_corruption_is_an_error() {
+        let path = journal_path("torn");
+        let mut j = Journal::create(&path, 1, 3).unwrap();
+        j.append(0, &UnitRecord::Infeasible).unwrap();
+        j.append(1, &UnitRecord::Feasible { latency_ps: 7 }).unwrap();
+        let full = std::fs::read_to_string(&path).unwrap();
+        // Tear the final line.
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        let diags = lint_journal(&path, None);
+        assert!(codes(&diags).contains(&"AVSM052"), "{diags:?}");
+        assert!(errors(&diags).is_empty(), "{diags:?}");
+        // Corrupt a mid-file record and point an intact record out of range.
+        let mut lines: Vec<&str> = full.lines().collect();
+        lines[1] = "{\"class\":\"feasible\"";
+        let with_range = format!("{}\n{{\"class\":\"infeasible\",\"unit\":9}}\n", lines.join("\n"));
+        std::fs::write(&path, with_range).unwrap();
+        let diags = lint_journal(&path, None);
+        assert_eq!(errors(&diags), vec!["AVSM053", "AVSM054"], "{diags:?}");
+        assert!(diags.iter().any(|d| d.site.ends_with(":2")), "{diags:?}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn header_problems_get_their_own_codes() {
+        let path = journal_path("header");
+        std::fs::write(&path, "{broken\n").unwrap();
+        assert_eq!(errors(&lint_journal(&path, None)), vec!["AVSM050"]);
+        std::fs::write(&path, "{\"schema\":\"other-v1\",\"spec\":\"00\",\"units\":1}\n").unwrap();
+        assert_eq!(errors(&lint_journal(&path, None)), vec!["AVSM055"]);
+        std::fs::write(&path, "").unwrap();
+        let diags = lint_journal(&path, None);
+        assert_eq!(codes(&diags), vec!["AVSM056"], "{diags:?}");
+        std::fs::remove_file(&path).unwrap();
+        // Absent journal: informational (resume would create it).
+        let diags = lint_journal(&path, None);
+        assert_eq!(codes(&diags), vec!["AVSM056"], "{diags:?}");
+    }
+}

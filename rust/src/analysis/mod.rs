@@ -1,0 +1,282 @@
+//! Static diagnostics (`avsm lint`): pure, side-effect-free passes over
+//! nets, system configs, campaign/axis specs, cache directories and
+//! resume journals, reported through one rustc-style diagnostic type.
+//!
+//! The paper's whole premise is moving evaluation from the implementation
+//! phase to the concept phase; this module moves *failure discovery* even
+//! earlier — from somewhere deep inside a campaign (an `Error` unit, a
+//! healed cache miss) to before the first compile. The passes run three
+//! ways: the `avsm lint` subcommand, the on-by-default pre-flight at the
+//! top of `campaign::run` / `dse::sweep` (`--no-preflight` opts out), and
+//! `avsm lint --cache-dir` / `--journal` as an offline fsck.
+//!
+//! Two contracts, both property-tested:
+//!
+//! * **Lint is observation-only.** Linting never mutates caches, journals
+//!   or results: a clean-lint campaign produces byte-identical frontiers
+//!   with the pre-flight on or off, at 1 and N threads.
+//! * **Lint never lies.** Every `Error`-severity diagnostic on a
+//!   (net, config) unit implies the runtime classifier reports that unit
+//!   as `Error`/`Infeasible`; a unit lint passes clean is never a runtime
+//!   `Error`. Warnings and infos promise nothing — that's what makes them
+//!   warnings.
+//!
+//! Diagnostic codes are stable API, grouped by pass family:
+//!
+//! | family | codes | checks |
+//! |---|---|---|
+//! | net structural     | `AVSM001`–`AVSM008` | dtype/shape sanity, duplicate layer names, channel chaining, skip edges |
+//! | config validity    | `AVSM010`–`AVSM016` | the hard rules of `SystemConfig::validate`, as diagnostics |
+//! | config heuristics  | `AVSM020`–`AVSM022` | absurd clocks, bus/transaction mismatch, static tiling feasibility |
+//! | campaign/axis spec | `AVSM030`–`AVSM037` | duplicate axes, empty value lists, grid explosion, requirement ranges, workloads shape |
+//! | cache fsck         | `AVSM040`–`AVSM048` | artifact/negative/index integrity, LRU bound, stale locks, temp litter |
+//! | journal pre-check  | `AVSM050`–`AVSM056` | header/schema/spec-fingerprint, torn tail, corrupt records |
+//!
+//! The machine-readable form is the `avsm-lint-v1` JSON report
+//! ([`Report::to_json`]), pinned byte-for-byte by a golden fixture.
+
+pub mod fsck;
+pub mod passes;
+
+use crate::json::{obj, Value};
+
+/// Schema tag of the JSON lint report.
+pub const SCHEMA: &str = "avsm-lint-v1";
+
+/// How bad a diagnostic is. Ordered: `Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn key(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// One finding: a stable `AVSM0xx` code, the site it anchors to (a net,
+/// layer, config, file or `path:line`), the human message, and an
+/// optional remediation hint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub code: &'static str,
+    pub site: String,
+    pub message: String,
+    pub help: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn new(
+        severity: Severity,
+        code: &'static str,
+        site: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Self { severity, code, site: site.into(), message: message.into(), help: None }
+    }
+
+    pub fn error(code: &'static str, site: impl Into<String>, message: impl Into<String>) -> Self {
+        Self::new(Severity::Error, code, site, message)
+    }
+
+    pub fn warn(code: &'static str, site: impl Into<String>, message: impl Into<String>) -> Self {
+        Self::new(Severity::Warn, code, site, message)
+    }
+
+    pub fn info(code: &'static str, site: impl Into<String>, message: impl Into<String>) -> Self {
+        Self::new(Severity::Info, code, site, message)
+    }
+
+    pub fn with_help(mut self, help: impl Into<String>) -> Self {
+        self.help = Some(help.into());
+        self
+    }
+
+    /// rustc-style text rendering:
+    ///
+    /// ```text
+    /// error[AVSM011]: all clock frequencies must be positive
+    ///   --> config "base_paper_virtex7"
+    ///   = help: every freq_mhz field must be > 0
+    /// ```
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{}[{}]: {}\n  --> {}",
+            self.severity.key(),
+            self.code,
+            self.message,
+            self.site
+        );
+        if let Some(help) = &self.help {
+            s.push_str("\n  = help: ");
+            s.push_str(help);
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("code", self.code.into()),
+            ("message", self.message.as_str().into()),
+            ("severity", self.severity.key().into()),
+            ("site", self.site.as_str().into()),
+        ];
+        if let Some(help) = &self.help {
+            pairs.push(("help", help.as_str().into()));
+        }
+        obj(pairs)
+    }
+}
+
+/// The collected output of a lint run over any set of passes.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new(diagnostics: Vec<Diagnostic>) -> Self {
+        Self { diagnostics }
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    pub fn extend(&mut self, ds: Vec<Diagnostic>) {
+        self.diagnostics.extend(ds);
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors() > 0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// The `avsm-lint-v1` report document.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("schema", SCHEMA.into()),
+            (
+                "diagnostics",
+                Value::Array(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+            (
+                "summary",
+                obj(vec![
+                    ("errors", self.errors().into()),
+                    ("infos", self.infos().into()),
+                    ("warnings", self.warnings().into()),
+                ]),
+            ),
+        ])
+    }
+
+    /// All diagnostics rendered plus a one-line summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "lint: {} error(s), {} warning(s), {} info(s)",
+            self.errors(),
+            self.warnings(),
+            self.infos()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report::new(vec![
+            Diagnostic::error("AVSM011", "config \"c\"", "all clock frequencies must be positive")
+                .with_help("every freq_mhz field must be > 0"),
+            Diagnostic::warn("AVSM033", "axis spec", "grid is large"),
+            Diagnostic::info("AVSM056", "journal \"j\"", "replays 3 of 4 units"),
+        ])
+    }
+
+    #[test]
+    fn severity_ordering_and_keys() {
+        assert!(Severity::Info < Severity::Warn);
+        assert!(Severity::Warn < Severity::Error);
+        assert_eq!(Severity::Error.key(), "error");
+        assert_eq!(Severity::Warn.key(), "warning");
+        assert_eq!(Severity::Info.key(), "info");
+    }
+
+    #[test]
+    fn render_is_rustc_shaped() {
+        let r = sample();
+        let text = r.diagnostics[0].render();
+        assert!(text.starts_with("error[AVSM011]: all clock frequencies"), "{text}");
+        assert!(text.contains("--> config \"c\""), "{text}");
+        assert!(text.contains("= help: every freq_mhz"), "{text}");
+        // No help line when there is no help.
+        assert!(!r.diagnostics[1].render().contains("help"), "{}", r.diagnostics[1].render());
+    }
+
+    #[test]
+    fn report_counts_and_summary() {
+        let r = sample();
+        assert_eq!((r.errors(), r.warnings(), r.infos()), (1, 1, 1));
+        assert!(r.has_errors());
+        let text = r.render_text();
+        assert!(text.ends_with("lint: 1 error(s), 1 warning(s), 1 info(s)"), "{text}");
+        assert!(Report::default().is_empty());
+        assert!(!Report::default().has_errors());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let r = sample();
+        let v = r.to_json();
+        assert_eq!(v.get("schema").as_str(), Some(SCHEMA));
+        assert_eq!(v.get("summary").get("errors").as_u64(), Some(1));
+        assert_eq!(v.get("summary").get("warnings").as_u64(), Some(1));
+        assert_eq!(v.get("summary").get("infos").as_u64(), Some(1));
+        let diags = v.get("diagnostics").as_array().unwrap();
+        assert_eq!(diags.len(), 3);
+        assert_eq!(diags[0].get("code").as_str(), Some("AVSM011"));
+        assert_eq!(diags[0].get("severity").as_str(), Some("error"));
+        assert_eq!(diags[0].get("help").as_str(), Some("every freq_mhz field must be > 0"));
+        // help is omitted, not null, when absent.
+        assert_eq!(diags[1].get("help"), &Value::Null);
+        assert!(!diags[1].to_string_compact().contains("help"));
+        // The document round-trips through the real parser.
+        let text = v.to_string_compact();
+        assert_eq!(crate::json::parse(&text).unwrap(), v);
+    }
+}

@@ -1,0 +1,627 @@
+//! Pass families 1–3: pure structural checks over nets ([`lint_net`]),
+//! system configs ([`lint_config`], [`lint_unit`]) and campaign/axis
+//! specs ([`lint_axis_spec_value`], [`lint_axes`],
+//! [`lint_requirement_range`], [`lint_workloads_value`]).
+//!
+//! Error-severity diagnostics deliberately mirror the hard validators
+//! (`DnnGraph::validate`, `SystemConfig::validate`) message-for-message:
+//! the runtime classifier turns exactly those failures into `Error`
+//! units, which is what makes the "lint never lies" property hold.
+//! Everything beyond the validators' reach — absurd clocks, grid
+//! explosions, swept values that will error out at runtime — is a
+//! warning, because the engine will still complete and count it.
+
+use super::{Diagnostic, Severity};
+use crate::compiler::tiling;
+use crate::config::SystemConfig;
+use crate::dse::{Axis, AxisValues, SweepAxes};
+use crate::graph::{DnnGraph, Op};
+use crate::json::Value;
+
+/// Clock annotations above this are almost certainly a unit mistake.
+pub const ABSURD_FREQ_MHZ: u64 = 10_000;
+
+/// Grids above this many points get an AVSM033 heads-up.
+pub const GRID_WARN_THRESHOLD: usize = 10_000;
+
+/// Family 1 — net/graph structural checks (AVSM001–AVSM008): the layer
+/// chain is a DAG whose only cross edges are `skip_from` references, so
+/// acyclicity/dangling-edge checking is "every skip points strictly
+/// earlier", reachability is "every layer has a non-empty tensor flowing
+/// through it", and the chaining rules are the channel-count invariants.
+pub fn lint_net(net: &DnnGraph) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let site = format!("net {:?}", net.name);
+    if net.dtype_bytes == 0 {
+        out.push(
+            Diagnostic::error("AVSM001", &site, "dtype_bytes must be positive")
+                .with_help("set dtype_bytes to the element width in bytes (the paper's FPGA uses 2)"),
+        );
+    }
+    if net.input.numel() == 0 {
+        out.push(Diagnostic::error("AVSM002", &site, "input shape has zero elements"));
+    }
+    if net.layers.is_empty() {
+        out.push(
+            Diagnostic::warn("AVSM008", &site, "net has no layers")
+                .with_help("an empty net simulates to zero latency — probably not what you meant"),
+        );
+    }
+    let mut names = std::collections::HashSet::new();
+    let mut shape = net.input;
+    for (i, layer) in net.layers.iter().enumerate() {
+        let lsite = format!("layer {:?} of net {:?}", layer.name, net.name);
+        if !names.insert(layer.name.as_str()) {
+            out.push(Diagnostic::error(
+                "AVSM003",
+                &lsite,
+                format!("duplicate layer name {:?}", layer.name),
+            ));
+        }
+        match layer.op {
+            Op::Conv2d { cin, kh, kw, stride, dilation, .. } => {
+                if cin != shape.c {
+                    out.push(Diagnostic::error(
+                        "AVSM004",
+                        &lsite,
+                        format!("layer {:?}: cin {} != incoming channels {}", layer.name, cin, shape.c),
+                    ));
+                }
+                if kh == 0 || kw == 0 || stride == 0 || dilation == 0 {
+                    out.push(Diagnostic::error(
+                        "AVSM005",
+                        &lsite,
+                        format!("layer {:?}: zero conv geometry", layer.name),
+                    ));
+                }
+            }
+            Op::DepthwiseConv2d { c, kh, kw, stride, dilation, .. } => {
+                if c != shape.c {
+                    out.push(Diagnostic::error(
+                        "AVSM004",
+                        &lsite,
+                        format!("layer {:?}: depthwise c {} != incoming channels {}", layer.name, c, shape.c),
+                    ));
+                }
+                if kh == 0 || kw == 0 || stride == 0 || dilation == 0 {
+                    out.push(Diagnostic::error(
+                        "AVSM005",
+                        &lsite,
+                        format!("layer {:?}: zero conv geometry", layer.name),
+                    ));
+                }
+            }
+            _ => {}
+        }
+        if let Some(src) = layer.skip_from {
+            if src >= i {
+                out.push(
+                    Diagnostic::error(
+                        "AVSM006",
+                        &lsite,
+                        format!("layer {:?}: skip_from {} is not an earlier layer", layer.name, src),
+                    )
+                    .with_help("skip edges must point strictly backwards — forward or self references would make the task graph cyclic"),
+                );
+            }
+        }
+        shape = layer.op.out_shape(shape);
+        if shape.numel() == 0 {
+            out.push(Diagnostic::error(
+                "AVSM007",
+                &lsite,
+                format!("layer {:?} produces an empty tensor", layer.name),
+            ));
+        }
+    }
+    out
+}
+
+/// Family 2 — system-config checks. AVSM010–AVSM016 mirror
+/// `SystemConfig::validate` rule-for-rule (every hard-invalid config gets
+/// an Error here, nothing validate accepts does); AVSM020/AVSM021 are
+/// heuristics the validator deliberately allows.
+pub fn lint_config(sys: &SystemConfig) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let site = format!("config {:?}", sys.name);
+    let n = &sys.nce;
+    if n.array_rows == 0 || n.array_cols == 0 {
+        out.push(Diagnostic::error("AVSM010", &site, "NCE array must be non-empty"));
+    }
+    let clocks = [
+        ("nce", n.freq_mhz),
+        ("bus", sys.bus.freq_mhz),
+        ("memory", sys.memory.freq_mhz),
+        ("hkp", sys.hkp.freq_mhz),
+    ];
+    for (unit, f) in clocks {
+        if f == 0 {
+            out.push(Diagnostic::error(
+                "AVSM011",
+                &site,
+                format!("{unit} clock is zero — all clock frequencies must be positive"),
+            ));
+        } else if f > ABSURD_FREQ_MHZ {
+            out.push(
+                Diagnostic::warn(
+                    "AVSM020",
+                    &site,
+                    format!("{unit} clock of {f} MHz is implausibly fast (> {ABSURD_FREQ_MHZ} MHz)"),
+                )
+                .with_help("freq_mhz fields are in MHz — this looks like a kHz/Hz value"),
+            );
+        }
+    }
+    if n.ifm_buffer_kib == 0 || n.weight_buffer_kib == 0 || n.ofm_buffer_kib == 0 {
+        out.push(Diagnostic::error("AVSM012", &site, "on-chip buffers must be non-empty"));
+    }
+    if sys.bus.bytes_per_cycle == 0 || sys.bus.max_transaction_bytes == 0 {
+        out.push(Diagnostic::error(
+            "AVSM013",
+            &site,
+            "bus width and max transaction size must be positive",
+        ));
+    } else if sys.bus.bytes_per_cycle > sys.bus.max_transaction_bytes {
+        out.push(
+            Diagnostic::warn(
+                "AVSM021",
+                &site,
+                format!(
+                    "bus beat of {} B is wider than max_transaction_bytes {} — every transaction is a single beat, so chunked re-arbitration never happens",
+                    sys.bus.bytes_per_cycle, sys.bus.max_transaction_bytes
+                ),
+            )
+            .with_help("raise max_transaction_bytes to at least the bus width"),
+        );
+    }
+    if sys.dma.channels == 0 {
+        out.push(Diagnostic::error("AVSM014", &site, "need at least one DMA channel"));
+    }
+    if sys.memory.data_bytes_per_cycle == 0 || !(1..=100).contains(&sys.memory.avsm_eff_bw_pct) {
+        out.push(Diagnostic::error(
+            "AVSM015",
+            &site,
+            "memory data width and effective-bandwidth annotation must be sane",
+        ));
+    }
+    if sys.memory.banks == 0 || sys.memory.row_bytes == 0 || sys.memory.burst_bytes == 0 {
+        out.push(Diagnostic::error("AVSM016", &site, "DRAM geometry must be positive"));
+    }
+    out
+}
+
+/// Family 2's static feasibility probe on one (net, config) unit:
+/// [`lint_net`] + [`lint_config`] plus AVSM022, which reuses the
+/// compiler's own tiling arithmetic (`compiler::tiling::tile_layer`)
+/// read-only to prove "this config can never tile this net", naming each
+/// failing layer. The probe only runs when net and config are
+/// individually Error-free — the tiler's arithmetic assumes a validated
+/// config — which is also why the lint-never-lies property holds: an
+/// AVSM022 unit is exactly a unit the compiler will classify
+/// `Infeasible`, and AVSM0xx validity errors are exactly the units the
+/// runtime classifier reports as `Error`.
+pub fn lint_unit(net: &DnnGraph, sys: &SystemConfig) -> Vec<Diagnostic> {
+    let mut out = lint_net(net);
+    out.extend(lint_config(sys));
+    if out.iter().any(|d| d.severity == Severity::Error) {
+        return out;
+    }
+    let mut shape = net.input;
+    for layer in &net.layers {
+        if let Err(e) = tiling::tile_layer(sys, &layer.op, shape, net.dtype_bytes) {
+            out.push(
+                Diagnostic::error(
+                    "AVSM022",
+                    format!(
+                        "layer {:?} of net {:?} on config {:?}",
+                        layer.name, net.name, sys.name
+                    ),
+                    format!("this config can never tile this net: {e:#}"),
+                )
+                .with_help("grow ifm/weight/ofm_buffer_kib or shrink the layer — the compiler will classify this unit infeasible"),
+            );
+        }
+        shape = layer.op.out_shape(shape);
+    }
+    out
+}
+
+/// Family 3 over a *raw* axis-spec JSON document — the form `avsm lint
+/// --axes` sees. Catches the defects `SweepAxes::from_value` rejects at
+/// parse time (duplicate axes AVSM030, unknown keys / bad value shapes
+/// AVSM032) and the smells it silently tolerates (empty value lists
+/// AVSM031, explosive cross-products AVSM033).
+pub fn lint_axis_spec_value(v: &Value) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(entries) = v.as_array() else {
+        out.push(Diagnostic::error(
+            "AVSM032",
+            "axis spec",
+            "axis spec must be a JSON array of {axis, values} objects",
+        ));
+        return out;
+    };
+    let mut seen: Vec<Axis> = Vec::new();
+    let mut grid: usize = 1;
+    for (i, entry) in entries.iter().enumerate() {
+        let site = format!("axis spec entry {i}");
+        match AxisValues::from_json(entry) {
+            Err(e) => out.push(Diagnostic::error("AVSM032", &site, format!("{e:#}"))),
+            Ok(av) => {
+                if seen.contains(&av.axis()) {
+                    out.push(
+                        Diagnostic::error(
+                            "AVSM030",
+                            &site,
+                            crate::dse::axis::duplicate_axis_message(av.axis()),
+                        )
+                        .with_help("merge the value lists into a single entry per axis"),
+                    );
+                }
+                seen.push(av.axis());
+                if av.is_empty() {
+                    out.push(
+                        Diagnostic::warn(
+                            "AVSM031",
+                            &site,
+                            format!(
+                                "axis {:?} has an empty value list — it sweeps nothing and is dropped from the grid",
+                                av.axis().key()
+                            ),
+                        )
+                        .with_help("delete the entry or give it values"),
+                    );
+                } else {
+                    grid = grid.saturating_mul(av.len());
+                }
+            }
+        }
+    }
+    if grid > GRID_WARN_THRESHOLD {
+        out.push(grid_warning(grid));
+    }
+    out
+}
+
+fn grid_warning(grid: usize) -> Diagnostic {
+    Diagnostic::warn(
+        "AVSM033",
+        "axis spec",
+        format!("cross-product expands to {grid} grid points (> {GRID_WARN_THRESHOLD})"),
+    )
+    .with_help("expect a long campaign — consider --cache-dir, a latency bound, or fewer values per axis")
+}
+
+/// Family 3 on a parsed spec — what the campaign/sweep pre-flight runs:
+/// the AVSM033 grid-size estimate plus AVSM037, a warning for every
+/// swept value that turns the base into an invalid config (the engine
+/// will complete, counting that whole grid slice as `error` units — the
+/// pre-flight just says so before the first compile).
+pub fn lint_axes(base: &SystemConfig, axes: &SweepAxes) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if axes.grid_size() > GRID_WARN_THRESHOLD {
+        out.push(grid_warning(axes.grid_size()));
+    }
+    for av in axes.axes() {
+        for value in av.values() {
+            let mut sys = base.clone();
+            if av.axis().apply(&mut sys, *value).is_ok() {
+                if let Err(e) = sys.validate() {
+                    out.push(
+                        Diagnostic::warn(
+                            "AVSM037",
+                            format!("axis {:?}", av.axis().key()),
+                            format!(
+                                "value {value:?} yields an invalid config ({e:#}) — every grid point sweeping it will be an error unit"
+                            ),
+                        )
+                        .with_help("drop the value, or fix the base config it is applied to"),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Family 3's static half of the requirement solver's contract
+/// (AVSM034/AVSM035): `solve_requirement` needs a totally ordered axis
+/// and a sane positive range; both are checkable before any simulation.
+/// (Actual non-monotone *latency* over the range is only detectable by
+/// evaluating the endpoints — the solver itself reports that.)
+pub fn lint_requirement_range(axis: Axis, lo: u64, hi: u64) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let site = format!("axis {:?}", axis.key());
+    if !axis.is_scalar() {
+        out.push(Diagnostic::error(
+            "AVSM035",
+            &site,
+            format!(
+                "axis {} is not scalar-valued; the requirement solver needs a totally ordered axis",
+                axis.key()
+            ),
+        ));
+    }
+    if lo == 0 || lo > hi {
+        out.push(
+            Diagnostic::error(
+                "AVSM034",
+                &site,
+                format!("{} range must satisfy 0 < lo <= hi, got ({lo}, {hi})", axis.key()),
+            )
+            .with_help("pass --lo/--hi with 0 < lo <= hi"),
+        );
+    }
+    out
+}
+
+/// Family 3 over a workloads-file JSON document (AVSM036): an array of
+/// objects, each naming a net, optionally pointing `base` at a readable
+/// system JSON and carrying an `axes` spec (linted recursively).
+pub fn lint_workloads_value(v: &Value) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(entries) = v.as_array() else {
+        out.push(Diagnostic::error(
+            "AVSM036",
+            "workloads file",
+            "workloads file must be a JSON array of workload objects",
+        ));
+        return out;
+    };
+    if entries.is_empty() {
+        out.push(Diagnostic::error(
+            "AVSM036",
+            "workloads file",
+            "campaign needs at least one workload",
+        ));
+    }
+    for (i, entry) in entries.iter().enumerate() {
+        let site = format!("workload {i}");
+        if entry.get("net").as_str().is_none() {
+            out.push(Diagnostic::error(
+                "AVSM036",
+                &site,
+                "workload needs a string \"net\" field",
+            ));
+        }
+        match entry.get("base") {
+            Value::Null => {}
+            Value::Str(path) => {
+                if !std::path::Path::new(path).is_file() {
+                    out.push(
+                        Diagnostic::error(
+                            "AVSM036",
+                            &site,
+                            format!("base config path {path:?} does not exist"),
+                        )
+                        .with_help("base must point at an avsm-system-v1 JSON file"),
+                    );
+                } else if let Ok(text) = std::fs::read_to_string(path) {
+                    if let Ok(sys) = SystemConfig::from_json_unvalidated(&text) {
+                        out.extend(lint_config(&sys));
+                    } else if let Err(e) = SystemConfig::from_json(&text) {
+                        out.push(Diagnostic::error(
+                            "AVSM036",
+                            &site,
+                            format!("base config {path:?} does not parse: {e:#}"),
+                        ));
+                    }
+                }
+            }
+            _ => out.push(Diagnostic::error(
+                "AVSM036",
+                &site,
+                "workload \"base\" must be a string path",
+            )),
+        }
+        match entry.get("axes") {
+            Value::Null => {}
+            axes => out.extend(lint_axis_spec_value(axes)),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{models, Layer, TensorShape};
+    use crate::json;
+
+    fn has(diags: &[Diagnostic], code: &str) -> bool {
+        diags.iter().any(|d| d.code == code)
+    }
+
+    fn error_free(diags: &[Diagnostic]) -> bool {
+        !diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    #[test]
+    fn clean_net_and_config_lint_clean() {
+        assert!(error_free(&lint_net(&models::lenet(28))));
+        assert!(error_free(&lint_config(&SystemConfig::base_paper())));
+        assert!(error_free(&lint_unit(&models::lenet(28), &SystemConfig::base_paper())));
+    }
+
+    #[test]
+    fn net_errors_mirror_validate() {
+        // Each mutation that validate rejects gets the matching code.
+        let mut net = models::lenet(28);
+        net.dtype_bytes = 0;
+        assert!(has(&lint_net(&net), "AVSM001"));
+
+        let mut net = models::lenet(28);
+        net.input = TensorShape::new(1, 0, 28, 28);
+        assert!(has(&lint_net(&net), "AVSM002"));
+
+        let mut net = models::lenet(28);
+        let dup = net.layers[0].clone();
+        net.layers.push(dup);
+        let diags = lint_net(&net);
+        assert!(has(&diags, "AVSM003"), "{diags:?}");
+
+        let mut net = models::lenet(28);
+        if let Op::Conv2d { ref mut cin, .. } = net.layers[0].op {
+            *cin += 1;
+        }
+        assert!(has(&lint_net(&net), "AVSM004"));
+
+        let mut net = models::lenet(28);
+        if let Op::Conv2d { ref mut stride, .. } = net.layers[0].op {
+            *stride = 0;
+        }
+        assert!(has(&lint_net(&net), "AVSM005"));
+
+        let mut net = models::lenet(28);
+        let idx = net.layers.len() - 1;
+        net.layers[idx].skip_from = Some(idx);
+        assert!(has(&lint_net(&net), "AVSM006"));
+    }
+
+    #[test]
+    fn net_lint_matches_validate_verdict() {
+        // The drift contract in miniature: Error-free lint iff validate Ok.
+        let good = models::lenet(28);
+        assert_eq!(good.validate().is_ok(), error_free(&lint_net(&good)));
+        let mut bad = models::lenet(28);
+        bad.dtype_bytes = 0;
+        assert_eq!(bad.validate().is_ok(), error_free(&lint_net(&bad)));
+    }
+
+    #[test]
+    fn empty_net_is_a_warning_not_an_error() {
+        let net = crate::graph::DnnGraph::new("empty", TensorShape::new(1, 1, 8, 8), 2);
+        let diags = lint_net(&net);
+        assert!(has(&diags, "AVSM008"));
+        assert!(error_free(&diags), "validate accepts an empty net, so lint must too");
+    }
+
+    #[test]
+    fn config_errors_mirror_validate() {
+        let cases: Vec<(&str, Box<dyn Fn(&mut SystemConfig)>)> = vec![
+            ("AVSM010", Box::new(|s| s.nce.array_rows = 0)),
+            ("AVSM011", Box::new(|s| s.nce.freq_mhz = 0)),
+            ("AVSM011", Box::new(|s| s.bus.freq_mhz = 0)),
+            ("AVSM012", Box::new(|s| s.nce.ifm_buffer_kib = 0)),
+            ("AVSM013", Box::new(|s| s.bus.bytes_per_cycle = 0)),
+            ("AVSM014", Box::new(|s| s.dma.channels = 0)),
+            ("AVSM015", Box::new(|s| s.memory.avsm_eff_bw_pct = 0)),
+            ("AVSM015", Box::new(|s| s.memory.avsm_eff_bw_pct = 101)),
+            ("AVSM016", Box::new(|s| s.memory.banks = 0)),
+        ];
+        for (code, mutate) in cases {
+            let mut sys = SystemConfig::base_paper();
+            mutate(&mut sys);
+            assert!(sys.validate().is_err(), "{code}: mutation must break validate");
+            let diags = lint_config(&sys);
+            assert!(has(&diags, code), "expected {code} in {diags:?}");
+        }
+    }
+
+    #[test]
+    fn heuristics_warn_on_configs_validate_accepts() {
+        let mut sys = SystemConfig::base_paper();
+        sys.nce.freq_mhz = 1_000_000; // "250 MHz" typed in kHz
+        sys.validate().unwrap();
+        let diags = lint_config(&sys);
+        assert!(has(&diags, "AVSM020"), "{diags:?}");
+        assert!(error_free(&diags));
+
+        let mut sys = SystemConfig::base_paper();
+        sys.bus.max_transaction_bytes = 8; // narrower than the 32 B beat
+        sys.validate().unwrap();
+        let diags = lint_config(&sys);
+        assert!(has(&diags, "AVSM021"), "{diags:?}");
+        assert!(error_free(&diags));
+    }
+
+    #[test]
+    fn tiling_probe_names_the_failing_layer() {
+        let net = models::dilated_vgg(512, 4, 16);
+        let mut sys = SystemConfig::base_paper();
+        sys.nce.ifm_buffer_kib = 1;
+        sys.nce.weight_buffer_kib = 1;
+        sys.nce.ofm_buffer_kib = 1;
+        sys.validate().unwrap();
+        let diags = lint_unit(&net, &sys);
+        let tile_errors: Vec<_> = diags.iter().filter(|d| d.code == "AVSM022").collect();
+        assert!(!tile_errors.is_empty(), "{diags:?}");
+        assert!(tile_errors[0].site.contains("layer"), "{}", tile_errors[0].site);
+        assert!(tile_errors[0].message.contains("no feasible"), "{}", tile_errors[0].message);
+        // A feasible unit gets no AVSM022.
+        assert!(!has(&lint_unit(&net, &SystemConfig::base_paper()), "AVSM022"));
+        // The probe never runs (and cannot divide by zero) on an invalid config.
+        sys.nce.array_rows = 0;
+        assert!(!has(&lint_unit(&net, &sys), "AVSM022"));
+    }
+
+    #[test]
+    fn axis_spec_lint_finds_duplicates_and_empties() {
+        let v = json::parse(
+            r#"[{"axis":"nce_freq_mhz","values":[125,250]},
+                {"axis":"nce_freq_mhz","values":[500]},
+                {"axis":"ifm_buffer_kib","values":[]}]"#,
+        )
+        .unwrap();
+        let diags = lint_axis_spec_value(&v);
+        assert!(has(&diags, "AVSM030"), "{diags:?}");
+        assert!(has(&diags, "AVSM031"), "{diags:?}");
+        let dup = diags.iter().find(|d| d.code == "AVSM030").unwrap();
+        assert!(dup.message.contains("twice"), "{}", dup.message);
+        // The parser rejects the same spec, with the same message.
+        let err = SweepAxes::from_value(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("twice"), "{err:#}");
+    }
+
+    #[test]
+    fn axis_spec_lint_flags_unknown_axes_and_explosive_grids() {
+        let v = json::parse(r#"[{"axis":"warp_core","values":[9]}]"#).unwrap();
+        assert!(has(&lint_axis_spec_value(&v), "AVSM032"));
+        assert!(has(&lint_axis_spec_value(&json::parse("{}").unwrap()), "AVSM032"));
+
+        let values: Vec<String> = (1..=150).map(|f| f.to_string()).collect();
+        let big = format!(
+            r#"[{{"axis":"nce_freq_mhz","values":[{v}]}},{{"axis":"bus_freq_mhz","values":[{v}]}}]"#,
+            v = values.join(",")
+        );
+        let diags = lint_axis_spec_value(&json::parse(&big).unwrap());
+        assert!(has(&diags, "AVSM033"), "150*150 > threshold: {diags:?}");
+    }
+
+    #[test]
+    fn parsed_axes_lint_warns_on_invalid_swept_values() {
+        let base = SystemConfig::base_paper();
+        let axes = SweepAxes::new().nce_freqs_mhz(vec![250, 0]);
+        let diags = lint_axes(&base, &axes);
+        assert!(has(&diags, "AVSM037"), "{diags:?}");
+        assert!(error_free(&diags), "per-unit problems must stay warnings");
+        assert!(lint_axes(&base, &SweepAxes::new().nce_freqs_mhz(vec![125, 250])).is_empty());
+    }
+
+    #[test]
+    fn requirement_range_lint() {
+        assert!(has(&lint_requirement_range(Axis::NceFreqMhz, 0, 10), "AVSM034"));
+        assert!(has(&lint_requirement_range(Axis::NceFreqMhz, 20, 10), "AVSM034"));
+        assert!(has(&lint_requirement_range(Axis::ArrayGeometry, 1, 10), "AVSM035"));
+        assert!(lint_requirement_range(Axis::NceFreqMhz, 1, 10).is_empty());
+    }
+
+    #[test]
+    fn workloads_lint_checks_shape_and_paths() {
+        let v = json::parse(r#"[{"net":"lenet"}]"#).unwrap();
+        assert!(lint_workloads_value(&v).is_empty());
+        assert!(has(&lint_workloads_value(&json::parse("[]").unwrap()), "AVSM036"));
+        assert!(has(&lint_workloads_value(&json::parse("{}").unwrap()), "AVSM036"));
+        let v = json::parse(r#"[{"axes":[]}]"#).unwrap();
+        assert!(has(&lint_workloads_value(&v), "AVSM036"), "missing net field");
+        let v = json::parse(r#"[{"net":"lenet","base":"/nonexistent/sys.json"}]"#).unwrap();
+        let diags = lint_workloads_value(&v);
+        assert!(has(&diags, "AVSM036"), "{diags:?}");
+        // A workload's axes spec is linted recursively.
+        let v = json::parse(
+            r#"[{"net":"lenet","axes":[{"axis":"nce_freq_mhz","values":[1]},{"axis":"nce_freq_mhz","values":[2]}]}]"#,
+        )
+        .unwrap();
+        assert!(has(&lint_workloads_value(&v), "AVSM030"));
+    }
+}

@@ -66,6 +66,150 @@ use std::path::{Path, PathBuf};
 /// Schema identifier of the journal header line.
 pub const SCHEMA: &str = "avsm-campaign-journal-v1";
 
+/// The campaign spec fingerprint, decomposed into the four independently
+/// hashed parts it is combined from. Journals written by the campaign
+/// engine persist the parts alongside the combined fingerprint, so a
+/// `--resume` mismatch can name *which* part of the spec changed (the
+/// nets? the base config? the axes? the options?) instead of refusing
+/// with two opaque hashes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecParts {
+    /// Hash over every workload's serialized net.
+    pub nets: u64,
+    /// Hash over every workload's effective base config.
+    pub base: u64,
+    /// Hash over every workload's axis spec.
+    pub axes: u64,
+    /// Hash over the result-relevant campaign options (bound kind,
+    /// pruning, evaluation order, point retention).
+    pub options: u64,
+}
+
+impl SpecParts {
+    /// Part names, in the fixed `nets`/`base`/`axes`/`options` order.
+    pub const NAMES: [&'static str; 4] = ["nets", "base", "axes", "options"];
+
+    fn values(&self) -> [u64; 4] {
+        [self.nets, self.base, self.axes, self.options]
+    }
+
+    /// The combined campaign fingerprint: a hash over the four parts.
+    pub fn combined(&self) -> u64 {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut h = DefaultHasher::new();
+        self.values().hash(&mut h);
+        h.finish()
+    }
+
+    /// Names of the parts where `self` and `other` disagree.
+    pub fn differing(&self, other: &SpecParts) -> Vec<&'static str> {
+        Self::NAMES
+            .iter()
+            .zip(self.values())
+            .zip(other.values())
+            .filter(|((_, a), b)| a != b)
+            .map(|((name, _), _)| *name)
+            .collect()
+    }
+
+    /// JSON form persisted in the journal header (hex strings, like the
+    /// combined `spec` field).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("axes", Value::from(format!("{:016x}", self.axes))),
+            ("base", Value::from(format!("{:016x}", self.base))),
+            ("nets", Value::from(format!("{:016x}", self.nets))),
+            ("options", Value::from(format!("{:016x}", self.options))),
+        ])
+    }
+
+    /// Parse the header's optional `parts` object. `None` when absent or
+    /// malformed — journals written before the parts were recorded are
+    /// still resumable; they just fall back to the bare refusal.
+    pub fn from_json(v: &Value) -> Option<SpecParts> {
+        let field = |k: &str| u64::from_str_radix(v.get(k).as_str()?, 16).ok();
+        Some(SpecParts {
+            nets: field("nets")?,
+            base: field("base")?,
+            axes: field("axes")?,
+            options: field("options")?,
+        })
+    }
+}
+
+/// "axes" / "nets and options" / "nets, axes and options".
+fn join_names(names: &[&str]) -> String {
+    match names {
+        [] => String::new(),
+        [one] => (*one).to_string(),
+        [init @ .., last] => format!("{} and {last}", init.join(", ")),
+    }
+}
+
+/// The diagnostic raised when a journal's spec fingerprint does not match
+/// the resuming campaign's. When both sides recorded their [`SpecParts`],
+/// the message names exactly which parts differ. Also used read-only by
+/// `analysis::fsck` for `avsm lint --journal`.
+pub fn spec_mismatch_diagnostic(
+    path: &Path,
+    got: &str,
+    got_parts: Option<SpecParts>,
+    want: &str,
+    want_parts: Option<&SpecParts>,
+) -> crate::analysis::Diagnostic {
+    let which = match (got_parts, want_parts) {
+        (Some(g), Some(w)) => {
+            let diff = w.differing(&g);
+            if diff.is_empty() {
+                // Combined hashes disagree but every part matches: the
+                // fingerprint formula itself changed (e.g. a toolchain
+                // upgrade re-seeded the std hasher).
+                String::from(" — the fingerprint scheme changed")
+            } else {
+                format!(" — the {} differ", join_names(&diff))
+            }
+        }
+        _ => String::new(),
+    };
+    crate::analysis::Diagnostic::error(
+        "AVSM051",
+        format!("journal {}", path.display()),
+        format!(
+            "journal was written for a different campaign spec{which} \
+             (fingerprint {got}, this run is {want}); refusing to replay it"
+        ),
+    )
+    .with_help("re-run without --resume (or delete the journal) to start fresh")
+}
+
+/// Parsed journal header line (read-only view, shared with
+/// `analysis::fsck`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Header {
+    pub schema: String,
+    pub spec: String,
+    pub parts: Option<SpecParts>,
+    pub units: usize,
+}
+
+/// Parse the first line of a journal file.
+pub fn parse_header(line: &str) -> Result<Header> {
+    let v = parse(line)?;
+    Ok(Header {
+        schema: v.req_str("schema")?.to_string(),
+        spec: v.req_str("spec")?.to_string(),
+        parts: SpecParts::from_json(v.get("parts")),
+        units: v.req_u64("units")? as usize,
+    })
+}
+
+/// Parse one body line of a journal file into `(unit, record)` (read-only
+/// view, shared with `analysis::fsck`).
+pub fn parse_record(line: &str) -> Result<(usize, UnitRecord)> {
+    parse(line).and_then(|v| UnitRecord::from_value(&v))
+}
+
 /// Terminal outcome of one campaign unit, as journaled.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum UnitRecord {
@@ -128,13 +272,16 @@ impl UnitRecord {
     }
 }
 
-fn header_line(spec_fingerprint: u64, units: usize) -> String {
-    let mut line = obj(vec![
+fn header_line(spec_fingerprint: u64, parts: Option<&SpecParts>, units: usize) -> String {
+    let mut pairs = vec![
         ("schema", Value::from(SCHEMA)),
         ("spec", Value::from(format!("{spec_fingerprint:016x}"))),
         ("units", Value::from(units as u64)),
-    ])
-    .to_string_compact();
+    ];
+    if let Some(p) = parts {
+        pairs.push(("parts", p.to_json()));
+    }
+    let mut line = obj(pairs).to_string_compact();
     line.push('\n');
     line
 }
@@ -150,6 +297,19 @@ impl Journal {
     /// Start a fresh journal at `path` (truncating any previous file) with
     /// the header line already persisted.
     pub fn create(path: &Path, spec_fingerprint: u64, units: usize) -> Result<Journal> {
+        Journal::create_with_parts(path, spec_fingerprint, None, units)
+    }
+
+    /// Like [`Journal::create`], additionally persisting the fingerprint's
+    /// [`SpecParts`] in the header so a later mismatched resume can name
+    /// which part of the spec changed. With `None`, the header is
+    /// byte-identical to the historical (parts-free) form.
+    pub fn create_with_parts(
+        path: &Path,
+        spec_fingerprint: u64,
+        parts: Option<&SpecParts>,
+        units: usize,
+    ) -> Result<Journal> {
         if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
             std::fs::create_dir_all(parent)
                 .with_context(|| format!("creating journal directory {}", parent.display()))?;
@@ -157,7 +317,7 @@ impl Journal {
         let file = std::fs::File::create(path)
             .with_context(|| format!("creating campaign journal {}", path.display()))?;
         let mut j = Journal { file, path: path.to_path_buf() };
-        j.write_line(&header_line(spec_fingerprint, units))?;
+        j.write_line(&header_line(spec_fingerprint, parts, units))?;
         Ok(j)
     }
 
@@ -175,9 +335,21 @@ impl Journal {
         spec_fingerprint: u64,
         units: usize,
     ) -> Result<(Journal, Vec<(usize, UnitRecord)>)> {
+        Journal::resume_with_parts(path, spec_fingerprint, None, units)
+    }
+
+    /// Like [`Journal::resume`], additionally carrying this run's
+    /// [`SpecParts`]: a spec-fingerprint mismatch against a journal that
+    /// also recorded its parts names exactly which parts differ.
+    pub fn resume_with_parts(
+        path: &Path,
+        spec_fingerprint: u64,
+        parts: Option<&SpecParts>,
+        units: usize,
+    ) -> Result<(Journal, Vec<(usize, UnitRecord)>)> {
         let mut records: Vec<(usize, UnitRecord)> = Vec::new();
         if !path.exists() {
-            return Ok((Journal::create(path, spec_fingerprint, units)?, records));
+            return Ok((Journal::create_with_parts(path, spec_fingerprint, parts, units)?, records));
         }
         faults::before_read("journal.read", path)
             .with_context(|| format!("reading campaign journal {}", path.display()))?;
@@ -199,30 +371,29 @@ impl Journal {
         if lines.is_empty() {
             // Even the header never finished: the previous run crashed
             // before journaling anything. Start over.
-            return Ok((Journal::create(path, spec_fingerprint, units)?, records));
+            return Ok((Journal::create_with_parts(path, spec_fingerprint, parts, units)?, records));
         }
 
-        let header = parse(lines[0])
+        let header = parse_header(lines[0])
             .with_context(|| format!("corrupt journal header in {}", path.display()))?;
-        let schema = header.req_str("schema")?;
-        if schema != SCHEMA {
-            bail!("journal {} has schema {schema:?}, expected {SCHEMA:?}", path.display());
-        }
-        let want = format!("{spec_fingerprint:016x}");
-        let got = header.req_str("spec")?;
-        if got != want {
+        if header.schema != SCHEMA {
             bail!(
-                "journal {} was written for a different campaign spec \
-                 (fingerprint {got}, this run is {want}); refusing to replay it — \
-                 re-run without --resume (or delete the journal) to start fresh",
-                path.display()
+                "journal {} has schema {:?}, expected {SCHEMA:?}",
+                path.display(),
+                header.schema
             );
         }
-        let jr_units = header.req_u64("units")? as usize;
-        if jr_units != units {
+        let want = format!("{spec_fingerprint:016x}");
+        if header.spec != want {
+            let diag =
+                spec_mismatch_diagnostic(path, &header.spec, header.parts, &want, parts);
+            bail!("{}", diag.render());
+        }
+        if header.units != units {
             bail!(
-                "journal {} records {jr_units} units, this campaign has {units}",
-                path.display()
+                "journal {} records {} units, this campaign has {units}",
+                path.display(),
+                header.units
             );
         }
 
@@ -426,6 +597,62 @@ mod tests {
         let err = Journal::resume(&path, 1, 2).unwrap_err();
         assert!(format!("{err:#}").contains("unit 2 of 2"), "{err:#}");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn spec_parts_mismatch_names_the_differing_parts() {
+        let path = tmp("parts");
+        let a = SpecParts { nets: 1, base: 2, axes: 3, options: 4 };
+        Journal::create_with_parts(&path, a.combined(), Some(&a), 2).unwrap();
+        let b = SpecParts { axes: 30, options: 40, ..a };
+        let err = Journal::resume_with_parts(&path, b.combined(), Some(&b), 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("different campaign spec"), "{msg}");
+        assert!(msg.contains("the axes and options differ"), "{msg}");
+        assert!(msg.contains("AVSM051"), "{msg}");
+        assert!(msg.contains("re-run without --resume"), "{msg}");
+        // A matching spec still resumes, parts and all.
+        let (_, replay) = Journal::resume_with_parts(&path, a.combined(), Some(&a), 2).unwrap();
+        assert!(replay.is_empty());
+        let header = parse_header(
+            std::fs::read_to_string(&path).unwrap().lines().next().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(header.parts, Some(a));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn parts_free_header_is_byte_identical_to_the_historical_form() {
+        let path = tmp("parts_free");
+        Journal::create(&path, 0xABCD, 1).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "{\"schema\":\"avsm-campaign-journal-v1\",\
+             \"spec\":\"000000000000abcd\",\"units\":1}\n"
+        );
+        // Resuming a parts-free (old) journal with parts in hand falls
+        // back to the bare refusal: no part names to compare against.
+        let parts = SpecParts { nets: 1, base: 2, axes: 3, options: 4 };
+        let err = Journal::resume_with_parts(&path, 0x1234, Some(&parts), 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("different campaign spec"), "{msg}");
+        assert!(!msg.contains("— the"), "{msg}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn spec_parts_differing_and_combined_are_consistent() {
+        let a = SpecParts { nets: 1, base: 2, axes: 3, options: 4 };
+        assert!(a.differing(&a).is_empty());
+        assert_eq!(a.combined(), a.combined());
+        let b = SpecParts { nets: 9, ..a };
+        assert_eq!(a.differing(&b), vec!["nets"]);
+        assert_ne!(a.combined(), b.combined());
+        // Round-trip through the header JSON form.
+        assert_eq!(SpecParts::from_json(&parse(&a.to_json().to_string_compact()).unwrap()), Some(a));
+        assert_eq!(join_names(&["nets", "base", "axes"]), "nets, base and axes");
     }
 
     #[test]

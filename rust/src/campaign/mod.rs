@@ -267,6 +267,14 @@ pub struct CampaignOptions {
     /// a fresh start, and a spec-fingerprint mismatch refuses loudly.
     /// Ignored without a journal path.
     pub resume: bool,
+    /// Run the static pre-flight lint (`analysis::passes`) before anything
+    /// else (on by default; CLI `--no-preflight` turns it off). The
+    /// pre-flight rejects exactly the specs the plain validation gate
+    /// rejects — as a full diagnostic report instead of the first bare
+    /// error — and is observation-only: clean-lint campaigns produce
+    /// byte-identical results with it on or off, at any thread count
+    /// (property-tested).
+    pub preflight: bool,
 }
 
 impl Default for CampaignOptions {
@@ -282,6 +290,7 @@ impl Default for CampaignOptions {
             fail_fast: false,
             journal: None,
             resume: false,
+            preflight: true,
         }
     }
 }
@@ -443,24 +452,66 @@ fn lock_recovered<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 }
 
 /// Fingerprint of everything that determines a campaign's per-unit
-/// outcomes: each workload's serialized net, effective base config and
-/// axes, plus the result-relevant options (bound kind, effective pruning,
-/// evaluation order). Thread count and cache settings are deliberately
-/// excluded — they may legitimately differ between a run and its resume.
-/// Journals refuse to replay across differing fingerprints.
-fn spec_fingerprint(spec: &CampaignSpec, opts: &CampaignOptions, prune: bool) -> u64 {
+/// outcomes, decomposed into four independently hashed
+/// [`journal::SpecParts`]: each workload's serialized net (`nets`), the
+/// effective base configs (`base`), the axis specs (`axes`), and the
+/// result-relevant options — bound kind, effective pruning, evaluation
+/// order, point retention (`options`). Thread count and cache settings
+/// are deliberately excluded — they may legitimately differ between a
+/// run and its resume. Journals refuse to replay across differing
+/// combined fingerprints, and because the parts are persisted in the
+/// header, the refusal names which part changed.
+fn spec_parts(spec: &CampaignSpec, opts: &CampaignOptions, prune: bool) -> journal::SpecParts {
+    use std::collections::hash_map::DefaultHasher;
     use std::hash::{Hash, Hasher};
-    let mut h = std::collections::hash_map::DefaultHasher::new();
+    let mut nets = DefaultHasher::new();
+    let mut base = DefaultHasher::new();
+    let mut axes = DefaultHasher::new();
     for ni in 0..spec.workloads.len() {
-        crate::graph::graph_to_json(&spec.workloads[ni].net).hash(&mut h);
-        spec.base_of(ni).to_json().to_string_compact().hash(&mut h);
-        spec.axes_of(ni).to_json().to_string_compact().hash(&mut h);
+        crate::graph::graph_to_json(&spec.workloads[ni].net).hash(&mut nets);
+        spec.base_of(ni).to_json().hash(&mut base);
+        spec.axes_of(ni).to_json().to_string_compact().hash(&mut axes);
     }
-    opts.bound.key().hash(&mut h);
-    prune.hash(&mut h);
-    opts.order_by_bound.hash(&mut h);
-    opts.keep_points.hash(&mut h);
-    h.finish()
+    let mut options = DefaultHasher::new();
+    opts.bound.key().hash(&mut options);
+    prune.hash(&mut options);
+    opts.order_by_bound.hash(&mut options);
+    opts.keep_points.hash(&mut options);
+    journal::SpecParts {
+        nets: nets.finish(),
+        base: base.finish(),
+        axes: axes.finish(),
+        options: options.finish(),
+    }
+}
+
+/// Static pre-flight over a campaign spec: exactly the reject set of the
+/// validation gate in [`run`] — empty portfolio, invalid base configs,
+/// invalid nets — but reported through `analysis::passes`, so the bail
+/// carries every problem as a coded diagnostic instead of the first bare
+/// error. The Error-severity set mirrors `validate()` condition for
+/// condition ("lint never lies", property-tested), which is what makes
+/// the pre-flight observation-only: it rejects precisely the specs the
+/// gate below would reject, just better.
+fn preflight_report(spec: &CampaignSpec) -> crate::analysis::Report {
+    use crate::analysis::passes;
+    let mut report = crate::analysis::Report::default();
+    if spec.workloads.is_empty() {
+        report.push(crate::analysis::Diagnostic::error(
+            "AVSM036",
+            "campaign spec",
+            "campaign needs at least one workload",
+        ));
+        return report;
+    }
+    report.extend(passes::lint_config(&spec.base));
+    for w in &spec.workloads {
+        report.extend(passes::lint_net(&w.net));
+        if let Some(base) = &w.base {
+            report.extend(passes::lint_config(base));
+        }
+    }
+    report
 }
 
 /// Run a campaign: every workload x its grid in one two-phase fan-out
@@ -496,6 +547,15 @@ fn run_campaign<const OBS: bool>(
     spec: &CampaignSpec,
     opts: &CampaignOptions,
 ) -> Result<CampaignResult> {
+    // On-by-default static pre-flight (`--no-preflight` opts out): same
+    // reject set as the plain validation gate below, but the refusal is a
+    // full lint report — every problem, with stable codes and sites.
+    if opts.preflight {
+        let report = preflight_report(spec);
+        if report.has_errors() {
+            bail!("campaign pre-flight failed:\n{}", report.render_text());
+        }
+    }
     if spec.workloads.is_empty() {
         bail!("campaign needs at least one workload");
     }
@@ -546,13 +606,14 @@ fn run_campaign<const OBS: bool>(
     let mut journal: Option<journal::Journal> = None;
     let mut replay_order: Vec<(usize, journal::UnitRecord)> = Vec::new();
     if let Some(path) = &opts.journal {
-        let fp = spec_fingerprint(spec, opts, prune);
+        let parts = spec_parts(spec, opts, prune);
+        let fp = parts.combined();
         if opts.resume {
-            let (j, recs) = journal::Journal::resume(path, fp, jobs)?;
+            let (j, recs) = journal::Journal::resume_with_parts(path, fp, Some(&parts), jobs)?;
             journal = Some(j);
             replay_order = recs;
         } else {
-            journal = Some(journal::Journal::create(path, fp, jobs)?);
+            journal = Some(journal::Journal::create_with_parts(path, fp, Some(&parts), jobs)?);
         }
     }
     let mut replayed: Vec<Option<&journal::UnitRecord>> = vec![None; jobs];

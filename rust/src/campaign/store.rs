@@ -329,7 +329,7 @@ impl Drop for CacheLock {
 /// Is `pid` a live process? Only answerable portably-enough on /proc
 /// platforms; elsewhere assume live (the acquisition timeout still
 /// guarantees progress).
-fn pid_alive(pid: u32) -> bool {
+pub(crate) fn pid_alive(pid: u32) -> bool {
     if cfg!(target_os = "linux") {
         Path::new(&format!("/proc/{pid}")).exists()
     } else {

@@ -286,6 +286,16 @@ impl SystemConfig {
     }
 
     pub fn from_json(text: &str) -> Result<Self> {
+        let cfg = Self::from_json_unvalidated(text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse without the [`SystemConfig::validate`] gate. For diagnostics
+    /// tooling (`avsm lint --sys`): a config that validation would reject
+    /// still parses, so the lint passes can report *every* problem with
+    /// codes instead of stopping at the first parse-time bail.
+    pub fn from_json_unvalidated(text: &str) -> Result<Self> {
         let v = json::parse(text).context("system description parse")?;
         if v.get("schema").as_str() != Some("avsm-system-v1") {
             bail!("unsupported system description schema");
@@ -340,7 +350,6 @@ impl SystemConfig {
                 dispatch_cycles: hkp.req_u64("dispatch_cycles")?,
             },
         };
-        cfg.validate()?;
         Ok(cfg)
     }
 

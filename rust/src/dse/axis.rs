@@ -417,7 +417,7 @@ impl SweepAxes {
         for entry in raw {
             let av = AxisValues::from_json(entry)?;
             if axes.axes.iter().any(|a| a.axis == av.axis) {
-                bail!("axis {:?} listed twice in axis spec", av.axis.key());
+                bail!("{}", duplicate_axis_message(av.axis));
             }
             axes = axes.set(av);
         }
@@ -428,6 +428,13 @@ impl SweepAxes {
     pub fn from_json(text: &str) -> Result<Self> {
         Self::from_value(&json::parse(text).context("axis spec parse")?)
     }
+}
+
+/// The one message for a duplicated axis kind, shared by
+/// [`SweepAxes::from_value`] and the lint pass (`AVSM030`) so the two can
+/// never drift apart.
+pub fn duplicate_axis_message(axis: Axis) -> String {
+    format!("axis {:?} listed twice in axis spec", axis.key())
 }
 
 /// Enumerate the cartesian grid of configs for `axes` around `base`, in

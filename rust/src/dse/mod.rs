@@ -95,6 +95,11 @@ pub struct SweepOptions {
     /// Worker threads; 0 (the default) = one per available CPU, capped by
     /// the point count.
     pub threads: usize,
+    /// Skip the static pre-flight lint (`analysis::passes`) that
+    /// short-circuits a sweep whose net can never evaluate. Observation
+    /// only — outcomes are byte-identical either way; the pre-flight just
+    /// avoids fanning a doomed grid out to the worker pool.
+    pub no_preflight: bool,
 }
 
 /// Crude area/cost proxy of a design point: multipliers + 2x KiB of on-chip
@@ -262,7 +267,7 @@ pub fn sweep(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<Desig
 
 /// Sequential reference sweep (one worker, same cache, same results).
 pub fn sweep_seq(net: &DnnGraph, base: &SystemConfig, axes: &SweepAxes) -> Vec<DesignPoint> {
-    sweep_with(net, base, axes, &SweepOptions { threads: 1 })
+    sweep_with(net, base, axes, &SweepOptions { threads: 1, ..Default::default() })
 }
 
 /// Sweep with an explicit execution policy.
@@ -298,6 +303,28 @@ pub fn sweep_outcomes(
     opts: &SweepOptions,
 ) -> Vec<EvalOutcome> {
     let configs = expand_configs(base, axes);
+    // Static pre-flight: when the lint passes prove the *net* can never
+    // evaluate, every grid point is the same validation error — classify
+    // the whole grid without waking the worker pool. Byte-identical to
+    // the evaluated path: `resolve_classified` runs `net.validate()`
+    // first, so each point's reason is exactly what evaluation would have
+    // produced. The double-check of `net.validate()` keeps this a pure
+    // short-circuit even if the lint pass ever over-approximates.
+    if !opts.no_preflight
+        && crate::analysis::passes::lint_net(net)
+            .iter()
+            .any(|d| d.severity == crate::analysis::Severity::Error)
+    {
+        if let Err(e) = net.validate() {
+            return configs
+                .into_iter()
+                .map(|sys| EvalOutcome::Error {
+                    name: sys.name.clone(),
+                    reason: format!("invalid configuration: {e:#}"),
+                })
+                .collect();
+        }
+    }
     let cache = CompileCache::new(DSE_COMPILE_OPTS);
     crate::campaign::pool::parallel_map(configs.len(), opts.threads, |i| {
         let sys = &configs[i];
@@ -539,7 +566,7 @@ mod tests {
             .nce_freqs_mhz(vec![125, 250, 500])
             .ifm_buffer_kib(vec![512, 1536]);
         let b = base();
-        let par = sweep_with(&net, &b, &axes, &SweepOptions { threads: 4 });
+        let par = sweep_with(&net, &b, &axes, &SweepOptions { threads: 4, ..Default::default() });
         let seq = sweep_seq(&net, &b, &axes);
         assert_eq!(par.len(), seq.len());
         assert_eq!(par.len(), 12);
@@ -708,7 +735,7 @@ mod tests {
         let net = models::lenet(28);
         // One valid frequency, one invalid (0 MHz fails validation).
         let axes = SweepAxes::new().nce_freqs_mhz(vec![250, 0]);
-        let outs = sweep_outcomes(&net, &base(), &axes, &SweepOptions { threads: 1 });
+        let outs = sweep_outcomes(&net, &base(), &axes, &SweepOptions { threads: 1, ..Default::default() });
         assert_eq!(outs.len(), 2);
         assert!(matches!(outs[0], EvalOutcome::Feasible(_)), "{:?}", outs[0]);
         match &outs[1] {
@@ -731,7 +758,7 @@ mod tests {
         tiny.nce.weight_buffer_kib = 1;
         tiny.nce.ofm_buffer_kib = 1;
         let outs =
-            sweep_outcomes(&net, &tiny, &SweepAxes::default(), &SweepOptions { threads: 1 });
+            sweep_outcomes(&net, &tiny, &SweepAxes::default(), &SweepOptions { threads: 1, ..Default::default() });
         assert_eq!(outs.len(), 1);
         assert!(
             matches!(outs[0], EvalOutcome::Infeasible { .. }),

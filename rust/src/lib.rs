@@ -23,9 +23,13 @@
 //! * [`obs`] — span/counter telemetry for the exploration engine itself
 //!   (per-worker timelines, latency histograms, the
 //!   `avsm-campaign-telemetry-v1` report).
+//! * [`analysis`] — static diagnostics (`avsm lint`): pre-flight passes
+//!   over nets/configs/specs plus cache and journal fsck, reported as
+//!   stable `AVSM0xx` codes and the `avsm-lint-v1` report.
 //! * [`runtime`] — PJRT loader executing the AOT JAX/Pallas artifacts.
 //! * [`coordinator`] — the end-to-end flow of Fig 1 with phase timing (Fig 3).
 
+pub mod analysis;
 pub mod benchkit;
 pub mod campaign;
 pub mod cli;

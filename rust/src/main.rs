@@ -42,6 +42,12 @@ COMMANDS:
              --cache-dir DIR --threads N --fail-fast
              --journal FILE --resume
              --telemetry FILE --trace-out FILE)
+  lint       static diagnostics (stable AVSM0xx codes) over any mix of
+             --net/--system units, --axes specs, --workloads files,
+             --axis --lo --hi solver ranges, --cache-dir stores and
+             --journal files, without simulating anything; exits nonzero
+             iff an error-severity diagnostic fired (--json writes the
+             machine-readable avsm-lint-v1 report instead of text)
   topdown    minimum axis value for a latency target (--target-ms X
              --axis NAME --lo N --hi N; default axis nce_freq_mhz —
              the paper's §2 top-down mode, generalized)
@@ -81,6 +87,11 @@ COMMON OPTIONS:
   --no-order          evaluate grid units in plain grid order instead of
                       ascending lower-bound order (ordering is a lossless
                       scheduling heuristic that maximizes bound-skips)
+  --no-preflight      skip the static lint pre-flight that `campaign` and
+                      `sweep` run by default before any simulation; the
+                      pre-flight is observation-only (a clean spec produces
+                      byte-identical results either way), so this is purely
+                      a diagnostic escape hatch
   --fail-fast         abort `campaign` on the first error- or panic-
                       classified unit (invalid swept config, dead worker),
                       reporting its diagnostic — the CI co-design-gate
@@ -136,6 +147,14 @@ fn load_net(args: &Args) -> Result<DnnGraph> {
 
 /// Resolve one workload by builder name or `.graph.json` path.
 fn named_net(name: &str, hw: u32) -> Result<DnnGraph> {
+    let net = build_net(name, hw)?;
+    net.validate()?;
+    Ok(net)
+}
+
+/// The same resolution without the validity gate: `lint` exists to look
+/// at broken nets, so it must be able to load them.
+fn build_net(name: &str, hw: u32) -> Result<DnnGraph> {
     let net = match name {
         "dilated_vgg" => models::dilated_vgg(if hw == 0 { 256 } else { hw }, 1, 16),
         "dilated_vgg_tiny" => models::dilated_vgg(if hw == 0 { 64 } else { hw }, 8, 16),
@@ -149,7 +168,6 @@ fn named_net(name: &str, hw: u32) -> Result<DnnGraph> {
             graph_from_json(&text)?
         }
     };
-    net.validate()?;
     Ok(net)
 }
 
@@ -173,6 +191,7 @@ fn main() -> Result<()> {
         "flow" => cmd_flow(&args),
         "sweep" => cmd_sweep(&args),
         "campaign" => cmd_campaign(&args),
+        "lint" => cmd_lint(&args),
         "topdown" => cmd_topdown(&args),
         "analytical" => cmd_analytical(&args),
         "infer" => cmd_infer(&args),
@@ -336,8 +355,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // (reported, not fatal), but an error-classified point — an invalid
     // value in a user-supplied --axes spec — must fail the command, not
     // silently shrink the table.
-    let outcomes =
-        dse::sweep_outcomes(&net, &sys, &axes, &dse::SweepOptions::default());
+    let outcomes = dse::sweep_outcomes(
+        &net,
+        &sys,
+        &axes,
+        &dse::SweepOptions { no_preflight: args.has("no-preflight"), ..Default::default() },
+    );
     let mut points = Vec::new();
     let (mut infeasible, mut errors) = (0usize, 0usize);
     let mut error_sample: Option<String> = None;
@@ -465,6 +488,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         fail_fast: args.has("fail-fast"),
         journal,
         resume: args.has("resume"),
+        preflight: !args.has("no-preflight"),
     };
     // Telemetry is opt-in: either artifact flag turns the recorder on for
     // the whole run. Recording never changes the campaign's results (the
@@ -496,6 +520,128 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             std::fs::write(path, avsm::trace::spans_to_chrome_trace(&t.spans))?;
             println!("wrote {} (load in chrome://tracing or ui.perfetto.dev)", path.display());
         }
+    }
+    Ok(())
+}
+
+/// `avsm lint` — run the static diagnostics passes over whatever targets
+/// the flags name, render the report, and exit nonzero iff any
+/// error-severity diagnostic fired. Pure observation: nothing is
+/// simulated, compiled, or mutated (the cache/journal passes only read).
+fn cmd_lint(args: &Args) -> Result<()> {
+    use avsm::analysis::{fsck, passes, Diagnostic, Report};
+    let mut report = Report::new(Vec::new());
+    let mut targets = 0usize;
+
+    // Unit passes: a net (checked against the base config so the static
+    // tiling probe can run), or a config alone.
+    let sys = match args.get("system") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading system config {path:?}"))?;
+            Some(SystemConfig::from_json_unvalidated(&text)?)
+        }
+        None => None,
+    };
+    let net = match args.get("net") {
+        Some(name) => Some(build_net(name, args.get_u64("hw", 0)? as u32)?),
+        None => None,
+    };
+    match (&net, &sys) {
+        (Some(net), Some(sys)) => {
+            targets += 1;
+            report.extend(passes::lint_unit(net, sys));
+        }
+        (Some(net), None) => {
+            targets += 1;
+            report.extend(passes::lint_unit(net, &SystemConfig::base_paper()));
+        }
+        (None, Some(sys)) => {
+            targets += 1;
+            report.extend(passes::lint_config(sys));
+        }
+        (None, None) => {}
+    }
+
+    // Axis-spec passes: the raw JSON document first (duplicates, unknown
+    // axes, empty value lists), then the parsed-form checks (grid size,
+    // swept values vs. the base config) when it parses at all.
+    if let Some(spec) = args.get("axes") {
+        targets += 1;
+        let text = match spec.strip_prefix('@') {
+            Some(path) => std::fs::read_to_string(path)
+                .with_context(|| format!("reading axis spec {path:?}"))?,
+            None => spec.to_string(),
+        };
+        match avsm::json::parse(&text) {
+            Err(e) => report.push(Diagnostic::error(
+                "AVSM032",
+                "axis spec",
+                format!("axis spec is not valid JSON: {e:#}"),
+            )),
+            Ok(v) => {
+                report.extend(passes::lint_axis_spec_value(&v));
+                if let Ok(axes) = dse::SweepAxes::from_value(&v) {
+                    let base = sys.clone().unwrap_or_else(SystemConfig::base_paper);
+                    report.extend(passes::lint_axes(&base, &axes));
+                }
+            }
+        }
+    }
+
+    if let Some(path) = args.get("workloads") {
+        targets += 1;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading workloads file {path:?}"))?;
+        match avsm::json::parse(&text) {
+            Err(e) => report.push(Diagnostic::error(
+                "AVSM036",
+                "workloads file",
+                format!("workloads file is not valid JSON: {e:#}"),
+            )),
+            Ok(v) => report.extend(passes::lint_workloads_value(&v)),
+        }
+    }
+
+    if let Some(key) = args.get("axis") {
+        targets += 1;
+        let axis = dse::Axis::from_key(key)?;
+        report.extend(passes::lint_requirement_range(
+            axis,
+            args.get_u64("lo", 25)?,
+            args.get_u64("hi", 2000)?,
+        ));
+    }
+
+    if let Some(dir) = args.get("cache-dir") {
+        targets += 1;
+        let max = match args.get_u64("cache-max-entries", 0)? {
+            0 => None,
+            n => Some(n as usize),
+        };
+        report.extend(fsck::lint_cache_dir(std::path::Path::new(dir), max));
+    }
+
+    if let Some(path) = args.get("journal") {
+        targets += 1;
+        report.extend(fsck::lint_journal(std::path::Path::new(path), None));
+    }
+
+    if targets == 0 {
+        bail!(
+            "lint needs at least one target: --net/--system, --axes, --workloads, \
+             --axis [--lo --hi], --cache-dir, or --journal"
+        );
+    }
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_compact());
+    } else if report.is_empty() {
+        println!("lint: clean ({targets} target(s), no diagnostics)");
+    } else {
+        println!("{}", report.render_text());
+    }
+    if report.has_errors() {
+        bail!("lint found {} error(s)", report.errors());
     }
     Ok(())
 }

@@ -5,8 +5,8 @@
 //! asserts the *real* serializer emits the fixture bytes back, so any
 //! accidental field rename, type change, or format drift in
 //! `avsm-campaign-v1`, `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`,
-//! `avsm-compile-cache-index-v1`, `avsm-campaign-journal-v1` or
-//! `avsm-campaign-telemetry-v1` fails loudly
+//! `avsm-compile-cache-index-v1`, `avsm-campaign-journal-v1`,
+//! `avsm-campaign-telemetry-v1` or `avsm-lint-v1` fails loudly
 //! here instead of silently breaking warm caches, stale resume journals and
 //! downstream report consumers.
 //!
@@ -235,6 +235,59 @@ fn telemetry_report_schema_is_byte_stable() {
         emitted.to_string_compact(),
         text,
         "avsm-campaign-telemetry-v1 serializer bytes drifted from the golden fixture"
+    );
+}
+
+#[test]
+fn lint_report_schema_is_byte_stable() {
+    use avsm::analysis::{Diagnostic, Report};
+
+    // Mirrored literally by `LINT` in scripts/gen_golden_fixtures.py: one
+    // diagnostic per pass family, every severity, help present and absent.
+    let report = Report::new(vec![
+        Diagnostic::error(
+            "AVSM004",
+            "layer \"conv1\" of net \"golden_net\"",
+            "layer \"conv1\": cin 16 != incoming channels 8",
+        ),
+        Diagnostic::error("AVSM011", "config \"golden_sys\"", "all clock frequencies must be positive"),
+        Diagnostic::error("AVSM030", "axis spec entry 1", "axis \"nce_freq_mhz\" listed twice in axis spec")
+            .with_help("merge the value lists into a single entry per axis"),
+        Diagnostic::warn("AVSM033", "axis spec", "cross-product expands to 22500 grid points (> 10000)"),
+        Diagnostic::warn(
+            "AVSM043",
+            "cache dir golden_cache/index.json",
+            "index holds 3 entries, over the LRU bound of 2",
+        ),
+        Diagnostic::info("AVSM056", "journal golden.jsonl", "replays 4 of 6 units; 2 re-simulate on resume"),
+    ]);
+
+    let text = fixture(include_str!("fixtures/lint_v1.json"));
+    let doc = json::parse(text).unwrap();
+    assert_eq!(doc.get("schema").as_str(), Some("avsm-lint-v1"));
+
+    // The pinned document exercises every severity and every pass family
+    // (net 00x, config 01x, campaign/axis 03x, cache fsck 04x, journal 05x).
+    let diags = doc.get("diagnostics").as_array().unwrap();
+    for severity in ["error", "warning", "info"] {
+        assert!(
+            diags.iter().any(|d| d.get("severity").as_str() == Some(severity)),
+            "fixture must pin a {severity}-severity diagnostic"
+        );
+    }
+    for family in ["AVSM00", "AVSM01", "AVSM03", "AVSM04", "AVSM05"] {
+        assert!(
+            diags.iter().any(|d| d.get("code").as_str().unwrap().starts_with(family)),
+            "fixture must pin a {family}x diagnostic"
+        );
+    }
+
+    let emitted = report.to_json();
+    assert_eq!(emitted, doc, "avsm-lint-v1 fields drifted from the golden fixture");
+    assert_eq!(
+        emitted.to_string_compact(),
+        text,
+        "avsm-lint-v1 serializer bytes drifted from the golden fixture"
     );
 }
 

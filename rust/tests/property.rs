@@ -34,7 +34,20 @@
 //!   all-feasible grids);
 //! * an injected `sim.evaluate` panic is contained to its unit, classified
 //!   with the failpoint diagnostic, and visible as a `simulate` span with
-//!   outcome `panicked`.
+//!   outcome `panicked`;
+//! * the static lint pre-flight is observation-only: campaign results are
+//!   byte-identical with it on vs. off at 1 and N threads, and classified
+//!   sweep outcomes identical even on a net the pre-flight rejects;
+//! * lint never lies, across hundreds of seeded (net, config) units with
+//!   deterministic corruptions: a lint-clean unit is never a runtime
+//!   `Error`, validity lint errors are exactly runtime `Error` units, and
+//!   an AVSM022-only unit is exactly a runtime `Infeasible`;
+//! * every on-disk corruption a torn `store.write` fault leaves behind is
+//!   surfaced by `avsm lint --cache-dir` with a distinct code (AVSM040
+//!   artifacts / AVSM048 negatives), while fault kinds that leave the
+//!   store consistent fsck clean;
+//! * a `--resume` against a journal from a different spec refuses with a
+//!   diagnostic naming exactly which spec parts differ.
 
 use avsm::campaign::{self, CampaignOptions, CampaignSpec, StreamingFrontier};
 use avsm::compiler::{
@@ -667,6 +680,296 @@ fn resume_from_any_crash_point_reproduces_the_uninterrupted_campaign() {
         assert_same_outcomes(&clean, &resumed, &format!("case {case} full"));
     }
     assert!(crash_points >= 100, "crash grid too small ({crash_points} points)");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Order-insensitive projection of an [`dse::EvalOutcome`] for equality
+/// checks (the enum deliberately does not implement `PartialEq` — costs
+/// are compared by bits here, as everywhere in this file).
+fn outcome_key(o: &dse::EvalOutcome) -> (u8, String, u64, u64, String) {
+    match o {
+        dse::EvalOutcome::Feasible(p) => {
+            (0, p.name.clone(), p.latency_ps, p.cost.to_bits(), String::new())
+        }
+        dse::EvalOutcome::Infeasible { name, reason } => {
+            (1, name.clone(), 0, 0, reason.clone())
+        }
+        dse::EvalOutcome::Error { name, reason } => (2, name.clone(), 0, 0, reason.clone()),
+    }
+}
+
+#[test]
+fn preflight_lint_is_observation_only() {
+    // Tentpole contract, half one: the static pre-flight at the top of
+    // `campaign::run` and `dse::sweep_outcomes` observes and never steers.
+    // A clean-lint campaign produces byte-identical results with the
+    // pre-flight on vs. off, sequentially and under parallel workers; on
+    // the sweep surface the classified outcomes are identical even for a
+    // net the pre-flight rejects (the short-circuit must fabricate
+    // exactly the rows evaluation would have produced).
+    use avsm::analysis::{passes, Severity};
+    let mut gen = NetGen::from_env(0x11A7E);
+    for case in 0..3 {
+        let nets = vec![gen.net(), gen.chain_net()];
+        let axes = dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64)])
+            .nce_freqs_mhz(vec![500, 125]);
+        let spec =
+            CampaignSpec::homogeneous(nets, SystemConfig::base_paper(), axes.clone());
+        for w in &spec.workloads {
+            assert!(
+                passes::lint_net(&w.net).iter().all(|d| d.severity != Severity::Error),
+                "case {case}: generated nets must lint clean"
+            );
+        }
+        for threads in [1usize, 0] {
+            let tag = format!("case {case}, {threads} threads");
+            let on =
+                campaign::run(&spec, &CampaignOptions { threads, ..Default::default() })
+                    .unwrap();
+            let off = campaign::run(
+                &spec,
+                &CampaignOptions { threads, preflight: false, ..Default::default() },
+            )
+            .unwrap();
+            assert_same_outcomes(&on, &off, &tag);
+        }
+        let mut rejected = gen.net();
+        rejected.dtype_bytes = 0; // fails the pre-flight AND net.validate()
+        for net in [&spec.workloads[0].net, &rejected] {
+            let run = |no_preflight: bool| {
+                dse::sweep_outcomes(
+                    net,
+                    &spec.base,
+                    &axes,
+                    &dse::SweepOptions { threads: 1, no_preflight },
+                )
+            };
+            let (with, without) = (run(false), run(true));
+            assert_eq!(with.len(), without.len(), "case {case} {}", net.name);
+            for (a, b) in with.iter().zip(&without) {
+                assert_eq!(
+                    outcome_key(a),
+                    outcome_key(b),
+                    "case {case} {}: pre-flight changed a sweep outcome",
+                    net.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lint_never_lies_across_hundreds_of_seeded_units() {
+    // Tentpole contract, half two, differential form over >= 200 seeded
+    // (net, config) units with deterministic corruptions on a rotating
+    // schedule: validity lint Errors (AVSM001-016) are exactly the units
+    // the runtime classifier reports `Error`; an AVSM022-only unit is
+    // exactly a runtime `Infeasible`; a lint-clean unit is never a
+    // runtime `Error`.
+    use avsm::analysis::{passes, Severity};
+    use avsm::compiler::CompileCache;
+    use avsm::graph::models;
+    let mut gen = NetGen::from_env(0xD81F7);
+    let (mut clean_units, mut validity_errors, mut tiling_errors) = (0usize, 0usize, 0usize);
+    for case in 0..220usize {
+        let mut net = if case % 5 == 0 { gen.chain_net() } else { gen.net() };
+        let mut sys = gen.sys();
+        match case % 8 {
+            1 => net.dtype_bytes = 0,
+            2 => {
+                let last = net.layers.len() - 1;
+                net.layers[last].skip_from = Some(last);
+            }
+            3 => sys.nce.freq_mhz = 0,
+            4 => sys.memory.avsm_eff_bw_pct = 0,
+            5 => {
+                sys.nce.ifm_buffer_kib = 1;
+                sys.nce.weight_buffer_kib = 1;
+                sys.nce.ofm_buffer_kib = 1;
+            }
+            6 => {
+                let dup = net.layers[0].clone();
+                net.layers.push(dup);
+            }
+            _ => {}
+        }
+        let errors: Vec<&str> = passes::lint_unit(&net, &sys)
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.code)
+            .collect();
+        let cache = CompileCache::new(dse::DSE_COMPILE_OPTS);
+        let outcome = dse::evaluate_outcome(&net, &sys, "unit", &cache);
+        let tag = format!("case {case} ({}): lint {errors:?}", net.name);
+        if errors.is_empty() {
+            clean_units += 1;
+            assert!(
+                !matches!(outcome, dse::EvalOutcome::Error { .. }),
+                "{tag} was clean but evaluated to {outcome:?}"
+            );
+        } else if errors.iter().all(|&c| c == "AVSM022") {
+            tiling_errors += 1;
+            assert!(
+                matches!(outcome, dse::EvalOutcome::Infeasible { .. }),
+                "{tag} predicted infeasible, got {outcome:?}"
+            );
+        } else {
+            validity_errors += 1;
+            assert!(
+                matches!(outcome, dse::EvalOutcome::Error { .. }),
+                "{tag} predicted an error unit, got {outcome:?}"
+            );
+        }
+    }
+    assert!(clean_units >= 20, "too few clean random units ({clean_units})");
+    assert!(validity_errors >= 100, "too few corrupted units ({validity_errors})");
+    // The rotating schedule cannot guarantee an AVSM022 case (random nets
+    // can fit 1 KiB buffers), so pin the known statically-infeasible pair.
+    let net = models::dilated_vgg(512, 4, 16);
+    let mut tiny = SystemConfig::base_paper();
+    tiny.nce.ifm_buffer_kib = 1;
+    tiny.nce.weight_buffer_kib = 1;
+    tiny.nce.ofm_buffer_kib = 1;
+    let diags = passes::lint_unit(&net, &tiny);
+    assert!(
+        diags.iter().any(|d| d.code == "AVSM022")
+            && diags
+                .iter()
+                .all(|d| d.severity != Severity::Error || d.code == "AVSM022"),
+        "pinned pair must lint AVSM022-only: {diags:?}"
+    );
+    let cache = CompileCache::new(dse::DSE_COMPILE_OPTS);
+    assert!(
+        matches!(
+            dse::evaluate_outcome(&net, &tiny, "pinned", &cache),
+            dse::EvalOutcome::Infeasible { .. }
+        ),
+        "pinned AVSM022 pair must be runtime-infeasible"
+    );
+    let _ = tiling_errors; // counted for the curious; coverage is pinned above
+}
+
+#[test]
+fn fsck_surfaces_every_torn_store_write_with_a_distinct_code() {
+    // Fault-harness coverage: the corruptions `testkit::faults` can leave
+    // in a cache directory are exactly the ones `avsm lint --cache-dir`
+    // must surface. Torn writes leave truncated corpses at the final
+    // artifact/negative paths — fsck reports each with its own code
+    // (AVSM040 vs AVSM048). IoError writes and any read-side fault leave
+    // the store consistent, so fsck must stay quiet about them: a lint
+    // error there would be a false positive.
+    use avsm::analysis::{fsck, Severity};
+    use avsm::graph::models;
+    use avsm::testkit::faults::{self, FaultKind};
+    let root = std::env::temp_dir().join(format!("avsm_prop_fsck_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    // One feasible unit (persists an artifact) and one statically
+    // infeasible unit (persists a negative record) per run.
+    let mut tiny = SystemConfig::base_paper();
+    tiny.nce.ifm_buffer_kib = 1;
+    tiny.nce.weight_buffer_kib = 1;
+    tiny.nce.ofm_buffer_kib = 1;
+    let spec = CampaignSpec {
+        workloads: vec![
+            campaign::WorkloadSpec::new(models::lenet(28)),
+            campaign::WorkloadSpec::new(models::dilated_vgg(512, 4, 16)).with_base(tiny),
+        ],
+        base: SystemConfig::base_paper(),
+        axes: dse::SweepAxes::new().nce_freqs_mhz(vec![250]),
+    };
+    let opts = |dir: std::path::PathBuf| CampaignOptions {
+        threads: 1,
+        cache_dir: Some(dir),
+        ..Default::default()
+    };
+    let errors = |diags: &[avsm::analysis::Diagnostic]| -> Vec<&'static str> {
+        let mut codes: Vec<_> = diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.code)
+            .collect();
+        codes.sort_unstable();
+        codes.dedup();
+        codes
+    };
+
+    // Control: a clean campaign's store fscks with no errors at all.
+    let clean_dir = root.join("clean");
+    campaign::run(&spec, &opts(clean_dir.clone())).unwrap();
+    let diags = fsck::lint_cache_dir(&clean_dir, None);
+    assert!(errors(&diags).is_empty(), "clean store must fsck clean: {diags:?}");
+
+    // Torn writes: every artifact and negative is a truncated corpse, and
+    // fsck attributes each corruption class its own code.
+    let torn_dir = root.join("torn");
+    {
+        let _g = faults::arm("store.write", &torn_dir, FaultKind::Torn, usize::MAX);
+        campaign::run(&spec, &opts(torn_dir.clone())).unwrap();
+    }
+    let codes = errors(&fsck::lint_cache_dir(&torn_dir, None));
+    assert!(codes.contains(&"AVSM040"), "torn artifact must surface as AVSM040: {codes:?}");
+    assert!(codes.contains(&"AVSM048"), "torn negative must surface as AVSM048: {codes:?}");
+
+    // IoError writes persist nothing; read faults touch nothing. Both
+    // leave a store fsck finds no errors in.
+    for (site, kind, label) in [
+        ("store.write", FaultKind::IoError, "werr"),
+        ("store.read", FaultKind::IoError, "rerr"),
+        ("store.read", FaultKind::Torn, "rtorn"),
+    ] {
+        let dir = root.join(label);
+        if site == "store.read" {
+            campaign::run(&spec, &opts(dir.clone())).unwrap(); // warm first
+        }
+        {
+            let _g = faults::arm(site, &dir, kind, usize::MAX);
+            campaign::run(&spec, &opts(dir.clone())).unwrap();
+        }
+        let diags = fsck::lint_cache_dir(&dir, None);
+        assert!(
+            errors(&diags).is_empty(),
+            "{label}: fault left the store consistent, fsck must not cry wolf: {diags:?}"
+        );
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn resume_mismatch_names_the_differing_spec_parts() {
+    // Satellite contract: `--resume` against a journal from a different
+    // campaign spec refuses loudly AND says which part of the spec
+    // differs, through the lint diagnostic renderer.
+    let mut gen = NetGen::from_env(0x9A875);
+    let net = gen.net();
+    let root = std::env::temp_dir().join(format!("avsm_prop_parts_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let journal = root.join("journal.jsonl");
+    let spec_of = |freqs: Vec<u64>| {
+        CampaignSpec::homogeneous(
+            vec![net.clone()],
+            SystemConfig::base_paper(),
+            dse::SweepAxes::new().nce_freqs_mhz(freqs),
+        )
+    };
+    let opts = |resume: bool| CampaignOptions {
+        threads: 1,
+        journal: Some(journal.clone()),
+        resume,
+        ..Default::default()
+    };
+    campaign::run(&spec_of(vec![500, 250]), &opts(false)).unwrap();
+    // Same nets, same base, same unit count — only the axis values differ.
+    let err = campaign::run(&spec_of(vec![500, 125]), &opts(true)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("different campaign spec"), "{msg}");
+    assert!(msg.contains("the axes differ"), "{msg}");
+    assert!(msg.contains("AVSM051"), "refusal must carry the lint code: {msg}");
+    assert!(!msg.contains("nets differ") && !msg.contains("options differ"), "{msg}");
+    // Matching spec still resumes fine (the journal replays fully).
+    let resumed = campaign::run(&spec_of(vec![500, 250]), &opts(true)).unwrap();
+    assert_eq!(resumed.compiles, 0, "matching spec must replay, not re-run");
     std::fs::remove_dir_all(&root).unwrap();
 }
 

@@ -10,8 +10,30 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "SKIPPED: cargo is not on PATH — install the Rust toolchain to run the repo checks" >&2
+  exit 0
+fi
+
 echo "== cargo build --release"
 cargo build --release
+
+# Static gates first: warnings are errors, formatting is canonical. Both
+# components are optional rustup installs, so their absence is a loud
+# skip, never a silent pass.
+echo "== cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "SKIPPED: clippy not installed (rustup component add clippy to enable this gate)"
+fi
+
+echo "== cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "SKIPPED: rustfmt not installed (rustup component add rustfmt to enable this gate)"
+fi
 
 echo "== cargo test -q"
 cargo test -q
@@ -61,6 +83,33 @@ cat > "$WORKLOADS" <<'EOF'
 EOF
 cargo run --release -q -p avsm -- campaign --workloads "$WORKLOADS" --fail-fast
 rm -f "$WORKLOADS"
+
+# Lint smoke: the static diagnostics subcommand must reject a bad spec
+# with a nonzero exit carrying the stable code, accept a clean unit with
+# exit 0, and emit a parseable avsm-lint-v1 report under --json.
+echo "== avsm lint (static diagnostics smoke)"
+LINTSPEC=$(mktemp /tmp/avsm_lint_axes.XXXXXX.json)
+cat > "$LINTSPEC" <<'EOF'
+[{"axis": "nce_freq_mhz", "values": [125, 250]},
+ {"axis": "nce_freq_mhz", "values": [500]}]
+EOF
+if OUT=$(cargo run --release -q -p avsm -- lint --axes "@$LINTSPEC" 2>&1); then
+  echo "lint accepted a duplicate-axis spec:"; echo "$OUT"; exit 1
+fi
+echo "$OUT" | grep -q "AVSM030" \
+  || { echo "lint exited nonzero but without AVSM030:"; echo "$OUT"; exit 1; }
+cargo run --release -q -p avsm -- lint --net lenet > /dev/null
+cargo run --release -q -p avsm -- lint --axes "@$LINTSPEC" --json \
+  > "$LINTSPEC.report" 2>/dev/null || true
+python3 - "$LINTSPEC.report" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == "avsm-lint-v1", doc["schema"]
+assert doc["summary"]["errors"] >= 1, doc["summary"]
+assert any(d["code"] == "AVSM030" for d in doc["diagnostics"]), doc["diagnostics"]
+print(f'lint smoke OK: {doc["summary"]["errors"]} error(s) in the bad spec, clean unit exits 0')
+EOF
+rm -f "$LINTSPEC" "$LINTSPEC.report"
 
 # Campaign determinism gate: the per-net Pareto frontiers in the exported
 # avsm-campaign-v1 report must be byte-identical between a 1-thread and an
@@ -164,5 +213,16 @@ print(f"telemetry consistent: {evaluated} units, {tel['spans_total']} spans, "
       f"{len(tids)} trace threads")
 EOF
 rm -rf "$TDIR"
+
+# Bench baselines: the bench smokes above wrote BENCH_*.json at the repo
+# root. The first run on a new machine leaves them uncommitted — say so
+# loudly, so pinning a baseline is a reviewed decision rather than an
+# accident (CI never commits on its own).
+if ls BENCH_*.json >/dev/null 2>&1; then
+  UNTRACKED=$(git ls-files --others --exclude-standard 'BENCH_*.json' 2>/dev/null || true)
+  if [ -n "$UNTRACKED" ]; then
+    echo "NOTE: uncommitted bench baselines: $UNTRACKED — review and 'git add' to pin them"
+  fi
+fi
 
 echo "== OK"

@@ -4,7 +4,7 @@
 The fixtures pin the on-disk JSON schemas (`avsm-campaign-v1`,
 `avsm-compile-cache-v1`, `avsm-compile-cache-neg-v1`,
 `avsm-compile-cache-index-v1`, `avsm-campaign-journal-v1`,
-`avsm-campaign-telemetry-v1`)
+`avsm-campaign-telemetry-v1`, `avsm-lint-v1`)
 byte-for-byte: `rust/tests/golden.rs` parses
 each fixture with the real parsers and asserts the real serializers emit the
 fixture bytes back. This script exists only to produce those bytes in the
@@ -237,6 +237,39 @@ JOURNAL = [
 ]
 
 
+def lint_diag(code, severity, site, message, help=None):
+    d = {"code": code, "message": message, "severity": severity, "site": site}
+    if help is not None:
+        d["help"] = help
+    return d
+
+
+# One diagnostic per pass family (net 00x, config 01x, campaign/axis 03x,
+# cache fsck 04x, journal 05x), covering every severity, with and without
+# a help line. Mirrored literally by `lint_report_schema_is_byte_stable`
+# in rust/tests/golden.rs. ASCII only: the Rust writer emits raw UTF-8
+# where json.dumps would escape it.
+LINT = {
+    "schema": "avsm-lint-v1",
+    "diagnostics": [
+        lint_diag("AVSM004", "error", 'layer "conv1" of net "golden_net"',
+                  'layer "conv1": cin 16 != incoming channels 8'),
+        lint_diag("AVSM011", "error", 'config "golden_sys"',
+                  "all clock frequencies must be positive"),
+        lint_diag("AVSM030", "error", "axis spec entry 1",
+                  'axis "nce_freq_mhz" listed twice in axis spec',
+                  help="merge the value lists into a single entry per axis"),
+        lint_diag("AVSM033", "warning", "axis spec",
+                  "cross-product expands to 22500 grid points (> 10000)"),
+        lint_diag("AVSM043", "warning", "cache dir golden_cache/index.json",
+                  "index holds 3 entries, over the LRU bound of 2"),
+        lint_diag("AVSM056", "info", "journal golden.jsonl",
+                  "replays 4 of 6 units; 2 re-simulate on resume"),
+    ],
+    "summary": {"errors": 3, "infos": 1, "warnings": 2},
+}
+
+
 def main():
     OUT.mkdir(parents=True, exist_ok=True)
     fixtures = {
@@ -245,6 +278,7 @@ def main():
         "compile_cache_index_v1.json": INDEX,
         "campaign_v1.json": CAMPAIGN,
         "campaign_telemetry_v1.json": TELEMETRY,
+        "lint_v1.json": LINT,
     }
     for name, doc in fixtures.items():
         path = OUT / name
