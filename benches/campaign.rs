@@ -1,6 +1,7 @@
 //! Campaign throughput: multi-workload sweeps through the shared worker
 //! pool, cold disk cache (compile + serialize + persist) vs warm disk
-//! cache (deserialize only — zero compilations), and lower-bound pruning
+//! cache (deserialize only — zero compilations) vs warm *bounded* cache
+//! (every hit also touches the LRU index sidecar), and lower-bound pruning
 //! vs full evaluation on a frontier-sparse frequency grid (most points are
 //! provably dominated, so the bound skips their simulations outright —
 //! losslessly, which the bench asserts), plus the occupancy-vs-critical-path
@@ -107,6 +108,25 @@ fn main() {
     let warm = campaign::run(&spec, &disk_opts).unwrap();
     assert_eq!(warm.compiles, 0, "warm campaign must be compile-free");
     assert!(warm.disk_hits > 0);
+
+    // Warm with a bounded cache: every disk hit also touches the LRU
+    // index sidecar (partial read + incremental rewrite in the streaming
+    // JSON layer), so this case prices the index-maintenance overhead the
+    // unbounded warm case skips.
+    let bounded_opts = CampaignOptions {
+        cache_dir: Some(dir.clone()),
+        cache_max_entries: Some(64),
+        prune: false,
+        ..Default::default()
+    };
+    campaign::run(&spec, &bounded_opts).unwrap();
+    let med_warm_bounded = bench
+        .case("campaign_warm_bounded_disk_cache", || {
+            campaign::run(&spec, &bounded_opts).unwrap()
+        })
+        .median;
+    let warm_bounded = campaign::run(&spec, &bounded_opts).unwrap();
+    assert_eq!(warm_bounded.compiles, 0, "bounded warm campaign must be compile-free");
 
     // Bound-and-prune vs full evaluation on the frontier-sparse grid.
     // Single worker on both sides: deterministic arrival order makes the
@@ -243,10 +263,17 @@ fn main() {
     );
     bench.metric("points_per_sec_cold", pps_cold, "design points/s");
     bench.metric("points_per_sec_warm", pps_warm, "design points/s");
+    let pps_warm_bounded = units / med_warm_bounded.as_secs_f64();
+    bench.metric("points_per_sec_warm_bounded", pps_warm_bounded, "design points/s");
     bench.metric(
         "warm_speedup_vs_cold",
         med_cold.as_secs_f64() / med_warm.as_secs_f64(),
         "x",
+    );
+    bench.metric(
+        "warm_bounded_index_overhead",
+        med_warm_bounded.as_secs_f64() / med_warm.as_secs_f64(),
+        "x (LRU index touch per disk hit)",
     );
     bench.metric("points_per_sec_mem", units / med_mem.as_secs_f64(), "design points/s");
     bench.metric("frontier_sizes_total", warm.nets.iter().map(|n| n.frontier.len()).sum::<usize>() as f64, "points");
@@ -262,6 +289,7 @@ fn main() {
         &[
             ("points_per_sec_cold", pps_cold),
             ("points_per_sec_warm", pps_warm),
+            ("points_per_sec_warm_bounded", pps_warm_bounded),
             ("points_per_sec_pruned", pps_pruned),
             ("points_per_sec_unpruned", pps_unpruned),
         ],

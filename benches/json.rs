@@ -1,0 +1,117 @@
+//! JSON substrate throughput: the tree parser vs the pull reader vs lazy
+//! partial-field extraction on a synthetic 1k-entry compile-cache index
+//! (the document the LRU `touch_index` path re-reads on every disk hit),
+//! and tree emission (materialize a `Value`, serialize it) vs streaming
+//! emission for a campaign report. Emits `BENCH_json.json` at the repo
+//! root; the headline is the lazy-extraction speedup over a full tree
+//! parse — the number the `touch_index` conversion banks on.
+
+use avsm::benchkit::Bench;
+use avsm::campaign::{self, store::CacheIndex, CampaignOptions, CampaignSpec};
+use avsm::config::SystemConfig;
+use avsm::dse;
+use avsm::graph::models;
+use avsm::json::{parse, stream};
+use avsm::report::CampaignReport;
+use avsm::testkit::Rng;
+use std::path::Path;
+
+/// A 1k-entry `avsm-compile-cache-index-v1` document with pseudo-random
+/// fingerprints — the size regime the ROADMAP's 100x-cache item targets.
+fn synthetic_index(entries: usize) -> String {
+    let mut rng = Rng::new(0xA5A5_0001);
+    let mut idx = CacheIndex::default();
+    while idx.entries().len() < entries {
+        idx.touch(rng.next_u64());
+    }
+    idx.to_json()
+}
+
+fn main() {
+    let mut bench = Bench::new("json");
+    let text = synthetic_index(1000);
+    let bytes = text.as_bytes();
+    println!("synthetic index: {} entries, {} bytes", 1000, bytes.len());
+
+    // Full tree materialization — what every reader paid before the
+    // streaming layer existed.
+    let med_tree = bench.case("index_tree_parse", || parse(&text).unwrap()).median;
+
+    // Pull scan: lex every event, allocate nothing, build nothing.
+    let med_pull = bench
+        .case("index_pull_scan", || {
+            let mut r = stream::Reader::new(bytes);
+            let mut events = 0usize;
+            while r.next().unwrap().is_some() {
+                events += 1;
+            }
+            events
+        })
+        .median;
+
+    // Lazy single-field extraction: stop at the first field we need
+    // ("clock" precedes the 1k-entry map in key order).
+    let med_lazy = bench
+        .case("index_lazy_clock", || {
+            stream::path_u64(bytes, &["clock"]).unwrap().unwrap()
+        })
+        .median;
+
+    // The real decoder: pull-parse straight into the fingerprint map
+    // (what `touch_index` runs per disk hit).
+    let med_decode = bench.case("index_decode", || CacheIndex::from_json(&text).unwrap()).median;
+
+    // Emission: a real campaign report, tree-built-then-serialized vs
+    // streamed straight to the output buffer. Memory-only cache, pruning
+    // off — the report content is identical every iteration.
+    let spec = CampaignSpec::homogeneous(
+        vec![models::lenet(28), models::dilated_vgg_tiny(), models::tiny_resnet(32, 16, 3)],
+        SystemConfig::base_paper(),
+        dse::SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500]),
+    );
+    let opts = CampaignOptions { prune: false, keep_points: true, ..Default::default() };
+    let result = campaign::run(&spec, &opts).unwrap();
+    let report = CampaignReport::new(&result);
+    let med_tree_emit = bench
+        .case("report_tree_emit", || report.to_json().to_string_pretty().len())
+        .median;
+    let med_stream_emit = bench
+        .case("report_stream_emit", || report.write_json(Vec::new(), true).unwrap().len())
+        .median;
+
+    // The two emitters must agree byte-for-byte (the golden suite pins
+    // this against fixtures; here we pin it against live campaign data).
+    let tree = report.to_json().to_string_pretty();
+    let streamed = report.write_json(Vec::new(), true).unwrap();
+    assert_eq!(tree.as_bytes(), &streamed[..], "streaming report emission drifted from the tree");
+    println!("report: {} bytes", tree.len());
+
+    let lazy_speedup = med_tree.as_secs_f64() / med_lazy.as_secs_f64();
+    let pull_speedup = med_tree.as_secs_f64() / med_pull.as_secs_f64();
+    let decode_speedup = med_tree.as_secs_f64() / med_decode.as_secs_f64();
+    let emit_speedup = med_tree_emit.as_secs_f64() / med_stream_emit.as_secs_f64();
+    bench.metric("lazy_speedup_vs_tree_parse", lazy_speedup, "x");
+    bench.metric("pull_speedup_vs_tree_parse", pull_speedup, "x");
+    bench.metric("index_decode_speedup_vs_tree_parse", decode_speedup, "x");
+    bench.metric("stream_emit_speedup_vs_tree_emit", emit_speedup, "x");
+    bench.metric("index_bytes", bytes.len() as f64, "bytes");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_json.json"))
+        .unwrap_or_else(|| "BENCH_json.json".into());
+    if let Err(e) = bench.write_json(
+        &out,
+        &[
+            ("lazy_speedup_vs_tree_parse", lazy_speedup),
+            ("pull_speedup_vs_tree_parse", pull_speedup),
+            ("stream_emit_speedup_vs_tree_emit", emit_speedup),
+        ],
+    ) {
+        eprintln!("warning: could not write {}: {e}", out.display());
+    } else {
+        println!("wrote {}", out.display());
+    }
+}

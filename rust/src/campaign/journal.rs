@@ -57,7 +57,7 @@
 //! those byte-identical to the uninterrupted run, with only unfinished
 //! units re-simulating.
 
-use crate::json::{obj, parse, Value};
+use crate::json::{obj, parse, stream, Value};
 use crate::testkit::faults;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::Write;
@@ -206,8 +206,67 @@ pub fn parse_header(line: &str) -> Result<Header> {
 
 /// Parse one body line of a journal file into `(unit, record)` (read-only
 /// view, shared with `analysis::fsck`).
+///
+/// Pull-parsed in one pass over the line — replay touches millions of
+/// records on large resumed campaigns, so no `Value` tree is built per
+/// record. Unknown fields are skipped (strictly: the whole line is still
+/// validated, including trailing garbage); field order is irrelevant;
+/// duplicate keys keep the last occurrence, exactly like the historical
+/// tree-based reader.
 pub fn parse_record(line: &str) -> Result<(usize, UnitRecord)> {
-    parse(line).and_then(|v| UnitRecord::from_value(&v))
+    use stream::{Event, Reader};
+    let mut r = Reader::new(line.as_bytes());
+    let mut unit: Option<u64> = None;
+    let mut class: Option<String> = None;
+    let mut latency_ps: Option<u64> = None;
+    let mut diag: Option<String> = None;
+    let mut by_occupancy: Option<bool> = None;
+    match r.next()? {
+        Some(Event::ObjBegin) => {
+            loop {
+                match r.next()? {
+                    Some(Event::Key(k)) => match k.as_ref() {
+                        "unit" => unit = r.take_value()?.as_u64(),
+                        "class" => class = r.take_value()?.as_str().map(str::to_string),
+                        "latency_ps" => latency_ps = r.take_value()?.as_u64(),
+                        "diag" => diag = r.take_value()?.as_str().map(str::to_string),
+                        "by_occupancy" => by_occupancy = r.take_value()?.as_bool(),
+                        _ => r.skip_value()?,
+                    },
+                    _ => break, // ObjEnd: record complete
+                }
+            }
+            // Trailing-garbage check — same strictness as a full parse.
+            r.next()?;
+        }
+        _ => {
+            // Non-object line: validate it whole (for identical syntax
+            // errors), then fall through to the missing-field diagnostics.
+            parse(line)?;
+        }
+    }
+    let unit =
+        unit.ok_or_else(|| anyhow!("missing/invalid unsigned field \"unit\""))? as usize;
+    let class = class.ok_or_else(|| anyhow!("missing/invalid string field \"class\""))?;
+    let rec = match class.as_str() {
+        "feasible" => UnitRecord::Feasible {
+            latency_ps: latency_ps
+                .ok_or_else(|| anyhow!("missing/invalid unsigned field \"latency_ps\""))?,
+        },
+        "infeasible" => UnitRecord::Infeasible,
+        "error" => UnitRecord::Error {
+            diag: diag.ok_or_else(|| anyhow!("missing/invalid string field \"diag\""))?,
+        },
+        "panicked" => UnitRecord::Panicked {
+            diag: diag.ok_or_else(|| anyhow!("missing/invalid string field \"diag\""))?,
+        },
+        "skipped" => UnitRecord::Skipped {
+            by_occupancy: by_occupancy
+                .ok_or_else(|| anyhow!("missing/invalid bool field \"by_occupancy\""))?,
+        },
+        other => bail!("unknown journal record class {other:?}"),
+    };
+    Ok((unit, rec))
 }
 
 /// Terminal outcome of one campaign unit, as journaled.
@@ -227,48 +286,55 @@ pub enum UnitRecord {
 }
 
 impl UnitRecord {
+    /// One record, incrementally emitted in canonical sorted-key order —
+    /// byte-identical to the historical `obj(...).to_string_compact()`
+    /// form (the journal golden fixture pins this), with no per-append
+    /// `Value` tree.
     fn to_line(&self, unit: usize) -> String {
-        let mut pairs: Vec<(&str, Value)> = vec![("unit", Value::from(unit as u64))];
-        match self {
-            UnitRecord::Feasible { latency_ps } => {
-                pairs.push(("class", Value::from("feasible")));
-                pairs.push(("latency_ps", Value::from(*latency_ps)));
+        let mut bytes = Vec::with_capacity(64);
+        let mut w = stream::Writer::compact(&mut bytes);
+        let emit = |w: &mut stream::Writer<&mut Vec<u8>>| -> Result<()> {
+            w.begin_obj()?;
+            match self {
+                UnitRecord::Feasible { latency_ps } => {
+                    w.key("class")?;
+                    w.str("feasible")?;
+                    w.key("latency_ps")?;
+                    w.uint(*latency_ps)?;
+                }
+                UnitRecord::Infeasible => {
+                    w.key("class")?;
+                    w.str("infeasible")?;
+                }
+                UnitRecord::Error { diag } => {
+                    w.key("class")?;
+                    w.str("error")?;
+                    w.key("diag")?;
+                    w.str(diag)?;
+                }
+                UnitRecord::Panicked { diag } => {
+                    w.key("class")?;
+                    w.str("panicked")?;
+                    w.key("diag")?;
+                    w.str(diag)?;
+                }
+                UnitRecord::Skipped { by_occupancy } => {
+                    w.key("by_occupancy")?;
+                    w.bool(*by_occupancy)?;
+                    w.key("class")?;
+                    w.str("skipped")?;
+                }
             }
-            UnitRecord::Infeasible => pairs.push(("class", Value::from("infeasible"))),
-            UnitRecord::Error { diag } => {
-                pairs.push(("class", Value::from("error")));
-                pairs.push(("diag", Value::from(diag.as_str())));
-            }
-            UnitRecord::Panicked { diag } => {
-                pairs.push(("class", Value::from("panicked")));
-                pairs.push(("diag", Value::from(diag.as_str())));
-            }
-            UnitRecord::Skipped { by_occupancy } => {
-                pairs.push(("class", Value::from("skipped")));
-                pairs.push(("by_occupancy", Value::from(*by_occupancy)));
-            }
-        }
-        let mut line = obj(pairs).to_string_compact();
-        line.push('\n');
-        line
-    }
-
-    fn from_value(v: &Value) -> Result<(usize, UnitRecord)> {
-        let unit = v.req_u64("unit")? as usize;
-        let rec = match v.req_str("class")? {
-            "feasible" => UnitRecord::Feasible { latency_ps: v.req_u64("latency_ps")? },
-            "infeasible" => UnitRecord::Infeasible,
-            "error" => UnitRecord::Error { diag: v.req_str("diag")?.to_string() },
-            "panicked" => UnitRecord::Panicked { diag: v.req_str("diag")?.to_string() },
-            "skipped" => UnitRecord::Skipped {
-                by_occupancy: v
-                    .get("by_occupancy")
-                    .as_bool()
-                    .ok_or_else(|| anyhow!("missing/invalid bool field \"by_occupancy\""))?,
-            },
-            other => bail!("unknown journal record class {other:?}"),
+            w.key("unit")?;
+            w.uint(unit as u64)?;
+            w.end_obj()?;
+            Ok(())
         };
-        Ok((unit, rec))
+        emit(&mut w)
+            .and_then(|_| w.finish().map(|_| ()))
+            .expect("serializing a journal record to memory cannot fail");
+        bytes.push(b'\n');
+        String::from_utf8(bytes).expect("writer emits UTF-8")
     }
 }
 
@@ -353,64 +419,70 @@ impl Journal {
         }
         faults::before_read("journal.read", path)
             .with_context(|| format!("reading campaign journal {}", path.display()))?;
-        let content = std::fs::read_to_string(path)
+        // Stream the file line by line through one reused buffer (replay
+        // cost is one record's worth of allocation regardless of journal
+        // size) instead of materializing the whole file. `read_line` only
+        // returns a '\n'-less segment at EOF: only a terminated line was
+        // fully appended, so an unterminated tail is the crash tear.
+        let file = std::fs::File::open(path)
             .with_context(|| format!("reading campaign journal {}", path.display()))?;
-
-        // Split keeping terminators: only a '\n'-terminated line was fully
-        // appended; an unterminated final segment is the crash tear.
-        let mut intact_bytes = 0usize;
-        let mut lines: Vec<&str> = Vec::new();
-        for seg in content.split_inclusive('\n') {
-            if let Some(line) = seg.strip_suffix('\n') {
-                intact_bytes += seg.len();
-                lines.push(line);
+        let mut lines = std::io::BufReader::new(file);
+        let mut buf = String::new();
+        let mut intact_bytes = 0u64;
+        let mut torn = false;
+        let mut lineno = 0usize; // 1-based line number of `buf` once read
+        let mut pos: Vec<Option<usize>> = Vec::new();
+        loop {
+            buf.clear();
+            let n = std::io::BufRead::read_line(&mut lines, &mut buf)
+                .with_context(|| format!("reading campaign journal {}", path.display()))?;
+            if n == 0 {
+                break;
             }
-            // else: torn tail — dropped, and truncated away below.
-        }
-
-        if lines.is_empty() {
-            // Even the header never finished: the previous run crashed
-            // before journaling anything. Start over.
-            return Ok((Journal::create_with_parts(path, spec_fingerprint, parts, units)?, records));
-        }
-
-        let header = parse_header(lines[0])
-            .with_context(|| format!("corrupt journal header in {}", path.display()))?;
-        if header.schema != SCHEMA {
-            bail!(
-                "journal {} has schema {:?}, expected {SCHEMA:?}",
-                path.display(),
-                header.schema
-            );
-        }
-        let want = format!("{spec_fingerprint:016x}");
-        if header.spec != want {
-            let diag =
-                spec_mismatch_diagnostic(path, &header.spec, header.parts, &want, parts);
-            bail!("{}", diag.render());
-        }
-        if header.units != units {
-            bail!(
-                "journal {} records {} units, this campaign has {units}",
-                path.display(),
-                header.units
-            );
-        }
-
-        let mut pos: Vec<Option<usize>> = vec![None; units];
-        for (lineno, line) in lines.iter().enumerate().skip(1) {
+            if !buf.ends_with('\n') {
+                // Torn tail — dropped, and truncated away below.
+                torn = true;
+                break;
+            }
+            intact_bytes += n as u64;
+            lineno += 1;
+            let line = &buf[..buf.len() - 1];
+            if lineno == 1 {
+                let header = parse_header(line)
+                    .with_context(|| format!("corrupt journal header in {}", path.display()))?;
+                if header.schema != SCHEMA {
+                    bail!(
+                        "journal {} has schema {:?}, expected {SCHEMA:?}",
+                        path.display(),
+                        header.schema
+                    );
+                }
+                let want = format!("{spec_fingerprint:016x}");
+                if header.spec != want {
+                    let diag =
+                        spec_mismatch_diagnostic(path, &header.spec, header.parts, &want, parts);
+                    bail!("{}", diag.render());
+                }
+                if header.units != units {
+                    bail!(
+                        "journal {} records {} units, this campaign has {units}",
+                        path.display(),
+                        header.units
+                    );
+                }
+                pos = vec![None; units];
+                continue;
+            }
             // Corruption before the final line is not a crash artifact —
             // appends are sequential — so it is refused, never skipped.
-            let (unit, rec) = parse(line)
-                .and_then(|v| UnitRecord::from_value(&v))
-                .with_context(|| {
-                    format!("corrupt journal record at {}:{}", path.display(), lineno + 1)
-                })?;
+            let (unit, rec) = parse_record(line).with_context(|| {
+                format!("corrupt journal record at {}:{}", path.display(), lineno)
+            })?;
             if unit >= units {
                 bail!(
                     "journal record at {}:{} names unit {unit} of {units}",
                     path.display(),
-                    lineno + 1
+                    lineno
                 );
             }
             match pos[unit] {
@@ -421,15 +493,22 @@ impl Journal {
                 }
             }
         }
+        drop(lines);
+
+        if lineno == 0 {
+            // Even the header never finished: the previous run crashed
+            // before journaling anything. Start over.
+            return Ok((Journal::create_with_parts(path, spec_fingerprint, parts, units)?, records));
+        }
 
         let file = std::fs::OpenOptions::new()
             .write(true)
             .open(path)
             .with_context(|| format!("reopening campaign journal {}", path.display()))?;
-        if intact_bytes < content.len() {
+        if torn {
             // Heal the tear: without this, the next append would
             // concatenate onto the torn prefix and corrupt a record.
-            file.set_len(intact_bytes as u64)
+            file.set_len(intact_bytes)
                 .with_context(|| format!("truncating torn journal tail in {}", path.display()))?;
         }
         let mut j = Journal { file, path: path.to_path_buf() };

@@ -82,7 +82,7 @@ use crate::compiler::{
 };
 use crate::config::SystemConfig;
 use crate::graph::DnnGraph;
-use crate::json::{self, obj, Value};
+use crate::json::{self, obj, stream, Value};
 use crate::taskgraph::serialize;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -219,27 +219,77 @@ pub fn negative_to_json(key: &CompileKey, diagnostic: &str) -> String {
 /// as a miss, so a stale or colliding record can never mark a *feasible*
 /// key infeasible.
 pub fn negative_from_json(text: &str, expect_key: &CompileKey) -> Result<String> {
-    let v = json::parse(text).context("negative cache entry parse")?;
-    if v.get("schema").as_str() != Some(NEG_SCHEMA) {
-        bail!("unsupported negative cache schema");
+    verify_embedded_key(
+        text,
+        expect_key,
+        NEG_SCHEMA,
+        "negative cache entry parse",
+        "unsupported negative cache schema",
+        "negative entry key mismatch (stale entry or fingerprint collision)",
+    )?;
+    // Fully lazy: the diagnostic is the only payload, so no tree is ever
+    // built for a negative hit — scan, extract, done.
+    match stream::path_str(text.as_bytes(), &["diagnostic"])
+        .context("negative cache entry parse")?
+    {
+        Some(d) => Ok(d.into_owned()),
+        None => Err(anyhow::anyhow!("missing/invalid string field \"diagnostic\"")),
     }
-    if v.get("key") != &expect_key.to_json() {
-        bail!("negative entry key mismatch (stale entry or fingerprint collision)");
+}
+
+/// Lazy pre-flight shared by artifact and negative loads: verify the
+/// `schema` and embedded `key` fields straight off the raw bytes, without
+/// materializing a `Value` tree. Both files are written by this module in
+/// canonical compact form, so the expected key's serialization can be
+/// compared byte-for-byte against the raw field slice; only when the raw
+/// bytes differ (a hand-edited or re-formatted entry) does verification
+/// fall back to the structural tree compare, preserving the exact
+/// accept/reject semantics of the original full-parse path.
+fn verify_embedded_key(
+    text: &str,
+    expect_key: &CompileKey,
+    schema: &str,
+    parse_ctx: &'static str,
+    schema_err: &'static str,
+    mismatch_err: &'static str,
+) -> Result<()> {
+    let bytes = text.as_bytes();
+    match stream::path_str(bytes, &["schema"]).context(parse_ctx)? {
+        Some(s) if s == schema => {}
+        _ => bail!("{schema_err}"),
     }
-    Ok(v.req_str("diagnostic")?.to_string())
+    let want = expect_key.to_json().to_string_compact();
+    match stream::path_raw(bytes, &["key"]).context(parse_ctx)? {
+        Some(raw) if raw == want.as_bytes() => Ok(()),
+        Some(_) => {
+            // Non-canonical bytes: semantically-equal keys must still
+            // verify, so decide on the parsed tree.
+            let v = json::parse(text).context(parse_ctx)?;
+            if v.get("key") != &expect_key.to_json() {
+                bail!("{mismatch_err}");
+            }
+            Ok(())
+        }
+        None => bail!("{mismatch_err}"),
+    }
 }
 
 /// Parse and verify one cache entry. `expect_key` is the key the caller is
 /// looking up; any mismatch with the stored key is an error (stale entry
 /// or fingerprint collision).
 pub fn entry_from_json(text: &str, expect_key: &CompileKey) -> Result<CompiledNet> {
+    // Cheap lazy precheck first: a stale entry, schema drift, or a
+    // fingerprint collision is rejected from the raw bytes before the
+    // (much larger) layers/task-graph payload is decoded.
+    verify_embedded_key(
+        text,
+        expect_key,
+        SCHEMA,
+        "compile cache entry parse",
+        "unsupported compile cache schema",
+        "cache entry key mismatch (stale entry or fingerprint collision)",
+    )?;
     let v = json::parse(text).context("compile cache entry parse")?;
-    if v.get("schema").as_str() != Some(SCHEMA) {
-        bail!("unsupported compile cache schema");
-    }
-    if v.get("key") != &expect_key.to_json() {
-        bail!("cache entry key mismatch (stale entry or fingerprint collision)");
-    }
     let graph = serialize::from_json(v.req_str("task_graph")?)
         .context("embedded task graph")?;
     let mut layers = Vec::new();
@@ -417,37 +467,100 @@ impl CacheIndex {
     }
 
     /// Parse an `avsm-compile-cache-index-v1` document.
+    ///
+    /// Pull-parsed straight into the fingerprint map — the touch path runs
+    /// this once per disk hit under the index lock, so no `Value` tree is
+    /// ever materialized for an index read. Field order on disk is
+    /// irrelevant (keys are matched by name); unknown fields are skipped.
     pub fn from_json(text: &str) -> Result<CacheIndex> {
-        let v = json::parse(text).context("cache index parse")?;
-        if v.get("schema").as_str() != Some(INDEX_SCHEMA) {
+        use stream::Event;
+        let mut r = stream::Reader::new(text.as_bytes());
+        let mut clock: Option<u64> = None;
+        let mut entries: Option<std::collections::BTreeMap<u64, u64>> = None;
+        let mut schema_ok = false;
+        match r.next().context("cache index parse")? {
+            Some(Event::ObjBegin) => {}
+            _ => bail!("unsupported cache index schema"),
+        }
+        loop {
+            match r.next().context("cache index parse")? {
+                Some(Event::Key(k)) => match k.as_ref() {
+                    "schema" => match r.take_value().context("cache index parse")? {
+                        Event::Str(s) if s == INDEX_SCHEMA => schema_ok = true,
+                        _ => bail!("unsupported cache index schema"),
+                    },
+                    "clock" => {
+                        clock = r.take_value().context("cache index parse")?.as_u64();
+                    }
+                    "entries" => {
+                        match r.next().context("cache index parse")? {
+                            Some(Event::ObjBegin) => {}
+                            _ => bail!("missing entries object"),
+                        }
+                        let mut map = std::collections::BTreeMap::new();
+                        loop {
+                            match r.next().context("cache index parse")? {
+                                Some(Event::Key(fp_hex)) => {
+                                    let fp = u64::from_str_radix(&fp_hex, 16).with_context(
+                                        || format!("bad fingerprint {:?}", fp_hex.as_ref()),
+                                    )?;
+                                    let stamp = r
+                                        .take_value()
+                                        .context("cache index parse")?
+                                        .as_u64()
+                                        .context("bad stamp")?;
+                                    map.insert(fp, stamp);
+                                }
+                                _ => break, // ObjEnd: entries complete
+                            }
+                        }
+                        entries = Some(map);
+                    }
+                    _ => r.skip_value().context("cache index parse")?,
+                },
+                _ => break, // ObjEnd: document complete
+            }
+        }
+        // Trailing-garbage check, same classification as a full parse.
+        r.next().context("cache index parse")?;
+        if !schema_ok {
             bail!("unsupported cache index schema");
         }
-        let mut entries = std::collections::BTreeMap::new();
-        let raw = v.get("entries").as_object().context("missing entries object")?;
-        for (fp_hex, stamp) in raw {
-            let fp = u64::from_str_radix(fp_hex, 16)
-                .with_context(|| format!("bad fingerprint {fp_hex:?}"))?;
-            entries.insert(fp, stamp.as_u64().context("bad stamp")?);
-        }
-        Ok(CacheIndex { clock: v.req_u64("clock")?, entries })
+        let entries = entries.context("missing entries object")?;
+        let clock = clock.ok_or_else(|| {
+            anyhow::anyhow!("missing/invalid unsigned field \"clock\"")
+        })?;
+        Ok(CacheIndex { clock, entries })
     }
 
-    /// Serialize back to the compact on-disk form.
+    /// Serialize back to the compact on-disk form. Emitted incrementally
+    /// (keys in canonical sorted order, matching the historical
+    /// `Value`-tree bytes exactly — the golden fixture pins this).
     pub fn to_json(&self) -> String {
-        obj(vec![
-            ("schema", INDEX_SCHEMA.into()),
-            ("clock", self.clock.into()),
-            (
-                "entries",
-                Value::Object(
-                    self.entries
-                        .iter()
-                        .map(|(fp, stamp)| (format!("{fp:016x}"), Value::from(*stamp)))
-                        .collect(),
-                ),
-            ),
-        ])
-        .to_string_compact()
+        let mut bytes = Vec::with_capacity(64 + self.entries.len() * 28);
+        let mut w = stream::Writer::compact(&mut bytes);
+        let emit = |w: &mut stream::Writer<&mut Vec<u8>>| -> Result<()> {
+            w.begin_obj()?;
+            w.key("clock")?;
+            w.uint(self.clock)?;
+            w.key("entries")?;
+            w.begin_obj()?;
+            // Fixed-width hex sorts identically to the numeric fingerprint
+            // order, so streaming the map in iteration order is canonical.
+            for (fp, stamp) in &self.entries {
+                w.key(&format!("{fp:016x}"))?;
+                w.uint(*stamp)?;
+            }
+            w.end_obj()?;
+            w.key("schema")?;
+            w.str(INDEX_SCHEMA)?;
+            w.end_obj()?;
+            Ok(())
+        };
+        emit(&mut w)
+            .and_then(|_| w.finish().map(|_| ()))
+            .expect("serializing the cache index to memory cannot fail");
+        String::from_utf8(bytes).expect("writer emits UTF-8")
     }
 
     /// Fingerprint → last-used stamp, in fingerprint order.
@@ -629,8 +742,11 @@ impl PersistentCache {
     /// caches.
     fn touch_index(&self, dir: &Path, fp: u64) {
         let Some(lru) = &self.lru else { return };
-        // The disk index is the source of truth: every touch is a full
-        // load → touch → evict → persist read-modify-write, serialized by
+        // The disk index is the source of truth: every touch is a
+        // load → touch → evict → persist read-modify-write (pull-parsed
+        // and incrementally re-emitted — no JSON tree on this per-disk-hit
+        // path, though the full fingerprint map is still read because
+        // LRU eviction needs global knowledge), serialized by
         // the in-process mutex (this cache's threads) *and* the advisory
         // `index.lock` (other processes sharing the directory). Reloading
         // under the lock is what *merges* — rather than overwrites — a

@@ -501,19 +501,18 @@ pub fn topdown_min_nce_freq(
 
 /// JSON export of a sweep (plot data).
 pub fn sweep_to_json(points: &[DesignPoint]) -> Value {
-    Value::Array(
-        points
-            .iter()
-            .map(|p| {
-                obj(vec![
-                    ("name", p.name.as_str().into()),
-                    ("latency_ps", p.latency_ps.into()),
-                    ("cost", p.cost.into()),
-                    ("throughput_per_sec", p.throughput.into()),
-                ])
-            })
-            .collect(),
-    )
+    Value::Array(points.iter().map(point_to_json).collect())
+}
+
+/// One design point's report object — shared by the tree serializer above
+/// and the streaming report emitter, so the two cannot drift.
+pub fn point_to_json(p: &DesignPoint) -> Value {
+    obj(vec![
+        ("name", p.name.as_str().into()),
+        ("latency_ps", p.latency_ps.into()),
+        ("cost", p.cost.into()),
+        ("throughput_per_sec", p.throughput.into()),
+    ])
 }
 
 #[cfg(test)]

@@ -1,15 +1,32 @@
 //! Minimal JSON parser and writer.
 //!
 //! The offline build environment has no serde_json, so the project carries
-//! its own implementation: a recursive-descent parser producing a [`Value`]
-//! tree and a pretty/compact writer. Covers the full JSON grammar (RFC 8259)
-//! including escapes and \uXXXX (with surrogate pairs); numbers are kept as
-//! f64 plus an i64 fast path (ids, shapes and byte counts round-trip
-//! exactly).
+//! its own implementation: a [`Value`] tree with a parser and
+//! pretty/compact writer, built on the streaming layer in
+//! [`stream`]. Covers the full JSON grammar (RFC 8259) including escapes
+//! and \uXXXX (with surrogate pairs); numbers are kept as f64 plus an i64
+//! fast path (ids, shapes and byte counts round-trip exactly).
+//!
+//! # Tree vs. stream — which to use
+//!
+//! Use the **tree** API (`parse` + `Value` + `to_string_*`) when the code
+//! manipulates the document as data: building reports, comparing embedded
+//! keys structurally, test fixtures. It materializes everything and is the
+//! ergonomic default.
+//!
+//! Use the **stream** API ([`stream::Reader`] / [`stream::Writer`] /
+//! `stream::path_*`) on hot I/O paths where the document is large, only a
+//! few fields are needed, or output should not be buffered whole:
+//! cache-entry fingerprint prechecks, LRU-index touches, journal replay,
+//! and multi-thousand-point campaign report emission all live there. The
+//! two layers share one lexer and one emitter, so diagnostics and bytes
+//! are identical — switching a path between them never changes what lands
+//! on disk.
 
-use anyhow::{anyhow, bail, Result};
+pub mod stream;
+
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
 
 /// A JSON document node. Object keys are sorted (BTreeMap) so output is
 /// deterministic — important for golden-file tests.
@@ -126,19 +143,26 @@ impl Value {
             .ok_or_else(|| anyhow!("missing/invalid array field {key:?}"))
     }
 
-    /// Compact single-line serialization.
+    /// Compact single-line serialization. Drives [`stream::Writer`] — the
+    /// incremental emitter and this method produce identical bytes by
+    /// construction.
     pub fn to_string_compact(&self) -> String {
-        let mut s = String::new();
-        write_value(&mut s, self, None, 0);
-        s
+        self.serialize(None)
     }
 
     /// Pretty serialization with 1-space indent (matches python's
     /// `json.dumps(..., indent=1)` closely enough for diffing).
     pub fn to_string_pretty(&self) -> String {
-        let mut s = String::new();
-        write_value(&mut s, self, Some(1), 0);
-        s
+        self.serialize(Some(1))
+    }
+
+    fn serialize(&self, indent: Option<usize>) -> String {
+        let mut bytes = Vec::new();
+        let mut w = stream::Writer::with_indent(&mut bytes, indent);
+        w.value(self)
+            .and_then(|_| w.finish().map(|_| ()))
+            .expect("serializing a Value to memory cannot fail");
+        String::from_utf8(bytes).expect("writer emits UTF-8")
     }
 }
 
@@ -204,363 +228,75 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
 /// short snippet of the surrounding input, so a corrupted cache artifact
 /// or a torn journal line is diagnosable straight from a report's error
 /// sample instead of a bare "unexpected character".
+///
+/// Implemented as an iterative fold over [`stream::Reader`] events (no
+/// recursion; nesting bounded at [`stream::MAX_DEPTH`]), so pull-parsing
+/// and tree-parsing agree on every accept/reject decision, error message,
+/// and byte offset.
 pub fn parse(text: &str) -> Result<Value> {
-    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
-    p.skip_ws();
-    let v = p.value()?;
-    p.skip_ws();
-    if p.pos != p.bytes.len() {
-        return Err(p.err_at(p.pos, "trailing characters"));
+    enum Frame {
+        Obj(BTreeMap<String, Value>, Option<String>),
+        Arr(Vec<Value>),
     }
-    Ok(v)
-}
-
-struct Parser<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn peek(&self) -> Option<u8> {
-        self.bytes.get(self.pos).copied()
-    }
-
-    /// Diagnostic anchored at `pos`: the message, the byte offset, and a
-    /// short window of the raw input around it (lossy-decoded, so binary
-    /// garbage still renders).
-    fn err_at(&self, pos: usize, msg: impl std::fmt::Display) -> anyhow::Error {
-        const WINDOW: usize = 12;
-        let start = pos.saturating_sub(WINDOW);
-        let end = (pos + WINDOW).min(self.bytes.len());
-        let mut near = String::new();
-        if start > 0 {
-            near.push_str("...");
-        }
-        near.push_str(&String::from_utf8_lossy(&self.bytes[start..end]));
-        if end < self.bytes.len() {
-            near.push_str("...");
-        }
-        anyhow!("{msg} at byte {pos} (near {near:?})")
-    }
-
-    fn bump(&mut self) -> Result<u8> {
-        let b = self
-            .peek()
-            .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?;
-        self.pos += 1;
-        Ok(b)
-    }
-
-    fn skip_ws(&mut self) {
-        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
-            self.pos += 1;
-        }
-    }
-
-    fn expect(&mut self, b: u8) -> Result<()> {
-        let at = self.pos;
-        let got = self.bump()?;
-        if got != b {
-            return Err(self.err_at(
-                at,
-                format!("expected {:?}, got {:?}", b as char, got as char),
-            ));
-        }
-        Ok(())
-    }
-
-    fn value(&mut self) -> Result<Value> {
-        match self
-            .peek()
-            .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?
-        {
-            b'{' => self.object(),
-            b'[' => self.array(),
-            b'"' => Ok(Value::Str(self.string()?)),
-            b't' => self.literal("true", Value::Bool(true)),
-            b'f' => self.literal("false", Value::Bool(false)),
-            b'n' => self.literal("null", Value::Null),
-            b'-' | b'0'..=b'9' => self.number(),
-            other => {
-                Err(self.err_at(self.pos, format!("unexpected character {:?}", other as char)))
+    let mut r = stream::Reader::new(text.as_bytes());
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut root: Option<Value> = None;
+    while let Some(ev) = r.next()? {
+        let completed: Option<Value> = match ev {
+            stream::Event::ObjBegin => {
+                stack.push(Frame::Obj(BTreeMap::new(), None));
+                None
             }
-        }
-    }
-
-    fn literal(&mut self, lit: &str, v: Value) -> Result<Value> {
-        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
-            self.pos += lit.len();
-            Ok(v)
-        } else {
-            Err(self.err_at(self.pos, format!("invalid literal (expected {lit:?})")))
-        }
-    }
-
-    fn object(&mut self) -> Result<Value> {
-        self.expect(b'{')?;
-        let mut map = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Value::Object(map));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            self.skip_ws();
-            let val = self.value()?;
-            map.insert(key, val);
-            self.skip_ws();
-            let at = self.pos;
-            match self.bump()? {
-                b',' => continue,
-                b'}' => return Ok(Value::Object(map)),
-                other => {
-                    return Err(
-                        self.err_at(at, format!("expected ',' or '}}', got {:?}", other as char))
-                    )
+            stream::Event::ArrBegin => {
+                stack.push(Frame::Arr(Vec::new()));
+                None
+            }
+            stream::Event::Key(k) => {
+                if let Some(Frame::Obj(_, slot)) = stack.last_mut() {
+                    *slot = Some(k.into_owned());
                 }
+                None
             }
-        }
-    }
-
-    fn array(&mut self) -> Result<Value> {
-        self.expect(b'[')?;
-        let mut items = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Value::Array(items));
-        }
-        loop {
-            self.skip_ws();
-            items.push(self.value()?);
-            self.skip_ws();
-            let at = self.pos;
-            match self.bump()? {
-                b',' => continue,
-                b']' => return Ok(Value::Array(items)),
-                other => {
-                    return Err(
-                        self.err_at(at, format!("expected ',' or ']', got {:?}", other as char))
-                    )
+            stream::Event::ObjEnd => match stack.pop() {
+                Some(Frame::Obj(map, _)) => Some(Value::Object(map)),
+                _ => unreachable!("reader only ends an object it began"),
+            },
+            stream::Event::ArrEnd => match stack.pop() {
+                Some(Frame::Arr(items)) => Some(Value::Array(items)),
+                _ => unreachable!("reader only ends an array it began"),
+            },
+            stream::Event::Str(s) => Some(Value::Str(s.into_owned())),
+            stream::Event::Int(i) => Some(Value::Int(i)),
+            stream::Event::Num(f) => Some(Value::Num(f)),
+            stream::Event::Bool(b) => Some(Value::Bool(b)),
+            stream::Event::Null => Some(Value::Null),
+        };
+        if let Some(v) = completed {
+            match stack.last_mut() {
+                None => root = Some(v),
+                Some(Frame::Obj(map, slot)) => {
+                    let key = slot.take().expect("reader emits Key before each object value");
+                    map.insert(key, v);
                 }
+                Some(Frame::Arr(items)) => items.push(v),
             }
         }
     }
-
-    fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
-        let mut s = String::new();
-        loop {
-            let at = self.pos;
-            match self.bump()? {
-                b'"' => return Ok(s),
-                b'\\' => match self.bump()? {
-                    b'"' => s.push('"'),
-                    b'\\' => s.push('\\'),
-                    b'/' => s.push('/'),
-                    b'b' => s.push('\u{0008}'),
-                    b'f' => s.push('\u{000C}'),
-                    b'n' => s.push('\n'),
-                    b'r' => s.push('\r'),
-                    b't' => s.push('\t'),
-                    b'u' => {
-                        let cp = self.hex4()?;
-                        // Surrogate pair handling.
-                        if (0xD800..0xDC00).contains(&cp) {
-                            self.expect(b'\\')?;
-                            self.expect(b'u')?;
-                            let lo = self.hex4()?;
-                            if !(0xDC00..0xE000).contains(&lo) {
-                                return Err(self.err_at(at, "invalid low surrogate"));
-                            }
-                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                            s.push(
-                                char::from_u32(c)
-                                    .ok_or_else(|| self.err_at(at, "bad surrogate pair"))?,
-                            );
-                        } else {
-                            s.push(
-                                char::from_u32(cp)
-                                    .ok_or_else(|| self.err_at(at, "bad unicode escape"))?,
-                            );
-                        }
-                    }
-                    other => {
-                        return Err(
-                            self.err_at(at, format!("bad escape \\{:?}", other as char))
-                        )
-                    }
-                },
-                b if b < 0x20 => {
-                    return Err(self.err_at(at, "raw control character in string"))
-                }
-                b if b < 0x80 => s.push(b as char),
-                b => {
-                    // Multi-byte UTF-8: re-decode from the source slice.
-                    let start = self.pos - 1;
-                    let len = utf8_len(b)
-                        .map_err(|e| self.err_at(start, e))?;
-                    let end = start + len;
-                    if end > self.bytes.len() {
-                        return Err(self.err_at(start, "truncated UTF-8 sequence"));
-                    }
-                    let chunk = std::str::from_utf8(&self.bytes[start..end])
-                        .map_err(|_| self.err_at(start, "invalid UTF-8 in string"))?;
-                    s.push_str(chunk);
-                    self.pos = end;
-                }
-            }
-        }
-    }
-
-    fn hex4(&mut self) -> Result<u32> {
-        let mut v = 0u32;
-        for _ in 0..4 {
-            let at = self.pos;
-            let b = self.bump()?;
-            let d = (b as char)
-                .to_digit(16)
-                .ok_or_else(|| self.err_at(at, "bad hex digit"))?;
-            v = v * 16 + d;
-        }
-        Ok(v)
-    }
-
-    fn number(&mut self) -> Result<Value> {
-        let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
-        }
-        let mut is_float = false;
-        while let Some(b) = self.peek() {
-            match b {
-                b'0'..=b'9' => self.pos += 1,
-                b'.' | b'e' | b'E' | b'+' | b'-' => {
-                    is_float = true;
-                    self.pos += 1;
-                }
-                _ => break,
-            }
-        }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        if !is_float {
-            if let Ok(i) = text.parse::<i64>() {
-                return Ok(Value::Int(i));
-            }
-        }
-        text.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| self.err_at(start, format!("invalid number {text:?}")))
-    }
-}
-
-fn utf8_len(first: u8) -> Result<usize> {
-    match first {
-        0xC0..=0xDF => Ok(2),
-        0xE0..=0xEF => Ok(3),
-        0xF0..=0xF7 => Ok(4),
-        _ => bail!("invalid UTF-8 lead byte"),
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Writer
-// ---------------------------------------------------------------------------
-
-fn write_value(out: &mut String, v: &Value, indent: Option<usize>, depth: usize) {
-    match v {
-        Value::Null => out.push_str("null"),
-        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-        Value::Int(i) => {
-            let _ = write!(out, "{i}");
-        }
-        Value::Num(f) => {
-            if !f.is_finite() {
-                out.push_str("null"); // JSON has no Inf/NaN
-            } else if f.fract() == 0.0 {
-                // Keep the decimal point (python-json style "2.0"): a bare
-                // "2" would re-parse as Int and break Value round-trips
-                // for integral floats (report throughputs, bench medians).
-                let _ = write!(out, "{f:.1}");
-            } else {
-                let _ = write!(out, "{f}");
-            }
-        }
-        Value::Str(s) => write_string(out, s),
-        Value::Array(items) => {
-            if items.is_empty() {
-                out.push_str("[]");
-                return;
-            }
-            out.push('[');
-            for (i, item) in items.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                newline_indent(out, indent, depth + 1);
-                write_value(out, item, indent, depth + 1);
-            }
-            newline_indent(out, indent, depth);
-            out.push(']');
-        }
-        Value::Object(map) => {
-            if map.is_empty() {
-                out.push_str("{}");
-                return;
-            }
-            out.push('{');
-            for (i, (k, val)) in map.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                newline_indent(out, indent, depth + 1);
-                write_string(out, k);
-                out.push(':');
-                if indent.is_some() {
-                    out.push(' ');
-                }
-                write_value(out, val, indent, depth + 1);
-            }
-            newline_indent(out, indent, depth);
-            out.push('}');
-        }
-    }
-}
-
-fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
-    if let Some(w) = indent {
-        out.push('\n');
-        for _ in 0..w * depth {
-            out.push(' ');
-        }
-    }
-}
-
-fn write_string(out: &mut String, s: &str) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
-        }
-    }
-    out.push('"');
+    Ok(root.expect("reader yields a root value or an error"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Quote-and-escape `s` into `out` via the shared emitter in
+    /// [`stream`] — the historical tree-side helper, kept in the tests as
+    /// the escape-roundtrip harness.
+    fn write_string(out: &mut String, s: &str) {
+        let mut bytes = Vec::with_capacity(s.len() + 2);
+        stream::write_escaped(&mut bytes, s).expect("escaping into memory cannot fail");
+        out.push_str(std::str::from_utf8(&bytes).expect("escaped JSON is UTF-8"));
+    }
 
     #[test]
     fn parses_scalars() {

@@ -1,0 +1,1116 @@
+//! Streaming JSON: a pull-style event reader, an incremental writer, and
+//! lazy partial-field extraction — the allocation-light layer under the
+//! [`Value`](super::Value) tree API.
+//!
+//! The tree parser/serializer in `json.rs` is built **on top of** this
+//! module, so the two layers cannot drift: `parse()` is an iterative fold
+//! over [`Reader`] events and `to_string_compact`/`to_string_pretty` drive
+//! [`Writer`], which means every diagnostic (message, byte offset, context
+//! snippet) and every emitted byte is shared by construction.
+//!
+//! Design points, following the picojson idiom:
+//!
+//! - **No recursion.** Both reader and writer track nesting with a depth
+//!   counter plus a 64-bit container-kind bitmap, so arbitrarily deep input
+//!   cannot blow the stack. Nesting is bounded at [`MAX_DEPTH`] levels
+//!   (documents deeper than that are rejected with a parse error rather
+//!   than accepted by one layer and rejected by the other).
+//! - **No allocation on the scan path.** [`Reader::next`] borrows string
+//!   events straight from the input (`Cow::Borrowed`) unless an escape
+//!   forces an owned copy; skipping a value ([`Reader::skip_value`])
+//!   validates it without building anything.
+//! - **Lazy field extraction.** [`path_raw`]/[`path_str`]/[`path_u64`]
+//!   scan to one field and stop — the hot cache-store readers use these to
+//!   verify a fingerprint before paying for a full decode. They are strict
+//!   about everything they scan *past*, but never look at bytes after the
+//!   target field.
+//! - **Byte-identical emission.** [`Writer`] produces exactly the bytes of
+//!   `to_string_compact`/`to_string_pretty` (golden-fixture pinned), so
+//!   multi-thousand-point campaign reports stream to the output file
+//!   instead of buffering a whole tree.
+//!
+//! Sources: byte slices borrow zero-copy. `io::Read` sources are handled
+//! the way the hot paths actually need — line-delimited documents through
+//! a reused `BufRead` line buffer (see `campaign::journal`), which covers
+//! streaming replay without a self-referential incremental decoder.
+
+use anyhow::{anyhow, bail, Result};
+use std::borrow::Cow;
+use std::io::Write;
+
+use super::Value;
+
+/// Maximum container nesting accepted by [`Reader`] and [`Writer`]. One
+/// bit of container-kind state per level lives in a `u64`; every schema in
+/// the repo nests < 10 deep, so 64 is pure headroom.
+pub const MAX_DEPTH: usize = 64;
+
+/// One parse event. String data borrows from the input unless an escape
+/// sequence forced a decode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// Object key. The following event (or `Begin`..`End` run) is its value.
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Int(i64),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Event<'_> {
+    /// Unsigned coercion mirroring [`Value::as_u64`]: exact ints plus
+    /// integral in-range floats.
+    pub fn as_u64(&self) -> Option<u64> {
+        let i = match *self {
+            Event::Int(i) => i,
+            Event::Num(f) if f.fract() == 0.0 && f.abs() < 9e15 => f as i64,
+            _ => return None,
+        };
+        u64::try_from(i).ok()
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Event::Str(s) | Event::Key(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Event::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Diagnostic anchored at `pos`: the message, the byte offset, and a short
+/// window of the raw input around it (lossy-decoded, so binary garbage
+/// still renders). The window is clamped to UTF-8 character boundaries —
+/// a fixed byte radius can land mid-codepoint on multibyte input, which
+/// would render spurious replacement characters at the snippet edges.
+pub(crate) fn error_at(bytes: &[u8], pos: usize, msg: impl std::fmt::Display) -> anyhow::Error {
+    const WINDOW: usize = 12;
+    let is_continuation = |b: u8| matches!(b, 0x80..=0xBF);
+    let mut start = pos.saturating_sub(WINDOW);
+    let mut end = (pos + WINDOW).min(bytes.len());
+    // A UTF-8 character is at most 1 lead + 3 continuation bytes, so three
+    // steps suffice; anything still mid-run after that is invalid UTF-8 and
+    // the lossy decode below renders it as U+FFFD anyway.
+    for _ in 0..3 {
+        if start < pos && is_continuation(bytes[start]) {
+            start += 1;
+        }
+    }
+    for _ in 0..3 {
+        if end > pos && end < bytes.len() && is_continuation(bytes[end]) {
+            end -= 1;
+        }
+    }
+    let mut near = String::new();
+    if start > 0 {
+        near.push_str("...");
+    }
+    near.push_str(&String::from_utf8_lossy(&bytes[start..end]));
+    if end < bytes.len() {
+        near.push_str("...");
+    }
+    anyhow!("{msg} at byte {pos} (near {near:?})")
+}
+
+fn utf8_len(first: u8) -> Result<usize> {
+    match first {
+        0xC0..=0xDF => Ok(2),
+        0xE0..=0xEF => Ok(3),
+        0xF0..=0xF7 => Ok(4),
+        _ => bail!("invalid UTF-8 lead byte"),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// Before the root value.
+    Start,
+    /// A value must come next (after `:`, or after `,` in an array).
+    Value,
+    /// Right after `{`: a key or the closing brace.
+    FirstKeyOrEnd,
+    /// Right after `[`: a value or the closing bracket.
+    FirstValueOrEnd,
+    /// After a value inside a container.
+    CommaOrEnd,
+    /// Root value complete; only the trailing-whitespace check remains.
+    Done,
+    /// `Ok(None)` already returned.
+    Finished,
+}
+
+/// Pull-style JSON lexer over a byte slice: call [`Reader::next`] until it
+/// returns `Ok(None)`. Strict — it enforces the full document grammar
+/// (separators, nesting, trailing garbage) and produces diagnostics
+/// identical to [`super::parse`], because `parse` *is* this reader plus a
+/// tree fold.
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+    /// Bit `d-1` set ⇒ the container at depth `d` is an object.
+    kinds: u64,
+    state: State,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0, depth: 0, kinds: 0, state: State::Start }
+    }
+
+    /// Byte offset of the next unread input byte.
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Next event, or `Ok(None)` exactly once after a complete well-formed
+    /// document (trailing non-whitespace is an error, as in `parse`).
+    pub fn next(&mut self) -> Result<Option<Event<'a>>> {
+        loop {
+            match self.state {
+                State::Finished => return Ok(None),
+                State::Done => {
+                    self.skip_ws();
+                    if self.pos != self.bytes.len() {
+                        return Err(self.err_at(self.pos, "trailing characters"));
+                    }
+                    self.state = State::Finished;
+                    return Ok(None);
+                }
+                State::Start | State::Value => {
+                    self.skip_ws();
+                    return self.value_event().map(Some);
+                }
+                State::FirstKeyOrEnd => {
+                    self.skip_ws();
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        self.pop();
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    return self.key_event().map(Some);
+                }
+                State::FirstValueOrEnd => {
+                    self.skip_ws();
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        self.pop();
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    self.state = State::Value;
+                }
+                State::CommaOrEnd => {
+                    self.skip_ws();
+                    let in_obj = self.in_obj();
+                    let at = self.pos;
+                    match self.bump()? {
+                        b',' => {
+                            if in_obj {
+                                self.skip_ws();
+                                return self.key_event().map(Some);
+                            }
+                            self.state = State::Value;
+                        }
+                        b'}' if in_obj => {
+                            self.pop();
+                            return Ok(Some(Event::ObjEnd));
+                        }
+                        b']' if !in_obj => {
+                            self.pop();
+                            return Ok(Some(Event::ArrEnd));
+                        }
+                        other => {
+                            let closer = if in_obj { '}' } else { ']' };
+                            return Err(self.err_at(
+                                at,
+                                format!("expected ',' or '{}', got {:?}", closer, other as char),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consume the next value whole. Scalars return their event; containers
+    /// are scanned (validated, nothing built) to their matching end and
+    /// return their opening event.
+    pub fn take_value(&mut self) -> Result<Event<'a>> {
+        let ev = self
+            .next()?
+            .ok_or_else(|| anyhow!("stream reader misuse: no value to take"))?;
+        if matches!(ev, Event::ObjBegin | Event::ArrBegin) {
+            let mut depth = 1usize;
+            while depth > 0 {
+                match self.next()? {
+                    Some(Event::ObjBegin | Event::ArrBegin) => depth += 1,
+                    Some(Event::ObjEnd | Event::ArrEnd) => depth -= 1,
+                    Some(_) => {}
+                    None => bail!("stream reader misuse: document ended inside a container"),
+                }
+            }
+        }
+        Ok(ev)
+    }
+
+    /// Skip-value fast path: validate and discard the next value without
+    /// materializing it (strings are still escape/UTF-8 checked so errors
+    /// surface with the same offsets as a full parse).
+    pub fn skip_value(&mut self) -> Result<()> {
+        self.take_value().map(|_| ())
+    }
+
+    // -- lexing ------------------------------------------------------------
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn err_at(&self, pos: usize, msg: impl std::fmt::Display) -> anyhow::Error {
+        error_at(self.bytes, pos, msg)
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self
+            .peek()
+            .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let at = self.pos;
+        let got = self.bump()?;
+        if got != b {
+            return Err(
+                self.err_at(at, format!("expected {:?}, got {:?}", b as char, got as char))
+            );
+        }
+        Ok(())
+    }
+
+    fn in_obj(&self) -> bool {
+        self.depth > 0 && (self.kinds >> (self.depth - 1)) & 1 == 1
+    }
+
+    fn push(&mut self, obj: bool) -> Result<()> {
+        if self.depth == MAX_DEPTH {
+            return Err(self.err_at(
+                self.pos - 1,
+                format!("nesting deeper than {MAX_DEPTH} levels"),
+            ));
+        }
+        let bit = 1u64 << self.depth;
+        if obj {
+            self.kinds |= bit;
+        } else {
+            self.kinds &= !bit;
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn pop(&mut self) {
+        self.depth -= 1;
+        self.state = if self.depth == 0 { State::Done } else { State::CommaOrEnd };
+    }
+
+    fn after_scalar(&mut self) {
+        self.state = if self.depth == 0 { State::Done } else { State::CommaOrEnd };
+    }
+
+    /// Whitespace is already skipped when this is called.
+    fn value_event(&mut self) -> Result<Event<'a>> {
+        match self
+            .peek()
+            .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?
+        {
+            b'{' => {
+                self.pos += 1;
+                self.push(true)?;
+                self.state = State::FirstKeyOrEnd;
+                Ok(Event::ObjBegin)
+            }
+            b'[' => {
+                self.pos += 1;
+                self.push(false)?;
+                self.state = State::FirstValueOrEnd;
+                Ok(Event::ArrBegin)
+            }
+            b'"' => {
+                let s = self.string()?;
+                self.after_scalar();
+                Ok(Event::Str(s))
+            }
+            b't' => {
+                self.literal("true")?;
+                self.after_scalar();
+                Ok(Event::Bool(true))
+            }
+            b'f' => {
+                self.literal("false")?;
+                self.after_scalar();
+                Ok(Event::Bool(false))
+            }
+            b'n' => {
+                self.literal("null")?;
+                self.after_scalar();
+                Ok(Event::Null)
+            }
+            b'-' | b'0'..=b'9' => {
+                let ev = self.number()?;
+                self.after_scalar();
+                Ok(ev)
+            }
+            other => {
+                Err(self.err_at(self.pos, format!("unexpected character {:?}", other as char)))
+            }
+        }
+    }
+
+    fn key_event(&mut self) -> Result<Event<'a>> {
+        let key = self.string()?;
+        self.skip_ws();
+        self.expect(b':')?;
+        self.state = State::Value;
+        Ok(Event::Key(key))
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<()> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err_at(self.pos, format!("invalid literal (expected {lit:?})")))
+        }
+    }
+
+    /// Borrow the string body straight from the input; the first escape
+    /// switches to an owned decode ([`Reader::string_owned_tail`]).
+    fn string(&mut self) -> Result<Cow<'a, str>> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        loop {
+            let at = self.pos;
+            match self.bump()? {
+                b'"' => {
+                    let body = std::str::from_utf8(&self.bytes[start..at])
+                        .map_err(|_| self.err_at(start, "invalid UTF-8 in string"))?;
+                    return Ok(Cow::Borrowed(body));
+                }
+                b'\\' => {
+                    let head = std::str::from_utf8(&self.bytes[start..at])
+                        .map_err(|_| self.err_at(start, "invalid UTF-8 in string"))?;
+                    self.pos = at; // rewind to the backslash
+                    return self.string_owned_tail(head.to_string());
+                }
+                b if b < 0x20 => return Err(self.err_at(at, "raw control character in string")),
+                b if b < 0x80 => {}
+                b => self.multibyte(b)?,
+            }
+        }
+    }
+
+    /// Continue a string past its first escape, building an owned copy.
+    /// Escape handling (including \uXXXX surrogate pairs) anchors errors at
+    /// the backslash byte, matching the tree parser's historical offsets.
+    fn string_owned_tail(&mut self, mut s: String) -> Result<Cow<'a, str>> {
+        loop {
+            let at = self.pos;
+            match self.bump()? {
+                b'"' => return Ok(Cow::Owned(s)),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'b' => s.push('\u{0008}'),
+                    b'f' => s.push('\u{000C}'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'u' => {
+                        let cp = self.hex4()?;
+                        // Surrogate pair handling.
+                        if (0xD800..0xDC00).contains(&cp) {
+                            self.expect(b'\\')?;
+                            self.expect(b'u')?;
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err_at(at, "invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            s.push(
+                                char::from_u32(c)
+                                    .ok_or_else(|| self.err_at(at, "bad surrogate pair"))?,
+                            );
+                        } else {
+                            s.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| self.err_at(at, "bad unicode escape"))?,
+                            );
+                        }
+                    }
+                    other => {
+                        return Err(self.err_at(at, format!("bad escape \\{:?}", other as char)))
+                    }
+                },
+                b if b < 0x20 => return Err(self.err_at(at, "raw control character in string")),
+                b if b < 0x80 => s.push(b as char),
+                b => {
+                    let chunk_start = self.pos - 1;
+                    self.multibyte(b)?;
+                    // Validated above; re-borrow the whole sequence.
+                    s.push_str(
+                        std::str::from_utf8(&self.bytes[chunk_start..self.pos]).unwrap(),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Validate one multi-byte UTF-8 sequence whose lead byte was just
+    /// consumed; advances past its continuation bytes.
+    fn multibyte(&mut self, lead: u8) -> Result<()> {
+        let start = self.pos - 1;
+        let len = utf8_len(lead).map_err(|e| self.err_at(start, e))?;
+        let end = start + len;
+        if end > self.bytes.len() {
+            return Err(self.err_at(start, "truncated UTF-8 sequence"));
+        }
+        std::str::from_utf8(&self.bytes[start..end])
+            .map_err(|_| self.err_at(start, "invalid UTF-8 in string"))?;
+        self.pos = end;
+        Ok(())
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let at = self.pos;
+            let b = self.bump()?;
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err_at(at, "bad hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Event<'a>> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        if !is_float {
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Event::Int(i));
+            }
+        }
+        text.parse::<f64>()
+            .map(Event::Num)
+            .map_err(|_| self.err_at(start, format!("invalid number {text:?}")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lazy partial-field extraction
+// ---------------------------------------------------------------------------
+
+/// Position the reader on the value of `path` (each segment an object
+/// key). `Ok(true)` ⇒ the next value is the target; `Ok(false)` ⇒ a
+/// segment is missing or a non-object was traversed.
+fn walk_to<'a>(r: &mut Reader<'a>, path: &[&str]) -> Result<bool> {
+    assert!(!path.is_empty(), "path must name at least one field");
+    if !matches!(r.next()?, Some(Event::ObjBegin)) {
+        return Ok(false);
+    }
+    let mut seg = 0usize;
+    loop {
+        match r.next()? {
+            Some(Event::Key(k)) => {
+                if k == path[seg] {
+                    if seg + 1 == path.len() {
+                        return Ok(true);
+                    }
+                    seg += 1;
+                    if !matches!(r.next()?, Some(Event::ObjBegin)) {
+                        return Ok(false);
+                    }
+                } else {
+                    r.skip_value()?;
+                }
+            }
+            _ => return Ok(false), // ObjEnd: key not present at this level
+        }
+    }
+}
+
+/// Raw bytes of the value at `path`, exactly as they appear in the input
+/// (no tree, no unescaping — for canonical-form byte comparison against a
+/// known serialization). `Ok(None)` when the path is missing; `Err` when
+/// the input scanned so far is malformed. Bytes *after* the target field
+/// are never examined — that laziness is the point (mik-sdk's ADR-002
+/// measured ~33x for exactly this shape of partial extraction).
+pub fn path_raw<'a>(bytes: &'a [u8], path: &[&str]) -> Result<Option<&'a [u8]>> {
+    let mut r = Reader::new(bytes);
+    if !walk_to(&mut r, path)? {
+        return Ok(None);
+    }
+    r.skip_ws();
+    let start = r.offset();
+    r.skip_value()?;
+    Ok(Some(&bytes[start..r.offset()]))
+}
+
+/// Decoded string value at `path`; `Ok(None)` when missing or not a string.
+pub fn path_str<'a>(bytes: &'a [u8], path: &[&str]) -> Result<Option<Cow<'a, str>>> {
+    let mut r = Reader::new(bytes);
+    if !walk_to(&mut r, path)? {
+        return Ok(None);
+    }
+    match r.take_value()? {
+        Event::Str(s) => Ok(Some(s)),
+        _ => Ok(None),
+    }
+}
+
+/// Unsigned integer value at `path` (same coercion as [`Value::as_u64`]:
+/// exact ints, plus integral in-range floats); `Ok(None)` when missing or
+/// not numeric.
+pub fn path_u64(bytes: &[u8], path: &[&str]) -> Result<Option<u64>> {
+    let mut r = Reader::new(bytes);
+    if !walk_to(&mut r, path)? {
+        return Ok(None);
+    }
+    Ok(r.take_value()?.as_u64())
+}
+
+// ---------------------------------------------------------------------------
+// Incremental writer
+// ---------------------------------------------------------------------------
+
+/// Incremental JSON emitter: `begin_obj`/`key`/`int`/`end_obj`… straight
+/// into any `io::Write`, byte-identical to `to_string_compact` (compact
+/// mode) / `to_string_pretty` (pretty mode) — the golden fixtures pin
+/// this. Misuse (value without a key, unbalanced end, two root values)
+/// is an `Err`, not a debug_assert, so streaming report emitters fail
+/// loudly instead of writing a corrupt file.
+pub struct Writer<W: Write> {
+    out: W,
+    indent: Option<usize>,
+    depth: usize,
+    /// Bit `d-1` set ⇒ the container at depth `d` is an object.
+    kinds: u64,
+    /// Bit `d-1` set ⇒ the container at depth `d` has at least one element.
+    nonempty: u64,
+    /// In an object: a key has been written and its value is pending.
+    has_key: bool,
+    wrote_root: bool,
+}
+
+impl<W: Write> Writer<W> {
+    /// Single-line output, matching `Value::to_string_compact`.
+    pub fn compact(out: W) -> Self {
+        Writer::with_indent(out, None)
+    }
+
+    /// 1-space-indent output, matching `Value::to_string_pretty`.
+    pub fn pretty(out: W) -> Self {
+        Writer::with_indent(out, Some(1))
+    }
+
+    pub fn with_indent(out: W, indent: Option<usize>) -> Self {
+        Writer { out, indent, depth: 0, kinds: 0, nonempty: 0, has_key: false, wrote_root: false }
+    }
+
+    pub fn begin_obj(&mut self) -> Result<()> {
+        self.pre_value()?;
+        self.out.write_all(b"{")?;
+        self.push(true)
+    }
+
+    pub fn end_obj(&mut self) -> Result<()> {
+        if !self.in_obj() {
+            bail!("stream writer misuse: end_obj outside an object");
+        }
+        if self.has_key {
+            bail!("stream writer misuse: end_obj with a dangling key");
+        }
+        let had_elements = self.container_nonempty();
+        self.depth -= 1;
+        if had_elements {
+            self.newline_indent(self.depth)?;
+        }
+        self.out.write_all(b"}")?;
+        Ok(())
+    }
+
+    pub fn begin_arr(&mut self) -> Result<()> {
+        self.pre_value()?;
+        self.out.write_all(b"[")?;
+        self.push(false)
+    }
+
+    pub fn end_arr(&mut self) -> Result<()> {
+        if self.depth == 0 || self.in_obj() {
+            bail!("stream writer misuse: end_arr outside an array");
+        }
+        let had_elements = self.container_nonempty();
+        self.depth -= 1;
+        if had_elements {
+            self.newline_indent(self.depth)?;
+        }
+        self.out.write_all(b"]")?;
+        Ok(())
+    }
+
+    /// Emit an object key; the next call must emit its value.
+    pub fn key(&mut self, k: &str) -> Result<()> {
+        if !self.in_obj() || self.has_key {
+            bail!("stream writer misuse: key outside an object slot");
+        }
+        if self.container_nonempty() {
+            self.out.write_all(b",")?;
+        }
+        self.newline_indent(self.depth)?;
+        self.mark_nonempty();
+        write_escaped(&mut self.out, k)?;
+        self.out.write_all(b":")?;
+        if self.indent.is_some() {
+            self.out.write_all(b" ")?;
+        }
+        self.has_key = true;
+        Ok(())
+    }
+
+    pub fn null(&mut self) -> Result<()> {
+        self.pre_value()?;
+        self.out.write_all(b"null")?;
+        Ok(())
+    }
+
+    pub fn bool(&mut self, v: bool) -> Result<()> {
+        self.pre_value()?;
+        self.out.write_all(if v { b"true" as &[u8] } else { b"false" })?;
+        Ok(())
+    }
+
+    pub fn int(&mut self, v: i64) -> Result<()> {
+        self.pre_value()?;
+        write!(self.out, "{v}")?;
+        Ok(())
+    }
+
+    /// Unsigned helper mirroring `Value::from(u64)`: the integer fast path
+    /// when it fits `i64`, the float form (magnitude-preserving) beyond.
+    pub fn uint(&mut self, v: u64) -> Result<()> {
+        match i64::try_from(v) {
+            Ok(i) => self.int(i),
+            Err(_) => self.num(v as f64),
+        }
+    }
+
+    pub fn num(&mut self, v: f64) -> Result<()> {
+        self.pre_value()?;
+        write_num(&mut self.out, v)?;
+        Ok(())
+    }
+
+    pub fn str(&mut self, v: &str) -> Result<()> {
+        self.pre_value()?;
+        write_escaped(&mut self.out, v)?;
+        Ok(())
+    }
+
+    /// Emit a whole [`Value`] tree (iteratively — no recursion, same
+    /// depth bound as the reader).
+    pub fn value(&mut self, v: &Value) -> Result<()> {
+        enum Task<'v> {
+            Emit(&'v Value),
+            ObjRest(std::collections::btree_map::Iter<'v, String, Value>),
+            ArrRest(std::slice::Iter<'v, Value>),
+        }
+        let mut stack = vec![Task::Emit(v)];
+        while let Some(task) = stack.pop() {
+            match task {
+                Task::Emit(v) => match v {
+                    Value::Null => self.null()?,
+                    Value::Bool(b) => self.bool(*b)?,
+                    Value::Int(i) => self.int(*i)?,
+                    Value::Num(f) => self.num(*f)?,
+                    Value::Str(s) => self.str(s)?,
+                    Value::Object(map) => {
+                        self.begin_obj()?;
+                        stack.push(Task::ObjRest(map.iter()));
+                    }
+                    Value::Array(items) => {
+                        self.begin_arr()?;
+                        stack.push(Task::ArrRest(items.iter()));
+                    }
+                },
+                Task::ObjRest(mut it) => match it.next() {
+                    Some((k, val)) => {
+                        self.key(k)?;
+                        stack.push(Task::ObjRest(it));
+                        stack.push(Task::Emit(val));
+                    }
+                    None => self.end_obj()?,
+                },
+                Task::ArrRest(mut it) => match it.next() {
+                    Some(val) => {
+                        stack.push(Task::ArrRest(it));
+                        stack.push(Task::Emit(val));
+                    }
+                    None => self.end_arr()?,
+                },
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate that exactly one complete document was written, flush, and
+    /// hand back the sink.
+    pub fn finish(mut self) -> Result<W> {
+        if self.depth != 0 {
+            bail!("stream writer misuse: unclosed container");
+        }
+        if !self.wrote_root {
+            bail!("stream writer misuse: no value written");
+        }
+        self.out.flush()?;
+        Ok(self.out)
+    }
+
+    // -- plumbing ----------------------------------------------------------
+
+    fn in_obj(&self) -> bool {
+        self.depth > 0 && (self.kinds >> (self.depth - 1)) & 1 == 1
+    }
+
+    fn container_nonempty(&self) -> bool {
+        (self.nonempty >> (self.depth - 1)) & 1 == 1
+    }
+
+    fn mark_nonempty(&mut self) {
+        self.nonempty |= 1 << (self.depth - 1);
+    }
+
+    fn push(&mut self, obj: bool) -> Result<()> {
+        if self.depth == MAX_DEPTH {
+            bail!("stream writer misuse: nesting deeper than {MAX_DEPTH} levels");
+        }
+        let bit = 1u64 << self.depth;
+        if obj {
+            self.kinds |= bit;
+        } else {
+            self.kinds &= !bit;
+        }
+        self.nonempty &= !bit;
+        self.depth += 1;
+        Ok(())
+    }
+
+    /// Separator + position bookkeeping before any value lands.
+    fn pre_value(&mut self) -> Result<()> {
+        if self.depth == 0 {
+            if self.wrote_root {
+                bail!("stream writer misuse: multiple root values");
+            }
+            self.wrote_root = true;
+        } else if self.in_obj() {
+            if !self.has_key {
+                bail!("stream writer misuse: object value without a key");
+            }
+            self.has_key = false;
+        } else {
+            if self.container_nonempty() {
+                self.out.write_all(b",")?;
+            }
+            self.newline_indent(self.depth)?;
+            self.mark_nonempty();
+        }
+        Ok(())
+    }
+
+    fn newline_indent(&mut self, depth: usize) -> Result<()> {
+        if let Some(w) = self.indent {
+            self.out.write_all(b"\n")?;
+            for _ in 0..w * depth {
+                self.out.write_all(b" ")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// JSON number formatting shared by the tree and stream writers. Integral
+/// floats keep the decimal point (python-json style "2.0"): a bare "2"
+/// would re-parse as `Int` and break `Value` round-trips.
+pub(crate) fn write_num<W: Write>(out: &mut W, f: f64) -> std::io::Result<()> {
+    if !f.is_finite() {
+        out.write_all(b"null") // JSON has no Inf/NaN
+    } else if f.fract() == 0.0 {
+        write!(out, "{f:.1}")
+    } else {
+        write!(out, "{f}")
+    }
+}
+
+/// Quoted-and-escaped string emission shared by the tree and stream
+/// writers. Runs of plain bytes are written as whole slices; only ASCII
+/// needs escaping, so multi-byte UTF-8 passes through untouched.
+pub(crate) fn write_escaped<W: Write>(out: &mut W, s: &str) -> std::io::Result<()> {
+    out.write_all(b"\"")?;
+    let bytes = s.as_bytes();
+    let mut start = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        let esc: Option<&[u8]> = match b {
+            b'"' => Some(b"\\\""),
+            b'\\' => Some(b"\\\\"),
+            b'\n' => Some(b"\\n"),
+            b'\r' => Some(b"\\r"),
+            b'\t' => Some(b"\\t"),
+            b if b < 0x20 => Some(b""), // \u escape, formatted below
+            _ => None,
+        };
+        if let Some(esc) = esc {
+            out.write_all(&bytes[start..i])?;
+            if esc.is_empty() {
+                write!(out, "\\u{:04x}", b as u32)?;
+            } else {
+                out.write_all(esc)?;
+            }
+            start = i + 1;
+        }
+    }
+    out.write_all(&bytes[start..])?;
+    out.write_all(b"\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{self, obj};
+
+    fn events(text: &str) -> Result<Vec<String>> {
+        let mut r = Reader::new(text.as_bytes());
+        let mut out = Vec::new();
+        while let Some(ev) = r.next()? {
+            out.push(format!("{ev:?}"));
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn reader_emits_expected_event_sequence() {
+        let evs = events(r#"{"a": [1, 2.5, true], "b": null}"#).unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                "ObjBegin",
+                "Key(\"a\")",
+                "ArrBegin",
+                "Int(1)",
+                "Num(2.5)",
+                "Bool(true)",
+                "ArrEnd",
+                "Key(\"b\")",
+                "Null",
+                "ObjEnd",
+            ]
+        );
+    }
+
+    #[test]
+    fn reader_borrows_escape_free_strings() {
+        let text = r#"["plain", "esc\n"]"#;
+        let mut r = Reader::new(text.as_bytes());
+        assert_eq!(r.next().unwrap(), Some(Event::ArrBegin));
+        match r.next().unwrap().unwrap() {
+            Event::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain"),
+            other => panic!("expected a borrowed string, got {other:?}"),
+        }
+        match r.next().unwrap().unwrap() {
+            Event::Str(Cow::Owned(s)) => assert_eq!(s, "esc\n"),
+            other => panic!("expected an owned string, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reader_enforces_trailing_garbage_and_depth() {
+        let mut r = Reader::new(b"[] []");
+        assert_eq!(r.next().unwrap(), Some(Event::ArrBegin));
+        assert_eq!(r.next().unwrap(), Some(Event::ArrEnd));
+        let err = r.next().unwrap_err();
+        assert!(format!("{err:#}").contains("trailing characters"));
+
+        let deep = "[".repeat(MAX_DEPTH + 1);
+        let mut r = Reader::new(deep.as_bytes());
+        let mut last = Ok(None);
+        for _ in 0..=MAX_DEPTH {
+            last = r.next();
+            if last.is_err() {
+                break;
+            }
+        }
+        let msg = format!("{:#}", last.unwrap_err());
+        assert!(msg.contains("nesting deeper than 64 levels"), "{msg}");
+    }
+
+    #[test]
+    fn skip_value_is_strict_about_what_it_scans() {
+        // Skipping still validates: the bad escape inside the skipped
+        // value surfaces with the same message a full parse gives.
+        let mut r = Reader::new(br#"{"a": "\x", "b": 1}"#);
+        assert_eq!(r.next().unwrap(), Some(Event::ObjBegin));
+        assert!(matches!(r.next().unwrap(), Some(Event::Key(_))));
+        let err = r.skip_value().unwrap_err();
+        assert!(format!("{err:#}").contains("bad escape"));
+    }
+
+    #[test]
+    fn lazy_path_helpers_extract_without_a_tree() {
+        let doc = br#"{"clock": 41, "entries": {"00ab": 7}, "meta": {"schema": "x-v1"}}"#;
+        assert_eq!(path_u64(doc, &["clock"]).unwrap(), Some(41));
+        assert_eq!(path_u64(doc, &["entries", "00ab"]).unwrap(), Some(7));
+        assert_eq!(path_str(doc, &["meta", "schema"]).unwrap().as_deref(), Some("x-v1"));
+        assert_eq!(path_raw(doc, &["entries"]).unwrap(), Some(br#"{"00ab": 7}"# as &[u8]));
+        // Missing paths and type mismatches are None, not Err.
+        assert_eq!(path_u64(doc, &["nope"]).unwrap(), None);
+        assert_eq!(path_u64(doc, &["clock", "deeper"]).unwrap(), None);
+        assert_eq!(path_str(doc, &["clock"]).unwrap(), None);
+        // Malformed input scanned on the way is an Err.
+        assert!(path_u64(br#"{"a": [1,, 2], "clock": 1}"#, &["clock"]).is_err());
+        // ...but bytes after the target are never examined (lazy contract).
+        assert_eq!(path_u64(br#"{"clock": 9, garbage"#, &["clock"]).unwrap(), Some(9));
+    }
+
+    #[test]
+    fn writer_matches_tree_serializer_compact_and_pretty() {
+        let doc = obj(vec![
+            ("empty_arr", json::Value::Array(vec![])),
+            ("empty_obj", obj(vec![])),
+            ("nested", obj(vec![("xs", vec![1u32, 2, 3].into()), ("f", 2.0f64.into())])),
+            ("s", "a\"b\\c\né".into()),
+            ("n", json::Value::Null),
+        ]);
+        for indent in [None, Some(1)] {
+            let mut bytes = Vec::new();
+            let mut w = Writer::with_indent(&mut bytes, indent);
+            w.value(&doc).unwrap();
+            w.finish().unwrap();
+            let want = match indent {
+                None => doc.to_string_compact(),
+                Some(_) => doc.to_string_pretty(),
+            };
+            assert_eq!(String::from_utf8(bytes).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn incremental_emission_equals_tree_emission() {
+        let mut bytes = Vec::new();
+        let mut w = Writer::compact(&mut bytes);
+        w.begin_obj().unwrap();
+        w.key("big").unwrap();
+        w.uint(u64::MAX).unwrap();
+        w.key("pts").unwrap();
+        w.begin_arr().unwrap();
+        for i in 0..3i64 {
+            w.begin_obj().unwrap();
+            w.key("i").unwrap();
+            w.int(i).unwrap();
+            w.end_obj().unwrap();
+        }
+        w.end_arr().unwrap();
+        w.end_obj().unwrap();
+        w.finish().unwrap();
+        let want = obj(vec![
+            ("big", u64::MAX.into()),
+            (
+                "pts",
+                json::Value::Array(
+                    (0..3i64).map(|i| obj(vec![("i", i.into())])).collect(),
+                ),
+            ),
+        ])
+        .to_string_compact();
+        assert_eq!(String::from_utf8(bytes).unwrap(), want);
+    }
+
+    #[test]
+    fn writer_rejects_misuse() {
+        let mut w = Writer::compact(Vec::new());
+        assert!(w.end_obj().is_err()); // nothing open
+        w.begin_obj().unwrap();
+        assert!(w.int(1).is_err()); // value without a key
+        w.key("k").unwrap();
+        assert!(w.end_obj().is_err()); // dangling key
+        w.int(1).unwrap();
+        w.end_obj().unwrap();
+        assert!(w.int(2).is_err()); // second root
+        let mut w = Writer::compact(Vec::new());
+        w.begin_arr().unwrap();
+        assert!(w.finish().is_err()); // unclosed container
+    }
+
+    #[test]
+    fn error_context_window_respects_utf8_boundaries() {
+        // Put the defect so the ±12-byte window lands mid-rocket (🚀 is 4
+        // bytes): the clamped snippet must contain no replacement chars
+        // from slicing — only whole characters.
+        let doc = r#"{"k": "🚀🚀🚀", "x": ?}"#;
+        let err = json::parse(doc).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unexpected character"), "{msg}");
+        assert!(!msg.contains('\u{FFFD}'), "window sliced mid-codepoint: {msg}");
+        // The multibyte payload itself still parses fine.
+        let ok = json::parse(r#"{"k": "🚀é漢"}"#).unwrap();
+        assert_eq!(ok.get("k").as_str(), Some("🚀é漢"));
+    }
+
+    #[test]
+    fn error_window_clamps_both_edges() {
+        // 24 é's (2 bytes each): any ±12 window cuts a pair on each side.
+        let body = "é".repeat(24);
+        let doc = format!("[\"{body}\", ?]");
+        let err = json::parse(&doc).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(!msg.contains('\u{FFFD}'), "{msg}");
+        // Errors *inside* the run clamp the leading edge too.
+        let truncated = format!("[\"{body}"); // unterminated string
+        let err = json::parse(&truncated).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unexpected end of input"), "{msg}");
+        assert!(!msg.contains('\u{FFFD}'), "{msg}");
+    }
+}

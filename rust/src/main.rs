@@ -20,6 +20,7 @@ use avsm::roofline::RooflineModel;
 use avsm::runtime::{self, Manifest, Runtime};
 use avsm::sim::TraceRecorder;
 use avsm::trace::{Gantt, GanttOptions};
+use std::io::Write as _;
 use std::path::PathBuf;
 
 const USAGE: &str = "\
@@ -505,7 +506,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("outdir") {
         std::fs::create_dir_all(dir)?;
         let path = PathBuf::from(dir).join("campaign.json");
-        std::fs::write(&path, report.to_json().to_string_pretty())?;
+        // Stream the report to disk — frontier points are emitted as they
+        // are visited, never materialized as one big string.
+        let out = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        report.write_json(out, true)?.flush()?;
         println!("wrote {}", path.display());
     }
     if observe {
@@ -513,7 +517,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         let tel = TelemetryReport::new(&t);
         print!("\n{}", tel.render_text());
         if let Some(path) = &telemetry {
-            std::fs::write(path, tel.to_json().to_string_pretty())?;
+            let out = std::io::BufWriter::new(std::fs::File::create(path)?);
+            tel.write_json(out, true)?.flush()?;
             println!("wrote {}", path.display());
         }
         if let Some(path) = &trace_out {

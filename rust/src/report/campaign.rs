@@ -7,10 +7,12 @@
 
 use crate::campaign::{CampaignResult, NetOutcome};
 use crate::dse::{self, SweepAxes};
-use crate::json::{obj, Value};
+use crate::json::{obj, stream, Value};
 use crate::metrics::{fmt_ps, summarize};
 use crate::obs;
+use anyhow::Result;
 use std::collections::BTreeMap;
+use std::io;
 
 /// Legend for one net's design-point names: `(name token, description)`
 /// per swept axis, keyed on [`dse::Axis::name_key`] — so exotic-axis
@@ -161,9 +163,13 @@ impl<'a> CampaignReport<'a> {
         out
     }
 
-    pub fn to_json(&self) -> Value {
+    /// Top-level report fields *excluding* the big `nets` array — the one
+    /// source of truth shared by [`Self::to_json`] (which appends `nets`
+    /// as a tree) and [`Self::write_json`] (which splices it in streaming),
+    /// so the two emission paths cannot drift.
+    fn summary_fields(&self) -> Vec<(&'static str, Value)> {
         let r = self.result;
-        obj(vec![
+        vec![
             ("schema", "avsm-campaign-v1".into()),
             ("workloads", r.nets.len().into()),
             ("grid_points", r.grid_points.into()),
@@ -172,10 +178,6 @@ impl<'a> CampaignReport<'a> {
             ("skipped_by_bound", r.skipped_by_bound.into()),
             ("errors", r.errors.into()),
             ("panics", r.panics.into()),
-            (
-                "nets",
-                Value::Array(r.nets.iter().map(net_to_value).collect()),
-            ),
             (
                 "cross_net",
                 obj(vec![
@@ -207,12 +209,78 @@ impl<'a> CampaignReport<'a> {
                     ("read_errors", r.read_errors.into()),
                 ]),
             ),
-        ])
+        ]
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = self.summary_fields();
+        fields.push(("nets", Value::Array(self.result.nets.iter().map(net_to_value).collect())));
+        obj(fields)
+    }
+
+    /// Stream the `avsm-campaign-v1` report straight to `out`: each net —
+    /// and each frontier point — is emitted as it is visited, so a
+    /// multi-thousand-point report never materializes as one tree (or one
+    /// string) in memory. Byte-identical to serializing [`Self::to_json`]
+    /// with `to_string_pretty` / `to_string_compact`.
+    pub fn write_json<W: io::Write>(&self, out: W, pretty: bool) -> Result<W> {
+        let mut w =
+            if pretty { stream::Writer::pretty(out) } else { stream::Writer::compact(out) };
+        w.begin_obj()?;
+        write_fields_spliced(&mut w, self.summary_fields(), "nets", |w| {
+            w.begin_arr()?;
+            for net in &self.result.nets {
+                w.begin_obj()?;
+                write_fields_spliced(w, net_fields(net), "frontier", |w| {
+                    w.begin_arr()?;
+                    for p in &net.frontier {
+                        w.value(&dse::point_to_json(p))?;
+                    }
+                    w.end_arr()
+                })?;
+                w.end_obj()?;
+            }
+            w.end_arr()
+        })?;
+        w.end_obj()?;
+        w.finish()
     }
 }
 
-fn net_to_value(net: &NetOutcome) -> Value {
-    obj(vec![
+/// Emit `fields` plus one lazily produced `splice_key` field as the body
+/// of an already-opened object, in the sorted key order `obj()` would
+/// serialize — the splice lands exactly where the tree serializer's
+/// `BTreeMap` would put it, which is what keeps the streaming report
+/// byte-identical to the tree one.
+fn write_fields_spliced<W: io::Write>(
+    w: &mut stream::Writer<W>,
+    mut fields: Vec<(&'static str, Value)>,
+    splice_key: &'static str,
+    splice: impl FnOnce(&mut stream::Writer<W>) -> Result<()>,
+) -> Result<()> {
+    fields.sort_by_key(|&(k, _)| k);
+    let mut splice = Some(splice);
+    for (k, v) in &fields {
+        if *k > splice_key {
+            if let Some(f) = splice.take() {
+                w.key(splice_key)?;
+                f(w)?;
+            }
+        }
+        w.key(k)?;
+        w.value(v)?;
+    }
+    if let Some(f) = splice.take() {
+        w.key(splice_key)?;
+        f(w)?;
+    }
+    Ok(())
+}
+
+/// Per-net report fields *excluding* the big `frontier` array (see
+/// [`CampaignReport::summary_fields`] for the shared-builder rationale).
+fn net_fields(net: &NetOutcome) -> Vec<(&'static str, Value)> {
+    vec![
         ("name", net.net.as_str().into()),
         // Per-net provenance: the base config and axis spec this net's
         // grid was expanded from (heterogeneous campaigns differ per net;
@@ -253,8 +321,13 @@ fn net_to_value(net: &NetOutcome) -> Value {
         ("disk_hits", net.disk_hits.into()),
         ("negative_hits", net.neg_hits.into()),
         ("memory_hits", net.mem_hits.into()),
-        ("frontier", dse::sweep_to_json(&net.frontier)),
-    ])
+    ]
+}
+
+fn net_to_value(net: &NetOutcome) -> Value {
+    let mut fields = net_fields(net);
+    fields.push(("frontier", dse::sweep_to_json(&net.frontier)));
+    obj(fields)
 }
 
 /// Latency histogram of one span kind: count, outcome composition, and
@@ -377,43 +450,69 @@ impl TelemetryReport {
         out
     }
 
-    pub fn to_json(&self) -> Value {
-        let kinds = Value::Object(
-            self.kinds
-                .iter()
-                .map(|(kind, st)| {
-                    let outcomes = Value::Object(
-                        st.outcomes
-                            .iter()
-                            .map(|(o, n)| (o.to_string(), Value::from(*n)))
-                            .collect(),
-                    );
-                    let v = obj(vec![
-                        ("count", st.count.into()),
-                        ("total_ns", st.total_ns.into()),
-                        ("mean_ns", st.mean_ns.into()),
-                        ("p50_ns", st.p50_ns.into()),
-                        ("p90_ns", st.p90_ns.into()),
-                        ("p99_ns", st.p99_ns.into()),
-                        ("max_ns", st.max_ns.into()),
-                        ("outcomes", outcomes),
-                    ]);
-                    (kind.to_string(), v)
-                })
-                .collect(),
-        );
+    /// Top-level telemetry fields *excluding* the big `kinds` object — the
+    /// shared builder behind [`Self::to_json`] and [`Self::write_json`]
+    /// (see [`CampaignReport::summary_fields`]).
+    fn summary_fields(&self) -> Vec<(&'static str, Value)> {
         let counters = Value::Object(
             self.counters.iter().map(|(k, v)| (k.clone(), Value::from(*v))).collect(),
         );
-        obj(vec![
+        vec![
             ("schema", "avsm-campaign-telemetry-v1".into()),
             ("workers", self.workers.into()),
             ("spans_total", self.spans_total.into()),
             ("wall_ns", self.wall_ns.into()),
-            ("kinds", kinds),
             ("counters", counters),
-        ])
+        ]
     }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = self.summary_fields();
+        fields.push((
+            "kinds",
+            Value::Object(
+                self.kinds.iter().map(|(kind, st)| (kind.to_string(), kind_to_value(st))).collect(),
+            ),
+        ));
+        obj(fields)
+    }
+
+    /// Stream the `avsm-campaign-telemetry-v1` report to `out`, one span
+    /// kind at a time. Byte-identical to serializing [`Self::to_json`].
+    pub fn write_json<W: io::Write>(&self, out: W, pretty: bool) -> Result<W> {
+        let mut w =
+            if pretty { stream::Writer::pretty(out) } else { stream::Writer::compact(out) };
+        w.begin_obj()?;
+        write_fields_spliced(&mut w, self.summary_fields(), "kinds", |w| {
+            w.begin_obj()?;
+            // BTreeMap order == the sorted order Value::Object would use.
+            for (kind, st) in &self.kinds {
+                w.key(kind)?;
+                w.value(&kind_to_value(st))?;
+            }
+            w.end_obj()
+        })?;
+        w.end_obj()?;
+        w.finish()
+    }
+}
+
+/// One span kind's histogram object — shared by the tree and streaming
+/// telemetry emitters.
+fn kind_to_value(st: &KindStats) -> Value {
+    let outcomes = Value::Object(
+        st.outcomes.iter().map(|(o, n)| (o.to_string(), Value::from(*n))).collect(),
+    );
+    obj(vec![
+        ("count", st.count.into()),
+        ("total_ns", st.total_ns.into()),
+        ("mean_ns", st.mean_ns.into()),
+        ("p50_ns", st.p50_ns.into()),
+        ("p90_ns", st.p90_ns.into()),
+        ("p99_ns", st.p99_ns.into()),
+        ("max_ns", st.max_ns.into()),
+        ("outcomes", outcomes),
+    ])
 }
 
 #[cfg(test)]
@@ -591,6 +690,37 @@ mod tests {
         assert_eq!(back, j);
     }
 
+    #[test]
+    fn streaming_report_matches_tree_serializer_byte_for_byte() {
+        let r = result();
+        let report = CampaignReport::new(&r);
+        let j = report.to_json();
+        for pretty in [false, true] {
+            let bytes = report.write_json(Vec::new(), pretty).unwrap();
+            let tree = if pretty { j.to_string_pretty() } else { j.to_string_compact() };
+            assert_eq!(String::from_utf8(bytes).unwrap(), tree, "pretty={pretty}");
+        }
+        // An empty campaign exercises the splice-at-end / empty-array edges.
+        let empty = CampaignResult {
+            nets: Vec::new(),
+            grid_points: 0,
+            threads: 1,
+            compiles: 0,
+            disk_hits: 0,
+            neg_hits: 0,
+            mem_hits: 0,
+            rejected_entries: 0,
+            read_errors: 0,
+            bound: crate::compiler::BoundKind::Max,
+            skipped_by_bound: 0,
+            errors: 0,
+            panics: 0,
+        };
+        let report = CampaignReport::new(&empty);
+        let bytes = report.write_json(Vec::new(), true).unwrap();
+        assert_eq!(String::from_utf8(bytes).unwrap(), report.to_json().to_string_pretty());
+    }
+
     fn span(
         kind: &'static str,
         worker: u32,
@@ -653,6 +783,17 @@ mod tests {
         // Serializes and parses back.
         let back = crate::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(back, j);
+
+        // Streaming emission is byte-identical to the tree serializer,
+        // including on the empty report.
+        for pretty in [false, true] {
+            let bytes = r.write_json(Vec::new(), pretty).unwrap();
+            let tree = if pretty { j.to_string_pretty() } else { j.to_string_compact() };
+            assert_eq!(String::from_utf8(bytes).unwrap(), tree, "pretty={pretty}");
+        }
+        let empty = TelemetryReport::new(&obs::Telemetry::default());
+        let bytes = empty.write_json(Vec::new(), true).unwrap();
+        assert_eq!(String::from_utf8(bytes).unwrap(), empty.to_json().to_string_pretty());
     }
 
     #[test]

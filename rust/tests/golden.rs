@@ -333,3 +333,68 @@ fn campaign_journal_schema_is_byte_stable() {
     );
     std::fs::remove_dir_all(&dir).unwrap();
 }
+
+/// Every pinned `-v1` document: the five compact `.json` fixtures plus
+/// each line of the journal fixture (header + all six record classes).
+fn all_fixture_docs() -> Vec<(&'static str, &'static str)> {
+    let mut docs = vec![
+        ("compile_cache_v1.json", fixture(include_str!("fixtures/compile_cache_v1.json"))),
+        (
+            "compile_cache_neg_v1.json",
+            fixture(include_str!("fixtures/compile_cache_neg_v1.json")),
+        ),
+        (
+            "compile_cache_index_v1.json",
+            fixture(include_str!("fixtures/compile_cache_index_v1.json")),
+        ),
+        ("campaign_v1.json", fixture(include_str!("fixtures/campaign_v1.json"))),
+        (
+            "campaign_telemetry_v1.json",
+            fixture(include_str!("fixtures/campaign_telemetry_v1.json")),
+        ),
+        ("lint_v1.json", fixture(include_str!("fixtures/lint_v1.json"))),
+    ];
+    for line in include_str!("fixtures/campaign_journal_v1.jsonl").lines() {
+        docs.push(("campaign_journal_v1.jsonl", line));
+    }
+    docs
+}
+
+/// Tentpole gate: round-tripping every golden fixture through the
+/// streaming `json::stream::Writer` reproduces the checked-in bytes —
+/// the incremental emitter and the tree serializer are interchangeable
+/// on every schema the repo pins.
+#[test]
+fn streaming_writer_reemits_every_fixture_byte_for_byte() {
+    for (name, text) in all_fixture_docs() {
+        let doc = json::parse(text).expect(name);
+        let mut bytes = Vec::new();
+        let mut w = json::stream::Writer::compact(&mut bytes);
+        w.value(&doc).expect(name);
+        w.finish().expect(name);
+        assert_eq!(
+            std::str::from_utf8(&bytes).unwrap(),
+            text,
+            "{name}: streaming writer drifted from the golden fixture"
+        );
+    }
+}
+
+/// Lazy partial-field extraction agrees with the tree on every top-level
+/// field of every fixture: `path_raw` hands back exactly the byte span the
+/// tree parser decodes to the same value, without reading past it.
+#[test]
+fn lazy_extraction_agrees_with_the_tree_on_every_fixture() {
+    for (name, text) in all_fixture_docs() {
+        let tree = json::parse(text).expect(name);
+        let map = tree.as_object().unwrap_or_else(|| panic!("{name}: fixtures are objects"));
+        for (key, want) in map {
+            let raw = json::stream::path_raw(text.as_bytes(), &[key.as_str()])
+                .expect(name)
+                .unwrap_or_else(|| panic!("{name}: field {key:?} not found lazily"));
+            let got = json::parse(std::str::from_utf8(raw).unwrap())
+                .unwrap_or_else(|e| panic!("{name}.{key}: lazy span unparseable: {e}"));
+            assert_eq!(&got, want, "{name}: lazy extraction of {key:?} disagrees with the tree");
+        }
+    }
+}

@@ -1,0 +1,580 @@
+//! Differential tests for the streaming JSON layer: the event-based
+//! `json::stream` Reader/Writer (which `json::parse` and the `Value`
+//! serializers are now built on) is checked against a test-local copy of
+//! the recursive-descent parser and serializer it replaced. Seeded random
+//! `Value` trees (`AVSM_TEST_SEED` pins the file) must serialize
+//! byte-identically — via the tree API *and* via manual event-by-event
+//! emission — and every corrupted document must fail with the exact error
+//! string (message, byte offset, context window) the old parser produced.
+//!
+//! The one deliberate divergence from the historical code: the reference
+//! `err_at` below clamps its "near" window to UTF-8 character boundaries,
+//! matching the fix shipped with the streaming layer (the old window could
+//! slice mid-codepoint; both implementations now clamp identically).
+
+use avsm::json::{parse, stream, Value};
+use avsm::testkit::Rng;
+use std::collections::BTreeMap;
+
+/// The pre-streaming recursive-descent implementation, copied verbatim
+/// (modulo the documented `err_at` clamp) as the behavioural oracle.
+mod reference {
+    use super::{BTreeMap, Value};
+    use anyhow::{anyhow, bail, Result};
+    use std::fmt::Write;
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err_at(p.pos, "trailing characters"));
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        bytes: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Parser<'a> {
+        fn peek(&self) -> Option<u8> {
+            self.bytes.get(self.pos).copied()
+        }
+
+        fn err_at(&self, pos: usize, msg: impl std::fmt::Display) -> anyhow::Error {
+            const WINDOW: usize = 12;
+            let is_continuation = |b: u8| matches!(b, 0x80..=0xBF);
+            let mut start = pos.saturating_sub(WINDOW);
+            let mut end = (pos + WINDOW).min(self.bytes.len());
+            for _ in 0..3 {
+                if start < pos && is_continuation(self.bytes[start]) {
+                    start += 1;
+                }
+            }
+            for _ in 0..3 {
+                if end > pos && end < self.bytes.len() && is_continuation(self.bytes[end]) {
+                    end -= 1;
+                }
+            }
+            let mut near = String::new();
+            if start > 0 {
+                near.push_str("...");
+            }
+            near.push_str(&String::from_utf8_lossy(&self.bytes[start..end]));
+            if end < self.bytes.len() {
+                near.push_str("...");
+            }
+            anyhow!("{msg} at byte {pos} (near {near:?})")
+        }
+
+        fn bump(&mut self) -> Result<u8> {
+            let b = self
+                .peek()
+                .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?;
+            self.pos += 1;
+            Ok(b)
+        }
+
+        fn skip_ws(&mut self) {
+            while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.pos += 1;
+            }
+        }
+
+        fn expect(&mut self, b: u8) -> Result<()> {
+            let at = self.pos;
+            let got = self.bump()?;
+            if got != b {
+                return Err(self.err_at(
+                    at,
+                    format!("expected {:?}, got {:?}", b as char, got as char),
+                ));
+            }
+            Ok(())
+        }
+
+        fn value(&mut self) -> Result<Value> {
+            match self
+                .peek()
+                .ok_or_else(|| self.err_at(self.pos, "unexpected end of input"))?
+            {
+                b'{' => self.object(),
+                b'[' => self.array(),
+                b'"' => Ok(Value::Str(self.string()?)),
+                b't' => self.literal("true", Value::Bool(true)),
+                b'f' => self.literal("false", Value::Bool(false)),
+                b'n' => self.literal("null", Value::Null),
+                b'-' | b'0'..=b'9' => self.number(),
+                other => Err(self
+                    .err_at(self.pos, format!("unexpected character {:?}", other as char))),
+            }
+        }
+
+        fn literal(&mut self, lit: &str, v: Value) -> Result<Value> {
+            if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+                self.pos += lit.len();
+                Ok(v)
+            } else {
+                Err(self.err_at(self.pos, format!("invalid literal (expected {lit:?})")))
+            }
+        }
+
+        fn object(&mut self) -> Result<Value> {
+            self.expect(b'{')?;
+            let mut map = BTreeMap::new();
+            self.skip_ws();
+            if self.peek() == Some(b'}') {
+                self.pos += 1;
+                return Ok(Value::Object(map));
+            }
+            loop {
+                self.skip_ws();
+                let key = self.string()?;
+                self.skip_ws();
+                self.expect(b':')?;
+                self.skip_ws();
+                let val = self.value()?;
+                map.insert(key, val);
+                self.skip_ws();
+                let at = self.pos;
+                match self.bump()? {
+                    b',' => continue,
+                    b'}' => return Ok(Value::Object(map)),
+                    other => {
+                        return Err(self.err_at(
+                            at,
+                            format!("expected ',' or '}}', got {:?}", other as char),
+                        ))
+                    }
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Value> {
+            self.expect(b'[')?;
+            let mut items = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.pos += 1;
+                return Ok(Value::Array(items));
+            }
+            loop {
+                self.skip_ws();
+                items.push(self.value()?);
+                self.skip_ws();
+                let at = self.pos;
+                match self.bump()? {
+                    b',' => continue,
+                    b']' => return Ok(Value::Array(items)),
+                    other => {
+                        return Err(self.err_at(
+                            at,
+                            format!("expected ',' or ']', got {:?}", other as char),
+                        ))
+                    }
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String> {
+            self.expect(b'"')?;
+            let mut s = String::new();
+            loop {
+                let at = self.pos;
+                match self.bump()? {
+                    b'"' => return Ok(s),
+                    b'\\' => match self.bump()? {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000C}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err_at(at, "invalid low surrogate"));
+                                }
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                s.push(
+                                    char::from_u32(c)
+                                        .ok_or_else(|| self.err_at(at, "bad surrogate pair"))?,
+                                );
+                            } else {
+                                s.push(
+                                    char::from_u32(cp)
+                                        .ok_or_else(|| self.err_at(at, "bad unicode escape"))?,
+                                );
+                            }
+                        }
+                        other => {
+                            return Err(
+                                self.err_at(at, format!("bad escape \\{:?}", other as char))
+                            )
+                        }
+                    },
+                    b if b < 0x20 => {
+                        return Err(self.err_at(at, "raw control character in string"))
+                    }
+                    b if b < 0x80 => s.push(b as char),
+                    b => {
+                        let start = self.pos - 1;
+                        let len = utf8_len(b).map_err(|e| self.err_at(start, e))?;
+                        let end = start + len;
+                        if end > self.bytes.len() {
+                            return Err(self.err_at(start, "truncated UTF-8 sequence"));
+                        }
+                        let chunk = std::str::from_utf8(&self.bytes[start..end])
+                            .map_err(|_| self.err_at(start, "invalid UTF-8 in string"))?;
+                        s.push_str(chunk);
+                        self.pos = end;
+                    }
+                }
+            }
+        }
+
+        fn hex4(&mut self) -> Result<u32> {
+            let mut v = 0u32;
+            for _ in 0..4 {
+                let at = self.pos;
+                let b = self.bump()?;
+                let d = (b as char)
+                    .to_digit(16)
+                    .ok_or_else(|| self.err_at(at, "bad hex digit"))?;
+                v = v * 16 + d;
+            }
+            Ok(v)
+        }
+
+        fn number(&mut self) -> Result<Value> {
+            let start = self.pos;
+            if self.peek() == Some(b'-') {
+                self.pos += 1;
+            }
+            let mut is_float = false;
+            while let Some(b) = self.peek() {
+                match b {
+                    b'0'..=b'9' => self.pos += 1,
+                    b'.' | b'e' | b'E' | b'+' | b'-' => {
+                        is_float = true;
+                        self.pos += 1;
+                    }
+                    _ => break,
+                }
+            }
+            let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+            if !is_float {
+                if let Ok(i) = text.parse::<i64>() {
+                    return Ok(Value::Int(i));
+                }
+            }
+            text.parse::<f64>()
+                .map(Value::Num)
+                .map_err(|_| self.err_at(start, format!("invalid number {text:?}")))
+        }
+    }
+
+    fn utf8_len(first: u8) -> Result<usize> {
+        match first {
+            0xC0..=0xDF => Ok(2),
+            0xE0..=0xEF => Ok(3),
+            0xF0..=0xF7 => Ok(4),
+            _ => bail!("invalid UTF-8 lead byte"),
+        }
+    }
+
+    pub fn serialize(v: &Value, indent: Option<usize>) -> String {
+        let mut out = String::new();
+        write_value(&mut out, v, indent, 0);
+        out
+    }
+
+    fn write_value(out: &mut String, v: &Value, indent: Option<usize>, depth: usize) {
+        match v {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Value::Num(f) => {
+                if !f.is_finite() {
+                    out.push_str("null");
+                } else if f.fract() == 0.0 {
+                    let _ = write!(out, "{f:.1}");
+                } else {
+                    let _ = write!(out, "{f}");
+                }
+            }
+            Value::Str(s) => write_string(out, s),
+            Value::Array(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_value(out, item, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push(']');
+            }
+            Value::Object(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, val)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_string(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    write_value(out, val, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push('}');
+            }
+        }
+    }
+
+    fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+        if let Some(w) = indent {
+            out.push('\n');
+            for _ in 0..w * depth {
+                out.push(' ');
+            }
+        }
+    }
+
+    fn write_string(out: &mut String, s: &str) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seeded Value generator
+// ---------------------------------------------------------------------------
+
+/// String atoms covering every serializer branch: plain ASCII, every
+/// short escape, a control character, and 2/3/4-byte UTF-8 sequences.
+const STR_ATOMS: &[&str] =
+    &["a", "Z9", "\"", "\\", "\n", "\t", "\r", "\u{0007}", "é", "Ω", "\u{2014}", "🚀", " ", "/"];
+
+fn gen_string(rng: &mut Rng) -> String {
+    let n = rng.range(0, 6);
+    let mut s = String::new();
+    for _ in 0..n {
+        s.push_str(rng.pick(STR_ATOMS));
+    }
+    s
+}
+
+/// A random tree of bounded depth. Floats are multiples of 1/64 so every
+/// one re-parses exactly; non-finite floats are excluded (both serializers
+/// map them to `null`, which breaks re-parse equality by design).
+fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+    match rng.range(0, if depth == 0 { 4 } else { 6 }) {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool()),
+        2 => Value::Int((rng.next_u64() as i64) >> rng.range(0, 32)),
+        3 => Value::Num((rng.next_u64() % 2_000_000) as f64 / 64.0 - 10_000.0),
+        4 => Value::Str(gen_string(rng)),
+        5 => Value::Array((0..rng.range(0, 4)).map(|_| gen_value(rng, depth - 1)).collect()),
+        _ => Value::Object(
+            (0..rng.range(0, 4))
+                .map(|i| (format!("{}_{i}", gen_string(rng)), gen_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// Emit `v` through the streaming writer one event at a time — the manual
+/// incremental path a streaming producer (report emitter, journal) uses,
+/// as opposed to the `Writer::value` convenience the tree serializer uses.
+fn emit_events<W: std::io::Write>(w: &mut stream::Writer<W>, v: &Value) -> anyhow::Result<()> {
+    match v {
+        Value::Null => w.null(),
+        Value::Bool(b) => w.bool(*b),
+        Value::Int(i) => w.int(*i),
+        Value::Num(f) => w.num(*f),
+        Value::Str(s) => w.str(s),
+        Value::Array(items) => {
+            w.begin_arr()?;
+            for item in items {
+                emit_events(w, item)?;
+            }
+            w.end_arr()
+        }
+        Value::Object(map) => {
+            w.begin_obj()?;
+            for (k, val) in map {
+                w.key(k)?;
+                emit_events(w, val)?;
+            }
+            w.end_obj()
+        }
+    }
+}
+
+const CASES: usize = 200;
+
+fn seeded_docs() -> Vec<Value> {
+    let mut rng = Rng::new(avsm::testkit::seed_from_env(0x5EED_1509));
+    (0..CASES).map(|_| gen_value(&mut rng, 6)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Differential properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_trees_serialize_identically_to_the_reference() {
+    for (i, v) in seeded_docs().iter().enumerate() {
+        for (indent, tree) in
+            [(None, v.to_string_compact()), (Some(1), v.to_string_pretty())]
+        {
+            let want = reference::serialize(v, indent);
+            assert_eq!(tree, want, "case {i}: tree serializer drifted from the reference");
+            let mut bytes = Vec::new();
+            let mut w = stream::Writer::with_indent(&mut bytes, indent);
+            emit_events(&mut w, v).unwrap();
+            w.finish().unwrap();
+            assert_eq!(
+                String::from_utf8(bytes).unwrap(),
+                want,
+                "case {i}: event-by-event emission drifted from the reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_trees_reparse_identically_to_the_reference() {
+    for (i, v) in seeded_docs().iter().enumerate() {
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let ours = parse(&text).unwrap_or_else(|e| panic!("case {i}: {e}"));
+            let theirs = reference::parse(&text).unwrap();
+            assert_eq!(ours, theirs, "case {i}: parse disagrees with the reference");
+            assert_eq!(&ours, v, "case {i}: round-trip lost information");
+        }
+    }
+}
+
+#[test]
+fn corrupted_docs_fail_with_the_reference_error_byte_for_byte() {
+    let mut rng = Rng::new(avsm::testkit::seed_from_env(0xBAD_D0C));
+    let mut checked = 0usize;
+    for v in seeded_docs().iter().take(60) {
+        let text = v.to_string_compact();
+        // Truncation at every char boundary: the torn-journal-line shape.
+        for cut in 0..text.len() {
+            if !text.is_char_boundary(cut) {
+                continue;
+            }
+            compare_outcomes(&text[..cut], &mut checked);
+        }
+        // Point mutations at random ASCII positions: the corrupted-cache
+        // shape. Only ASCII positions are touched so the input stays valid
+        // UTF-8 (the parsers take `&str`).
+        for _ in 0..16 {
+            let at = rng.range(0, text.len() as u64 - 1) as usize;
+            if !text.as_bytes()[at].is_ascii() {
+                continue;
+            }
+            let mut mutated = text.clone().into_bytes();
+            mutated[at] = *rng.pick(b"{}[]:,\"x0!");
+            let mutated = String::from_utf8(mutated).unwrap();
+            compare_outcomes(&mutated, &mut checked);
+        }
+    }
+    assert!(checked > 1000, "only {checked} corrupted documents exercised");
+}
+
+/// Both parsers must agree Ok/Err; on Err the *entire* rendered error —
+/// message, byte offset, context window — must match.
+fn compare_outcomes(text: &str, checked: &mut usize) {
+    *checked += 1;
+    match (parse(text), reference::parse(text)) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "parsers disagree on {text:?}"),
+        (Err(a), Err(b)) => {
+            assert_eq!(a.to_string(), b.to_string(), "error drifted on {text:?}")
+        }
+        (a, b) => panic!(
+            "outcome disagreement on {text:?}: ours {:?} vs reference {:?}",
+            a.map(|_| ()),
+            b.map(|_| ())
+        ),
+    }
+}
+
+#[test]
+fn skip_value_errors_where_parse_errors() {
+    // The lazy skip path must be exactly as strict as the tree parser on
+    // syntax (it never decodes escapes or numbers it skips, but it lexes
+    // them), so a corrupted document can't sneak past a lazy fingerprint
+    // check only to explode later in a full decode.
+    for v in seeded_docs().iter().take(40) {
+        let text = v.to_string_compact();
+        for cut in (0..text.len()).filter(|&c| text.is_char_boundary(c)) {
+            let doc = &text[..cut];
+            let mut r = stream::Reader::new(doc.as_bytes());
+            let skipped = r.skip_value().and_then(|()| r.next().map(|_| ()));
+            assert_eq!(
+                skipped.is_err(),
+                parse(doc).is_err(),
+                "skip_value strictness drifted on {doc:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lazy_extraction_agrees_with_the_tree_on_random_objects() {
+    let mut rng = Rng::new(avsm::testkit::seed_from_env(0x1A2_EE));
+    for _ in 0..CASES {
+        let map: BTreeMap<String, Value> = (0..rng.range(1, 6))
+            .map(|i| (format!("{}_{i}", gen_string(&mut rng)), gen_value(&mut rng, 4)))
+            .collect();
+        let doc = Value::Object(map.clone());
+        let text = doc.to_string_compact();
+        for (key, want) in &map {
+            let raw = stream::path_raw(text.as_bytes(), &[key.as_str()])
+                .unwrap()
+                .unwrap_or_else(|| panic!("field {key:?} not found in {text}"));
+            let got = parse(std::str::from_utf8(raw).unwrap()).unwrap();
+            assert_eq!(&got, want, "lazy extraction of {key:?} disagrees with the tree");
+        }
+    }
+}

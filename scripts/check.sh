@@ -41,6 +41,23 @@ cargo test -q
 echo "== dse_sweep bench (smoke mode)"
 AVSM_BENCH_FAST=1 cargo bench --bench dse_sweep
 
+# Streaming-JSON gates: the golden suite re-emits every pinned -v1 fixture
+# through json::stream::Writer and diffs byte-for-byte against the
+# checked-in files, and the differential suite pins the event reader and
+# incremental writer against a copy of the recursive-descent
+# implementation they replaced (same bytes, same error strings and byte
+# offsets) over seeded random documents.
+echo "== golden fixtures through the streaming writer (byte-for-byte)"
+cargo test -q --release --test golden
+echo "== streaming JSON differential suite (pinned AVSM_TEST_SEED)"
+AVSM_TEST_SEED=20260801 cargo test -q --release --test json_diff
+
+# The json bench smokes the hot-path claims: lazy partial-field index
+# reads must beat full-tree parses, and streaming report emission must be
+# byte-identical to (and no slower than) tree emission.
+echo "== json bench (smoke mode, lazy vs tree parse + stream vs tree emit)"
+AVSM_BENCH_FAST=1 cargo bench --bench json
+
 # Deterministic-seed property smoke: re-run the randomized differential
 # suite (lower-bound admissibility, pruned-vs-unpruned frontier identity,
 # solver-vs-oracle, injected cache-fault degradation, resume-from-any-
