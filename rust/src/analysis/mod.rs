@@ -31,6 +31,7 @@
 //! | campaign/axis spec | `AVSM030`–`AVSM037` | duplicate axes, empty value lists, grid explosion, requirement ranges, workloads shape |
 //! | cache fsck         | `AVSM040`–`AVSM048` | artifact/negative/index integrity, LRU bound, stale locks, temp litter |
 //! | journal pre-check  | `AVSM050`–`AVSM056` | header/schema/spec-fingerprint, torn tail, corrupt records |
+//! | serve protocol     | `AVSM060`–`AVSM064` | request parse/UTF-8 (`060`), envelope version (`061`), kind (`062`), oversized line (`063`), field validation (`064`) — the daemon's admission gate; spec problems inside a request reuse `AVSM03x` |
 //!
 //! The machine-readable form is the `avsm-lint-v1` JSON report
 //! ([`Report::to_json`]), pinned byte-for-byte by a golden fixture.

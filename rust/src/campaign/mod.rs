@@ -143,7 +143,7 @@ pub mod pool;
 pub mod store;
 
 pub use frontier::StreamingFrontier;
-pub use store::PersistentCache;
+pub use store::{CacheStats, PersistentCache};
 
 use crate::compiler::BoundKind;
 use crate::config::SystemConfig;
@@ -151,6 +151,7 @@ use crate::dse::{self, DesignPoint, SweepAxes};
 use crate::graph::DnnGraph;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// One workload of a campaign: a net plus optional overrides of the
 /// campaign-wide base config and sweep axes. With both overrides `None`
@@ -493,7 +494,7 @@ fn spec_parts(spec: &CampaignSpec, opts: &CampaignOptions, prune: bool) -> journ
 /// condition ("lint never lies", property-tested), which is what makes
 /// the pre-flight observation-only: it rejects precisely the specs the
 /// gate below would reject, just better.
-fn preflight_report(spec: &CampaignSpec) -> crate::analysis::Report {
+pub fn preflight_report(spec: &CampaignSpec) -> crate::analysis::Report {
     use crate::analysis::passes;
     let mut report = crate::analysis::Report::default();
     if spec.workloads.is_empty() {
@@ -525,10 +526,41 @@ fn preflight_report(spec: &CampaignSpec) -> crate::analysis::Report {
 /// byte-identical single-threaded (property-tested; under parallel
 /// workers the skip counters race benignly either way).
 pub fn run(spec: &CampaignSpec, opts: &CampaignOptions) -> Result<CampaignResult> {
+    run_with_hooks(spec, opts, RunHooks::default())
+}
+
+/// Host hooks for embedding the campaign engine in a resident process
+/// (the `serve` daemon). Everything here is optional; `run` passes the
+/// default and behaves exactly as before.
+#[derive(Default)]
+pub struct RunHooks<'h> {
+    /// Pre-built per-workload caches to use instead of opening fresh
+    /// ones, index-aligned with `spec.workloads` (the run bails if the
+    /// lengths differ). This is what makes the daemon's cache *resident*:
+    /// the memory tier survives across requests, so a resubmitted job is
+    /// compile-free. Report counters stay per-run — the engine snapshots
+    /// each cache's [`CacheStats`] at start and reports deltas, so a
+    /// long-lived cache's history never bleeds into a report (for fresh
+    /// caches the snapshot is all zeros and the arithmetic is the
+    /// identity, byte-for-byte).
+    pub caches: Option<Vec<Arc<PersistentCache>>>,
+    /// Called on the coordinating thread for each feasible design point,
+    /// in completion order, with the workload's net name — the daemon's
+    /// live frontier stream. Journal-replayed points are delivered too
+    /// (before any fresh ones), so a resumed run streams its full set.
+    pub on_point: Option<&'h mut dyn FnMut(&str, &DesignPoint)>,
+}
+
+/// [`run`] with [`RunHooks`] — the resident-daemon entry point.
+pub fn run_with_hooks(
+    spec: &CampaignSpec,
+    opts: &CampaignOptions,
+    hooks: RunHooks,
+) -> Result<CampaignResult> {
     if crate::obs::enabled() {
-        run_campaign::<true>(spec, opts)
+        run_campaign::<true>(spec, opts, hooks)
     } else {
-        run_campaign::<false>(spec, opts)
+        run_campaign::<false>(spec, opts, hooks)
     }
 }
 
@@ -546,6 +578,7 @@ fn unit_span<const OBS: bool>(kind: &'static str, net: &str, unit: usize) -> cra
 fn run_campaign<const OBS: bool>(
     spec: &CampaignSpec,
     opts: &CampaignOptions,
+    mut hooks: RunHooks,
 ) -> Result<CampaignResult> {
     // On-by-default static pre-flight (`--no-preflight` opts out): same
     // reject set as the plain validation gate below, but the refusal is a
@@ -585,17 +618,35 @@ fn run_campaign<const OBS: bool>(
         (ni, u - offsets[ni])
     };
 
-    let caches: Vec<PersistentCache> = spec
-        .workloads
-        .iter()
-        .map(|_| {
-            PersistentCache::with_max_entries(
-                dse::DSE_COMPILE_OPTS,
-                opts.cache_dir.clone(),
-                opts.cache_max_entries,
-            )
-        })
-        .collect::<Result<_>>()?;
+    let caches: Vec<Arc<PersistentCache>> = match hooks.caches.take() {
+        Some(injected) => {
+            if injected.len() != n_nets {
+                bail!(
+                    "RunHooks supplied {} caches for {} workloads",
+                    injected.len(),
+                    n_nets
+                );
+            }
+            injected
+        }
+        None => spec
+            .workloads
+            .iter()
+            .map(|_| {
+                PersistentCache::with_max_entries(
+                    dse::DSE_COMPILE_OPTS,
+                    opts.cache_dir.clone(),
+                    opts.cache_max_entries,
+                )
+                .map(Arc::new)
+            })
+            .collect::<Result<_>>()?,
+    };
+    // Counters are reported as deltas against this snapshot, so injected
+    // resident caches attribute exactly this run's work (for fresh caches
+    // the snapshot is zero and nothing changes).
+    let start_stats: Vec<CacheStats> = caches.iter().map(|c| c.stats()).collect();
+    let mut on_point = hooks.on_point.take();
 
     let prune = opts.prune && !opts.keep_points;
 
@@ -820,6 +871,9 @@ fn run_campaign<const OBS: bool>(
                 if opts.keep_points {
                     kept[ni][ci] = Some(p.clone());
                 }
+                if let Some(cb) = on_point.as_mut() {
+                    cb(&spec.workloads[ni].net.name, &p);
+                }
                 lock_recovered(&frontiers[ni]).insert_with_seq(p, ci);
             }
             journal::UnitRecord::Skipped { by_occupancy: true } => skipped_occ[ni] += 1,
@@ -880,6 +934,9 @@ fn run_campaign<const OBS: bool>(
                     if opts.keep_points {
                         kept[ni][ci] = Some(p.clone());
                     }
+                    if let Some(cb) = on_point.as_mut() {
+                        cb(&spec.workloads[ni].net.name, &p);
+                    }
                     lock_recovered(&frontiers[ni]).insert_with_seq(p, ci);
                     journal::UnitRecord::Feasible { latency_ps }
                 }
@@ -929,13 +986,13 @@ fn run_campaign<const OBS: bool>(
     let (mut rejected, mut read_errors) = (0u64, 0u64);
     for (ni, frontier) in frontiers.into_iter().enumerate() {
         let frontier = frontier.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
-        let cache = &caches[ni];
-        compiles += cache.compiles();
-        disk_hits += cache.disk_hits();
-        neg_hits += cache.neg_hits();
-        mem_hits += cache.mem_hits();
-        rejected += cache.rejected();
-        read_errors += cache.read_errors();
+        let stats = caches[ni].stats().delta_since(start_stats[ni]);
+        compiles += stats.compiles;
+        disk_hits += stats.disk_hits;
+        neg_hits += stats.neg_hits;
+        mem_hits += stats.mem_hits;
+        rejected += stats.rejected;
+        read_errors += stats.read_errors;
         let dominated = frontier.dominated();
         let pruned = frontier.pruned();
         nets.push(NetOutcome {
@@ -955,12 +1012,12 @@ fn run_campaign<const OBS: bool>(
             skipped_by_critical_path: skipped_cp[ni],
             dominated,
             pruned,
-            compiles: cache.compiles(),
-            disk_hits: cache.disk_hits(),
-            neg_hits: cache.neg_hits(),
-            mem_hits: cache.mem_hits(),
-            rejected: cache.rejected(),
-            read_errors: cache.read_errors(),
+            compiles: stats.compiles,
+            disk_hits: stats.disk_hits,
+            neg_hits: stats.neg_hits,
+            mem_hits: stats.mem_hits,
+            rejected: stats.rejected,
+            read_errors: stats.read_errors,
             points: kept[ni].drain(..).flatten().collect(),
             frontier: frontier.into_points(),
         });
@@ -976,7 +1033,11 @@ fn run_campaign<const OBS: bool>(
         crate::obs::count("cache.read_errors", read_errors);
         crate::obs::count(
             "cache.lock_steals",
-            caches.iter().map(|c| c.lock_steals()).sum::<u64>(),
+            caches
+                .iter()
+                .zip(&start_stats)
+                .map(|(c, s)| c.stats().delta_since(*s).lock_steals)
+                .sum::<u64>(),
         );
     }
     let skipped_total = nets.iter().map(|n| n.skipped_by_bound).sum();

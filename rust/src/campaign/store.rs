@@ -229,12 +229,23 @@ pub fn negative_from_json(text: &str, expect_key: &CompileKey) -> Result<String>
     )?;
     // Fully lazy: the diagnostic is the only payload, so no tree is ever
     // built for a negative hit — scan, extract, done.
-    match stream::path_str(text.as_bytes(), &["diagnostic"])
+    let diag = match stream::path_str(text.as_bytes(), &["diagnostic"])
         .context("negative cache entry parse")?
     {
-        Some(d) => Ok(d.into_owned()),
-        None => Err(anyhow::anyhow!("missing/invalid string field \"diagnostic\"")),
-    }
+        Some(d) => d.into_owned(),
+        None => bail!("missing/invalid string field \"diagnostic\""),
+    };
+    // Strict end-of-document check: `path_str` never looks past its target
+    // field, so on its own the lazy load would accept a negative record
+    // with trailing garbage — exactly the corpse a torn concatenated write
+    // leaves — that the tree parser rejects. One skip-scan re-validates the
+    // whole document, applying the same trailing-garbage classification
+    // the cache-index path uses, so lazy and tree parses agree on every
+    // corrupt negative (differential-tested).
+    let mut r = stream::Reader::new(text.as_bytes());
+    r.skip_value().context("negative cache entry parse")?;
+    r.next().context("negative cache entry parse")?;
+    Ok(diag)
 }
 
 /// Lazy pre-flight shared by artifact and negative loads: verify the
@@ -376,11 +387,18 @@ impl Drop for CacheLock {
     }
 }
 
-/// Is `pid` a live process? Only answerable portably-enough on /proc
-/// platforms; elsewhere assume live (the acquisition timeout still
-/// guarantees progress).
+/// Can this platform *prove* a lock holder dead? Only `/proc` platforms
+/// can; everywhere else liveness is unknowable cheaply, so stealing is
+/// disabled outright (see [`CacheLock::acquire_gated`]) — a live holder
+/// and a dead one are indistinguishable there, and stealing a live lock
+/// is strictly worse than waiting out the timeout degrade.
+pub(crate) const CAN_PROBE_LIVENESS: bool = cfg!(target_os = "linux");
+
+/// Is `pid` a live process? Only meaningful when [`CAN_PROBE_LIVENESS`];
+/// elsewhere the answer is a conservative "assume live" and callers must
+/// not base a steal on it.
 pub(crate) fn pid_alive(pid: u32) -> bool {
-    if cfg!(target_os = "linux") {
+    if CAN_PROBE_LIVENESS {
         Path::new(&format!("/proc/{pid}")).exists()
     } else {
         true
@@ -394,6 +412,19 @@ impl CacheLock {
     /// the caller to unlocked last-writer-wins — an availability choice:
     /// the index is advisory, a deadlocked campaign is not.
     fn acquire(dir: &Path, steals: &AtomicU64) -> Option<CacheLock> {
+        Self::acquire_gated(dir, steals, CAN_PROBE_LIVENESS)
+    }
+
+    /// [`CacheLock::acquire`] with the steal gate explicit. `allow_steal`
+    /// is [`CAN_PROBE_LIVENESS`] in production: where `/proc` does not
+    /// exist, *every* holder "looks dead" to a naive probe, so stealing
+    /// would break live locks immediately instead of honoring the ~500 ms
+    /// degrade. With stealing off, both steal triggers — dead-PID and
+    /// persistently unreadable payload — are disabled and an occupied lock
+    /// simply times out to last-writer-wins. Parameterized (rather than
+    /// `cfg`-duplicated) so the conservative path is unit-testable on any
+    /// platform.
+    fn acquire_gated(dir: &Path, steals: &AtomicU64, allow_steal: bool) -> Option<CacheLock> {
         let path = lock_path(dir);
         // The whole acquisition (polls, sleeps, steals included) is one
         // `lock.wait` span — its duration is exactly the time this worker
@@ -416,13 +447,14 @@ impl CacheLock {
                     let holder: Option<u32> = std::fs::read_to_string(&path)
                         .ok()
                         .and_then(|s| s.trim().parse().ok());
-                    let stale = match holder {
-                        Some(pid) => !pid_alive(pid),
-                        None => {
-                            unreadable_polls += 1;
-                            unreadable_polls > 10
-                        }
-                    };
+                    let stale = allow_steal
+                        && match holder {
+                            Some(pid) => !pid_alive(pid),
+                            None => {
+                                unreadable_polls += 1;
+                                unreadable_polls > 10
+                            }
+                        };
                     if stale {
                         // Steal: unlink and retry the atomic create. Two
                         // stealers may race on the unlink; only one wins
@@ -881,6 +913,54 @@ impl PersistentCache {
     pub fn mem_misses(&self) -> u64 {
         self.mem.misses()
     }
+
+    /// Point-in-time snapshot of every reported counter. Counters only
+    /// grow, so a long-lived cache (the `avsm serve` resident tier) can
+    /// attribute one run's work as `end.delta_since(start)` — exact as
+    /// long as runs on the cache are serialized, which the daemon's job
+    /// runner guarantees. A fresh cache's snapshot is all zeros, so the
+    /// delta of a single run over a fresh cache equals the raw counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            compiles: self.compiles(),
+            disk_hits: self.disk_hits(),
+            neg_hits: self.neg_hits(),
+            mem_hits: self.mem_hits(),
+            rejected: self.rejected(),
+            read_errors: self.read_errors(),
+            lock_steals: self.lock_steals(),
+        }
+    }
+}
+
+/// Snapshot of a [`PersistentCache`]'s counters (see
+/// [`PersistentCache::stats`]); the fields mirror the per-net counters the
+/// campaign report carries.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub compiles: u64,
+    pub disk_hits: u64,
+    pub neg_hits: u64,
+    pub mem_hits: u64,
+    pub rejected: u64,
+    pub read_errors: u64,
+    pub lock_steals: u64,
+}
+
+impl CacheStats {
+    /// Counter growth since `start` (field-wise `self - start`, saturating
+    /// so a mismatched pair degrades to zeros instead of wrapping).
+    pub fn delta_since(self, start: CacheStats) -> CacheStats {
+        CacheStats {
+            compiles: self.compiles.saturating_sub(start.compiles),
+            disk_hits: self.disk_hits.saturating_sub(start.disk_hits),
+            neg_hits: self.neg_hits.saturating_sub(start.neg_hits),
+            mem_hits: self.mem_hits.saturating_sub(start.mem_hits),
+            rejected: self.rejected.saturating_sub(start.rejected),
+            read_errors: self.read_errors.saturating_sub(start.read_errors),
+            lock_steals: self.lock_steals.saturating_sub(start.lock_steals),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1247,6 +1327,56 @@ mod tests {
             CacheIndex::from_json(&std::fs::read_to_string(index_path(&dir)).unwrap()).unwrap();
         assert_eq!(index.entries.len(), 1, "the touch went through");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn negative_entries_classify_trailing_garbage_like_the_tree_parser() {
+        // Differential regression: the lazy negative load used to stop at
+        // the diagnostic field and accept anything after it. Lazy and tree
+        // parses must agree on every suffix — benign whitespace accepted,
+        // trailing garbage (a torn concatenated write) rejected by both.
+        let net = models::lenet(28);
+        let key = CompileKey::new(&net, &SystemConfig::base_paper(), opts());
+        let text = negative_to_json(&key, "no legal tiling");
+        for suffix in ["", " ", "\n", "\t \r\n"] {
+            let doc = format!("{text}{suffix}");
+            assert!(json::parse(&doc).is_ok(), "tree accepts {suffix:?}");
+            assert_eq!(
+                negative_from_json(&doc, &key).unwrap(),
+                "no legal tiling",
+                "lazy accepts {suffix:?}"
+            );
+        }
+        for suffix in ["x", " {}", "1", ",\"k\":0}", &text.clone()] {
+            let doc = format!("{text}{suffix}");
+            assert!(json::parse(&doc).is_err(), "tree rejects {suffix:?}");
+            assert!(
+                negative_from_json(&doc, &key).is_err(),
+                "lazy must reject {suffix:?} too"
+            );
+        }
+    }
+
+    #[test]
+    fn without_liveness_probing_an_occupied_lock_is_never_stolen() {
+        // The conservative (non-/proc) path: a lock whose holder cannot be
+        // proven dead — here a provably-dead PID *and* an unreadable
+        // payload, the two steal triggers — must wait out the full timeout
+        // and degrade to None with the file untouched, not steal.
+        for payload in ["999999999", "not a pid"] {
+            let dir = tmp_dir("no_steal");
+            std::fs::write(lock_path(&dir), payload).unwrap();
+            let steals = AtomicU64::new(0);
+            let got = CacheLock::acquire_gated(&dir, &steals, false);
+            assert!(got.is_none(), "acquisition times out on {payload:?}");
+            assert_eq!(steals.load(Ordering::Relaxed), 0, "never stolen");
+            assert_eq!(
+                std::fs::read_to_string(lock_path(&dir)).unwrap(),
+                payload,
+                "holder's lock file left intact"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
     }
 
     #[test]

@@ -465,7 +465,9 @@ pub fn solve_requirement(
         bail!(
             "axis {} is not monotone over ({lo}, {hi}): latency {lat_lo} ps \
              at {lo} is below {lat_hi} ps at {hi}; the requirement solver \
-             needs latency non-increasing in the axis value",
+             needs latency non-increasing in the axis value (the grid-scan \
+             fallback — solve_requirement_scan, `avsm topdown --scan` — \
+             handles non-monotone axes at O(range) probes)",
             axis.key()
         );
     }
@@ -484,6 +486,60 @@ pub fn solve_requirement(
         }
     }
     Ok(solution(Some(hi)))
+}
+
+/// Exhaustive counterpart of [`solve_requirement`] for axes the binary
+/// search refuses (carried ROADMAP item): an ascending O(range) grid scan
+/// that returns the **smallest** axis value meeting the target with no
+/// monotonicity assumption at all — correct on any latency shape, at
+/// linear probe cost. `avsm topdown --scan` selects it.
+///
+/// Same [`RequirementSolution`] shape and the same compile-sharing
+/// contract: all probes share one [`CompileCache`], so a retime-only axis
+/// still compiles exactly once no matter how many values are probed. On a
+/// monotone axis the answer equals the binary search's (property-tested);
+/// the scan just pays `O(hi - lo)` probes for it instead of `O(log)`.
+pub fn solve_requirement_scan(
+    net: &DnnGraph,
+    base: &SystemConfig,
+    axis: Axis,
+    target_latency_ps: u64,
+    range: (u64, u64),
+) -> Result<RequirementSolution> {
+    if !axis.is_scalar() {
+        bail!(
+            "axis {} is not scalar-valued; the requirement solver needs a \
+             totally ordered axis",
+            axis.key()
+        );
+    }
+    let (lo, hi) = range;
+    if lo == 0 || lo > hi {
+        bail!(
+            "{} range must satisfy 0 < lo <= hi, got ({lo}, {hi})",
+            axis.key()
+        );
+    }
+    let cache = CompileCache::new(DSE_COMPILE_OPTS);
+    let probes = std::cell::Cell::new(0usize);
+    let latency_at = |v: u64| -> Result<u64> {
+        let mut sys = base.clone();
+        axis.apply(&mut sys, AxisValue::Scalar(v))?;
+        probes.set(probes.get() + 1);
+        Ok(evaluate_cached(net, &sys, "probe", &cache)?.latency_ps)
+    };
+    let solution = |value: Option<u64>| RequirementSolution {
+        axis,
+        value,
+        probes: probes.get(),
+        compiles: cache.misses(),
+    };
+    for v in lo..=hi {
+        if latency_at(v)? <= target_latency_ps {
+            return Ok(solution(Some(v)));
+        }
+    }
+    Ok(solution(None))
 }
 
 /// The NCE-frequency instance of [`solve_requirement`], kept as a
@@ -819,6 +875,48 @@ mod tests {
         let net = models::lenet(28);
         let err = solve_requirement(&net, &base(), Axis::ArrayGeometry, 1, (1, 2)).unwrap_err();
         assert!(format!("{err:#}").contains("not scalar"), "{err:#}");
+        let err =
+            solve_requirement_scan(&net, &base(), Axis::ArrayGeometry, 1, (1, 2)).unwrap_err();
+        assert!(format!("{err:#}").contains("not scalar"), "{err:#}");
+    }
+
+    #[test]
+    fn grid_scan_agrees_with_binary_search_on_monotone_axes() {
+        // The fallback's correctness anchor: wherever the binary search is
+        // willing to answer, the O(range) scan must return the same
+        // minimal value — at several targets, including an unreachable
+        // one (both must say None).
+        let net = models::lenet(28);
+        let b = base();
+        let baseline = evaluate(&net, &b, "b").unwrap().latency_ps;
+        let range = (50, 80); // small: the scan probes every value
+        for target in [baseline / 4, baseline, baseline * 2, baseline * 100] {
+            let fast = solve_requirement(&net, &b, Axis::NceFreqMhz, target, range);
+            let slow = solve_requirement_scan(&net, &b, Axis::NceFreqMhz, target, range)
+                .unwrap();
+            match fast {
+                Ok(fast) => assert_eq!(fast.value, slow.value, "target {target}"),
+                // The binary search may refuse a range it can't certify;
+                // the scan never refuses. No cross-check possible then.
+                Err(e) => panic!("monotone axis refused: {e:#}"),
+            }
+        }
+    }
+
+    #[test]
+    fn grid_scan_shares_one_compile_on_retime_axes() {
+        // Same compile-reuse contract as the binary search: a retime-only
+        // axis pays one compilation no matter how many values the scan
+        // probes (here: the whole range, for an unreachable target).
+        let net = models::lenet(28);
+        let b = base();
+        let sol = solve_requirement_scan(&net, &b, Axis::NceFreqMhz, 1, (50, 70)).unwrap();
+        assert_eq!(sol.value, None, "1 ps is unreachable");
+        assert_eq!(sol.probes, 21, "scan probes every value in range");
+        assert_eq!(sol.compiles, 1, "retime-only axis compiles once");
+        // And the scan validates its range like the search does.
+        let err = solve_requirement_scan(&net, &b, Axis::NceFreqMhz, 1, (10, 5)).unwrap_err();
+        assert!(format!("{err:#}").contains("0 < lo <= hi"), "{err:#}");
     }
 
     #[test]

@@ -8,6 +8,24 @@
 use super::net::{DnnGraph, Layer};
 use super::ops::{Activation, Op, Padding, TensorShape};
 
+/// Resolve a built-in model by its CLI/protocol name, with the per-net
+/// default input size when `hw == 0`. One table shared by `main.rs` and
+/// the serve daemon, so "which names exist and what does hw=0 mean" has a
+/// single answer; `None` means "not a built-in" (callers fall back to
+/// treating the name as a `.graph.json` path, or reject it).
+pub fn by_name(name: &str, hw: u32) -> Option<DnnGraph> {
+    let hw_or = |d: u32| if hw == 0 { d } else { hw };
+    Some(match name {
+        "dilated_vgg" => dilated_vgg(hw_or(256), 1, 16),
+        "dilated_vgg_tiny" => dilated_vgg(hw_or(64), 8, 16),
+        "vgg16" => vgg16(hw_or(224), 1000),
+        "lenet" => lenet(hw_or(28)),
+        "tiny_resnet" => tiny_resnet(hw_or(32), 16, 3),
+        "mobilenet" => mobilenet(hw_or(224), 1, 1000),
+        _ => return None,
+    })
+}
+
 fn conv(name: &str, cin: u32, cout: u32, k: u32, dilation: u32, act: Activation) -> Layer {
     Layer::new(
         name,

@@ -26,6 +26,9 @@
 //! * [`analysis`] — static diagnostics (`avsm lint`): pre-flight passes
 //!   over nets/configs/specs plus cache and journal fsck, reported as
 //!   stable `AVSM0xx` codes and the `avsm-lint-v1` report.
+//! * [`serve`] — the resident campaign daemon: sweep/campaign/solve jobs
+//!   over a line-delimited JSON protocol, with a process-lifetime compile
+//!   cache and lint-gated admission.
 //! * [`runtime`] — PJRT loader executing the AOT JAX/Pallas artifacts.
 //! * [`coordinator`] — the end-to-end flow of Fig 1 with phase timing (Fig 3).
 
@@ -47,6 +50,7 @@ pub mod obs;
 pub mod report;
 pub mod roofline;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod taskgraph;
 pub mod testkit;

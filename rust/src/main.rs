@@ -51,7 +51,17 @@ COMMANDS:
              machine-readable avsm-lint-v1 report instead of text)
   topdown    minimum axis value for a latency target (--target-ms X
              --axis NAME --lo N --hi N; default axis nce_freq_mhz —
-             the paper's §2 top-down mode, generalized)
+             the paper's §2 top-down mode, generalized; --scan swaps the
+             binary search for an exhaustive O(range) grid scan that also
+             handles non-monotone axes, compile-shared like the search)
+  serve      resident campaign daemon: keeps the two-tier compile cache
+             warm across requests and answers campaign/sweep/solve jobs
+             over a line-delimited JSON protocol — stdin/stdout by
+             default, --socket PATH for a Unix socket accept loop
+             (--cache-dir DIR --cache-max-entries N --threads N
+             --max-line BYTES). Every request is lint-gated before it
+             costs a worker; see README \"Campaign service\" for the
+             protocol and the envelope versioning rule
   analytical static (Zhang'15-style) estimate — the no-causality baseline
   infer      functional inference of the AOT artifact over PJRT
   config     print the (validated) system description JSON
@@ -110,6 +120,17 @@ COMMON OPTIONS:
                       counts, p50/p90/p99 latencies, cache-tier counters)
                       there; a text summary table prints either way.
                       Recording never changes the campaign's results
+  --compact           write `campaign`'s campaign.json compact (single
+                      line) instead of pretty — the exact bytes the serve
+                      daemon streams in its report line, so the two can be
+                      compared byte for byte
+  --socket PATH       `serve`: accept connections on a Unix socket instead
+                      of the stdin/stdout pipe session
+  --max-line BYTES    `serve`: per-request line cap (default 4 MiB); an
+                      over-cap line is rejected (AVSM063) and the
+                      connection continues
+  --scan              `topdown`: exhaustive grid scan instead of binary
+                      search (works on non-monotone axes)
   --trace-out FILE    write the engine's own per-worker timeline as a
                       Chrome trace-event JSON (one thread per pool worker;
                       load in chrome://tracing or ui.perfetto.dev) —
@@ -156,20 +177,14 @@ fn named_net(name: &str, hw: u32) -> Result<DnnGraph> {
 /// The same resolution without the validity gate: `lint` exists to look
 /// at broken nets, so it must be able to load them.
 fn build_net(name: &str, hw: u32) -> Result<DnnGraph> {
-    let net = match name {
-        "dilated_vgg" => models::dilated_vgg(if hw == 0 { 256 } else { hw }, 1, 16),
-        "dilated_vgg_tiny" => models::dilated_vgg(if hw == 0 { 64 } else { hw }, 8, 16),
-        "vgg16" => models::vgg16(if hw == 0 { 224 } else { hw }, 1000),
-        "lenet" => models::lenet(if hw == 0 { 28 } else { hw }),
-        "tiny_resnet" => models::tiny_resnet(if hw == 0 { 32 } else { hw }, 16, 3),
-        "mobilenet" => models::mobilenet(if hw == 0 { 224 } else { hw }, 1, 1000),
-        path => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading DNN graph {path:?}"))?;
-            graph_from_json(&text)?
+    match models::by_name(name, hw) {
+        Some(net) => Ok(net),
+        None => {
+            let text = std::fs::read_to_string(name)
+                .with_context(|| format!("reading DNN graph {name:?}"))?;
+            graph_from_json(&text)
         }
-    };
-    Ok(net)
+    }
 }
 
 /// Parse an `--axes` argument: inline JSON, or `@path` to read a file.
@@ -192,6 +207,7 @@ fn main() -> Result<()> {
         "flow" => cmd_flow(&args),
         "sweep" => cmd_sweep(&args),
         "campaign" => cmd_campaign(&args),
+        "serve" => cmd_serve(&args),
         "lint" => cmd_lint(&args),
         "topdown" => cmd_topdown(&args),
         "analytical" => cmd_analytical(&args),
@@ -509,7 +525,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         // Stream the report to disk — frontier points are emitted as they
         // are visited, never materialized as one big string.
         let out = std::io::BufWriter::new(std::fs::File::create(&path)?);
-        report.write_json(out, true)?.flush()?;
+        report.write_json(out, !args.has("compact"))?.flush()?;
         println!("wrote {}", path.display());
     }
     if observe {
@@ -527,6 +543,57 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `avsm serve` — the resident campaign daemon. Pipe mode (default)
+/// serves exactly one session over stdin/stdout and exits when stdin
+/// closes or a `shutdown` request arrives; `--socket PATH` runs the Unix
+/// accept loop until a client sends `shutdown`. Either way the compile
+/// caches live for the process lifetime, so repeated questions about the
+/// same workload are compile-free.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cache_max_entries = match args.get_u64("cache-max-entries", 0)? {
+        0 => None,
+        n => Some(n as usize),
+    };
+    let opts = avsm::serve::ServeOptions {
+        cache_dir: args.get("cache-dir").map(PathBuf::from),
+        cache_max_entries,
+        threads: args.get_u64("threads", 0)? as usize,
+        max_line: match args.get_u64("max-line", 0)? {
+            0 => avsm::json::stream::DEFAULT_MAX_FRAME,
+            n => n as usize,
+        },
+    };
+    match args.get("socket") {
+        Some(path) => {
+            #[cfg(unix)]
+            {
+                eprintln!("avsm serve: listening on {path}");
+                avsm::serve::serve_unix(std::path::Path::new(path), opts)?;
+                eprintln!("avsm serve: shut down");
+                Ok(())
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                bail!("--socket requires a Unix platform; use pipe mode instead")
+            }
+        }
+        None => {
+            let daemon = avsm::serve::Daemon::new(opts);
+            let stats = avsm::serve::serve_session(
+                &daemon,
+                std::io::stdin().lock(),
+                std::io::stdout().lock(),
+            )?;
+            eprintln!(
+                "avsm serve: session closed ({} served, {} rejected, {} failed)",
+                stats.served, stats.rejected, stats.failed
+            );
+            Ok(())
+        }
+    }
 }
 
 /// `avsm lint` — run the static diagnostics passes over whatever targets
@@ -662,7 +729,11 @@ fn cmd_topdown(args: &Args) -> Result<()> {
     let target_ps = (target_ms * 1e9) as u64;
     let axis = dse::Axis::from_key(args.get_or("axis", "nce_freq_mhz"))?;
     let range = (args.get_u64("lo", 25)?, args.get_u64("hi", 2000)?);
-    let sol = dse::solve_requirement(&net, &sys, axis, target_ps, range)?;
+    let sol = if args.has("scan") {
+        dse::solve_requirement_scan(&net, &sys, axis, target_ps, range)?
+    } else {
+        dse::solve_requirement(&net, &sys, axis, target_ps, range)?
+    };
     match sol.value {
         Some(v) => println!(
             "target {target_ms} ms/inference on {}: minimum {} {} {} \

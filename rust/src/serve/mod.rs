@@ -1,0 +1,834 @@
+//! `avsm serve` — a resident campaign daemon over line-delimited JSON
+//! (ROADMAP "Campaign service").
+//!
+//! One-shot CLI pays a cold process per design question: binary start,
+//! disk-cache reopen, recompile-or-load. The daemon keeps the two-tier
+//! compile cache and its hot `CompiledNet`s **resident**, so the second
+//! time any workload is asked about, the answer comes from the in-memory
+//! tier — zero compilations, zero disk reads (asserted end to end by the
+//! integration tests and the `scripts/check.sh` smoke).
+//!
+//! # Protocol
+//!
+//! One JSON object per line in, one or more JSON objects per line out.
+//! Requests ride the same machine-readable formats the CLI already
+//! speaks: campaign axis specs are `avsm-campaign-v1` axis arrays,
+//! workloads the `--workloads` entry shape. The request envelope:
+//!
+//! ```json
+//! {"v": 1, "id": 7, "kind": "campaign", "nets": ["lenet"], "axes": [...]}
+//! ```
+//!
+//! - `v` — envelope version. **Missing means 1.** Within a major
+//!   version, unknown fields are ignored (additive evolution); the first
+//!   breaking change bumps `v`, and a request with an unsupported `v` is
+//!   rejected with `AVSM061` naming the supported set. Responses echo
+//!   `"v": 1`. This is the repo's first negotiated schema (the carried
+//!   schema-evolution item): the rule is *receiver-makes-right* — the
+//!   daemon never guesses at a version it does not implement.
+//! - `id` — any JSON value, echoed verbatim on every response for this
+//!   request (default `null`). Correlation only; the daemon never reads
+//!   it.
+//! - `kind` — `"campaign"`, `"sweep"`, `"solve"`, `"ping"`, or
+//!   `"shutdown"`.
+//!
+//! Every response line carries `"event"` plus the echoed `id` and `v`:
+//! `rejected` (with the full `avsm-lint-v1` report under `"lint"`),
+//! `accepted`, `point` (one per feasible design point, streamed in
+//! completion order), `report` (the final `avsm-campaign-v1` document,
+//! byte-identical to `avsm campaign` on the same spec), `solution`,
+//! `failed` (admitted but died at runtime), `pong`, and `bye`.
+//!
+//! # Admission gate
+//!
+//! A request costs a worker **only after** it passes the same static
+//! pre-flight the CLI runs (`analysis::passes` + the campaign
+//! `preflight_report`): malformed JSON, a bad envelope, an unknown net,
+//! or a spec the lint passes reject all turn into one `rejected` line
+//! whose payload is the standard `avsm-lint-v1` report — protocol
+//! problems under the `AVSM060`-`AVSM064` family, spec problems under
+//! the existing `AVSM03x` codes. A malformed job costs one pass over its
+//! bytes, never a pool slot.
+//!
+//! # Cache residency and coherence
+//!
+//! Caches are keyed by (net content fingerprint, occurrence index within
+//! the request) — the same per-workload layout the CLI builds — and live
+//! for the daemon's lifetime. Report counters are per-run deltas
+//! ([`campaign::RunHooks`] snapshots), so a warm cache shows up as
+//! `memory_hits`, not as another run's compiles. With `--cache-dir` the
+//! resident caches share the disk tier with concurrent one-shot CLI
+//! invocations; coherence is the existing `index.lock` advisory-lock
+//! protocol — the daemon takes no extra ownership of the directory.
+//!
+//! Jobs are serialized through one runner lock onto one shared
+//! `campaign::pool` fan-out: concurrent clients interleave at request
+//! granularity (responses never cross connections), and the machine is
+//! never oversubscribed by two campaigns racing.
+
+use crate::analysis::{Diagnostic, Report};
+use crate::campaign::{self, CampaignOptions, CampaignSpec, PersistentCache, WorkloadSpec};
+use crate::compiler::BoundKind;
+use crate::config::SystemConfig;
+use crate::dse::{self, Axis, DesignPoint, SweepAxes};
+use crate::graph::{graph_from_json, models, DnnGraph};
+use crate::json::{self, obj, stream, Value};
+use crate::report::CampaignReport;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Daemon configuration (CLI flags of `avsm serve`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Disk tier shared with one-shot CLI runs; `None` keeps the
+    /// resident caches memory-only.
+    pub cache_dir: Option<PathBuf>,
+    pub cache_max_entries: Option<usize>,
+    /// Worker threads per admitted job (0 = auto, like the CLI).
+    pub threads: usize,
+    /// Per-request line cap; over-cap lines are rejected (`AVSM063`)
+    /// without buffering them.
+    pub max_line: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            cache_dir: None,
+            cache_max_entries: None,
+            threads: 0,
+            max_line: stream::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// Per-session tallies, returned by [`serve_session`] for tests and the
+/// daemon's exit log.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Admitted requests that ran to a `report`/`solution`/`pong` line.
+    pub served: usize,
+    /// Requests refused at the admission gate (one `rejected` line each).
+    pub rejected: usize,
+    /// Admitted requests that died at runtime (one `failed` line each).
+    pub failed: usize,
+}
+
+/// The resident state shared by every connection.
+pub struct Daemon {
+    opts: ServeOptions,
+    /// Per-(net fingerprint, occurrence) caches — the same per-workload
+    /// cache layout a one-shot campaign builds, kept warm for the
+    /// process lifetime.
+    caches: Mutex<HashMap<(u64, usize), Arc<PersistentCache>>>,
+    /// Serializes admitted jobs onto the shared worker pool.
+    runner: Mutex<()>,
+    shutdown: AtomicBool,
+    /// Set by [`serve_unix`] so a `shutdown` request can unblock the
+    /// accept loop with a self-connection.
+    socket_path: Mutex<Option<PathBuf>>,
+}
+
+impl Daemon {
+    pub fn new(opts: ServeOptions) -> Self {
+        Daemon {
+            opts,
+            caches: Mutex::new(HashMap::new()),
+            runner: Mutex::new(()),
+            shutdown: AtomicBool::new(false),
+            socket_path: Mutex::new(None),
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Resident caches for one request's workloads, index-aligned with
+    /// the spec. Identical nets in *different* requests share a cache
+    /// (that is the residency win); identical nets *within* one request
+    /// get one cache per occurrence, exactly like the CLI's per-workload
+    /// vector, so per-net report counters attribute the same way.
+    fn caches_for(&self, spec: &CampaignSpec) -> Vec<Arc<PersistentCache>> {
+        let mut map = lock_recovered(&self.caches);
+        let mut seen: HashMap<u64, usize> = HashMap::new();
+        spec.workloads
+            .iter()
+            .map(|w| {
+                let fp = net_fingerprint(&w.net);
+                let occurrence = seen.entry(fp).or_insert(0);
+                let key = (fp, *occurrence);
+                *occurrence += 1;
+                map.entry(key)
+                    .or_insert_with(|| {
+                        Arc::new(
+                            PersistentCache::with_max_entries(
+                                dse::DSE_COMPILE_OPTS,
+                                self.opts.cache_dir.clone(),
+                                self.opts.cache_max_entries,
+                            )
+                            .unwrap_or_else(|_| {
+                                // An unusable cache dir degrades to a
+                                // memory-only cache rather than killing
+                                // the daemon; read_errors would have
+                                // surfaced per-entry anyway.
+                                PersistentCache::with_max_entries(
+                                    dse::DSE_COMPILE_OPTS,
+                                    None,
+                                    self.opts.cache_max_entries,
+                                )
+                                .expect("memory-only cache cannot fail to open")
+                            }),
+                        )
+                    })
+                    .clone()
+            })
+            .collect()
+    }
+}
+
+fn lock_recovered<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Content fingerprint for resident-cache keying: the net's canonical
+/// JSON through the journal's hasher. Two requests naming byte-identical
+/// nets land on the same resident cache.
+fn net_fingerprint(net: &DnnGraph) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    crate::graph::graph_to_json(net).hash(&mut h);
+    h.finish()
+}
+
+/// What `handle_request` tells the session loop to do next.
+enum Flow {
+    Continue,
+    Shutdown,
+}
+
+/// Serve one connection: requests in via `input`, responses out via
+/// `out`. This is the whole daemon in pipe mode (stdin/stdout) and one
+/// connection's thread under [`serve_unix`]. Returns when the input
+/// closes, a `shutdown` request arrives, or the output dies; protocol
+/// errors never return — they are `rejected` lines.
+pub fn serve_session<R: Read, W: Write>(
+    daemon: &Daemon,
+    input: R,
+    mut out: W,
+) -> Result<SessionStats> {
+    let mut frames = stream::FrameReader::new(input).with_max_frame(daemon.opts.max_line);
+    let mut stats = SessionStats::default();
+    loop {
+        let frame = match frames.next_frame() {
+            Ok(None) => break,
+            Ok(Some(f)) => f.to_vec(),
+            Err(e) if stream::is_oversized_frame(&e) => {
+                // The offending line is already discarded; the stream
+                // continues on the next one.
+                let mut report = Report::new(Vec::new());
+                report.push(Diagnostic::error(
+                    "AVSM063",
+                    "request line",
+                    format!("{e:#}"),
+                ));
+                emit_rejected(&mut out, &Value::Null, &report)?;
+                stats.rejected += 1;
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if frame.iter().all(|b| b.is_ascii_whitespace()) {
+            continue; // blank keep-alive line
+        }
+        match handle_request(daemon, &frame, &mut out, &mut stats)? {
+            Flow::Continue => {}
+            Flow::Shutdown => break,
+        }
+    }
+    Ok(stats)
+}
+
+/// Parse, admit, and run one request line, writing every response line
+/// for it. Only I/O errors on `out` propagate.
+fn handle_request<W: Write>(
+    daemon: &Daemon,
+    frame: &[u8],
+    out: &mut W,
+    stats: &mut SessionStats,
+) -> Result<Flow> {
+    // ---- Envelope validation: AVSM060 (parse), AVSM061 (version),
+    // AVSM062 (kind). Anything wrong here is a rejection with id null if
+    // the id itself is unreadable.
+    let reject = |out: &mut W, stats: &mut SessionStats, id: &Value, d: Diagnostic| {
+        let mut report = Report::new(Vec::new());
+        report.push(d);
+        emit_rejected(out, id, &report)?;
+        stats.rejected += 1;
+        Ok::<Flow, anyhow::Error>(Flow::Continue)
+    };
+    let text = match std::str::from_utf8(frame) {
+        Ok(t) => t,
+        Err(_) => {
+            let d = Diagnostic::error("AVSM060", "request", "request line is not valid UTF-8");
+            return reject(out, stats, &Value::Null, d);
+        }
+    };
+    let doc = match json::parse(text) {
+        Ok(d) => d,
+        Err(e) => {
+            let d = Diagnostic::error("AVSM060", "request", format!("{e:#}"));
+            return reject(out, stats, &Value::Null, d);
+        }
+    };
+    if !matches!(doc, Value::Object(_)) {
+        let d = Diagnostic::error("AVSM060", "request", "request must be a JSON object");
+        return reject(out, stats, &Value::Null, d);
+    }
+    let id = doc.get("id").clone();
+    let version = match doc.get("v") {
+        Value::Null => 1, // missing means 1 — the envelope rule
+        v => v.as_u64().unwrap_or(0),
+    };
+    if version != 1 {
+        let d = Diagnostic::error(
+            "AVSM061",
+            "request envelope",
+            format!("unsupported envelope version {:?} (supported: 1)", doc.get("v")),
+        )
+        .with_help("omit \"v\" or send \"v\": 1");
+        return reject(out, stats, &id, d);
+    }
+    let kind = match doc.get("kind").as_str() {
+        Some(k) => k,
+        None => {
+            let d = Diagnostic::error(
+                "AVSM062",
+                "request envelope",
+                "request needs a string \"kind\"",
+            )
+            .with_help("one of: campaign, sweep, solve, ping, shutdown");
+            return reject(out, stats, &id, d);
+        }
+    };
+    match kind {
+        "ping" => {
+            emit_event(out, "pong", &id, vec![])?;
+            stats.served += 1;
+            Ok(Flow::Continue)
+        }
+        "shutdown" => {
+            daemon.shutdown.store(true, Ordering::SeqCst);
+            emit_event(out, "bye", &id, vec![])?;
+            stats.served += 1;
+            // Unblock a blocking unix accept loop, if one is running.
+            #[cfg(unix)]
+            if let Some(path) = lock_recovered(&daemon.socket_path).clone() {
+                let _ = std::os::unix::net::UnixStream::connect(path);
+            }
+            Ok(Flow::Shutdown)
+        }
+        "campaign" | "sweep" => run_campaign_request(daemon, &doc, kind, &id, out, stats),
+        "solve" => run_solve_request(daemon, &doc, &id, out, stats),
+        other => {
+            let d = Diagnostic::error(
+                "AVSM062",
+                "request envelope",
+                format!("unknown request kind {other:?}"),
+            )
+            .with_help("one of: campaign, sweep, solve, ping, shutdown");
+            reject(out, stats, &id, d)
+        }
+    }
+}
+
+/// Build and run an admitted campaign (or single-net sweep — the same
+/// engine with a one-workload portfolio), streaming `point` lines and the
+/// final `report` line.
+fn run_campaign_request<W: Write>(
+    daemon: &Daemon,
+    doc: &Value,
+    kind: &str,
+    id: &Value,
+    out: &mut W,
+    stats: &mut SessionStats,
+) -> Result<Flow> {
+    let (spec, opts) = match campaign_request(daemon, doc, kind) {
+        Ok(parts) => parts,
+        Err(report) => {
+            emit_rejected(out, id, &report)?;
+            stats.rejected += 1;
+            return Ok(Flow::Continue);
+        }
+    };
+    // Final static gate: exactly the reject set the CLI run would bail
+    // on, as a lint report instead of a bail.
+    let preflight = campaign::preflight_report(&spec);
+    if preflight.has_errors() {
+        emit_rejected(out, id, &preflight)?;
+        stats.rejected += 1;
+        return Ok(Flow::Continue);
+    }
+    emit_event(
+        out,
+        "accepted",
+        id,
+        vec![("kind", Value::Str(kind.to_string()))],
+    )?;
+
+    let _job = lock_recovered(&daemon.runner); // one campaign at a time
+    let caches = daemon.caches_for(&spec);
+    let mut on_point = |net: &str, p: &DesignPoint| {
+        // A dead client must not kill the run mid-campaign (the cache
+        // still warms); the final report write surfaces the I/O error.
+        let _ = emit_event_to(
+            out,
+            "point",
+            id,
+            vec![("net", Value::Str(net.to_string())), ("point", dse::point_to_json(p))],
+        );
+    };
+    let hooks = campaign::RunHooks {
+        caches: Some(caches),
+        on_point: Some(&mut on_point),
+    };
+    match campaign::run_with_hooks(&spec, &opts, hooks) {
+        Ok(result) => {
+            let report = CampaignReport::new(&result);
+            // The report line is spliced around the report's own bytes
+            // (keys emitted in sorted order: event < id < report < v),
+            // so the served document is the `write_json` output verbatim
+            // — byte-identical to `avsm campaign`'s campaign.json in
+            // compact mode, and extractable by suffix/prefix split.
+            out.write_all(b"{\"event\":\"report\",\"id\":")?;
+            out.write_all(id.to_string_compact().as_bytes())?;
+            out.write_all(b",\"report\":")?;
+            report.write_json(&mut *out, false)?;
+            out.write_all(b",\"v\":1}\n")?;
+            out.flush()?;
+            stats.served += 1;
+        }
+        Err(e) => {
+            emit_event(out, "failed", id, vec![("error", Value::Str(format!("{e:#}")))])?;
+            stats.failed += 1;
+        }
+    }
+    Ok(Flow::Continue)
+}
+
+/// Parse a campaign/sweep request body into a runnable spec, or the lint
+/// report that rejects it. Field problems (unknown net, bad hw) are
+/// `AVSM064`; spec-shape problems reuse the `AVSM03x` passes, so a bad
+/// axis spec is rejected with the very same codes `avsm lint` prints.
+#[allow(clippy::type_complexity)]
+fn campaign_request(
+    daemon: &Daemon,
+    doc: &Value,
+    kind: &str,
+) -> std::result::Result<(CampaignSpec, CampaignOptions), Report> {
+    use crate::analysis::passes;
+    let mut report = Report::new(Vec::new());
+    let field_err = |report: &mut Report, site: &str, msg: String| {
+        report.push(Diagnostic::error("AVSM064", site, msg));
+    };
+
+    let hw = match doc.get("hw") {
+        Value::Null => 0u32,
+        v => match v.as_u64().and_then(|h| u32::try_from(h).ok()) {
+            Some(h) => h,
+            None => {
+                field_err(&mut report, "request.hw", format!("hw must be a u32, got {v:?}"));
+                0
+            }
+        },
+    };
+    let base = match doc.get("base") {
+        Value::Null => Some(SystemConfig::base_paper()),
+        Value::Str(path) => match SystemConfig::from_file(path) {
+            Ok(sys) => Some(sys),
+            Err(e) => {
+                field_err(&mut report, "request.base", format!("{e:#}"));
+                None
+            }
+        },
+        v => {
+            field_err(
+                &mut report,
+                "request.base",
+                format!("base must be a path to an avsm-system-v1 file, got {v:?}"),
+            );
+            None
+        }
+    };
+
+    // Workloads: "sweep" takes a single "net"; "campaign" takes either
+    // "workloads" (the --workloads entry shape) or "nets" (array of
+    // names). The workloads value is linted first, so shape problems
+    // carry the standard AVSM036 diagnostics.
+    let mut workloads: Vec<WorkloadSpec> = Vec::new();
+    if kind == "sweep" {
+        match doc.get("net").as_str() {
+            Some(name) => {
+                if let Some(w) = workload_by_name(name, hw, &mut report) {
+                    workloads.push(w);
+                }
+            }
+            None => field_err(
+                &mut report,
+                "request.net",
+                "sweep needs a string \"net\"".to_string(),
+            ),
+        }
+    } else if !matches!(doc.get("workloads"), Value::Null) {
+        let wl = doc.get("workloads");
+        report.extend(passes::lint_workloads_value(wl));
+        if !report.has_errors() {
+            for (i, entry) in wl.as_array().unwrap_or(&[]).iter().enumerate() {
+                match workload_from_value(entry, hw) {
+                    Ok(w) => workloads.push(w),
+                    Err(e) => {
+                        field_err(&mut report, &format!("request.workloads[{i}]"), format!("{e:#}"));
+                    }
+                }
+            }
+        }
+    } else {
+        match doc.get("nets").as_array() {
+            Some(names) if !names.is_empty() => {
+                for (i, v) in names.iter().enumerate() {
+                    match v.as_str() {
+                        Some(name) => {
+                            if let Some(w) = workload_by_name(name, hw, &mut report) {
+                                workloads.push(w);
+                            }
+                        }
+                        None => field_err(
+                            &mut report,
+                            &format!("request.nets[{i}]"),
+                            format!("net name must be a string, got {v:?}"),
+                        ),
+                    }
+                }
+            }
+            _ => field_err(
+                &mut report,
+                "request",
+                "campaign needs \"workloads\" (array of {net, ...} objects) or \"nets\" \
+                 (array of names)"
+                    .to_string(),
+            ),
+        }
+    }
+
+    // Axes: linted with the standard axis-spec passes (AVSM030-033)
+    // before parsing; absent means the CLI's default grid.
+    let axes = match doc.get("axes") {
+        Value::Null => SweepAxes::new()
+            .array_geometries(vec![(16, 32), (32, 64), (64, 64)])
+            .nce_freqs_mhz(vec![125, 250, 500]),
+        v => {
+            report.extend(passes::lint_axis_spec_value(v));
+            if report.has_errors() {
+                SweepAxes::new()
+            } else {
+                match SweepAxes::from_value(v) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        field_err(&mut report, "request.axes", format!("{e:#}"));
+                        SweepAxes::new()
+                    }
+                }
+            }
+        }
+    };
+
+    let o = doc.get("options");
+    let opts = CampaignOptions {
+        threads: match o.get("threads").as_u64() {
+            Some(t) => t as usize,
+            None => daemon.opts.threads,
+        },
+        cache_dir: daemon.opts.cache_dir.clone(),
+        cache_max_entries: daemon.opts.cache_max_entries,
+        keep_points: false,
+        prune: o.get("no_prune").as_bool() != Some(true),
+        bound: match o.get("bound").as_str() {
+            Some(key) => match BoundKind::from_key(key) {
+                Ok(b) => b,
+                Err(e) => {
+                    field_err(&mut report, "request.options.bound", format!("{e:#}"));
+                    BoundKind::Max
+                }
+            },
+            None => BoundKind::Max,
+        },
+        order_by_bound: o.get("no_order").as_bool() != Some(true),
+        fail_fast: o.get("fail_fast").as_bool() == Some(true),
+        // Admission already ran the pre-flight; journals are a one-shot
+        // CLI affair (the daemon's residency is its crash story).
+        journal: None,
+        resume: false,
+        preflight: false,
+    };
+
+    if report.has_errors() {
+        return Err(report);
+    }
+    Ok((
+        CampaignSpec { workloads, base: base.expect("errors were checked"), axes },
+        opts,
+    ))
+}
+
+/// Resolve one workload by built-in name or `.graph.json` path, pushing
+/// an `AVSM064` on failure.
+fn workload_by_name(name: &str, hw: u32, report: &mut Report) -> Option<WorkloadSpec> {
+    match resolve_net(name, hw) {
+        Ok(net) => Some(WorkloadSpec::new(net)),
+        Err(e) => {
+            report.push(Diagnostic::error(
+                "AVSM064",
+                format!("net {name:?}"),
+                format!("{e:#}"),
+            ));
+            None
+        }
+    }
+}
+
+/// `--workloads`-entry shape: `{net, hw?, base?, axes?}` — the same
+/// resolution the CLI performs.
+fn workload_from_value(v: &Value, default_hw: u32) -> Result<WorkloadSpec> {
+    let name = v.req_str("net")?;
+    let hw = match v.get("hw").as_u64() {
+        Some(h) => u32::try_from(h)
+            .map_err(|_| anyhow::anyhow!("workload {name:?}: hw {h} exceeds u32"))?,
+        None => default_hw,
+    };
+    let mut w = WorkloadSpec::new(resolve_net(name, hw)?);
+    if let Some(path) = v.get("base").as_str() {
+        w = w.with_base(
+            SystemConfig::from_file(path)
+                .with_context(|| format!("workload {name:?} base config"))?,
+        );
+    }
+    if !matches!(v.get("axes"), Value::Null) {
+        w = w.with_axes(
+            SweepAxes::from_value(v.get("axes"))
+                .with_context(|| format!("workload {name:?} axis spec"))?,
+        );
+    }
+    Ok(w)
+}
+
+/// Built-in model name or `.graph.json` path — one resolution shared
+/// with the CLI via [`models::by_name`].
+fn resolve_net(name: &str, hw: u32) -> Result<DnnGraph> {
+    match models::by_name(name, hw) {
+        Some(net) => Ok(net),
+        None => {
+            let text = std::fs::read_to_string(name)
+                .with_context(|| format!("unknown model (and unreadable as a graph path) {name:?}"))?;
+            graph_from_json(&text)
+        }
+    }
+}
+
+/// Run an admitted solve-requirement request, emitting one `solution`
+/// line (or `failed`, e.g. on a non-monotone axis without `"scan"`).
+fn run_solve_request<W: Write>(
+    daemon: &Daemon,
+    doc: &Value,
+    id: &Value,
+    out: &mut W,
+    stats: &mut SessionStats,
+) -> Result<Flow> {
+    use crate::analysis::passes;
+    let mut report = Report::new(Vec::new());
+    let net = match doc.get("net").as_str() {
+        Some(name) => match resolve_net(name, doc.get("hw").as_u64().unwrap_or(0) as u32) {
+            Ok(net) => Some(net),
+            Err(e) => {
+                report.push(Diagnostic::error(
+                    "AVSM064",
+                    format!("net {name:?}"),
+                    format!("{e:#}"),
+                ));
+                None
+            }
+        },
+        None => {
+            report.push(Diagnostic::error(
+                "AVSM064",
+                "request.net",
+                "solve needs a string \"net\"",
+            ));
+            None
+        }
+    };
+    let axis = match doc.get("axis") {
+        Value::Null => Some(Axis::NceFreqMhz),
+        v => match v.as_str().ok_or(()).and_then(|k| Axis::from_key(k).map_err(|_| ())) {
+            Ok(a) => Some(a),
+            Err(()) => {
+                report.push(Diagnostic::error(
+                    "AVSM064",
+                    "request.axis",
+                    format!("unknown axis {v:?}"),
+                ));
+                None
+            }
+        },
+    };
+    let target_ps = match (doc.get("target_ms"), doc.get("target_ps").as_u64()) {
+        (Value::Null, Some(ps)) => Some(ps),
+        (Value::Null, None) => {
+            report.push(Diagnostic::error(
+                "AVSM064",
+                "request.target_ms",
+                "solve needs \"target_ms\" (number) or \"target_ps\" (integer)",
+            ));
+            None
+        }
+        (v, _) => match v.as_i64().map(|i| i as f64).or_else(|| match v {
+            Value::Num(f) => Some(*f),
+            _ => None,
+        }) {
+            Some(ms) if ms > 0.0 => Some((ms * 1e9) as u64),
+            _ => {
+                report.push(Diagnostic::error(
+                    "AVSM064",
+                    "request.target_ms",
+                    format!("target_ms must be a positive number, got {v:?}"),
+                ));
+                None
+            }
+        },
+    };
+    let lo = doc.get("lo").as_u64().unwrap_or(25);
+    let hi = doc.get("hi").as_u64().unwrap_or(2000);
+    if let Some(axis) = axis {
+        report.extend(passes::lint_requirement_range(axis, lo, hi));
+    }
+    if report.has_errors() {
+        emit_rejected(out, id, &report)?;
+        stats.rejected += 1;
+        return Ok(Flow::Continue);
+    }
+    let (net, axis, target_ps) =
+        (net.expect("checked"), axis.expect("checked"), target_ps.expect("checked"));
+    emit_event(out, "accepted", id, vec![("kind", Value::Str("solve".into()))])?;
+
+    let _job = lock_recovered(&daemon.runner);
+    let scan = doc.get("scan").as_bool() == Some(true);
+    let sys = SystemConfig::base_paper();
+    let solved = if scan {
+        dse::solve_requirement_scan(&net, &sys, axis, target_ps, (lo, hi))
+    } else {
+        dse::solve_requirement(&net, &sys, axis, target_ps, (lo, hi))
+    };
+    match solved {
+        Ok(sol) => {
+            emit_event(
+                out,
+                "solution",
+                id,
+                vec![
+                    ("axis", Value::Str(axis.key().to_string())),
+                    (
+                        "value",
+                        match sol.value {
+                            Some(v) => Value::from(v),
+                            None => Value::Null,
+                        },
+                    ),
+                    ("probes", Value::from(sol.probes)),
+                    ("compiles", Value::from(sol.compiles)),
+                ],
+            )?;
+            stats.served += 1;
+        }
+        Err(e) => {
+            emit_event(out, "failed", id, vec![("error", Value::Str(format!("{e:#}")))])?;
+            stats.failed += 1;
+        }
+    }
+    Ok(Flow::Continue)
+}
+
+/// One `rejected` line: the `avsm-lint-v1` report as the payload.
+fn emit_rejected<W: Write>(out: &mut W, id: &Value, report: &Report) -> Result<()> {
+    emit_event(out, "rejected", id, vec![("lint", report.to_json())])
+}
+
+/// One compact response line: `event`, echoed `id`, extra fields, and
+/// the envelope `v` (keys sorted by the `Value` object representation).
+fn emit_event<W: Write>(
+    out: &mut W,
+    event: &str,
+    id: &Value,
+    extra: Vec<(&str, Value)>,
+) -> Result<()> {
+    emit_event_to(out, event, id, extra).map_err(Into::into)
+}
+
+fn emit_event_to<W: Write>(
+    out: &mut W,
+    event: &str,
+    id: &Value,
+    extra: Vec<(&str, Value)>,
+) -> std::io::Result<()> {
+    let mut fields: Vec<(&str, Value)> = vec![
+        ("event", Value::Str(event.to_string())),
+        ("id", id.clone()),
+        ("v", Value::Int(1)),
+    ];
+    fields.extend(extra);
+    let line = obj(fields).to_string_compact();
+    out.write_all(line.as_bytes())?;
+    out.write_all(b"\n")?;
+    out.flush()
+}
+
+/// Accept loop on a Unix socket: thread per connection over one shared
+/// [`Daemon`]. Returns after a `shutdown` request (from any client) has
+/// drained the accept loop. The socket file is removed on the way out.
+#[cfg(unix)]
+pub fn serve_unix(path: &std::path::Path, opts: ServeOptions) -> Result<Arc<Daemon>> {
+    use std::os::unix::net::UnixListener;
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .with_context(|| format!("binding unix socket {}", path.display()))?;
+    let daemon = Arc::new(Daemon::new(opts));
+    *lock_recovered(&daemon.socket_path) = Some(path.to_path_buf());
+    let mut sessions = Vec::new();
+    for conn in listener.incoming() {
+        if daemon.is_shutdown() {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue, // one failed accept is not a dead daemon
+        };
+        if daemon.is_shutdown() {
+            break; // the self-connection that unblocked accept
+        }
+        let d = Arc::clone(&daemon);
+        sessions.push(std::thread::spawn(move || {
+            let Ok(reader) = stream.try_clone() else { return };
+            // A session error is one client's broken pipe, never fatal
+            // to the daemon.
+            let _ = serve_session(&d, reader, stream);
+        }));
+    }
+    for s in sessions {
+        let _ = s.join();
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(daemon)
+}

@@ -1,0 +1,347 @@
+//! End-to-end tests of the `serve` daemon over pipe-mode sessions (and
+//! one real Unix-socket accept loop): protocol robustness (the daemon
+//! never dies, every rejection is a well-formed `avsm-lint-v1` payload),
+//! report fidelity (a served campaign's report bytes equal the one-shot
+//! `campaign::run` output for the same spec), and cache residency (a
+//! resubmitted job performs zero compilations).
+
+use avsm::campaign::{self, CampaignOptions, CampaignSpec, WorkloadSpec};
+use avsm::dse::SweepAxes;
+use avsm::graph::models;
+use avsm::json::{self, Value};
+use avsm::report::CampaignReport;
+use avsm::serve::{serve_session, Daemon, ServeOptions};
+
+/// Run one pipe-mode session over `input`, returning the response lines.
+fn session(daemon: &Daemon, input: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    serve_session(daemon, input.as_bytes(), &mut out).expect("session must not die");
+    let text = String::from_utf8(out).expect("responses are UTF-8");
+    text.lines().map(str::to_string).collect()
+}
+
+/// Every response line must parse, carry the envelope, and — when it is
+/// a rejection — wrap a well-formed `avsm-lint-v1` report with at least
+/// one error-severity diagnostic.
+fn check_response_line(line: &str) -> Value {
+    let v = json::parse(line).unwrap_or_else(|e| panic!("unparseable response {line:?}: {e:#}"));
+    assert_eq!(v.get("v").as_u64(), Some(1), "envelope v on {line:?}");
+    let event = v.get("event").as_str().unwrap_or_else(|| panic!("no event on {line:?}"));
+    if event == "rejected" {
+        let lint = v.get("lint");
+        assert_eq!(lint.get("schema").as_str(), Some("avsm-lint-v1"), "{line:?}");
+        let errors = lint.get("summary").get("errors").as_u64().unwrap_or(0);
+        assert!(errors >= 1, "rejection with no errors: {line:?}");
+        assert!(
+            lint.get("diagnostics").as_array().is_some_and(|d| !d.is_empty()),
+            "{line:?}"
+        );
+    }
+    v
+}
+
+/// The small two-net campaign request used throughout; `id` tags the
+/// submission. Explicit axes keep it fast (4 units per net).
+fn campaign_request(id: u64) -> String {
+    format!(
+        "{{\"id\":{id},\"kind\":\"campaign\",\"nets\":[\"lenet\",\"tiny_resnet\"],\
+         \"axes\":[{{\"axis\":\"array_geometry\",\"values\":[[16,32],[32,64]]}},\
+         {{\"axis\":\"nce_freq_mhz\",\"values\":[125,250]}}],\
+         \"options\":{{\"threads\":1}}}}"
+    )
+}
+
+/// The same spec built directly against the library — the one-shot
+/// reference the served report must match byte for byte.
+fn reference_spec() -> (CampaignSpec, CampaignOptions) {
+    let axes = SweepAxes::new()
+        .array_geometries(vec![(16, 32), (32, 64)])
+        .nce_freqs_mhz(vec![125, 250]);
+    let spec = CampaignSpec {
+        workloads: vec![
+            WorkloadSpec::new(models::by_name("lenet", 0).unwrap()),
+            WorkloadSpec::new(models::by_name("tiny_resnet", 0).unwrap()),
+        ],
+        base: avsm::config::SystemConfig::base_paper(),
+        axes,
+    };
+    let opts = CampaignOptions { threads: 1, ..Default::default() };
+    (spec, opts)
+}
+
+#[test]
+fn served_report_is_byte_identical_to_one_shot_run() {
+    let daemon = Daemon::new(ServeOptions::default());
+    let lines = session(&daemon, &campaign_request(1));
+    for l in &lines {
+        check_response_line(l);
+    }
+    assert_eq!(
+        json::parse(&lines[0]).unwrap().get("event").as_str(),
+        Some("accepted"),
+        "{lines:?}"
+    );
+    let report_line = lines.last().expect("report line");
+    let v = check_response_line(report_line);
+    assert_eq!(v.get("event").as_str(), Some("report"));
+    assert_eq!(v.get("id").as_u64(), Some(1));
+
+    // Byte-level extraction: the report line is a splice around the
+    // report's own `write_json` bytes (sorted keys pin the layout), so
+    // stripping the envelope prefix/suffix must recover them verbatim.
+    let prefix = "{\"event\":\"report\",\"id\":1,\"report\":";
+    let suffix = ",\"v\":1}";
+    assert!(report_line.starts_with(prefix), "{report_line:?}");
+    assert!(report_line.ends_with(suffix), "{report_line:?}");
+    let served = &report_line[prefix.len()..report_line.len() - suffix.len()];
+
+    let (spec, opts) = reference_spec();
+    let result = campaign::run(&spec, &opts).unwrap();
+    let expected = CampaignReport::new(&result).write_json(Vec::new(), false).unwrap();
+    assert_eq!(
+        served,
+        std::str::from_utf8(&expected).unwrap(),
+        "served report bytes must equal the one-shot campaign report"
+    );
+
+    // The stream also delivered every feasible point before the report.
+    let feasible: u64 = result.nets.iter().map(|n| n.feasible as u64).sum();
+    let points = lines
+        .iter()
+        .filter(|l| json::parse(l).unwrap().get("event").as_str() == Some("point"))
+        .count() as u64;
+    assert_eq!(points, feasible, "one point event per feasible unit");
+}
+
+#[test]
+fn resident_cache_makes_resubmission_compile_free() {
+    let daemon = Daemon::new(ServeOptions::default());
+    // Two identical submissions in one session (one line each).
+    let input = format!("{}\n{}\n", campaign_request(1), campaign_request(2));
+    let lines = session(&daemon, &input);
+    let reports: Vec<Value> = lines
+        .iter()
+        .map(|l| check_response_line(l))
+        .filter(|v| v.get("event").as_str() == Some("report"))
+        .collect();
+    assert_eq!(reports.len(), 2, "{lines:?}");
+    let cache1 = reports[0].get("report").get("cache").clone();
+    let cache2 = reports[1].get("report").get("cache").clone();
+    let first = cache1.get("compilations").as_u64().unwrap();
+    assert!(first > 0, "cold first job must compile: {cache1:?}");
+    assert_eq!(
+        cache2.get("compilations").as_u64(),
+        Some(0),
+        "resident cache: second job must compile nothing ({cache2:?})"
+    );
+    assert!(
+        cache2.get("memory_hits").as_u64().unwrap() >= first,
+        "second job served from the memory tier: {cache2:?}"
+    );
+    // And the resident counters never leak across reports: job 1's
+    // compiles are not re-reported by job 2 (delta accounting).
+    assert_eq!(cache2.get("disk_hits").as_u64(), Some(0));
+}
+
+#[test]
+fn malformed_requests_are_rejected_with_lint_payloads_and_never_kill_the_daemon() {
+    let daemon = Daemon::new(ServeOptions::default());
+    // One of everything the admission gate must catch, then a real job
+    // to prove the session survived it all.
+    let deep_open = "[".repeat(80); // > MAX_DEPTH=64 nesting
+    let cases: Vec<(String, &str)> = vec![
+        ("{\"kind\": tru}".into(), "AVSM060"),                       // parse error
+        ("[1,2,3]".into(), "AVSM060"),                               // not an object
+        (deep_open, "AVSM060"),                                      // depth bomb
+        ("{\"v\":2,\"kind\":\"ping\"}".into(), "AVSM061"),           // future version
+        ("{\"v\":\"x\",\"kind\":\"ping\"}".into(), "AVSM061"),       // junk version
+        ("{\"id\":9}".into(), "AVSM062"),                            // no kind
+        ("{\"kind\":\"dance\"}".into(), "AVSM062"),                  // unknown kind
+        ("{\"kind\":\"campaign\"}".into(), "AVSM064"),               // no workloads
+        ("{\"kind\":\"campaign\",\"nets\":[\"no_such_net\"]}".into(), "AVSM064"),
+        (
+            // Duplicate axis: the standard AVSM030 campaign-spec pass.
+            "{\"kind\":\"campaign\",\"nets\":[\"lenet\"],\"axes\":[\
+             {\"axis\":\"nce_freq_mhz\",\"values\":[125]},\
+             {\"axis\":\"nce_freq_mhz\",\"values\":[250]}]}"
+                .into(),
+            "AVSM030",
+        ),
+        (
+            "{\"kind\":\"solve\",\"net\":\"lenet\"}".into(), // no target
+            "AVSM064",
+        ),
+    ];
+    let mut input = String::new();
+    for (line, _) in &cases {
+        input.push_str(line);
+        input.push('\n');
+    }
+    input.push_str("{\"id\":77,\"kind\":\"ping\"}\n");
+    let lines = session(&daemon, &input);
+    assert_eq!(lines.len(), cases.len() + 1, "{lines:?}");
+    for (i, (req, code)) in cases.iter().enumerate() {
+        let v = check_response_line(&lines[i]);
+        assert_eq!(v.get("event").as_str(), Some("rejected"), "{req:?} -> {}", lines[i]);
+        let codes: Vec<String> = v
+            .get("lint")
+            .get("diagnostics")
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|d| d.get("code").as_str().unwrap().to_string())
+            .collect();
+        assert!(codes.iter().any(|c| c == code), "{req:?}: want {code} in {codes:?}");
+    }
+    let pong = check_response_line(lines.last().unwrap());
+    assert_eq!(pong.get("event").as_str(), Some("pong"));
+    assert_eq!(pong.get("id").as_u64(), Some(77), "id echoed after the gauntlet");
+}
+
+#[test]
+fn oversized_lines_are_rejected_and_the_session_recovers() {
+    let daemon = Daemon::new(ServeOptions { max_line: 256, ..Default::default() });
+    let long = format!("{{\"kind\":\"ping\",\"pad\":\"{}\"}}", "x".repeat(4096));
+    let input = format!("{long}\n{{\"id\":1,\"kind\":\"ping\"}}\n");
+    let lines = session(&daemon, &input);
+    assert_eq!(lines.len(), 2, "{lines:?}");
+    let rej = check_response_line(&lines[0]);
+    assert_eq!(rej.get("event").as_str(), Some("rejected"));
+    let code = rej.get("lint").get("diagnostics").at(0).get("code").as_str();
+    assert_eq!(code, Some("AVSM063"), "{lines:?}");
+    let pong = check_response_line(&lines[1]);
+    assert_eq!(pong.get("event").as_str(), Some("pong"));
+}
+
+#[test]
+fn fuzzed_garbage_never_kills_the_session_and_always_gets_lint_rejections() {
+    // Seeded structural fuzz: every line is garbage of a different
+    // flavor; the session must answer each non-blank line with exactly
+    // one well-formed rejection and then still serve a real request.
+    let daemon = Daemon::new(ServeOptions { max_line: 512, ..Default::default() });
+    let mut rng = avsm::testkit::Rng::new(avsm::testkit::seed_from_env(0xC0FFEE));
+    let mut input = String::new();
+    let mut expect = 0usize;
+    for i in 0..200 {
+        let flavor = rng.range(0, 7);
+        let line = match flavor {
+            0 => String::from_utf8_lossy(&[b'{', 0xFF, 0xFE, b'}']).into_owned(),
+            1 => "{".repeat(1 + rng.range(0, 69) as usize),
+            2 => format!("{{\"kind\":\"campaign\",\"nets\":{i}}}"),
+            3 => format!("\"naked string {i}\""),
+            4 => format!("{{\"v\":{},\"kind\":\"ping\"}}", 2 + rng.range(0, 99)),
+            5 => format!("{{\"kind\":\"solve\",\"net\":\"lenet\",\"target_ms\":-{i}}}"),
+            6 => "x".repeat(600), // over max_line
+            7 => format!("{{\"kind\":\"sweep\",\"net\":{i}}}"),
+            _ => unreachable!(),
+        };
+        assert!(!line.contains('\n'));
+        input.push_str(&line);
+        input.push('\n');
+        expect += 1;
+    }
+    input.push_str("{\"id\":1,\"kind\":\"ping\"}\n");
+    let lines = session(&daemon, &input);
+    assert_eq!(lines.len(), expect + 1, "one response per line");
+    for l in &lines[..expect] {
+        let v = check_response_line(l);
+        assert_eq!(v.get("event").as_str(), Some("rejected"), "{l}");
+    }
+    assert_eq!(
+        check_response_line(lines.last().unwrap()).get("event").as_str(),
+        Some("pong")
+    );
+}
+
+#[test]
+fn solve_requests_answer_and_scan_agrees_with_search() {
+    let daemon = Daemon::new(ServeOptions::default());
+    let input = "{\"id\":1,\"kind\":\"solve\",\"net\":\"lenet\",\"target_ms\":50,\
+                 \"lo\":50,\"hi\":80}\n\
+                 {\"id\":2,\"kind\":\"solve\",\"net\":\"lenet\",\"target_ms\":50,\
+                 \"lo\":50,\"hi\":80,\"scan\":true}\n";
+    let lines = session(&daemon, input);
+    let solutions: Vec<Value> = lines
+        .iter()
+        .map(|l| check_response_line(l))
+        .filter(|v| v.get("event").as_str() == Some("solution"))
+        .collect();
+    assert_eq!(solutions.len(), 2, "{lines:?}");
+    assert_eq!(
+        solutions[0].get("value").as_u64(),
+        solutions[1].get("value").as_u64(),
+        "scan and binary search agree on a monotone axis: {solutions:?}"
+    );
+    assert_eq!(solutions[1].get("compiles").as_u64(), Some(1), "retime axis compiles once");
+}
+
+#[test]
+fn shutdown_request_ends_the_session() {
+    let daemon = Daemon::new(ServeOptions::default());
+    let input = "{\"id\":1,\"kind\":\"ping\"}\n\
+                 {\"id\":2,\"kind\":\"shutdown\"}\n\
+                 {\"id\":3,\"kind\":\"ping\"}\n";
+    let lines = session(&daemon, input);
+    assert_eq!(lines.len(), 2, "nothing after bye: {lines:?}");
+    assert_eq!(check_response_line(&lines[1]).get("event").as_str(), Some("bye"));
+    assert!(daemon.is_shutdown());
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_serves_interleaved_clients() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+
+    let dir = std::env::temp_dir().join(format!("avsm_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("avsm.sock");
+    let sock_for_daemon = sock.clone();
+    let daemon_thread = std::thread::spawn(move || {
+        avsm::serve::serve_unix(&sock_for_daemon, ServeOptions::default()).unwrap()
+    });
+    // Wait for the socket to appear.
+    let mut tries = 0;
+    while !sock.exists() {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        tries += 1;
+        assert!(tries < 500, "daemon never bound {sock:?}");
+    }
+
+    // Two concurrent clients, each pinging with its own id several
+    // times: every client must get exactly its own echoes, in order.
+    let clients: Vec<_> = (0..2)
+        .map(|c| {
+            let sock = sock.clone();
+            std::thread::spawn(move || {
+                let mut tx = UnixStream::connect(&sock).unwrap();
+                let mut rx = BufReader::new(tx.try_clone().unwrap());
+                for i in 0..5 {
+                    let id = c * 100 + i;
+                    writeln!(tx, "{{\"id\":{id},\"kind\":\"ping\"}}").unwrap();
+                    let mut line = String::new();
+                    rx.read_line(&mut line).unwrap();
+                    let v = json::parse(&line).unwrap();
+                    assert_eq!(v.get("event").as_str(), Some("pong"), "{line:?}");
+                    assert_eq!(v.get("id").as_u64(), Some(id), "cross-talk: {line:?}");
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // A third client shuts the daemon down; the accept loop drains.
+    let mut tx = UnixStream::connect(&sock).unwrap();
+    let mut rx = BufReader::new(tx.try_clone().unwrap());
+    writeln!(tx, "{{\"id\":9,\"kind\":\"shutdown\"}}").unwrap();
+    let mut line = String::new();
+    rx.read_line(&mut line).unwrap();
+    assert_eq!(json::parse(&line).unwrap().get("event").as_str(), Some("bye"));
+    let daemon = daemon_thread.join().unwrap();
+    assert!(daemon.is_shutdown());
+    assert!(!sock.exists(), "socket file removed on shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -231,6 +231,61 @@ print(f"telemetry consistent: {evaluated} units, {tel['spans_total']} spans, "
 EOF
 rm -rf "$TDIR"
 
+# Serve smoke: pipe a session through the resident daemon. A malformed
+# job (duplicate axes) must be rejected pre-pool with an avsm-lint-v1
+# payload carrying the stable AVSM03x code; a real 2-net campaign must
+# stream back a report line whose spliced report bytes equal the one-shot
+# CLI's --compact campaign.json; and resubmitting the identical campaign
+# must be served entirely from the resident cache (zero compilations).
+echo "== avsm serve (pipe mode: lint-gated admission + resident cache)"
+SDIR=$(mktemp -d /tmp/avsm_serve.XXXXXX)
+cargo run --release -q -p avsm -- campaign --nets lenet,tiny_resnet \
+  --threads 1 --compact --outdir "$SDIR/oneshot" > /dev/null
+cat > "$SDIR/requests.jsonl" <<'EOF'
+{"id": 0, "kind": "campaign", "nets": ["lenet"], "axes": [{"axis": "nce_freq_mhz", "values": [125]}, {"axis": "nce_freq_mhz", "values": [250]}]}
+{"id": 1, "kind": "campaign", "nets": ["lenet", "tiny_resnet"], "options": {"threads": 1}}
+{"id": 2, "kind": "campaign", "nets": ["lenet", "tiny_resnet"], "options": {"threads": 1}}
+EOF
+cargo run --release -q -p avsm -- serve < "$SDIR/requests.jsonl" \
+  > "$SDIR/responses.jsonl" 2> /dev/null
+python3 - "$SDIR/responses.jsonl" "$SDIR/oneshot/campaign.json" <<'EOF'
+import json, sys
+lines = [l for l in open(sys.argv[1], "rb").read().split(b"\n") if l.strip()]
+docs = [json.loads(l) for l in lines]
+assert all(d["v"] == 1 for d in docs), "response without a v:1 envelope"
+
+# The duplicate-axis job is rejected before it can reach the pool, and
+# the payload is the same avsm-lint-v1 document `avsm lint` would emit.
+rej = [d for d in docs if d["event"] == "rejected"]
+assert len(rej) == 1 and rej[0]["id"] == 0, rej
+lint = rej[0]["lint"]
+assert lint["schema"] == "avsm-lint-v1", lint["schema"]
+assert lint["summary"]["errors"] >= 1, lint["summary"]
+assert any(d["code"] == "AVSM030" for d in lint["diagnostics"]), lint["diagnostics"]
+
+# Jobs 1 and 2 are accepted, stream frontier points, and finish with a
+# report line each.
+acc = [d["id"] for d in docs if d["event"] == "accepted"]
+assert acc == [1, 2], acc
+assert any(d["event"] == "point" for d in docs), "no streamed frontier points"
+
+# The served report bytes (spliced verbatim into the report line) equal
+# the one-shot CLI's --compact campaign.json for the same spec.
+raw1 = next(l for l in lines if l.startswith(b'{"event":"report","id":1,'))
+report1 = raw1.split(b'"report":', 1)[1][: -len(b',"v":1}')]
+oneshot = open(sys.argv[2], "rb").read().rstrip(b"\n")
+assert report1 == oneshot, "served report differs from one-shot campaign.json"
+
+# The resubmission is answered from the resident cache: zero compilations.
+rep2 = next(d for d in docs if d["event"] == "report" and d["id"] == 2)
+cache2 = rep2["report"]["cache"]
+assert cache2["compilations"] == 0, cache2
+assert cache2["memory_hits"] > 0, cache2
+print(f"serve smoke OK: rejection carries AVSM030, report byte-identical "
+      f"({len(report1)} bytes), resubmission compile-free")
+EOF
+rm -rf "$SDIR"
+
 # Bench baselines: the bench smokes above wrote BENCH_*.json at the repo
 # root. The first run on a new machine leaves them uncommitted — say so
 # loudly, so pinning a baseline is a reviewed decision rather than an
